@@ -1,0 +1,67 @@
+//! Appendix A: communication-efficiency crossover conditions (Eqs. 7/9) +
+//! the tightened pipeline bound (Eqs. 9'-11) and the Appendix C.4
+//! speculative/coded mitigation analysis.
+
+#[path = "common.rs"]
+mod common;
+
+use cleave::baselines::volume::{
+    allreduce_latency, dl_crossover_devices, pipeline_makespan, ul_crossover_devices,
+};
+use cleave::model::config::{ModelSpec, TrainSetup};
+use cleave::sched::cvar::{coded_kth_latency, optimal_replication, replicated_latency};
+use cleave::util::bench::Reporter;
+use cleave::util::json::Json;
+use cleave::util::table::Table;
+
+fn main() {
+    let mut rep = Reporter::new("appendix_a_crossover", "crossover + tail mitigation (App A/C)");
+    let setup = TrainSetup::default();
+    let mut t = Table::new(&["Model", "UL crossover D", "DL crossover D"]);
+    for name in ["Llama2-7B", "Llama2-13B", "Llama2-70B", "OPT-13B"] {
+        let spec = ModelSpec::preset(name).unwrap();
+        let ul = ul_crossover_devices(&spec, &setup, 1 << 16);
+        let dl = dl_crossover_devices(&spec, &setup, 1 << 16);
+        t.row(&[
+            name.into(),
+            ul.map(|d| d.to_string()).unwrap_or(">65536".into()),
+            dl.map(|d| d.to_string()).unwrap_or(">65536".into()),
+        ]);
+        rep.record(vec![
+            ("model", Json::from(name)),
+            ("ul_crossover", ul.map(Json::from).unwrap_or(Json::Null)),
+            ("dl_crossover", dl.map(Json::from).unwrap_or(Json::Null)),
+        ]);
+        if let (Some(u), Some(d)) = (ul, dl) {
+            assert!(u <= d, "UL crossover must come first (edge asymmetry)");
+        }
+    }
+    t.print();
+
+    println!("\n-- A.3 pipeline bound: T(k) = T_DL + (k-1)max(...) + T_comp + T_UL --");
+    for k in [1usize, 10, 100, 1000] {
+        println!(
+            "  k={k:5}: pipeline {:10.3} s   vs serial {:10.3} s   (allreduce latency at D=1024: {:.3} s)",
+            pipeline_makespan(0.05, 0.02, 0.01, k),
+            0.08 * k as f64,
+            allreduce_latency(0.01, 1024)
+        );
+    }
+
+    println!("\n-- C.4 straggler mitigation (Pareto alpha=2, x_m=1) --");
+    let mut t2 = Table::new(&["r-way replication", "E[min]", "coded k-of-n (n=100)", "E[L_(k:100)]"]);
+    for (r, k) in [(1usize, 50usize), (2, 80), (3, 90), (4, 99)] {
+        t2.row(&[
+            format!("r={r}"),
+            format!("{:.3}", replicated_latency(1.0, 2.0, r)),
+            format!("k={k}"),
+            format!("{:.3}", coded_kth_latency(1.0, 2.0, k, 100)),
+        ]);
+    }
+    t2.print();
+    println!(
+        "optimal replication r* (C_comm=100, C_tail=10, alpha=2): {:.1} (paper band: 2-4)",
+        optimal_replication(100.0, 10.0, 2.0)
+    );
+    rep.finish();
+}

@@ -1,0 +1,55 @@
+//! Shared helpers for the paper-reproduction benches.
+//!
+//! Every bench regenerates one table or figure of the paper's evaluation
+//! (see DESIGN.md §5 for the experiment index and EXPERIMENTS.md for the
+//! paper-vs-measured record). Results are also appended as JSON lines to
+//! `target/bench_results.jsonl` by `util::bench::Reporter`.
+
+#![allow(dead_code)]
+
+use cleave::cluster::device::Device;
+use cleave::cluster::fleet::{Fleet, FleetConfig};
+use cleave::model::config::{ModelSpec, TrainSetup};
+use cleave::model::dag::GemmDag;
+use cleave::sched::assignment::Schedule;
+use cleave::sched::cost::{CostModel, PsParams};
+use cleave::sched::solver::{solve_dag, SolverOptions, SolverStats};
+use cleave::sim::batch::{simulate_batch, BatchResult, SimConfig};
+
+/// Solve + simulate one CLEAVE batch on a sampled heterogeneous fleet.
+pub fn cleave_batch(spec: &ModelSpec, setup: &TrainSetup, n_devices: usize) -> BatchResult {
+    let fleet = Fleet::sample(&FleetConfig::default().with_devices(n_devices));
+    cleave_batch_on(spec, setup, &fleet.devices).0
+}
+
+/// Same, returning the schedule + stats too.
+pub fn cleave_batch_on(
+    spec: &ModelSpec,
+    setup: &TrainSetup,
+    devices: &[Device],
+) -> (BatchResult, Schedule, SolverStats) {
+    let cm = CostModel::default().with_effective_flops();
+    let dag = GemmDag::build(spec, setup);
+    let (schedule, stats) = solve_dag(
+        devices,
+        &dag,
+        &cm,
+        &PsParams::default(),
+        &SolverOptions::default(),
+    );
+    let r = simulate_batch(devices, &dag, &schedule, &cm, &SimConfig::default());
+    (r, schedule, stats)
+}
+
+/// The paper's default fleet for a device count (heterogeneous sample).
+pub fn default_fleet(n: usize) -> Fleet {
+    Fleet::sample(&FleetConfig::default().with_devices(n))
+}
+
+pub fn gb(x: f64) -> String {
+    cleave::util::fmt_bytes(x)
+}
+
+pub fn secs(x: f64) -> String {
+    cleave::util::fmt_secs(x)
+}

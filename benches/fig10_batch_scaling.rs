@@ -1,0 +1,48 @@
+//! Figure 10: weak scaling in batch size — OPT-13B, each device processing
+//! a mini-batch of 2 (devices = batch/2). Shape: CLEAVE nearly flat; DTFM
+//! fine at small batches (PP) but degrades once DP kicks in; Alpa ~7x.
+
+#[path = "common.rs"]
+mod common;
+
+use cleave::baselines::{alpa, dtfm};
+use cleave::model::config::{ModelSpec, TrainSetup};
+use cleave::util::bench::Reporter;
+use cleave::util::json::Json;
+use cleave::util::table::Table;
+
+fn main() {
+    let mut rep = Reporter::new("fig10_batch_scaling", "batch-size weak scaling (Figure 10)");
+    let spec = ModelSpec::preset("OPT-13B").unwrap();
+    let mut t = Table::new(&["batch", "#devices", "CLEAVE", "DTFM", "Alpa"]);
+    let mut cleave_times = Vec::new();
+    for batch in [16usize, 32, 64, 128, 256, 512] {
+        let setup = TrainSetup::default().with_batch(batch);
+        let n = (batch / 2).max(8); // mini-batch of 2 per device
+        let fleet = common::default_fleet(n);
+        let (r, _, _) = common::cleave_batch_on(&spec, &setup, &fleet.devices);
+        let d = dtfm::plan_with(&spec, &setup, &fleet.devices, 1e13, false).map(|p| p.per_batch_s);
+        let a = alpa::plan_with(&spec, &setup, &fleet.devices, false).map(|p| p.per_batch_s);
+        t.row(&[
+            batch.to_string(),
+            n.to_string(),
+            common::secs(r.batch_time),
+            d.map(common::secs).unwrap_or("OOM".into()),
+            a.map(common::secs).unwrap_or("OOM".into()),
+        ]);
+        rep.record(vec![
+            ("batch", Json::from(batch)),
+            ("devices", Json::from(n)),
+            ("cleave_s", Json::from(r.batch_time)),
+        ]);
+        cleave_times.push(r.batch_time);
+    }
+    t.print();
+    let max = cleave_times.iter().cloned().fold(0.0, f64::max);
+    let min = cleave_times.iter().cloned().fold(f64::MAX, f64::min);
+    println!(
+        "\nCLEAVE batch weak-scaling flatness: max/min = {:.2}x (paper: nearly constant)",
+        max / min
+    );
+    rep.finish();
+}

@@ -1,0 +1,49 @@
+//! Figure 1: per-device communication volume vs device count for
+//! Llama2-13B — ideal, CLEAVE (DL and UL), and the DTFM/Alpa-style
+//! baseline. Shape: ideal and CLEAVE fall as 1/D; baselines flatten; CLEAVE
+//! crosses below the baselines at scale (our single-transmission accounting
+//! places the crossover near the top of the paper's 8192-device range —
+//! see EXPERIMENTS.md on the paper's Appendix-A formula).
+
+#[path = "common.rs"]
+mod common;
+
+use cleave::baselines::{ideal, volume};
+use cleave::model::config::{ModelSpec, TrainSetup};
+use cleave::util::bench::Reporter;
+use cleave::util::json::Json;
+use cleave::util::table::Table;
+
+fn main() {
+    let mut rep = Reporter::new("fig1_comm_volume", "per-device comm volume (Figure 1)");
+    let spec = ModelSpec::preset("Llama2-13B").unwrap();
+    let setup = TrainSetup::default();
+    let b = setup.elem_bytes as f64;
+    let mut t = Table::new(&["#devices", "ideal", "CLEAVE DL", "CLEAVE UL", "DTFM/Alpa-style"]);
+    for d in [32usize, 64, 128, 256, 512, 1024, 2048, 4096, 8192] {
+        let cfg = volume::ParallelCfg::for_devices(&spec, &setup, d);
+        let base = volume::baseline_per_device(&spec, &setup, &cfg) * b;
+        let cdl = volume::cleave_per_device_dl(&spec, &setup, d) * b;
+        let cul = volume::cleave_per_device_ul(&spec, &setup, d) * b;
+        let id = ideal::ideal_per_device(&spec, &setup, d) * b;
+        t.row(&[
+            d.to_string(),
+            common::gb(id),
+            common::gb(cdl),
+            common::gb(cul),
+            common::gb(base),
+        ]);
+        rep.record(vec![
+            ("devices", Json::from(d)),
+            ("ideal_b", Json::from(id)),
+            ("cleave_dl_b", Json::from(cdl)),
+            ("cleave_ul_b", Json::from(cul)),
+            ("baseline_b", Json::from(base)),
+        ]);
+    }
+    t.print();
+    let ul_cross = volume::ul_crossover_devices(&spec, &setup, 16384);
+    let dl_cross = volume::dl_crossover_devices(&spec, &setup, 16384);
+    println!("\nCLEAVE-vs-baseline crossover: UL at {ul_cross:?} devices, DL at {dl_cross:?}");
+    rep.finish();
+}

@@ -1,0 +1,47 @@
+//! Figure 4: OPT-13B against multi-GPU cloud, scaling edge devices
+//! proportionally with GPU count. Shape: CLEAVE stays within ~2x of the
+//! multi-GPU cloud while the baselines fail to benefit from more devices.
+
+#[path = "common.rs"]
+mod common;
+
+use cleave::baselines::{alpa, cloud, dtfm};
+use cleave::model::config::{ModelSpec, TrainSetup};
+use cleave::util::bench::Reporter;
+use cleave::util::json::Json;
+use cleave::util::table::Table;
+
+fn main() {
+    let mut rep = Reporter::new("fig4_multigpu", "multi-GPU comparison (Figure 4)");
+    let spec = ModelSpec::preset("OPT-13B").unwrap();
+    let setup = TrainSetup::default();
+    let gpu = cloud::GpuParams::default();
+    // 256 edge devices per GPU (the Figure 3 pairing scaled out).
+    let mut t = Table::new(&["#GPUs", "#devices", "cloud", "CLEAVE", "DTFM", "Alpa"]);
+    for n_gpus in [1usize, 2, 4, 8] {
+        let n_dev = 256 * n_gpus;
+        let fleet = common::default_fleet(n_dev);
+        let (r, _, _) = common::cleave_batch_on(&spec, &setup, &fleet.devices);
+        let cloud_t = cloud::multi_gpu_batch_time(&spec, &setup, &gpu, n_gpus);
+        let norm = |x: f64| format!("{:.2}x", x / cloud_t);
+        let dt = dtfm::plan_with(&spec, &setup, &fleet.devices, 1e12, false);
+        let al = alpa::plan_with(&spec, &setup, &fleet.devices, false);
+        t.row(&[
+            n_gpus.to_string(),
+            n_dev.to_string(),
+            "1.00x".into(),
+            norm(r.batch_time),
+            dt.map(|p| norm(p.per_batch_s)).unwrap_or("OOM".into()),
+            al.map(|p| norm(p.per_batch_s)).unwrap_or("OOM".into()),
+        ]);
+        rep.record(vec![
+            ("n_gpus", Json::from(n_gpus)),
+            ("devices", Json::from(n_dev)),
+            ("cloud_s", Json::from(cloud_t)),
+            ("cleave_s", Json::from(r.batch_time)),
+        ]);
+    }
+    t.print();
+    println!("\npaper shape: CLEAVE within 2x of multi-GPU cloud; baselines flat");
+    rep.finish();
+}

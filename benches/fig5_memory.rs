@@ -1,0 +1,48 @@
+//! Figure 5: per-device peak memory with 8192 candidate devices, across
+//! model sizes. Shape: CLEAVE caps below the 512 MB phone line for every
+//! model; DTFM/Alpa grow with model size and OOM for large models.
+
+#[path = "common.rs"]
+mod common;
+
+use cleave::baselines::{alpa, dtfm};
+use cleave::model::config::{ModelSpec, TrainSetup};
+use cleave::model::memory::PHONE_MEM_BYTES;
+use cleave::util::bench::Reporter;
+use cleave::util::json::Json;
+use cleave::util::table::Table;
+
+fn main() {
+    let mut rep = Reporter::new("fig5_memory", "per-device memory, 8192 candidates (Figure 5)");
+    let setup = TrainSetup::default();
+    let fleet = common::default_fleet(2048); // solver fleet (CLEAVE picks shard sizes)
+    let big_fleet = common::default_fleet(8192);
+    let mut t = Table::new(&["Model", "CLEAVE", "DTFM", "Alpa", "phone limit"]);
+    for name in ["OPT-1.3B", "OPT-13B", "OPT-30B", "OPT-66B", "Llama2-70B"] {
+        let spec = ModelSpec::preset(name).unwrap();
+        let (r, _, _) = common::cleave_batch_on(&spec, &setup, &fleet.devices);
+        let dt = dtfm::plan_with(&spec, &setup, &big_fleet.devices, 1e15, false)
+            .map(|p| p.per_device_mem_bytes);
+        let al = alpa::plan(&spec, &setup, &big_fleet.devices).map(|p| p.per_device_mem_bytes);
+        t.row(&[
+            name.into(),
+            common::gb(r.peak_device_mem_bytes),
+            dt.map(common::gb).unwrap_or("OOM".into()),
+            al.map(common::gb).unwrap_or("OOM".into()),
+            common::gb(PHONE_MEM_BYTES),
+        ]);
+        rep.record(vec![
+            ("model", Json::from(name)),
+            ("cleave_b", Json::from(r.peak_device_mem_bytes)),
+            ("dtfm_b", dt.map(Json::from).unwrap_or(Json::Null)),
+            ("alpa_b", al.map(Json::from).unwrap_or(Json::Null)),
+        ]);
+        assert!(
+            r.peak_device_mem_bytes < PHONE_MEM_BYTES,
+            "{name}: CLEAVE must cap below the phone budget"
+        );
+    }
+    t.print();
+    println!("\npaper shape: CLEAVE flat below 0.5GB; baselines scale with model size / OOM");
+    rep.finish();
+}

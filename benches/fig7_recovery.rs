@@ -1,0 +1,66 @@
+//! Figure 7: absolute latency to recover from one device failure
+//! (OPT-13B, 256 devices). Shape: CLEAVE (sub-GEMM reshard over all
+//! survivors) orders of magnitude below layer-recompute baselines, which
+//! sit far below checkpoint-restore.
+
+#[path = "common.rs"]
+mod common;
+
+use cleave::baselines::recovery::baseline_recovery;
+use cleave::cluster::fleet::Fleet;
+use cleave::model::config::{ModelSpec, TrainSetup};
+use cleave::model::dag::GemmDag;
+use cleave::sched::cost::{CostModel, GemmShape};
+use cleave::sched::recovery::recover;
+use cleave::sched::solver::{solve_gemm, SolverOptions};
+use cleave::util::bench::Reporter;
+use cleave::util::json::Json;
+use cleave::util::stats;
+use cleave::util::table::Table;
+
+fn main() {
+    let mut rep = Reporter::new("fig7_recovery", "failure recovery latency (Figure 7)");
+    let spec = ModelSpec::preset("OPT-13B").unwrap();
+    let setup = TrainSetup::default();
+    let fleet = Fleet::median(256);
+    let cm = CostModel::default();
+
+    // CLEAVE: average over several victims of a representative projection GEMM.
+    let g = GemmDag::build(&spec, &setup).levels[0].gemms[0];
+    let shape = GemmShape::new(g.m, g.n, g.q, g.count);
+    let (a, _) = solve_gemm(&fleet.devices, shape, &cm, &SolverOptions::default());
+    let victims = a.active_devices();
+    let lat: Vec<f64> = victims
+        .iter()
+        .take(8)
+        .map(|&v| {
+            recover(&fleet.devices, &a, &[v], &cm, &SolverOptions::default()).total_latency()
+        })
+        .collect();
+    let cleave = stats::mean(&lat);
+
+    let base = baseline_recovery(&spec, &setup, &fleet.devices);
+    let mut t = Table::new(&["System", "recovery latency", "vs CLEAVE"]);
+    for (name, s) in [
+        ("CLEAVE", cleave),
+        ("SWARM", base.swarm_s),
+        ("Bamboo", base.bamboo_s),
+        ("Asteroid", base.asteroid_s),
+        ("Mario", base.mario_s),
+    ] {
+        t.row(&[
+            name.into(),
+            common::secs(s),
+            format!("{:.0}x", s / cleave),
+        ]);
+        rep.record(vec![("system", Json::from(name)), ("latency_s", Json::from(s))]);
+    }
+    t.print();
+    println!(
+        "\npaper shape: layer baselines ~50 s, ckpt-restore slowest, CLEAVE >=100x faster\n\
+         (our layer-cost constants land at ~{:.0} s; measured speedup {:.0}x — same ordering)",
+        base.bamboo_s,
+        base.bamboo_s / cleave
+    );
+    rep.finish();
+}

@@ -1,0 +1,58 @@
+//! Figure 9: weak scaling in model size — devices scale proportionally with
+//! the model (70B -> 1024 devices). Shape: CLEAVE's runtime stays nearly
+//! flat; DTFM cannot reach the big models; Alpa's uniform assignment
+//! creates stragglers.
+
+#[path = "common.rs"]
+mod common;
+
+use cleave::baselines::{alpa, dtfm};
+use cleave::model::config::{ModelSpec, TrainSetup};
+use cleave::util::bench::Reporter;
+use cleave::util::json::Json;
+use cleave::util::table::Table;
+
+fn main() {
+    let mut rep = Reporter::new("fig9_model_scaling", "model-size weak scaling (Figure 9)");
+    let setup = TrainSetup::default();
+    // devices proportional to model size; 70B -> 1024 (paper's anchor).
+    let cases = [
+        ("OPT-1.3B", 20usize),
+        ("OPT-6.7B", 98),
+        ("OPT-13B", 190),
+        ("OPT-30B", 439),
+        ("OPT-66B", 966),
+        ("Llama2-70B", 1024),
+    ];
+    let mut t = Table::new(&["Model", "#devices", "CLEAVE", "DTFM", "Alpa"]);
+    let mut cleave_times = Vec::new();
+    for (name, n) in cases {
+        let spec = ModelSpec::preset(name).unwrap();
+        let fleet = common::default_fleet(n);
+        let (r, _, _) = common::cleave_batch_on(&spec, &setup, &fleet.devices);
+        let d = dtfm::plan(&spec, &setup, &fleet.devices, 1e12).map(|p| p.per_batch_s);
+        let a = alpa::plan_with(&spec, &setup, &fleet.devices, false).map(|p| p.per_batch_s);
+        t.row(&[
+            name.into(),
+            n.to_string(),
+            common::secs(r.batch_time),
+            d.map(common::secs).unwrap_or("OOM".into()),
+            a.map(common::secs).unwrap_or("OOM".into()),
+        ]);
+        rep.record(vec![
+            ("model", Json::from(name)),
+            ("devices", Json::from(n)),
+            ("cleave_s", Json::from(r.batch_time)),
+        ]);
+        cleave_times.push(r.batch_time);
+    }
+    t.print();
+    // flatness: max/min within a factor the paper's figure shows (~2x)
+    let max = cleave_times.iter().cloned().fold(0.0, f64::max);
+    let min = cleave_times.iter().cloned().fold(f64::MAX, f64::min);
+    println!(
+        "\nCLEAVE weak-scaling flatness: max/min = {:.2}x (paper: nearly constant)",
+        max / min
+    );
+    rep.finish();
+}

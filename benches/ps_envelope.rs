@@ -1,0 +1,59 @@
+//! §6 single-PS operating envelope: per-level payloads served by one
+//! 200 Gbps CPU PS while devices compute. Shape: ~1000-2000 concurrent
+//! participants per PS; the QKV example's aggregate per-GEMM downlink is
+//! served in milliseconds; multi-PS splits demand ~1/N.
+
+#[path = "common.rs"]
+mod common;
+
+use cleave::cluster::network::ps_service_time;
+use cleave::model::config::{ModelSpec, TrainSetup};
+use cleave::model::dag::GemmDag;
+use cleave::sched::cost::{CostModel, PsParams};
+use cleave::sched::solver::{solve_dag, SolverOptions};
+use cleave::sim::batch::{simulate_batch, SimConfig};
+use cleave::util::bench::Reporter;
+use cleave::util::json::Json;
+use cleave::util::table::Table;
+
+fn main() {
+    let mut rep = Reporter::new("ps_envelope", "single-PS operating envelope (§6)");
+    // The paper's worked example: 4096x4096 QKV GEMM, 1000 devices.
+    let ps = PsParams::default();
+    let per_gemm_dl = 65e6; // §6: ~65 MB aggregate per-GEMM downlink
+    println!(
+        "§6 example: 65 MB aggregate per-GEMM DL served in {} at 25 GB/s (paper: ~2.6 ms)",
+        common::secs(ps_service_time(per_gemm_dl, ps.net_bw))
+    );
+
+    let spec = ModelSpec::preset("Llama2-13B").unwrap();
+    let setup = TrainSetup::default();
+    let mut t = Table::new(&["#devices", "batch time", "PS-bound excess", "PS share of batch"]);
+    for n in [256usize, 512, 1024, 2048, 4096] {
+        let fleet = common::default_fleet(n);
+        let cm = CostModel::default().with_effective_flops();
+        let dag = GemmDag::build(&spec, &setup);
+        let (schedule, _) = solve_dag(&fleet.devices, &dag, &cm, &ps, &SolverOptions::default());
+        let r = simulate_batch(&fleet.devices, &dag, &schedule, &cm, &SimConfig::default());
+        t.row(&[
+            n.to_string(),
+            common::secs(r.batch_time),
+            common::secs(r.ps_bound_time),
+            format!("{:.2}%", 100.0 * r.ps_bound_time / r.batch_time),
+        ]);
+        rep.record(vec![
+            ("devices", Json::from(n)),
+            ("batch_s", Json::from(r.batch_time)),
+            ("ps_bound_s", Json::from(r.ps_bound_time)),
+        ]);
+        if n <= 2048 {
+            assert!(
+                r.ps_bound_time / r.batch_time < 0.05,
+                "PS must not be the bottleneck inside the envelope (n={n})"
+            );
+        }
+    }
+    t.print();
+    println!("\nmulti-PS model: N balanced instances split per-PS demand ~1/N (§6)");
+    rep.finish();
+}

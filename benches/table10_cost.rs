@@ -1,0 +1,47 @@
+//! Table 10: equal-runtime coordinator-cost comparison (AWS on-demand
+//! constants) + the §6 energy-ratio model. Shape: CPU-only PS is ~4.9-6.2x
+//! cheaper than 8xA100 instances.
+
+#[path = "common.rs"]
+mod common;
+
+use cleave::baselines::cloud::{cost_ratio, pricing_table, EnergyModel};
+use cleave::util::bench::Reporter;
+use cleave::util::json::Json;
+use cleave::util::table::Table;
+
+fn main() {
+    let mut rep = Reporter::new("table10_cost", "infrastructure cost (Table 10)");
+    let rows = pricing_table();
+    let ps = rows[3];
+    let mut t = Table::new(&["Instance", "Accelerator", "GPU mem", "Host mem", "$/hr", "vs PS"]);
+    for r in &rows {
+        t.row(&[
+            r.name.into(),
+            r.accel.into(),
+            if r.gpu_mem_gb > 0.0 {
+                format!("{:.0} GB", r.gpu_mem_gb)
+            } else {
+                "-".into()
+            },
+            format!("{:.0} GiB", r.host_mem_gib),
+            format!("${:.2}", r.usd_per_hour),
+            format!("{:.1}x", cost_ratio(r, &ps)),
+        ]);
+        rep.record(vec![
+            ("instance", Json::from(r.name)),
+            ("usd_per_hour", Json::from(r.usd_per_hour)),
+            ("ratio_vs_ps", Json::from(cost_ratio(r, &ps))),
+        ]);
+    }
+    t.print();
+    let e = EnergyModel::default();
+    println!(
+        "\ncoordinator savings: {:.1}x vs p4d, {:.1}x vs p4de (paper: 4.9x / 6.2x)\n\
+         energy model (§6): cloud/edge power ratio {:.1}x under companion-paper assumptions",
+        cost_ratio(&rows[0], &ps),
+        cost_ratio(&rows[1], &ps),
+        e.cloud_over_edge()
+    );
+    rep.finish();
+}

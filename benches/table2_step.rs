@@ -1,0 +1,67 @@
+//! Table 2: per-step stage times + memory for LLaMA-13B across hardware
+//! classes (phone 5 TFLOPS / laptop 27 TFLOPS / A100 312 TFLOPS), with the
+//! PS-hosted optimizer. Shape: bwd ~ 2x fwd; GEMM share > 99%; optimizer
+//! ~2.25 s at 150 GB/s host memory.
+
+#[path = "common.rs"]
+mod common;
+
+use cleave::model::config::{ModelSpec, TrainSetup};
+use cleave::model::flops::stage_times;
+use cleave::util::bench::Reporter;
+use cleave::util::json::Json;
+use cleave::util::table::Table;
+
+fn main() {
+    let mut rep = Reporter::new("table2_step", "per-step stage breakdown (Table 2)");
+    let spec = ModelSpec::preset("LLaMA-13B").unwrap();
+    let setup = TrainSetup::default();
+    let mut t = Table::new(&["Stage", "Phone (5TF)", "Laptop (27TF)", "Cloud A100 (312TF)"]);
+    let hw = [5e12, 27e12, 312e12];
+    let st: Vec<_> = hw
+        .iter()
+        .map(|&f| stage_times(&spec, &setup, f, 1.0, 150e9))
+        .collect();
+    t.row(&[
+        "Fwd GEMM".into(),
+        common::secs(st[0].fwd_gemm_s),
+        common::secs(st[1].fwd_gemm_s),
+        common::secs(st[2].fwd_gemm_s),
+    ]);
+    t.row(&[
+        "Fwd non-GEMM".into(),
+        common::secs(st[0].fwd_non_gemm_s),
+        common::secs(st[1].fwd_non_gemm_s),
+        common::secs(st[2].fwd_non_gemm_s),
+    ]);
+    t.row(&[
+        "Bwd GEMM".into(),
+        common::secs(st[0].bwd_gemm_s),
+        common::secs(st[1].bwd_gemm_s),
+        common::secs(st[2].bwd_gemm_s),
+    ]);
+    t.row(&[
+        "Optimizer (PS host)".into(),
+        common::secs(st[0].optimizer_s),
+        "same".into(),
+        "same".into(),
+    ]);
+    t.row(&[
+        "GEMM share".into(),
+        format!("{:.2}%", st[0].gemm_share * 100.0),
+        format!("{:.2}%", st[1].gemm_share * 100.0),
+        format!("{:.2}%", st[2].gemm_share * 100.0),
+    ]);
+    t.print();
+    println!("paper (per-sample normalization): fwd 3.9/0.72/0.063 s, bwd 2x, optimizer ~2.25 s");
+    for (i, s) in st.iter().enumerate() {
+        rep.record(vec![
+            ("hw_tflops", Json::from(hw[i] / 1e12)),
+            ("fwd_gemm_s", Json::from(s.fwd_gemm_s)),
+            ("bwd_gemm_s", Json::from(s.bwd_gemm_s)),
+            ("optimizer_s", Json::from(s.optimizer_s)),
+        ]);
+    }
+    assert!((st[0].bwd_gemm_s / st[0].fwd_gemm_s - 2.0).abs() < 0.1);
+    rep.finish();
+}

@@ -1,0 +1,43 @@
+//! Table 4: minimum per-device memory under DP / PP / DP+PP / DP+PP+TP.
+//! Shape: only TP-class sharding reaches the 512 MB phone budget.
+
+#[path = "common.rs"]
+mod common;
+
+use cleave::model::config::{ModelSpec, TrainSetup};
+use cleave::model::memory::{table4_row, ActivationPolicy, PHONE_MEM_BYTES};
+use cleave::util::bench::Reporter;
+use cleave::util::json::Json;
+use cleave::util::table::Table;
+
+fn main() {
+    let mut rep = Reporter::new("table4_parallelism", "per-device memory by mode (Table 4)");
+    let setup = TrainSetup::default();
+    let mut t = Table::new(&["Model", "DP(128)", "PP(32)", "DP+PP(4K)", "DP+PP+TP(>8K)"]);
+    for name in ["Llama2-7B", "Llama2-13B", "Llama2-70B"] {
+        let spec = ModelSpec::preset(name).unwrap();
+        let (dp, pp, dppp, (lo, hi)) =
+            table4_row(&spec, &setup, ActivationPolicy::SelectiveRecompute);
+        t.row(&[
+            name.into(),
+            common::gb(dp),
+            common::gb(pp),
+            common::gb(dppp),
+            format!("{}~{}", common::gb(lo), common::gb(hi)),
+        ]);
+        rep.record(vec![
+            ("model", Json::from(name)),
+            ("dp_gb", Json::from(dp / 1e9)),
+            ("pp_gb", Json::from(pp / 1e9)),
+            ("dppp_gb", Json::from(dppp / 1e9)),
+            ("tp_lo_mb", Json::from(lo / 1e6)),
+        ]);
+        assert!(dp > PHONE_MEM_BYTES && pp > PHONE_MEM_BYTES && dppp > PHONE_MEM_BYTES);
+    }
+    t.print();
+    println!(
+        "phone usable memory limit: {} — only the TP column reaches it (paper's claim)",
+        common::gb(PHONE_MEM_BYTES)
+    );
+    rep.finish();
+}

@@ -1,0 +1,62 @@
+//! Table 8: absolute per-batch wall-clock for the representative
+//! configurations, on the deterministic median-device fleet (6 TFLOPS,
+//! 55 MB/s DL, 7.5 MB/s UL). Shape: CLEAVE within ~2x of cloud at 256-512
+//! devices, faster than cloud at 1024 for 70B; DTFM ~hundreds-thousands s.
+
+#[path = "common.rs"]
+mod common;
+
+use cleave::baselines::{cloud, dtfm};
+use cleave::cluster::fleet::Fleet;
+use cleave::model::config::{ModelSpec, TrainSetup};
+use cleave::model::dag::GemmDag;
+use cleave::sched::cost::{CostModel, PsParams};
+use cleave::sched::solver::{solve_dag, SolverOptions};
+use cleave::sim::batch::{simulate_batch, SimConfig};
+use cleave::util::bench::Reporter;
+use cleave::util::json::Json;
+use cleave::util::table::Table;
+
+fn main() {
+    let mut rep = Reporter::new("table8_wallclock", "absolute per-batch seconds (Table 8)");
+    let setup = TrainSetup::default();
+    let gpu = cloud::GpuParams::default();
+    let cases = [
+        ("OPT-13B", 256usize, 3466.7),
+        ("Llama2-13B", 512, 3466.7),
+        ("Llama2-70B", 1024, f64::NAN),
+    ];
+    let mut t = Table::new(&["Configuration", "Cloud (A100)", "CLEAVE", "DTFM"]);
+    for (name, n, _paper_dtfm) in cases {
+        let spec = ModelSpec::preset(name).unwrap();
+        let fleet = Fleet::median(n);
+        // Table 8 uses raw cost-model FLOPS on median devices.
+        let cm = CostModel::default();
+        let dag = GemmDag::build(&spec, &setup);
+        let (schedule, _) = solve_dag(
+            &fleet.devices,
+            &dag,
+            &cm,
+            &PsParams::default(),
+            &SolverOptions::default(),
+        );
+        let r = simulate_batch(&fleet.devices, &dag, &schedule, &cm, &SimConfig::default());
+        let cloud_t = cloud::single_gpu_batch_time(&spec, &setup, &gpu);
+        let dt = dtfm::plan_with(&spec, &setup, &fleet.devices, 1e12, false);
+        t.row(&[
+            format!("{n} devices + {name}"),
+            format!("{:.1} s", cloud_t),
+            format!("{:.1} s", r.batch_time),
+            dt.map(|p| format!("{:.1} s", p.per_batch_s)).unwrap_or("-".into()),
+        ]);
+        rep.record(vec![
+            ("model", Json::from(name)),
+            ("devices", Json::from(n)),
+            ("cloud_s", Json::from(cloud_t)),
+            ("cleave_s", Json::from(r.batch_time)),
+        ]);
+    }
+    t.print();
+    println!("\npaper: 33.6/37.3/3466.7, 33.6/16.6/3466.7, 180.8/30.4/-");
+    rep.finish();
+}

@@ -1,0 +1,89 @@
+//! Perf probe for the §Perf pass (EXPERIMENTS.md): measures the L3 hot
+//! paths — host GEMM throughput, solver latency across fleet sizes, the
+//! per-batch simulator, and the live dispatch loop — so optimizations can
+//! be recorded before/after.
+
+use std::time::{Duration, Instant};
+
+use cleave::cluster::fleet::Fleet;
+use cleave::model::config::{ModelSpec, TrainSetup};
+use cleave::model::dag::GemmDag;
+use cleave::runtime::hostgemm;
+use cleave::sched::cost::{CostModel, GemmShape, PsParams};
+use cleave::sched::solver::{solve_dag, solve_gemm, SolverOptions};
+use cleave::sim::batch::{simulate_batch, SimConfig};
+use cleave::util::bench::time_fn;
+use cleave::util::rng::Rng;
+
+fn main() {
+    println!("== perf probe ==");
+
+    // L3a: host GEMM throughput (the live worker hot path)
+    let mut rng = Rng::new(1);
+    for &(m, k, n) in &[(256usize, 256usize, 256usize), (512, 512, 512), (1024, 1024, 1024)] {
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal() as f32).collect();
+        let mut c = vec![0.0f32; m * n];
+        let t = time_fn(&format!("hostgemm {m}"), Duration::from_millis(400), || {
+            hostgemm::matmul(&a, &b, &mut c, m, k, n);
+        });
+        let gflops = 2.0 * (m * k * n) as f64 / t.mean_secs() / 1e9;
+        let tp = time_fn("par", Duration::from_millis(400), || {
+            std::hint::black_box(hostgemm::matmul_parallel(&a, &b, m, k, n, 8));
+        });
+        let gflops_p = 2.0 * (m * k * n) as f64 / tp.mean_secs() / 1e9;
+        println!(
+            "  hostgemm {m}x{k}x{n}: serial {:.2} GFLOP/s, 8-thread {:.2} GFLOP/s",
+            gflops, gflops_p
+        );
+    }
+
+    // L3b: solver latency vs fleet size (Table 7 regime + beyond)
+    let shape = GemmShape::new(1024, 8192, 8192, 128); // 70B-class projection
+    let cm = CostModel::default();
+    for n in [256usize, 1024, 4096, 8192] {
+        let fleet = Fleet::median(n);
+        let t0 = Instant::now();
+        let (_, stats) = solve_gemm(&fleet.devices, shape, &cm, &SolverOptions::default());
+        println!(
+            "  solve_gemm @ {n} devices: {:.2} ms ({} bisection iters)",
+            t0.elapsed().as_secs_f64() * 1e3,
+            stats.bisection_iters
+        );
+    }
+
+    // L3c: whole-DAG cold start (the paper's 10-minute Gurobi benchmark)
+    let spec = ModelSpec::preset("Llama2-70B").unwrap();
+    let setup = TrainSetup::default();
+    let dag = GemmDag::build(&spec, &setup);
+    let fleet = Fleet::median(1024);
+    let t0 = Instant::now();
+    let (schedule, _) = solve_dag(
+        &fleet.devices,
+        &dag,
+        &cm,
+        &PsParams::default(),
+        &SolverOptions::default(),
+    );
+    println!(
+        "  solve_dag 70B @ 1024 devices: {:.1} ms (paper MILP: ~10 min)",
+        t0.elapsed().as_secs_f64() * 1e3
+    );
+
+    // L3d: simulator throughput
+    let t = time_fn("sim", Duration::from_millis(800), || {
+        std::hint::black_box(simulate_batch(
+            &fleet.devices,
+            &dag,
+            &schedule,
+            &cm,
+            &SimConfig::default(),
+        ));
+    });
+    let events = dag.n_levels() * fleet.len();
+    println!(
+        "  simulate_batch 70B @ 1024: {:.2} ms/batch ({:.1}k device-level evals/s)",
+        t.mean_secs() * 1e3,
+        events as f64 / t.mean_secs() / 1e3
+    );
+}

@@ -1,0 +1,97 @@
+//! Quickstart: solve a CLEAVE schedule for a paper-scale configuration,
+//! simulate one training batch, and compare against the DTFM/Alpa/cloud
+//! baselines — the §5.2 experiment in miniature.
+//!
+//! Run: `cargo run --release --example quickstart -- [--model OPT-13B] [--devices 512]`
+
+use cleave::baselines::{alpa, cloud, dtfm};
+use cleave::cluster::fleet::{Fleet, FleetConfig};
+use cleave::model::config::{ModelSpec, TrainSetup};
+use cleave::model::dag::GemmDag;
+use cleave::sched::cost::{CostModel, PsParams};
+use cleave::sched::solver::{solve_dag, SolverOptions};
+use cleave::sim::batch::{simulate_batch, SimConfig};
+use cleave::util::cli::Cli;
+use cleave::util::table::Table;
+use cleave::util::{fmt_bytes, fmt_secs};
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new("quickstart", "one-batch CLEAVE vs baselines")
+        .opt("model", Some("OPT-13B"), "model preset")
+        .opt("devices", Some("512"), "edge device count")
+        .parse();
+    let spec = ModelSpec::preset(args.get_str("model")?)?;
+    let setup = TrainSetup::default();
+    let n = args.get_usize("devices")?;
+    let fleet = Fleet::sample(&FleetConfig::default().with_devices(n));
+
+    println!(
+        "== CLEAVE quickstart: {} on {n} heterogeneous edge devices ==",
+        spec.name
+    );
+    println!(
+        "fleet: {:.0} TFLOPS aggregate effective, {}/s aggregate downlink, cv={:.2}",
+        fleet.aggregate_flops() / 1e12,
+        fmt_bytes(fleet.aggregate_dl()),
+        fleet.compute_cv()
+    );
+
+    let dag = GemmDag::build(&spec, &setup);
+    println!(
+        "GEMM DAG: {} levels, {} distinct shapes, {:.2e} FLOPs/batch",
+        dag.n_levels(),
+        dag.distinct_shapes().len(),
+        dag.total_flops()
+    );
+
+    let cm = CostModel::default().with_effective_flops();
+    let (schedule, stats) = solve_dag(
+        &fleet.devices,
+        &dag,
+        &cm,
+        &PsParams::default(),
+        &SolverOptions::default(),
+    );
+    println!(
+        "solver: {} decision vars over {} devices in {}",
+        stats.decision_vars,
+        stats.devices_considered,
+        fmt_secs(stats.solve_time_s)
+    );
+
+    let r = simulate_batch(&fleet.devices, &dag, &schedule, &cm, &SimConfig::default());
+
+    let mut t = Table::new(&["system", "per-batch", "vs CLEAVE"]);
+    t.row(&["CLEAVE".into(), fmt_secs(r.batch_time), "1.0x".into()]);
+    let cloud_t = cloud::single_gpu_batch_time(&spec, &setup, &cloud::GpuParams::default());
+    t.row(&[
+        "cloud 1xA100 (offload)".into(),
+        fmt_secs(cloud_t),
+        format!("{:.1}x", cloud_t / r.batch_time),
+    ]);
+    match dtfm::plan_with(&spec, &setup, &fleet.devices, 1e12, false) {
+        Some(p) => t.row(&[
+            "DTFM (DP+PP)".into(),
+            fmt_secs(p.per_batch_s),
+            format!("{:.1}x", p.per_batch_s / r.batch_time),
+        ]),
+        None => t.row_strs(&["DTFM (DP+PP)", "solver OOM", "-"]),
+    };
+    match alpa::plan_with(&spec, &setup, &fleet.devices, false) {
+        Some(p) => t.row(&[
+            "Alpa (DP+PP+TP)".into(),
+            fmt_secs(p.per_batch_s),
+            format!("{:.1}x", p.per_batch_s / r.batch_time),
+        ]),
+        None => t.row_strs(&["Alpa (DP+PP+TP)", "infeasible", "-"]),
+    };
+    t.print();
+    println!(
+        "\nper-device peak memory {} (phone budget {}); DL {} UL {} per batch",
+        fmt_bytes(r.peak_device_mem_bytes),
+        fmt_bytes(512e6),
+        fmt_bytes(r.total_dl_bytes),
+        fmt_bytes(r.total_ul_bytes),
+    );
+    Ok(())
+}

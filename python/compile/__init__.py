@@ -1,0 +1,5 @@
+"""CLEAVE build-time compile path: L1 Pallas kernels + L2 JAX model -> HLO text.
+
+Python is never on the request path — ``make artifacts`` runs once and the
+rust coordinator is self-contained afterwards.
+"""

@@ -1,0 +1,251 @@
+"""AOT pipeline: lower the L2 train step + canonical sub-GEMM executables to
+HLO **text** and write the binary/JSON sidecars the rust runtime consumes.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs (under ``artifacts/``):
+
+* ``train_step.hlo.txt``   — fused fwd+bwd+Adam step of the tiny LM
+* ``forward_loss.hlo.txt`` — loss-only evaluation (no state update)
+* ``gemm_{m}x{n}x{q}.hlo.txt`` — canonical Pallas sub-GEMM executables used
+  by worker devices on the live distributed path (shards pad up to these)
+* ``init_params.bin``      — f32 LE initial parameters, ``param_names`` order
+* ``tokens.bin``           — i32 LE pre-generated synthetic batches (so rust
+  and JAX see bit-identical data; jax PRNG is not reproducible from rust)
+* ``metadata.json``        — shapes/dtypes/orders for all of the above
+
+Run once via ``make artifacts``; a content hash makes it a no-op when
+inputs are unchanged.
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+
+# Canonical sub-GEMM shapes compiled for the live worker path. Shards whose
+# (rows, k, cols) fit under one of these are zero-padded up to it; padding
+# rows/cols multiply into zeros, so the unpadded block is exact.
+CANONICAL_GEMMS = [
+    (64, 64, 64),
+    (128, 128, 128),
+    (128, 512, 128),
+    (256, 256, 256),
+    (512, 128, 512),
+]
+
+N_TOKEN_BATCHES = 640
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-reassigning path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _flat_train_step(cfg: M.ModelConfig, acfg: M.AdamConfig, n_params: int):
+    """Flatten the pytree boundary to an explicit positional order so the
+    rust side can feed literals without knowing jax pytree key-sorting."""
+    names = M.param_names(cfg)
+    assert len(names) == n_params
+    step_fn = M.make_train_step(cfg, acfg, use_pallas=True)
+
+    def flat(*args):
+        params = dict(zip(names, args[:n_params]))
+        m = dict(zip(names, args[n_params:2 * n_params]))
+        v = dict(zip(names, args[2 * n_params:3 * n_params]))
+        step = args[3 * n_params]
+        tokens = args[3 * n_params + 1]
+        p2, m2, v2, s2, loss = step_fn(params, m, v, step, tokens)
+        out = [p2[n] for n in names] + [m2[n] for n in names] + [v2[n] for n in names]
+        return tuple(out) + (s2, loss)
+
+    return flat
+
+
+def _flat_forward_loss(cfg: M.ModelConfig, n_params: int):
+    names = M.param_names(cfg)
+
+    def flat(*args):
+        params = dict(zip(names, args[:n_params]))
+        tokens = args[n_params]
+        return (M.loss_fn(params, tokens, cfg, use_pallas=True),)
+
+    return flat
+
+
+def _gemm_entry(m: int, n: int, q: int):
+    from compile.kernels import gemm
+
+    def fn(a, b):
+        return (gemm.matmul(a, b),)
+
+    return fn
+
+
+def _input_fingerprint() -> str:
+    """Hash of every compile-path python file — artifact staleness check."""
+    h = hashlib.sha256()
+    base = os.path.dirname(os.path.abspath(__file__))
+    for root, _, files in sorted(os.walk(base)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(root, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    out = os.path.abspath(args.out_dir)
+    os.makedirs(out, exist_ok=True)
+
+    fp = _input_fingerprint()
+    fp_path = os.path.join(out, ".fingerprint")
+    if not args.force and os.path.exists(fp_path):
+        if open(fp_path).read().strip() == fp and os.path.exists(
+            os.path.join(out, "metadata.json")
+        ):
+            print("artifacts up to date (fingerprint match); skipping")
+            return
+
+    cfg = M.ModelConfig()
+    acfg = M.AdamConfig()
+    names = M.param_names(cfg)
+    n_params = len(names)
+
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    for n in names:
+        assert n in params, f"param_names out of sync: {n}"
+    assert set(names) == set(params.keys())
+
+    # ---- init_params.bin ---------------------------------------------------
+    shapes = {n: list(params[n].shape) for n in names}
+    with open(os.path.join(out, "init_params.bin"), "wb") as f:
+        for n in names:
+            f.write(np.asarray(params[n], dtype="<f4").tobytes())
+
+    # ---- tokens.bin ---------------------------------------------------------
+    tok_path = os.path.join(out, "tokens.bin")
+    with open(tok_path, "wb") as f:
+        for seed in range(N_TOKEN_BATCHES):
+            batch = np.asarray(M.synthetic_batch(cfg, seed), dtype="<i4")
+            f.write(batch.tobytes())
+
+    # ---- train_step.hlo.txt -------------------------------------------------
+    spec = lambda n: jax.ShapeDtypeStruct(tuple(shapes[n]), jnp.float32)
+    p_specs = [spec(n) for n in names]
+    step_spec = jax.ShapeDtypeStruct((), jnp.int32)
+    tok_spec = jax.ShapeDtypeStruct((cfg.batch, cfg.seq_len), jnp.int32)
+
+    print(f"lowering train_step ({cfg.param_count():,} params)...")
+    flat = _flat_train_step(cfg, acfg, n_params)
+    lowered = jax.jit(flat).lower(
+        *p_specs, *p_specs, *p_specs, step_spec, tok_spec
+    )
+    text = to_hlo_text(lowered)
+    with open(os.path.join(out, "train_step.hlo.txt"), "w") as f:
+        f.write(text)
+    print(f"  train_step.hlo.txt: {len(text):,} chars")
+
+    # ---- forward_loss.hlo.txt ----------------------------------------------
+    print("lowering forward_loss...")
+    fl = _flat_forward_loss(cfg, n_params)
+    lowered = jax.jit(fl).lower(*p_specs, tok_spec)
+    text = to_hlo_text(lowered)
+    with open(os.path.join(out, "forward_loss.hlo.txt"), "w") as f:
+        f.write(text)
+    print(f"  forward_loss.hlo.txt: {len(text):,} chars")
+
+    # ---- canonical sub-GEMM executables -------------------------------------
+    gemms = []
+    for (m, n, q) in CANONICAL_GEMMS:
+        fn = _gemm_entry(m, n, q)
+        a = jax.ShapeDtypeStruct((m, n), jnp.float32)
+        b = jax.ShapeDtypeStruct((n, q), jnp.float32)
+        text = to_hlo_text(jax.jit(fn).lower(a, b))
+        fname = f"gemm_{m}x{n}x{q}.hlo.txt"
+        with open(os.path.join(out, fname), "w") as f:
+            f.write(text)
+        gemms.append({"m": m, "n": n, "q": q, "file": fname})
+        print(f"  {fname}: {len(text):,} chars")
+
+    # ---- oracle: loss + grads on batch 0, loss trajectory -------------------
+    # The rust coordinator implements the full transformer fwd/bwd natively
+    # (distributed sub-GEMM path); these oracles pin its numerics to JAX.
+    print("computing grad/loss oracle...")
+    toks0 = M.synthetic_batch(cfg, 0)
+    loss0, grads0 = jax.value_and_grad(
+        lambda p: M.loss_fn(p, toks0, cfg, use_pallas=False))(params)
+    with open(os.path.join(out, "grads0.bin"), "wb") as f:
+        for n in names:
+            f.write(np.asarray(grads0[n], dtype="<f4").tobytes())
+
+    p_run = params
+    m_run, v_run, s_run = M.init_opt_state(params)
+    train = jax.jit(M.make_train_step(cfg, acfg, use_pallas=False))
+    losses = []
+    for i in range(24):
+        toks = M.synthetic_batch(cfg, i)
+        p_run, m_run, v_run, s_run, li = train(p_run, m_run, v_run, s_run, toks)
+        losses.append(float(li))
+    oracle = {"loss0": float(loss0), "losses": losses}
+    with open(os.path.join(out, "oracle.json"), "w") as f:
+        json.dump(oracle, f, indent=1)
+    print(f"  loss0={float(loss0):.4f}, loss23={losses[-1]:.4f}")
+
+    # ---- metadata.json -------------------------------------------------------
+    meta = {
+        "model": {
+            "vocab": cfg.vocab, "d_model": cfg.d_model, "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers, "d_ff": cfg.d_ff, "seq_len": cfg.seq_len,
+            "batch": cfg.batch, "param_count": cfg.param_count(),
+        },
+        "adam": {"lr": acfg.lr, "b1": acfg.b1, "b2": acfg.b2, "eps": acfg.eps},
+        "param_order": names,
+        "param_shapes": shapes,
+        "train_step": {
+            "file": "train_step.hlo.txt",
+            # input order: params*N, m*N, v*N, step, tokens
+            "n_params": n_params,
+            # output tuple order: params'*N, m'*N, v'*N, step', loss
+            "n_outputs": 3 * n_params + 2,
+        },
+        "forward_loss": {"file": "forward_loss.hlo.txt"},
+        "gemms": gemms,
+        "tokens": {
+            "file": "tokens.bin", "n_batches": N_TOKEN_BATCHES,
+            "batch": cfg.batch, "seq_len": cfg.seq_len, "dtype": "i32",
+        },
+        "init_params": {"file": "init_params.bin", "dtype": "f32"},
+    }
+    with open(os.path.join(out, "metadata.json"), "w") as f:
+        json.dump(meta, f, indent=1)
+
+    with open(fp_path, "w") as f:
+        f.write(fp)
+    print("artifacts written to", out)
+
+
+if __name__ == "__main__":
+    main()

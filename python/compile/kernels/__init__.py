@@ -1,0 +1,9 @@
+"""Layer-1 Pallas kernels and their pure-jnp reference oracles."""
+
+from compile.kernels.gemm import (  # noqa: F401
+    linear,
+    matmul,
+    mxu_utilization_estimate,
+    sub_gemm,
+    vmem_bytes,
+)

@@ -1,0 +1,235 @@
+"""Layer-1 Pallas kernels: the CLEAVE compute hot-spot (dense GEMM).
+
+CLEAVE's unit of distributed work is a *sub-GEMM* — a rectangular block of the
+output grid computed from a strip of A rows and a strip of B columns (paper
+§3.1/§4.1).  This module implements that unit as a tiled Pallas kernel:
+
+* The output grid is tiled into ``(block_m, block_q)`` cells — the same cells
+  the rust coordinator dispatches to edge devices.
+* The contraction dimension is walked in ``block_n`` steps; partials are
+  accumulated in an f32 accumulator (MXU ``preferred_element_type``).
+* ``BlockSpec`` expresses the HBM<->VMEM schedule that the paper's devices do
+  with row/column caching: each grid step stages one A-row-strip and one
+  B-column-strip into VMEM, exactly the "device holds only its assigned
+  shards" memory model.
+
+HARDWARE ADAPTATION (paper targets edge GPUs/NPUs; see DESIGN.md §3): block
+sizes default to multiples of the 128x128 MXU systolic tile; accumulation is
+f32 as on the MXU; bf16 inputs are first-class.  ``interpret=True`` always —
+the CPU PJRT plugin cannot execute Mosaic custom-calls, and interpret-mode
+lowers to plain HLO which the rust runtime loads (see /opt/xla-example).
+
+Autodiff: ``pallas_call`` has no built-in VJP, so :func:`matmul` carries a
+``custom_vjp`` whose backward pass is itself two Pallas GEMMs
+(dA = dO @ B^T, dB = A^T @ dO) — the backward GEMMs the paper counts in
+Table 2 run through the same kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default MXU-aligned tile sizes.  For shapes smaller than one tile the
+# wrappers shrink blocks to the full dimension (still >= 8x128-lane friendly
+# when possible) rather than padding, keeping interpret-mode tests fast.
+DEFAULT_BLOCK_M = 128
+DEFAULT_BLOCK_N = 128
+DEFAULT_BLOCK_Q = 128
+
+
+def _pick_block(dim: int, want: int) -> int:
+    """Largest divisor of ``dim`` that is <= ``want`` (prefers ``want``)."""
+    if dim % want == 0:
+        return want
+    b = min(dim, want)
+    while dim % b != 0:
+        b -= 1
+    return max(b, 1)
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, n_steps: int):
+    """Grid = (m/bm, q/bq, n/bn); accumulate partial products into o_ref.
+
+    The output block's index map ignores the k axis, so the same VMEM output
+    tile is revisited across k steps — the canonical Pallas accumulation
+    pattern (equivalent of a VMEM scratch accumulator on real TPU).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+
+def _matmul_fwd_impl(
+    a: jax.Array,
+    b: jax.Array,
+    *,
+    block_m: int,
+    block_n: int,
+    block_q: int,
+) -> jax.Array:
+    m, n = a.shape
+    n2, q = b.shape
+    assert n == n2, f"contraction mismatch {a.shape} x {b.shape}"
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    bq = _pick_block(q, block_q)
+    n_steps = n // bn
+    out_dtype = jnp.promote_types(a.dtype, jnp.float32)
+    grid = (m // bm, q // bq, n_steps)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_steps=n_steps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bq), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bq), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, q), out_dtype),
+        interpret=True,
+    )(a, b).astype(jnp.promote_types(a.dtype, b.dtype))
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def matmul(
+    a: jax.Array,
+    b: jax.Array,
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_q: int = DEFAULT_BLOCK_Q,
+) -> jax.Array:
+    """``a @ b`` through the tiled Pallas kernel (differentiable)."""
+    return _matmul_fwd_impl(a, b, block_m=block_m, block_n=block_n, block_q=block_q)
+
+
+def _matmul_vjp_fwd(a, b, block_m, block_n, block_q):
+    out = _matmul_fwd_impl(a, b, block_m=block_m, block_n=block_n, block_q=block_q)
+    return out, (a, b)
+
+
+def _matmul_vjp_bwd(block_m, block_n, block_q, res, g):
+    a, b = res
+    g = g.astype(jnp.promote_types(a.dtype, b.dtype))
+    # dA = g @ B^T ; dB = A^T @ g — both through the same Pallas kernel.
+    da = _matmul_fwd_impl(g, b.T, block_m=block_m, block_n=block_n, block_q=block_q)
+    db = _matmul_fwd_impl(a.T, g, block_m=block_m, block_n=block_n, block_q=block_q)
+    return da.astype(a.dtype), db.astype(b.dtype)
+
+
+matmul.defvjp(_matmul_vjp_fwd, _matmul_vjp_bwd)
+
+
+def _linear_kernel(x_ref, w_ref, bias_ref, o_ref, *, n_steps: int, activation: str):
+    """Fused linear: o = act(x @ w + bias); activation applied on last k step."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    ).astype(o_ref.dtype)
+
+    @pl.when(k == n_steps - 1)
+    def _epilogue():
+        acc = o_ref[...] + bias_ref[...]
+        if activation == "gelu":
+            acc = jax.nn.gelu(acc)
+        elif activation == "relu":
+            acc = jnp.maximum(acc, 0.0)
+        o_ref[...] = acc
+
+
+def linear(
+    x: jax.Array,
+    w: jax.Array,
+    bias: jax.Array,
+    activation: str = "none",
+    block_m: int = DEFAULT_BLOCK_M,
+    block_n: int = DEFAULT_BLOCK_N,
+    block_q: int = DEFAULT_BLOCK_Q,
+) -> jax.Array:
+    """Fused ``act(x @ w + b)`` Pallas kernel (forward-only epilogue fusion).
+
+    Used on the inference/serving path; the training path uses
+    :func:`matmul` + jnp epilogue so that autodiff stays exact.
+    """
+    assert activation in ("none", "gelu", "relu")
+    m, n = x.shape
+    _, q = w.shape
+    bm = _pick_block(m, block_m)
+    bn = _pick_block(n, block_n)
+    bq = _pick_block(q, block_q)
+    n_steps = n // bn
+    out_dtype = jnp.promote_types(x.dtype, jnp.float32)
+    return pl.pallas_call(
+        functools.partial(_linear_kernel, n_steps=n_steps, activation=activation),
+        grid=(m // bm, q // bq, n_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bq), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bq), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bq), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, q), out_dtype),
+        interpret=True,
+    )(x, w, bias.reshape(1, -1)).astype(jnp.promote_types(x.dtype, w.dtype))
+
+
+def sub_gemm(
+    a: jax.Array,
+    b: jax.Array,
+    row_start: int,
+    n_rows: int,
+    col_start: int,
+    n_cols: int,
+) -> jax.Array:
+    """The CLEAVE unit of work: one device's rectangle of the output grid.
+
+    Computes ``A[row_start:row_start+n_rows, :] @ B[:, col_start:col_start+n_cols]``
+    through the tiled kernel — exactly the shard a device receives over
+    downlink (α rows of A, β columns of B) and returns over uplink (α×β block).
+    """
+    a_strip = jax.lax.dynamic_slice(a, (row_start, 0), (n_rows, a.shape[1]))
+    b_strip = jax.lax.dynamic_slice(b, (0, col_start), (b.shape[0], n_cols))
+    return matmul(a_strip, b_strip)
+
+
+def vmem_bytes(block_m: int, block_n: int, block_q: int, itemsize: int = 2) -> int:
+    """VMEM working-set estimate for one grid step (perf accounting, DESIGN §8).
+
+    A-tile + B-tile in input dtype plus the f32 output/accumulator tile.
+    """
+    return (block_m * block_n + block_n * block_q) * itemsize + block_m * block_q * 4
+
+
+def mxu_utilization_estimate(m: int, n: int, q: int,
+                             block_m: int = DEFAULT_BLOCK_M,
+                             block_n: int = DEFAULT_BLOCK_N,
+                             block_q: int = DEFAULT_BLOCK_Q) -> float:
+    """Fraction of MXU issue slots doing useful work for this tiling.
+
+    Real-TPU perf cannot be measured under interpret=True (DESIGN §8); this
+    estimates utilization as the ratio of useful MACs to MACs issued once each
+    dimension is rounded up to its tile multiple (128-aligned tiles => 1.0).
+    """
+    bm, bn, bq = (_pick_block(m, block_m), _pick_block(n, block_n),
+                  _pick_block(q, block_q))
+
+    def _pad(dim: int, tile: int) -> int:
+        return ((dim + tile - 1) // tile) * tile
+
+    useful = m * n * q
+    issued = _pad(m, max(bm, 8)) * _pad(n, max(bn, 128)) * _pad(q, max(bq, 128))
+    return useful / issued

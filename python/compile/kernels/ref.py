@@ -1,0 +1,36 @@
+"""Pure-jnp oracles for the Pallas kernels (build-time correctness signal).
+
+Every kernel in :mod:`compile.kernels.gemm` is checked against these in
+``python/tests/`` — allclose in f32, looser tolerance for bf16 inputs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Reference ``a @ b`` with f32 accumulation (matches MXU semantics)."""
+    out = jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+    return out.astype(jnp.promote_types(a.dtype, b.dtype))
+
+
+def linear_ref(x: jax.Array, w: jax.Array, bias: jax.Array,
+               activation: str = "none") -> jax.Array:
+    """Reference fused linear: act(x @ w + b)."""
+    out = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+    out = out + bias.astype(jnp.float32)
+    if activation == "gelu":
+        out = jax.nn.gelu(out)
+    elif activation == "relu":
+        out = jnp.maximum(out, 0.0)
+    return out.astype(jnp.promote_types(x.dtype, w.dtype))
+
+
+def sub_gemm_ref(a: jax.Array, b: jax.Array, row_start: int, n_rows: int,
+                 col_start: int, n_cols: int) -> jax.Array:
+    """Reference for the CLEAVE sub-GEMM unit of work."""
+    a_strip = a[row_start:row_start + n_rows, :]
+    b_strip = b[:, col_start:col_start + n_cols]
+    return matmul_ref(a_strip, b_strip)

@@ -1,0 +1,20 @@
+//! Baseline systems the paper compares against (§5.1), implemented as cost
+//! models under "the same latency accounting model" the paper uses for all
+//! methods:
+//!
+//! * [`dtfm`] — DTFM [77]: heterogeneity-aware DP+PP edge training
+//! * [`alpa`] — Alpa [80]: cloud DP+PP+TP with uniform assignment
+//! * [`cloud`] — single/multi-GPU A100 estimators (DeepSpeed offload) + the
+//!   Table 10 pricing/energy comparison
+//! * [`recovery`] — churn-recovery baselines: Mario (checkpoint-restore),
+//!   Bamboo (replication), SWARM (rewiring), Asteroid (resharding)
+//! * [`volume`] — Appendix A analytic per-device communication volumes and
+//!   the CLEAVE-advantage crossover conditions (Eqs. 7–11)
+//! * [`ideal`] — the "ideal scaling" reference of Figure 1
+
+pub mod alpa;
+pub mod cloud;
+pub mod dtfm;
+pub mod ideal;
+pub mod recovery;
+pub mod volume;

@@ -1,0 +1,252 @@
+//! Appendix A: analytic per-device communication volumes and the
+//! CLEAVE-advantage crossover conditions.
+//!
+//! All volumes are in **elements** (multiply by `b` for bytes) per training
+//! batch, per device, using the paper's Megatron-convention variables
+//! (Table 11): `a` heads, `h` hidden, `H` intermediate, `s` sequence,
+//! `B` batch, `L` layers, `t` TP degree, `p` PP degree, `b_mu` microbatch.
+
+use crate::model::config::{ModelSpec, TrainSetup};
+
+/// 3D-parallelism configuration for the baseline volume model.
+#[derive(Clone, Copy, Debug)]
+pub struct ParallelCfg {
+    pub t: usize,
+    pub p: usize,
+    /// DP ways `B / b_mu`
+    pub d: usize,
+}
+
+impl ParallelCfg {
+    pub fn devices(&self) -> usize {
+        self.t * self.p * self.d
+    }
+
+    /// The paper's default decomposition for `D` devices: PP over layers
+    /// first (up to L), then DP, then TP for what remains.
+    pub fn for_devices(spec: &ModelSpec, setup: &TrainSetup, devices: usize) -> ParallelCfg {
+        let p = spec.layers.min(devices);
+        let rest = (devices / p).max(1);
+        // DP limited by batch (b_mu >= 1)
+        let d = rest.min(setup.batch).max(1);
+        let t = (devices / (p * d)).max(1);
+        ParallelCfg { t, p, d }
+    }
+}
+
+/// Per-layer GEMM weight parameters `4h^2 + mlp·hH` (Appendix A.1 uses the
+/// Llama `3hH` term).
+fn layer_params(spec: &ModelSpec) -> f64 {
+    (4 * spec.hidden * spec.hidden + spec.mlp_mats() * spec.hidden * spec.intermediate) as f64
+}
+
+/// Conventional 3D parallelism per-device volume (Appendix A.1, Eq. 8):
+/// DP gradient AllReduce of the device's weight shard + PP boundary
+/// activations + TP per-layer AllReduce. Symmetric UL/DL.
+pub fn baseline_per_device(spec: &ModelSpec, setup: &TrainSetup, cfg: &ParallelCfg) -> f64 {
+    let (bsh, l) = (
+        (setup.batch * setup.seq * spec.hidden) as f64,
+        spec.layers as f64,
+    );
+    // DP: each replica syncs gradients for its (1/t of a stage's) weights.
+    let dp = layer_params(spec) * l / (cfg.t as f64 * cfg.p as f64);
+    // PP: forward + backward boundary activations (per microbatch stream).
+    let pp = if cfg.p > 1 { 2.0 * bsh / cfg.d as f64 } else { 0.0 };
+    // TP: AllReduce of intermediate results in MLP+attention, fwd+bwd.
+    let tp = if cfg.t > 1 { 4.0 * bsh * l / cfg.d as f64 } else { 0.0 };
+    dp + pp + tp
+}
+
+/// CLEAVE total DL volume across devices, in elements, from the GEMM DAG
+/// with *single-transmission* accounting: every activation row (`count·m·n`
+/// per GEMM group) and every weight/operand column (`n·q` once for shared
+/// weights, `count·n·q` for per-instance attention operands) crosses the
+/// downlink exactly once, with repeated dispatch absorbed by the row/column
+/// caches of §4.2.
+///
+/// NOTE: the paper's printed Appendix A.2 expression `(8Bsh^2 + 18BshH)L`
+/// is dimensionally inflated (it multiplies weight matrices by the token
+/// count); evaluated literally it exceeds the baseline volume at every
+/// device count, contradicting the paper's own Figure 1. We therefore
+/// derive the totals from the DAG (the same accounting the §4.1 cost model
+/// and our simulator use) and record the discrepancy in EXPERIMENTS.md.
+pub fn cleave_total_dl(spec: &ModelSpec, setup: &TrainSetup) -> f64 {
+    use crate::model::dag::{GemmDag, GemmKind};
+    let dag = GemmDag::build(spec, setup);
+    let mut total = 0.0;
+    for level in &dag.levels {
+        for g in &level.gemms {
+            let a_elems = (g.count * g.m * g.n) as f64;
+            let weight_shared = matches!(
+                g.kind,
+                GemmKind::QkvProj | GemmKind::OutProj | GemmKind::MlpUp | GemmKind::MlpDown
+            );
+            let b_elems = if weight_shared {
+                (g.n * g.q) as f64
+            } else {
+                (g.count * g.n * g.q) as f64
+            };
+            total += a_elems + b_elems;
+        }
+    }
+    total
+}
+
+/// CLEAVE total UL volume in elements: every GEMM's output block returns
+/// once (`count·m·q`) — the output-light side of the §3.1 asymmetry.
+pub fn cleave_total_ul(spec: &ModelSpec, setup: &TrainSetup) -> f64 {
+    use crate::model::dag::GemmDag;
+    let dag = GemmDag::build(spec, setup);
+    dag.levels
+        .iter()
+        .flat_map(|l| l.gemms.iter())
+        .map(|g| (g.count * g.m * g.q) as f64)
+        .sum()
+}
+
+/// CLEAVE per-device DL volume: total / D (the 1/D scaling of §3.1).
+pub fn cleave_per_device_dl(spec: &ModelSpec, setup: &TrainSetup, devices: usize) -> f64 {
+    cleave_total_dl(spec, setup) / devices as f64
+}
+
+/// CLEAVE per-device UL volume.
+pub fn cleave_per_device_ul(spec: &ModelSpec, setup: &TrainSetup, devices: usize) -> f64 {
+    cleave_total_ul(spec, setup) / devices as f64
+}
+
+/// Smallest device count at which CLEAVE's per-device DL volume drops below
+/// the conventional baseline's per-device volume (Appendix A Eq. 7's
+/// crossover, computed directly from the two volume functions).
+pub fn dl_crossover_devices(spec: &ModelSpec, setup: &TrainSetup, max_d: usize) -> Option<usize> {
+    for d in 1..=max_d {
+        let cfg = ParallelCfg::for_devices(spec, setup, d);
+        if cleave_per_device_dl(spec, setup, d) < baseline_per_device(spec, setup, &cfg) {
+            return Some(d);
+        }
+    }
+    None
+}
+
+/// Smallest device count at which CLEAVE's per-device UL volume drops below
+/// the baseline's (Appendix A Eq. 9) — the uplink-bounded case that edge
+/// networks actually hit.
+pub fn ul_crossover_devices(spec: &ModelSpec, setup: &TrainSetup, max_d: usize) -> Option<usize> {
+    for d in 1..=max_d {
+        let cfg = ParallelCfg::for_devices(spec, setup, d);
+        if cleave_per_device_ul(spec, setup, d) < baseline_per_device(spec, setup, &cfg) {
+            return Some(d);
+        }
+    }
+    None
+}
+
+/// Streaming-pipeline makespan for `k` row–column pairs (Appendix A.3,
+/// Eq. 9'): fill + steady-state at the slowest stage + drain.
+pub fn pipeline_makespan(t_dl: f64, t_comp: f64, t_ul: f64, k: usize) -> f64 {
+    if k == 0 {
+        return 0.0;
+    }
+    t_dl + (k as f64 - 1.0) * t_dl.max(t_comp).max(t_ul) + t_comp + t_ul
+}
+
+/// Ring-AllReduce latency term `alpha · ceil(log2 D)` (Appendix A.3).
+pub fn allreduce_latency(alpha: f64, devices: usize) -> f64 {
+    alpha * (devices as f64).log2().ceil()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::config::ModelSpec;
+
+    fn llama13() -> (ModelSpec, TrainSetup) {
+        (
+            ModelSpec::preset("Llama2-13B").unwrap(),
+            TrainSetup::default(),
+        )
+    }
+
+    #[test]
+    fn cleave_per_device_strictly_decreasing() {
+        // Figure 1's CLEAVE curve: per-device volume ~ 1/D.
+        let (spec, setup) = llama13();
+        let mut prev = f64::MAX;
+        for d in [32, 64, 128, 256, 512, 1024, 8192] {
+            let v = cleave_per_device_dl(&spec, &setup, d)
+                + cleave_per_device_ul(&spec, &setup, d);
+            assert!(v < prev);
+            prev = v;
+        }
+        // halving check: 2x devices => exactly half volume
+        let v256 = cleave_per_device_dl(&spec, &setup, 256);
+        let v512 = cleave_per_device_dl(&spec, &setup, 512);
+        assert!((v256 / v512 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn baseline_volume_effectively_flat() {
+        // Figure 1's DTFM/Alpa curves: per-device volume does NOT fall 1/D —
+        // the DP gradient term is constant per device.
+        let (spec, setup) = llama13();
+        let v128 = {
+            let cfg = ParallelCfg::for_devices(&spec, &setup, 128);
+            baseline_per_device(&spec, &setup, &cfg)
+        };
+        let v4096 = {
+            let cfg = ParallelCfg::for_devices(&spec, &setup, 4096);
+            baseline_per_device(&spec, &setup, &cfg)
+        };
+        // less than 4x reduction over a 32x device increase
+        assert!(v128 / v4096 < 4.0, "{} / {}", v128, v4096);
+    }
+
+    #[test]
+    fn crossover_exists_and_is_moderate() {
+        // CLEAVE must win the UL comparison within the paper's evaluated
+        // range (up to 8192 devices), and earlier on UL than DL — the
+        // uplink-bounded case is where CLEAVE's asymmetry advantage lives
+        // (Appendix A Eq. 9 vs Eq. 7).
+        let (spec, setup) = llama13();
+        let ul = ul_crossover_devices(&spec, &setup, 16384).expect("UL crossover exists");
+        assert!(ul <= 8192, "ul crossover {ul}");
+        let dl = dl_crossover_devices(&spec, &setup, 16384).expect("DL crossover exists");
+        assert!(ul <= dl, "ul {ul} should cross no later than dl {dl}");
+    }
+
+    #[test]
+    fn tp_degree_inflates_baseline() {
+        let (spec, setup) = llama13();
+        let no_tp = baseline_per_device(&spec, &setup, &ParallelCfg { t: 1, p: 8, d: 16 });
+        let tp = baseline_per_device(&spec, &setup, &ParallelCfg { t: 8, p: 8, d: 16 });
+        // TP adds the per-layer AllReduce term (dominates at B=128,s=1024)
+        assert!(tp > no_tp, "tp={tp} no_tp={no_tp}");
+    }
+
+    #[test]
+    fn pipeline_makespan_structure() {
+        // k=1: pure sum; large k: slowest stage dominates.
+        assert_eq!(pipeline_makespan(1.0, 2.0, 0.5, 1), 3.5);
+        let k = 1000;
+        let t = pipeline_makespan(1.0, 2.0, 0.5, k);
+        assert!((t / (k as f64 * 2.0) - 1.0).abs() < 0.01);
+        assert_eq!(pipeline_makespan(1.0, 1.0, 1.0, 0), 0.0);
+    }
+
+    #[test]
+    fn allreduce_latency_log_growth() {
+        assert_eq!(allreduce_latency(1.0, 1024), 10.0);
+        assert_eq!(allreduce_latency(1.0, 1025), 11.0);
+    }
+
+    #[test]
+    fn parallel_cfg_decomposition() {
+        let (spec, setup) = llama13(); // L=40, B=128
+        let cfg = ParallelCfg::for_devices(&spec, &setup, 40 * 128);
+        assert_eq!(cfg.p, 40);
+        assert_eq!(cfg.d, 128);
+        assert_eq!(cfg.t, 1);
+        let cfg2 = ParallelCfg::for_devices(&spec, &setup, 40 * 128 * 4);
+        assert_eq!(cfg2.t, 4);
+        assert_eq!(cfg2.devices(), 40 * 128 * 4);
+    }
+}

@@ -1,0 +1,158 @@
+//! Device churn: Poisson failure/join process (paper §2.3).
+//!
+//! The paper's motivating arithmetic: with a 1%/device/hour interruption
+//! rate, system-level MTBF is ~47 min at 128 devices, ~12 min at 512, and
+//! <6 min at 1,024 — reproduced as tests below. The simulator draws failure
+//! times from this process to inject mid-batch departures (Figure 7).
+
+use crate::util::rng::Rng;
+
+/// Churn process configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct ChurnConfig {
+    /// per-device failure rate, events per hour (paper default: 0.01)
+    pub fail_rate_per_hour: f64,
+    /// per-slot join rate, events per hour (new devices become available)
+    pub join_rate_per_hour: f64,
+}
+
+impl Default for ChurnConfig {
+    fn default() -> Self {
+        ChurnConfig {
+            fail_rate_per_hour: 0.01,
+            join_rate_per_hour: 0.0,
+        }
+    }
+}
+
+/// A churn event.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ChurnEvent {
+    /// device index (into the current fleet) fails at `t` seconds
+    Fail { t: f64, device_index: usize },
+    /// a new device joins at `t` seconds
+    Join { t: f64 },
+}
+
+impl ChurnEvent {
+    pub fn time(&self) -> f64 {
+        match *self {
+            ChurnEvent::Fail { t, .. } => t,
+            ChurnEvent::Join { t } => t,
+        }
+    }
+}
+
+/// System-level mean time between failures for `n` devices (seconds):
+/// exponential superposition => rate scales linearly with `n`.
+pub fn system_mtbf_secs(cfg: &ChurnConfig, n_devices: usize) -> f64 {
+    let rate_per_sec = cfg.fail_rate_per_hour * n_devices as f64 / 3600.0;
+    1.0 / rate_per_sec
+}
+
+/// Expected failures during an interval of `secs` with `n` devices
+/// (§5.3: ~0.17 failures per 60 s batch at 1,000 devices, 1%/hr).
+pub fn expected_failures(cfg: &ChurnConfig, n_devices: usize, secs: f64) -> f64 {
+    cfg.fail_rate_per_hour * n_devices as f64 * secs / 3600.0
+}
+
+/// Generate the churn event sequence over a time horizon.
+pub fn events(
+    cfg: &ChurnConfig,
+    n_devices: usize,
+    horizon_secs: f64,
+    rng: &mut Rng,
+) -> Vec<ChurnEvent> {
+    let mut out = Vec::new();
+    // Failures: superposed Poisson process at aggregate rate.
+    let fail_rate = cfg.fail_rate_per_hour * n_devices as f64 / 3600.0;
+    if fail_rate > 0.0 {
+        let mut t = 0.0;
+        loop {
+            t += rng.exponential(fail_rate);
+            if t >= horizon_secs {
+                break;
+            }
+            out.push(ChurnEvent::Fail {
+                t,
+                device_index: rng.below(n_devices as u64) as usize,
+            });
+        }
+    }
+    let join_rate = cfg.join_rate_per_hour / 3600.0;
+    if join_rate > 0.0 {
+        let mut t = 0.0;
+        loop {
+            t += rng.exponential(join_rate);
+            if t >= horizon_secs {
+                break;
+            }
+            out.push(ChurnEvent::Join { t });
+        }
+    }
+    out.sort_by(|a, b| a.time().partial_cmp(&b.time()).unwrap());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_mtbf_arithmetic() {
+        // §2.3: 1%/dev/hr => ~47 min at 128, ~12 min at 512, <6 min at 1024.
+        let cfg = ChurnConfig::default();
+        let m128 = system_mtbf_secs(&cfg, 128) / 60.0;
+        let m512 = system_mtbf_secs(&cfg, 512) / 60.0;
+        let m1024 = system_mtbf_secs(&cfg, 1024) / 60.0;
+        assert!((m128 - 46.9).abs() < 1.0, "{m128}");
+        assert!((m512 - 11.7).abs() < 0.5, "{m512}");
+        assert!(m1024 < 6.0, "{m1024}");
+    }
+
+    #[test]
+    fn paper_per_batch_failure_expectation() {
+        // §5.3: 1,000 devices, 60 s batch => ~0.17 failures.
+        let e = expected_failures(&ChurnConfig::default(), 1000, 60.0);
+        assert!((e - 0.1667).abs() < 0.01, "{e}");
+    }
+
+    #[test]
+    fn event_count_matches_rate() {
+        let cfg = ChurnConfig {
+            fail_rate_per_hour: 1.0,
+            join_rate_per_hour: 0.0,
+        };
+        let mut rng = Rng::new(5);
+        // 100 devices x 1/hr over 10 hours => ~1000 events.
+        let evs = events(&cfg, 100, 36_000.0, &mut rng);
+        let n = evs.len() as f64;
+        assert!((n - 1000.0).abs() < 120.0, "{n}");
+        // sorted by time
+        for w in evs.windows(2) {
+            assert!(w[0].time() <= w[1].time());
+        }
+    }
+
+    #[test]
+    fn joins_generated_when_enabled() {
+        let cfg = ChurnConfig {
+            fail_rate_per_hour: 0.0,
+            join_rate_per_hour: 60.0, // one per minute
+        };
+        let mut rng = Rng::new(6);
+        let evs = events(&cfg, 10, 3600.0, &mut rng);
+        assert!(evs.iter().all(|e| matches!(e, ChurnEvent::Join { .. })));
+        assert!((evs.len() as f64 - 60.0).abs() < 25.0);
+    }
+
+    #[test]
+    fn zero_rates_produce_no_events() {
+        let cfg = ChurnConfig {
+            fail_rate_per_hour: 0.0,
+            join_rate_per_hour: 0.0,
+        };
+        let mut rng = Rng::new(7);
+        assert!(events(&cfg, 1000, 1e6, &mut rng).is_empty());
+    }
+}

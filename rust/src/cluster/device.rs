@@ -1,0 +1,88 @@
+//! Edge-device model: compute capability, link asymmetry, memory budget
+//! (paper §2.1).
+
+/// Opaque device identifier (stable across churn events).
+pub type DeviceId = usize;
+
+/// Device class — drives the sampling priors in [`crate::cluster::fleet`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DeviceClass {
+    /// smartphone-class: ~5–7 TFLOPS, 512 MB usable memory
+    Phone,
+    /// laptop-class: up to ~27 TFLOPS (Apple M3 Pro), ~10 GB usable
+    Laptop,
+}
+
+/// One edge device's capability report (what it registers with the PS).
+#[derive(Clone, Debug)]
+pub struct Device {
+    pub id: DeviceId,
+    pub class: DeviceClass,
+    /// peak FLOPS `F_k` (f32-equivalent)
+    pub flops: f64,
+    /// achieved fraction of peak under real workloads (§5.2 uses ~30%)
+    pub utilization: f64,
+    /// downlink bandwidth `W_k^d`, bytes/s
+    pub dl_bw: f64,
+    /// uplink bandwidth `W_k^u`, bytes/s
+    pub ul_bw: f64,
+    /// downlink latency/overhead `L_k^d`, seconds
+    pub dl_lat: f64,
+    /// uplink latency/overhead `L_k^u`, seconds
+    pub ul_lat: f64,
+    /// usable memory `M_k`, bytes
+    pub mem: f64,
+    /// straggler marker (10x slower in Figure 6's setup)
+    pub straggler: bool,
+}
+
+impl Device {
+    /// Effective compute throughput (peak x utilization), FLOP/s.
+    pub fn effective_flops(&self) -> f64 {
+        self.flops * self.utilization
+    }
+
+    /// Link asymmetry ratio DL/UL (2–10x in the paper's measurements).
+    pub fn asymmetry(&self) -> f64 {
+        self.dl_bw / self.ul_bw
+    }
+
+    /// A deterministic "median" edge device used in the paper's Table 8
+    /// example: 6 TFLOPS, 55 MB/s DL, 7.5 MB/s UL.
+    pub fn median_edge(id: DeviceId) -> Device {
+        Device {
+            id,
+            class: DeviceClass::Phone,
+            flops: 6e12,
+            utilization: 1.0, // Table 8 uses raw cost-model TFLOPS
+            dl_bw: 55e6,
+            ul_bw: 7.5e6,
+            dl_lat: 0.02,
+            ul_lat: 0.02,
+            mem: super::fleet::PHONE_MEM,
+            straggler: false,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_edge_matches_table8_constants() {
+        let d = Device::median_edge(0);
+        assert_eq!(d.flops, 6e12);
+        assert_eq!(d.dl_bw, 55e6);
+        assert_eq!(d.ul_bw, 7.5e6);
+        let asym = d.asymmetry();
+        assert!(asym > 2.0 && asym < 10.0, "asymmetry {asym}");
+    }
+
+    #[test]
+    fn effective_flops_scales_with_utilization() {
+        let mut d = Device::median_edge(1);
+        d.utilization = 0.3;
+        assert!((d.effective_flops() - 1.8e12).abs() < 1.0);
+    }
+}

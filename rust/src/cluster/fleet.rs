@@ -1,0 +1,257 @@
+//! Heterogeneous fleet sampling (paper §2.1 / §5.1): device compute and
+//! link parameters drawn from the measurement priors the paper cites
+//! (AI-Benchmark for compute, Speedtest/MobiPerf for links), with optional
+//! straggler injection (Figure 6) and a deterministic "median" fleet for
+//! closed-form cross-checks (Table 8).
+
+use crate::cluster::device::{Device, DeviceClass, DeviceId};
+use crate::util::rng::Rng;
+
+/// Usable memory budgets (§2.1).
+pub const PHONE_MEM: f64 = 512e6;
+pub const LAPTOP_MEM: f64 = 10e9;
+
+/// Fleet sampling configuration.
+#[derive(Clone, Debug)]
+pub struct FleetConfig {
+    pub n_devices: usize,
+    /// fraction of phone-class devices (rest laptop-class)
+    pub phone_fraction: f64,
+    /// fraction marked stragglers (10x slower compute AND links, Fig. 6)
+    pub straggler_fraction: f64,
+    /// straggler slowdown factor (paper: 10)
+    pub straggler_factor: f64,
+    /// achieved-FLOPS utilization (paper §5.2: ~0.3 typical)
+    pub utilization: f64,
+    pub seed: u64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            n_devices: 128,
+            phone_fraction: 0.7,
+            straggler_fraction: 0.0,
+            straggler_factor: 10.0,
+            utilization: 0.3,
+            seed: 7,
+        }
+    }
+}
+
+impl FleetConfig {
+    pub fn with_devices(mut self, n: usize) -> Self {
+        self.n_devices = n;
+        self
+    }
+
+    pub fn with_stragglers(mut self, frac: f64) -> Self {
+        self.straggler_fraction = frac;
+        self
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// A sampled device fleet.
+#[derive(Clone, Debug)]
+pub struct Fleet {
+    pub devices: Vec<Device>,
+}
+
+impl Fleet {
+    /// Sample a heterogeneous fleet.
+    ///
+    /// Priors (paper §2.1):
+    /// * phone compute: 5–7 TFLOPS; laptop: 15–27 TFLOPS (log-uniform-ish
+    ///   via clamped lognormal around class medians)
+    /// * downlink 10–100 MB/s; uplink 5–10 MB/s (2–10x asymmetry)
+    /// * latency overhead 10–50 ms per transfer
+    pub fn sample(cfg: &FleetConfig) -> Fleet {
+        let mut rng = Rng::new(cfg.seed);
+        let mut devices = Vec::with_capacity(cfg.n_devices);
+        for id in 0..cfg.n_devices {
+            let is_phone = rng.bernoulli(cfg.phone_fraction);
+            let class = if is_phone {
+                DeviceClass::Phone
+            } else {
+                DeviceClass::Laptop
+            };
+            let flops = match class {
+                DeviceClass::Phone => rng.uniform_in(5e12, 7e12),
+                DeviceClass::Laptop => rng.uniform_in(15e12, 27e12),
+            };
+            let dl_bw = rng.uniform_in(10e6, 100e6);
+            // uplink: 5-10 MB/s but never faster than DL (asymmetry >= 1)
+            let ul_bw = rng.uniform_in(5e6, 10e6).min(dl_bw);
+            let dl_lat = rng.uniform_in(0.010, 0.050);
+            let ul_lat = rng.uniform_in(0.010, 0.050);
+            devices.push(Device {
+                id: id as DeviceId,
+                class,
+                flops,
+                utilization: cfg.utilization,
+                dl_bw,
+                ul_bw,
+                dl_lat,
+                ul_lat,
+                mem: match class {
+                    DeviceClass::Phone => PHONE_MEM,
+                    DeviceClass::Laptop => LAPTOP_MEM,
+                },
+                straggler: false,
+            });
+        }
+        // Straggler injection: uniformly chosen, 10x slower in compute AND
+        // both link directions (Figure 6's setting).
+        let n_straggle = (cfg.n_devices as f64 * cfg.straggler_fraction).round() as usize;
+        let idx = rng.choose_k(cfg.n_devices, n_straggle);
+        for i in idx {
+            let d = &mut devices[i];
+            d.straggler = true;
+            d.flops /= cfg.straggler_factor;
+            d.dl_bw /= cfg.straggler_factor;
+            d.ul_bw /= cfg.straggler_factor;
+        }
+        Fleet { devices }
+    }
+
+    /// The deterministic median-device fleet used for Table 8 cross-checks.
+    pub fn median(n: usize) -> Fleet {
+        Fleet {
+            devices: (0..n).map(Device::median_edge).collect(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Aggregate effective FLOPS (for the §5.2 resource-envelope matching).
+    pub fn aggregate_flops(&self) -> f64 {
+        self.devices.iter().map(|d| d.effective_flops()).sum()
+    }
+
+    /// Aggregate downlink bandwidth.
+    pub fn aggregate_dl(&self) -> f64 {
+        self.devices.iter().map(|d| d.dl_bw).sum()
+    }
+
+    /// Remove a device by id (churn event); returns it if present.
+    pub fn remove(&mut self, id: DeviceId) -> Option<Device> {
+        let pos = self.devices.iter().position(|d| d.id == id)?;
+        Some(self.devices.remove(pos))
+    }
+
+    /// Compute heterogeneity: coefficient of variation of effective FLOPS
+    /// (Appendix B's `c_v`).
+    pub fn compute_cv(&self) -> f64 {
+        let f: Vec<f64> = self.devices.iter().map(|d| d.effective_flops()).collect();
+        crate::util::stats::coeff_of_variation(&f)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sampling_is_deterministic_per_seed() {
+        let a = Fleet::sample(&FleetConfig::default());
+        let b = Fleet::sample(&FleetConfig::default());
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.devices.iter().zip(&b.devices) {
+            assert_eq!(x.flops, y.flops);
+            assert_eq!(x.dl_bw, y.dl_bw);
+        }
+        let c = Fleet::sample(&FleetConfig::default().with_seed(99));
+        assert!(a.devices[0].flops != c.devices[0].flops);
+    }
+
+    #[test]
+    fn priors_within_paper_ranges() {
+        let f = Fleet::sample(&FleetConfig {
+            n_devices: 2000,
+            ..Default::default()
+        });
+        for d in &f.devices {
+            match d.class {
+                DeviceClass::Phone => {
+                    assert!(d.flops >= 5e12 && d.flops <= 7e12);
+                    assert_eq!(d.mem, PHONE_MEM);
+                }
+                DeviceClass::Laptop => {
+                    assert!(d.flops >= 15e12 && d.flops <= 27e12);
+                    assert_eq!(d.mem, LAPTOP_MEM);
+                }
+            }
+            assert!(d.dl_bw >= 10e6 && d.dl_bw <= 100e6);
+            assert!(d.ul_bw >= 5e6 * 0.999 && d.ul_bw <= 10e6);
+            assert!(d.asymmetry() >= 1.0);
+        }
+    }
+
+    #[test]
+    fn straggler_injection_count_and_slowdown() {
+        let base = Fleet::sample(&FleetConfig {
+            n_devices: 100,
+            straggler_fraction: 0.0,
+            ..Default::default()
+        });
+        let cfg = FleetConfig {
+            n_devices: 100,
+            straggler_fraction: 0.2,
+            ..Default::default()
+        };
+        let f = Fleet::sample(&cfg);
+        let n = f.devices.iter().filter(|d| d.straggler).count();
+        assert_eq!(n, 20);
+        // Straggled devices are 10x below their non-straggled twin.
+        for (a, b) in base.devices.iter().zip(&f.devices) {
+            if b.straggler {
+                assert!((a.flops / b.flops - 10.0).abs() < 1e-9);
+                assert!((a.dl_bw / b.dl_bw - 10.0).abs() < 1e-9);
+            } else {
+                assert_eq!(a.flops, b.flops);
+            }
+        }
+    }
+
+    #[test]
+    fn compute_range_spans_5x(){
+        // Paper: "a 5.4x compute range in our setting (5-27 TFLOPS)".
+        let f = Fleet::sample(&FleetConfig {
+            n_devices: 1000,
+            ..Default::default()
+        });
+        let max = f.devices.iter().map(|d| d.flops).fold(0.0, f64::max);
+        let min = f.devices.iter().map(|d| d.flops).fold(f64::MAX, f64::min);
+        assert!(max / min > 3.0, "range {}", max / min);
+    }
+
+    #[test]
+    fn remove_is_churn_safe() {
+        let mut f = Fleet::median(10);
+        assert!(f.remove(3).is_some());
+        assert!(f.remove(3).is_none());
+        assert_eq!(f.len(), 9);
+    }
+
+    #[test]
+    fn heterogeneity_cv_positive_for_mixed_fleet() {
+        let f = Fleet::sample(&FleetConfig {
+            n_devices: 500,
+            phone_fraction: 0.5,
+            ..Default::default()
+        });
+        assert!(f.compute_cv() > 0.2);
+        assert_eq!(Fleet::median(10).compute_cv(), 0.0);
+    }
+}

@@ -1,0 +1,10 @@
+//! The edge-device substrate: heterogeneous fleets, asymmetric links,
+//! heavy-tailed latency, and churn (paper §2.1 and Appendix C).
+
+pub mod churn;
+pub mod device;
+pub mod fleet;
+pub mod network;
+
+pub use device::{Device, DeviceClass, DeviceId};
+pub use fleet::{Fleet, FleetConfig};

@@ -1,0 +1,151 @@
+//! Link/latency models (paper §4.1 deterministic terms + Appendix C
+//! heavy-tailed extension).
+//!
+//! The §4.1 cost model treats per-device latency overheads `L_k^d`, `L_k^u`
+//! as constants. Appendix C replaces them with Pareto draws to capture the
+//! measured heavy tails of mobile networks and analyzes barrier maxima.
+//! Both models live here; the simulator chooses per experiment.
+
+use crate::cluster::device::Device;
+use crate::util::rng::Rng;
+use crate::util::stats;
+
+/// Latency model for simulation runs.
+#[derive(Clone, Copy, Debug)]
+pub enum LatencyModel {
+    /// constants from the device record (§4.1)
+    Deterministic,
+    /// Pareto(x_m = device latency, alpha) tails (Appendix C, Eq. 20)
+    ParetoTail { alpha: f64 },
+}
+
+impl LatencyModel {
+    /// Draw one downlink latency overhead for `dev`.
+    pub fn dl_latency(&self, dev: &Device, rng: &mut Rng) -> f64 {
+        match *self {
+            LatencyModel::Deterministic => dev.dl_lat,
+            LatencyModel::ParetoTail { alpha } => rng.pareto(dev.dl_lat, alpha),
+        }
+    }
+
+    /// Draw one uplink latency overhead for `dev`.
+    pub fn ul_latency(&self, dev: &Device, rng: &mut Rng) -> f64 {
+        match *self {
+            LatencyModel::Deterministic => dev.ul_lat,
+            LatencyModel::ParetoTail { alpha } => rng.pareto(dev.ul_lat, alpha),
+        }
+    }
+}
+
+/// Transfer time of `bytes` over a link of `bw` bytes/s with overhead `lat`.
+pub fn transfer_time(bytes: f64, bw: f64, lat: f64) -> f64 {
+    if bytes <= 0.0 {
+        0.0
+    } else {
+        bytes / bw + lat
+    }
+}
+
+/// Empirical expected barrier time `E[max_k L_k]` for `d` devices under a
+/// latency model (Appendix C, Eq. 21/22 and Table 12): Monte-Carlo estimate
+/// with `trials` replicates of scale-`x_m` draws.
+pub fn expected_barrier_max(
+    x_m: f64,
+    model: LatencyModel,
+    d: usize,
+    trials: usize,
+    seed: u64,
+) -> f64 {
+    let mut rng = Rng::new(seed);
+    let mut acc = 0.0;
+    for _ in 0..trials {
+        let mut mx: f64 = 0.0;
+        for _ in 0..d {
+            let draw = match model {
+                LatencyModel::Deterministic => x_m,
+                LatencyModel::ParetoTail { alpha } => rng.pareto(x_m, alpha),
+            };
+            mx = mx.max(draw);
+        }
+        acc += mx;
+    }
+    acc / trials as f64
+}
+
+/// Exponential-tail comparison row of Table 12: `E[max] = x_m · H_d`.
+pub fn expected_barrier_max_exponential(x_m: f64, d: usize) -> f64 {
+    stats::exponential_expected_max(x_m, d)
+}
+
+/// PS service model (§6 "single-PS operating envelope"): time for the PS to
+/// serve one DAG level's aggregate payload at `ps_bw` bytes/s.
+pub fn ps_service_time(aggregate_bytes: f64, ps_bw: f64) -> f64 {
+    aggregate_bytes / ps_bw
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::device::Device;
+
+    #[test]
+    fn deterministic_latency_is_constant() {
+        let d = Device::median_edge(0);
+        let mut rng = Rng::new(1);
+        let m = LatencyModel::Deterministic;
+        assert_eq!(m.dl_latency(&d, &mut rng), d.dl_lat);
+        assert_eq!(m.ul_latency(&d, &mut rng), d.ul_lat);
+    }
+
+    #[test]
+    fn pareto_latency_at_least_scale() {
+        let d = Device::median_edge(0);
+        let mut rng = Rng::new(2);
+        let m = LatencyModel::ParetoTail { alpha: 2.0 };
+        for _ in 0..1000 {
+            assert!(m.dl_latency(&d, &mut rng) >= d.dl_lat);
+        }
+    }
+
+    #[test]
+    fn transfer_time_zero_for_empty() {
+        assert_eq!(transfer_time(0.0, 55e6, 0.02), 0.0);
+        assert!((transfer_time(55e6, 55e6, 0.02) - 1.02).abs() < 1e-12);
+    }
+
+    #[test]
+    fn barrier_max_grows_with_d_and_tail_weight() {
+        // Table 12 shape: heavier tails => much larger expected maxima, and
+        // Pareto grows polynomially (D^{1/alpha}) vs log for exponential.
+        let p2_100 = expected_barrier_max(1.0, LatencyModel::ParetoTail { alpha: 2.0 }, 100, 3000, 1);
+        let p2_1000 =
+            expected_barrier_max(1.0, LatencyModel::ParetoTail { alpha: 2.0 }, 1000, 1500, 2);
+        let p3_100 = expected_barrier_max(1.0, LatencyModel::ParetoTail { alpha: 3.0 }, 100, 3000, 3);
+        let e_100 = expected_barrier_max_exponential(1.0, 100);
+        let e_1000 = expected_barrier_max_exponential(1.0, 1000);
+
+        // Exact extreme-value theory: E[max] = Gamma(1-1/alpha)·D^{1/alpha}
+        // for Pareto(1, alpha); alpha=2 => sqrt(pi)·sqrt(D) ~ 17.7 at D=100,
+        // ~56.0 at D=1000. (Paper's Table 12 reports the normalized
+        // D^{1/alpha} scaling without the Gamma prefactor — 10.0 / 31.6;
+        // the *scaling law* matches: ratio = sqrt(10) either way.)
+        assert!((p2_100 - 17.7).abs() < 2.5, "{p2_100}");
+        assert!((p2_1000 - 56.0).abs() < 9.0, "{p2_1000}");
+        let ratio = p2_1000 / p2_100;
+        assert!((ratio - 10.0f64.sqrt()).abs() < 0.6, "{ratio}");
+        // Pareto-3 lighter than Pareto-2
+        assert!(p3_100 < p2_100);
+        // exponential ~ log growth: 5.2 -> 6.9
+        assert!((e_100 - 5.19).abs() < 0.1);
+        assert!((e_1000 - 7.49).abs() < 0.3);
+        // heavy tail beats light tail badly at scale
+        assert!(p2_1000 > 3.0 * e_1000);
+    }
+
+    #[test]
+    fn ps_envelope_example_from_section6() {
+        // §6: 65 MB aggregate per-GEMM downlink served in ~2.6 ms at 25 GB/s.
+        let t = ps_service_time(65e6, 25e9);
+        assert!((t - 0.0026).abs() < 1e-4, "{t}");
+    }
+}

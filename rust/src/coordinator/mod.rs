@@ -1,0 +1,23 @@
+//! The live CLEAVE coordinator (Layer 3): parameter server, worker devices,
+//! message protocol, result verification, the PS-side Adam optimizer, and
+//! the end-to-end distributed trainer.
+//!
+//! This is the *real-numerics* counterpart of the simulator: the PS holds
+//! the model, traces the GEMM DAG of the tiny transformer at runtime,
+//! dispatches row/column shards to in-process worker devices over channels
+//! (with modeled link delays), collects and Freivalds-verifies the partial
+//! outputs, and runs Adam host-side — training end to end with losses that
+//! match the AOT JAX artifacts bit-for-bit in f32 (pinned by tests against
+//! `artifacts/oracle.json`).
+
+pub mod optimizer;
+pub mod protocol;
+pub mod ps;
+pub mod registry;
+pub mod tensor;
+pub mod trainer;
+pub mod verify;
+pub mod worker;
+
+pub use ps::{DistributedGemm, PsConfig};
+pub use trainer::{GemmBackend, LocalBackend, Trainer, TrainerConfig};

@@ -1,0 +1,91 @@
+//! PS <-> worker message protocol.
+//!
+//! The paper uses gRPC/MQTT-style streams (§3.2); the live in-process fleet
+//! exchanges the same logical messages over channels, with link delays
+//! modeled explicitly by the worker (DESIGN.md §2 substitution table).
+
+use std::sync::mpsc::Sender;
+
+/// A sub-GEMM task: the device's alpha rows of A and beta columns of B
+/// (column strip stored row-major `n x beta`), plus the rectangle it covers.
+#[derive(Clone, Debug)]
+pub struct SubGemmTask {
+    /// task id (unique within a distributed GEMM round)
+    pub task_id: u64,
+    /// rows strip: `rows x n`
+    pub a_strip: Vec<f32>,
+    /// cols strip: `n x cols`
+    pub b_strip: Vec<f32>,
+    pub n: usize,
+    pub row0: usize,
+    pub rows: usize,
+    pub col0: usize,
+    pub cols: usize,
+}
+
+impl SubGemmTask {
+    /// Downlink payload bytes of this task (Eq. 3's input term).
+    pub fn dl_bytes(&self) -> usize {
+        4 * (self.a_strip.len() + self.b_strip.len())
+    }
+
+    /// Uplink payload bytes of the result block.
+    pub fn ul_bytes(&self) -> usize {
+        4 * self.rows * self.cols
+    }
+}
+
+/// Messages the PS sends to a worker.
+pub enum ToWorker {
+    Task(SubGemmTask),
+    /// liveness probe; worker echoes KeepAlive
+    Ping,
+    Shutdown,
+}
+
+/// Messages a worker sends to the PS.
+pub enum ToPs {
+    /// completed task: id + the alpha x beta output block
+    Result {
+        worker: usize,
+        task_id: u64,
+        block: Vec<f32>,
+    },
+    KeepAlive {
+        worker: usize,
+    },
+    /// worker announces departure (graceful churn)
+    Leaving {
+        worker: usize,
+    },
+}
+
+/// Handle the PS holds for each registered worker.
+pub struct WorkerHandle {
+    pub id: usize,
+    pub tx: Sender<ToWorker>,
+    pub join: Option<std::thread::JoinHandle<()>>,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_accounting() {
+        let t = SubGemmTask {
+            task_id: 1,
+            a_strip: vec![0.0; 4 * 16],
+            b_strip: vec![0.0; 16 * 8],
+            n: 16,
+            row0: 0,
+            rows: 4,
+            col0: 0,
+            cols: 8,
+        };
+        assert_eq!(t.dl_bytes(), 4 * (64 + 128));
+        assert_eq!(t.ul_bytes(), 4 * 32);
+        // I/O asymmetry: inputs heavier than outputs for n >> rows,cols
+        assert!(t.dl_bytes() > t.ul_bytes());
+    }
+}

@@ -1,0 +1,170 @@
+//! Device registry: registration, capability reports, keep-alive tracking
+//! (§3.2 "CLEAVE requires devices to register upon joining and report their
+//! compute and communication capabilities").
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+use crate::cluster::device::Device;
+
+/// Liveness status derived from keep-alives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Liveness {
+    Alive,
+    Suspect,
+    Dead,
+}
+
+/// One registered device's record.
+#[derive(Clone, Debug)]
+pub struct Registration {
+    pub device: Device,
+    pub registered_at: Instant,
+    pub last_keepalive: Instant,
+    pub departed: bool,
+}
+
+/// The PS-side registry.
+pub struct Registry {
+    entries: HashMap<usize, Registration>,
+    /// keep-alive interval after which a device is Suspect / Dead
+    pub suspect_after: Duration,
+    pub dead_after: Duration,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry {
+            entries: HashMap::new(),
+            suspect_after: Duration::from_millis(500),
+            dead_after: Duration::from_millis(2000),
+        }
+    }
+
+    /// Register (or re-register) a device with its capability report.
+    pub fn register(&mut self, device: Device) {
+        let now = Instant::now();
+        self.entries.insert(
+            device.id,
+            Registration {
+                device,
+                registered_at: now,
+                last_keepalive: now,
+                departed: false,
+            },
+        );
+    }
+
+    /// Record a keep-alive from `id`; returns false for unknown devices.
+    pub fn keepalive(&mut self, id: usize) -> bool {
+        if let Some(e) = self.entries.get_mut(&id) {
+            e.last_keepalive = Instant::now();
+            !e.departed
+        } else {
+            false
+        }
+    }
+
+    /// Mark a graceful departure.
+    pub fn depart(&mut self, id: usize) {
+        if let Some(e) = self.entries.get_mut(&id) {
+            e.departed = true;
+        }
+    }
+
+    pub fn liveness(&self, id: usize) -> Option<Liveness> {
+        let e = self.entries.get(&id)?;
+        if e.departed {
+            return Some(Liveness::Dead);
+        }
+        let age = e.last_keepalive.elapsed();
+        Some(if age > self.dead_after {
+            Liveness::Dead
+        } else if age > self.suspect_after {
+            Liveness::Suspect
+        } else {
+            Liveness::Alive
+        })
+    }
+
+    /// Devices currently usable for scheduling.
+    pub fn alive_devices(&self) -> Vec<Device> {
+        self.entries
+            .values()
+            .filter(|e| !e.departed && e.last_keepalive.elapsed() <= self.dead_after)
+            .map(|e| e.device.clone())
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::device::Device;
+
+    #[test]
+    fn register_and_keepalive() {
+        let mut r = Registry::new();
+        r.register(Device::median_edge(0));
+        r.register(Device::median_edge(1));
+        assert_eq!(r.len(), 2);
+        assert!(r.keepalive(0));
+        assert!(!r.keepalive(99));
+        assert_eq!(r.liveness(0), Some(Liveness::Alive));
+        assert_eq!(r.liveness(99), None);
+        assert_eq!(r.alive_devices().len(), 2);
+    }
+
+    #[test]
+    fn departure_removes_from_alive_set() {
+        let mut r = Registry::new();
+        r.register(Device::median_edge(0));
+        r.register(Device::median_edge(1));
+        r.depart(1);
+        assert_eq!(r.liveness(1), Some(Liveness::Dead));
+        let alive = r.alive_devices();
+        assert_eq!(alive.len(), 1);
+        assert_eq!(alive[0].id, 0);
+        // departed devices reject keepalives
+        assert!(!r.keepalive(1));
+    }
+
+    #[test]
+    fn rejoin_after_departure() {
+        // "newly joined devices enter on the next GEMM round" — re-register
+        // resurrects the slot.
+        let mut r = Registry::new();
+        r.register(Device::median_edge(0));
+        r.depart(0);
+        assert_eq!(r.alive_devices().len(), 0);
+        r.register(Device::median_edge(0));
+        assert_eq!(r.alive_devices().len(), 1);
+    }
+
+    #[test]
+    fn staleness_marks_suspect_then_dead() {
+        let mut r = Registry::new();
+        r.suspect_after = Duration::from_millis(1);
+        r.dead_after = Duration::from_millis(30);
+        r.register(Device::median_edge(0));
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(r.liveness(0), Some(Liveness::Suspect));
+        std::thread::sleep(Duration::from_millis(30));
+        assert_eq!(r.liveness(0), Some(Liveness::Dead));
+        assert!(r.alive_devices().is_empty());
+    }
+}

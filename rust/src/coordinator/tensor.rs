@@ -1,0 +1,339 @@
+//! Minimal dense-tensor ops for the rust-native transformer (fwd + bwd).
+//!
+//! Row-major `Vec<f32>` matrices. Only what the tiny LM needs: LayerNorm,
+//! tanh-GELU (matching `jax.nn.gelu`'s default approximation), causal
+//! softmax, embedding gather/scatter, cross-entropy — each with its
+//! backward. All matmuls are routed through the [`crate::coordinator::trainer::GemmBackend`]
+//! so the distributed path shards them; everything here is the PS-side
+//! non-GEMM work the paper deliberately keeps on the host (§3.2).
+
+/// LayerNorm forward over the last dim.
+/// `x: (rows, d)` -> `(y, mean, rstd)`; eps matches model.py (1e-5).
+pub fn layer_norm_fwd(
+    x: &[f32],
+    scale: &[f32],
+    bias: &[f32],
+    rows: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut y = vec![0.0f32; rows * d];
+    let mut means = vec![0.0f32; rows];
+    let mut rstds = vec![0.0f32; rows];
+    for r in 0..rows {
+        let row = &x[r * d..(r + 1) * d];
+        let mean = row.iter().sum::<f32>() / d as f32;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+        let rstd = 1.0 / (var + 1e-5).sqrt();
+        means[r] = mean;
+        rstds[r] = rstd;
+        for i in 0..d {
+            y[r * d + i] = (row[i] - mean) * rstd * scale[i] + bias[i];
+        }
+    }
+    (y, means, rstds)
+}
+
+/// LayerNorm backward. Returns `(dx, dscale, dbias)`.
+pub fn layer_norm_bwd(
+    dy: &[f32],
+    x: &[f32],
+    scale: &[f32],
+    means: &[f32],
+    rstds: &[f32],
+    rows: usize,
+    d: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut dx = vec![0.0f32; rows * d];
+    let mut dscale = vec![0.0f32; d];
+    let mut dbias = vec![0.0f32; d];
+    for r in 0..rows {
+        let (mean, rstd) = (means[r], rstds[r]);
+        let xr = &x[r * d..(r + 1) * d];
+        let dyr = &dy[r * d..(r + 1) * d];
+        let mut sum_g = 0.0f32;
+        let mut sum_gx = 0.0f32;
+        for i in 0..d {
+            let xhat = (xr[i] - mean) * rstd;
+            let g = dyr[i] * scale[i];
+            sum_g += g;
+            sum_gx += g * xhat;
+            dscale[i] += dyr[i] * xhat;
+            dbias[i] += dyr[i];
+        }
+        let inv_d = 1.0 / d as f32;
+        for i in 0..d {
+            let xhat = (xr[i] - mean) * rstd;
+            let g = dyr[i] * scale[i];
+            dx[r * d + i] = rstd * (g - inv_d * sum_g - xhat * inv_d * sum_gx);
+        }
+    }
+    (dx, dscale, dbias)
+}
+
+const SQRT_2_OVER_PI: f32 = 0.797_884_56;
+const GELU_C: f32 = 0.044_715;
+
+/// tanh-approximate GELU (jax.nn.gelu default).
+pub fn gelu_fwd(x: &[f32]) -> Vec<f32> {
+    x.iter()
+        .map(|&v| {
+            let inner = SQRT_2_OVER_PI * (v + GELU_C * v * v * v);
+            0.5 * v * (1.0 + inner.tanh())
+        })
+        .collect()
+}
+
+/// GELU backward: `dx = dy * dgelu/dx`.
+pub fn gelu_bwd(dy: &[f32], x: &[f32]) -> Vec<f32> {
+    dy.iter()
+        .zip(x)
+        .map(|(&g, &v)| {
+            let u = SQRT_2_OVER_PI * (v + GELU_C * v * v * v);
+            let t = u.tanh();
+            let sech2 = 1.0 - t * t;
+            let du = SQRT_2_OVER_PI * (1.0 + 3.0 * GELU_C * v * v);
+            g * (0.5 * (1.0 + t) + 0.5 * v * sech2 * du)
+        })
+        .collect()
+}
+
+/// Causal softmax over the last dim of `(rows, t)` score rows, where row
+/// `r`'s query position is `r % t` (rows = B*heads*t layout). Masked
+/// positions get ~0 probability (model.py uses -1e30 then softmax).
+pub fn causal_softmax_fwd(scores: &mut [f32], rows: usize, t: usize) {
+    for r in 0..rows {
+        let qpos = r % t;
+        let row = &mut scores[r * t..(r + 1) * t];
+        let mut mx = f32::NEG_INFINITY;
+        for (j, v) in row.iter_mut().enumerate() {
+            if j > qpos {
+                *v = -1e30;
+            }
+            mx = mx.max(*v);
+        }
+        let mut sum = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - mx).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+/// Softmax backward given probabilities `p` and upstream `dy`:
+/// `dx = p * (dy - sum(dy * p))` per row.
+pub fn softmax_bwd(dy: &[f32], p: &[f32], rows: usize, t: usize) -> Vec<f32> {
+    let mut dx = vec![0.0f32; rows * t];
+    for r in 0..rows {
+        let pr = &p[r * t..(r + 1) * t];
+        let dyr = &dy[r * t..(r + 1) * t];
+        let dot: f32 = pr.iter().zip(dyr).map(|(a, b)| a * b).sum();
+        for j in 0..t {
+            dx[r * t + j] = pr[j] * (dyr[j] - dot);
+        }
+    }
+    dx
+}
+
+/// Cross-entropy over next-token prediction: logits `(B, T, V)` flattened
+/// to `(B*T, V)`, targets `tokens[b][t+1]` for positions `t < T-1`.
+/// Returns `(mean_loss, dlogits)` with the mean over `B*(T-1)` positions.
+pub fn cross_entropy_fwd_bwd(
+    logits: &[f32],
+    tokens: &[i32],
+    b: usize,
+    t: usize,
+    v: usize,
+) -> (f32, Vec<f32>) {
+    let count = (b * (t - 1)) as f32;
+    let mut loss = 0.0f64;
+    let mut dlogits = vec![0.0f32; b * t * v];
+    for bi in 0..b {
+        for ti in 0..t - 1 {
+            let row = (bi * t + ti) * v;
+            let target = tokens[bi * t + ti + 1] as usize;
+            let lr = &logits[row..row + v];
+            let mx = lr.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut sum = 0.0f32;
+            for &x in lr {
+                sum += (x - mx).exp();
+            }
+            let log_z = mx + sum.ln();
+            loss += (log_z - lr[target]) as f64;
+            let dl = &mut dlogits[row..row + v];
+            for j in 0..v {
+                let p = (lr[j] - log_z).exp();
+                dl[j] = (p - if j == target { 1.0 } else { 0.0 }) / count;
+            }
+        }
+    }
+    ((loss / count as f64) as f32, dlogits)
+}
+
+/// Transpose an `(r x c)` row-major matrix.
+pub fn transpose(a: &[f32], r: usize, c: usize) -> Vec<f32> {
+    let mut t = vec![0.0f32; r * c];
+    for i in 0..r {
+        for j in 0..c {
+            t[j * r + i] = a[i * c + j];
+        }
+    }
+    t
+}
+
+/// `a += b` elementwise.
+pub fn add_inplace(a: &mut [f32], b: &[f32]) {
+    debug_assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter_mut().zip(b) {
+        *x += y;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32 * 0.5).collect()
+    }
+
+    #[test]
+    fn layer_norm_normalizes() {
+        let mut rng = Rng::new(1);
+        let (rows, d) = (4, 16);
+        let x = randv(&mut rng, rows * d);
+        let scale = vec![1.0; d];
+        let bias = vec![0.0; d];
+        let (y, _, _) = layer_norm_fwd(&x, &scale, &bias, rows, d);
+        for r in 0..rows {
+            let row = &y[r * d..(r + 1) * d];
+            let mean = row.iter().sum::<f32>() / d as f32;
+            let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / d as f32;
+            assert!(mean.abs() < 1e-5);
+            assert!((var - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn layer_norm_grad_finite_diff() {
+        let mut rng = Rng::new(2);
+        let (rows, d) = (2, 8);
+        let x = randv(&mut rng, rows * d);
+        let scale = randv(&mut rng, d);
+        let bias = randv(&mut rng, d);
+        let dy = randv(&mut rng, rows * d);
+        let (_, means, rstds) = layer_norm_fwd(&x, &scale, &bias, rows, d);
+        let (dx, dscale, dbias) = layer_norm_bwd(&dy, &x, &scale, &means, &rstds, rows, d);
+
+        let f = |x: &[f32], scale: &[f32], bias: &[f32]| -> f32 {
+            let (y, _, _) = layer_norm_fwd(x, scale, bias, rows, d);
+            y.iter().zip(&dy).map(|(a, b)| a * b).sum()
+        };
+        let eps = 1e-3;
+        for idx in [0usize, 5, 11] {
+            let mut xp = x.clone();
+            xp[idx] += eps;
+            let mut xm = x.clone();
+            xm[idx] -= eps;
+            let num = (f(&xp, &scale, &bias) - f(&xm, &scale, &bias)) / (2.0 * eps);
+            assert!((num - dx[idx]).abs() < 2e-2, "dx[{idx}]: {num} vs {}", dx[idx]);
+        }
+        for idx in [0usize, 3] {
+            let mut sp = scale.clone();
+            sp[idx] += eps;
+            let mut sm = scale.clone();
+            sm[idx] -= eps;
+            let num = (f(&x, &sp, &bias) - f(&x, &sm, &bias)) / (2.0 * eps);
+            assert!((num - dscale[idx]).abs() < 2e-2);
+            let mut bp = bias.clone();
+            bp[idx] += eps;
+            let mut bm = bias.clone();
+            bm[idx] -= eps;
+            let numb = (f(&x, &scale, &bp) - f(&x, &scale, &bm)) / (2.0 * eps);
+            assert!((numb - dbias[idx]).abs() < 2e-2);
+        }
+    }
+
+    #[test]
+    fn gelu_matches_known_values() {
+        // jax.nn.gelu(1.0) ~ 0.841192, gelu(-1.0) ~ -0.158808 (tanh approx)
+        let y = gelu_fwd(&[1.0, -1.0, 0.0]);
+        assert!((y[0] - 0.841192).abs() < 1e-4, "{}", y[0]);
+        assert!((y[1] + 0.158808).abs() < 1e-4);
+        assert_eq!(y[2], 0.0);
+    }
+
+    #[test]
+    fn gelu_grad_finite_diff() {
+        let xs = [-2.0f32, -0.5, 0.0, 0.3, 1.7];
+        let dy = vec![1.0f32; xs.len()];
+        let dx = gelu_bwd(&dy, &xs);
+        let eps = 1e-3;
+        for (i, &x) in xs.iter().enumerate() {
+            let num =
+                (gelu_fwd(&[x + eps])[0] - gelu_fwd(&[x - eps])[0]) / (2.0 * eps);
+            assert!((num - dx[i]).abs() < 1e-3, "{num} vs {}", dx[i]);
+        }
+    }
+
+    #[test]
+    fn causal_softmax_masks_future() {
+        let t = 4;
+        let mut s = vec![0.0f32; t * t]; // rows = t (one head, one sample)
+        causal_softmax_fwd(&mut s, t, t);
+        for q in 0..t {
+            let row = &s[q * t..(q + 1) * t];
+            for (j, &p) in row.iter().enumerate() {
+                if j > q {
+                    assert!(p < 1e-12, "future leak at ({q},{j})");
+                }
+            }
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+            // uniform over the allowed prefix
+            assert!((row[0] - 1.0 / (q + 1) as f32).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn softmax_grad_rows_sum_zero() {
+        let mut rng = Rng::new(3);
+        let (rows, t) = (3, 5);
+        let mut p = randv(&mut rng, rows * t);
+        causal_softmax_fwd(&mut p, rows, t);
+        let dy = randv(&mut rng, rows * t);
+        let dx = softmax_bwd(&dy, &p, rows, t);
+        for r in 0..rows {
+            let s: f32 = dx[r * t..(r + 1) * t].iter().sum();
+            assert!(s.abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn cross_entropy_uniform_logits() {
+        let (b, t, v) = (2, 3, 7);
+        let logits = vec![0.0f32; b * t * v];
+        let tokens = vec![1i32; b * t];
+        let (loss, dl) = cross_entropy_fwd_bwd(&logits, &tokens, b, t, v);
+        assert!((loss - (v as f32).ln()).abs() < 1e-5);
+        // grads at final position are zero (no next-token target)
+        for bi in 0..b {
+            let row = (bi * t + (t - 1)) * v;
+            assert!(dl[row..row + v].iter().all(|&x| x == 0.0));
+        }
+        // each supervised row sums to zero
+        let row0: f32 = dl[0..v].iter().sum();
+        assert!(row0.abs() < 1e-6);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let a: Vec<f32> = (0..6).map(|x| x as f32).collect();
+        let t = transpose(&a, 2, 3);
+        assert_eq!(t, vec![0.0, 3.0, 1.0, 4.0, 2.0, 5.0]);
+        assert_eq!(transpose(&t, 3, 2), a);
+    }
+}

@@ -1,0 +1,639 @@
+//! End-to-end distributed trainer: the tiny LM's forward/backward with
+//! every GEMM routed through a pluggable [`GemmBackend`] — local blocked
+//! GEMM, the PJRT canonical-artifact executor, or the live PS+worker fleet.
+//!
+//! Semantics mirror `python/compile/model.py` exactly (same LN epsilon,
+//! tanh-GELU, causal mask, tied embeddings, Adam form); the tests pin the
+//! loss and gradients to the JAX oracles in `artifacts/` (grads0.bin,
+//! oracle.json). This is the §3.2 workflow end to end: the PS traces GEMM
+//! calls at runtime, shards them across devices, keeps non-GEMM ops local,
+//! and applies Adam host-side.
+
+use anyhow::Result;
+
+use crate::coordinator::optimizer::{Adam, AdamConfig};
+use crate::coordinator::ps::DistributedGemm;
+use crate::coordinator::tensor::*;
+use crate::runtime::executor::{Artifacts, GemmExecutor};
+use crate::runtime::hostgemm;
+
+/// Where GEMMs execute.
+pub trait GemmBackend {
+    /// `a (m x n) · b (n x q)` row-major.
+    fn matmul(&mut self, a: &[f32], b: &[f32], m: usize, n: usize, q: usize) -> Vec<f32>;
+
+    /// Count of GEMM calls routed so far (DAG tracing metric).
+    fn gemm_calls(&self) -> u64;
+}
+
+/// PS-local blocked GEMM (multi-threaded).
+pub struct LocalBackend {
+    pub threads: usize,
+    calls: u64,
+}
+
+impl LocalBackend {
+    pub fn new(threads: usize) -> Self {
+        LocalBackend { threads, calls: 0 }
+    }
+}
+
+impl GemmBackend for LocalBackend {
+    fn matmul(&mut self, a: &[f32], b: &[f32], m: usize, n: usize, q: usize) -> Vec<f32> {
+        self.calls += 1;
+        if m >= 64 && self.threads > 1 {
+            hostgemm::matmul_parallel(a, b, m, n, q, self.threads)
+        } else {
+            let mut c = vec![0.0f32; m * q];
+            hostgemm::matmul(a, b, &mut c, m, n, q);
+            c
+        }
+    }
+
+    fn gemm_calls(&self) -> u64 {
+        self.calls
+    }
+}
+
+/// PJRT canonical-artifact backend (pads to the nearest Pallas-lowered
+/// executable; falls back to the host GEMM when nothing fits).
+pub struct PjrtBackend {
+    exec: GemmExecutor,
+    calls: u64,
+    pub pjrt_hits: u64,
+}
+
+impl PjrtBackend {
+    pub fn new(exec: GemmExecutor) -> Self {
+        PjrtBackend {
+            exec,
+            calls: 0,
+            pjrt_hits: 0,
+        }
+    }
+}
+
+impl GemmBackend for PjrtBackend {
+    fn matmul(&mut self, a: &[f32], b: &[f32], m: usize, n: usize, q: usize) -> Vec<f32> {
+        self.calls += 1;
+        match self.exec.matmul_padded(a, b, m, n, q) {
+            Ok(Some(c)) => {
+                self.pjrt_hits += 1;
+                c
+            }
+            _ => {
+                let mut c = vec![0.0f32; m * q];
+                hostgemm::matmul(a, b, &mut c, m, n, q);
+                c
+            }
+        }
+    }
+
+    fn gemm_calls(&self) -> u64 {
+        self.calls
+    }
+}
+
+/// Live distributed fleet backend.
+pub struct DistributedBackend {
+    pub ps: DistributedGemm,
+    calls: u64,
+    /// route tiny attention GEMMs locally when false (PS-side), like the
+    /// paper's non-GEMM placement; projection/MLP GEMMs always distribute.
+    pub min_distributed_elems: usize,
+}
+
+impl DistributedBackend {
+    pub fn new(ps: DistributedGemm) -> Self {
+        DistributedBackend {
+            ps,
+            calls: 0,
+            min_distributed_elems: 0,
+        }
+    }
+}
+
+impl GemmBackend for DistributedBackend {
+    fn matmul(&mut self, a: &[f32], b: &[f32], m: usize, n: usize, q: usize) -> Vec<f32> {
+        self.calls += 1;
+        if m * q < self.min_distributed_elems {
+            let mut c = vec![0.0f32; m * q];
+            hostgemm::matmul(a, b, &mut c, m, n, q);
+            return c;
+        }
+        self.ps
+            .matmul(a, b, m, n, q)
+            .expect("distributed GEMM failed")
+    }
+
+    fn gemm_calls(&self) -> u64 {
+        self.calls
+    }
+}
+
+/// Model dimensions (parsed from artifact metadata).
+#[derive(Clone, Copy, Debug)]
+pub struct TrainerConfig {
+    pub vocab: usize,
+    pub d: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub dff: usize,
+    pub t: usize,
+    pub b: usize,
+}
+
+impl TrainerConfig {
+    pub fn tiny() -> TrainerConfig {
+        TrainerConfig {
+            vocab: 256,
+            d: 128,
+            heads: 4,
+            layers: 2,
+            dff: 512,
+            t: 64,
+            b: 8,
+        }
+    }
+
+    pub fn from_artifacts(a: &Artifacts) -> TrainerConfig {
+        // artifact model is the tiny LM; shapes confirm it
+        let d = a.param_shapes["tok_embed"][1];
+        TrainerConfig {
+            vocab: a.param_shapes["tok_embed"][0],
+            d,
+            heads: 4,
+            layers: (a.param_order.len() - 4) / 12,
+            dff: a.param_shapes["l0.w1"][1],
+            t: a.seq_len,
+            b: a.batch,
+        }
+    }
+
+    fn hd(&self) -> usize {
+        self.d / self.heads
+    }
+}
+
+/// Parameter indices in the artifact flattening order.
+struct Idx;
+impl Idx {
+    const TOK: usize = 0;
+    const POS: usize = 1;
+    fn layer(i: usize) -> usize {
+        2 + 12 * i
+    }
+    // offsets within a layer block:
+    const LN1_S: usize = 0;
+    const LN1_B: usize = 1;
+    const WQ: usize = 2;
+    const WK: usize = 3;
+    const WV: usize = 4;
+    const WO: usize = 5;
+    const LN2_S: usize = 6;
+    const LN2_B: usize = 7;
+    const W1: usize = 8;
+    const B1: usize = 9;
+    const W2: usize = 10;
+    const B2: usize = 11;
+    fn lnf(cfg: &TrainerConfig) -> usize {
+        2 + 12 * cfg.layers
+    }
+}
+
+/// Per-layer forward cache for backward.
+struct LayerCache {
+    x_in: Vec<f32>,
+    ln1: Vec<f32>,
+    ln1_mean: Vec<f32>,
+    ln1_rstd: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    att: Vec<f32>, // (B*heads*T, T) probabilities
+    ctx: Vec<f32>, // (B*T, d)
+    x_mid: Vec<f32>,
+    ln2: Vec<f32>,
+    ln2_mean: Vec<f32>,
+    ln2_rstd: Vec<f32>,
+    h_pre: Vec<f32>, // pre-GELU
+    h_act: Vec<f32>, // post-GELU
+}
+
+struct ForwardCache {
+    layers: Vec<LayerCache>,
+    x_final: Vec<f32>,
+    lnf: Vec<f32>,
+    lnf_mean: Vec<f32>,
+    lnf_rstd: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+/// The trainer: parameters + Adam + a GEMM backend.
+pub struct Trainer<B: GemmBackend> {
+    pub cfg: TrainerConfig,
+    pub params: Vec<Vec<f32>>,
+    pub adam: Adam,
+    pub backend: B,
+}
+
+impl<B: GemmBackend> Trainer<B> {
+    pub fn new(cfg: TrainerConfig, params: Vec<Vec<f32>>, acfg: AdamConfig, backend: B) -> Self {
+        let adam = Adam::new(acfg, &params);
+        Trainer {
+            cfg,
+            params,
+            adam,
+            backend,
+        }
+    }
+
+    /// Gather per-head `(T, hd)` submatrix for sample `bi`, head `h` from a
+    /// `(B*T, d)` activation.
+    fn head_slice(&self, x: &[f32], bi: usize, h: usize) -> Vec<f32> {
+        let (t, d, hd) = (self.cfg.t, self.cfg.d, self.cfg.hd());
+        let mut out = vec![0.0f32; t * hd];
+        for ti in 0..t {
+            let src = (bi * t + ti) * d + h * hd;
+            out[ti * hd..(ti + 1) * hd].copy_from_slice(&x[src..src + hd]);
+        }
+        out
+    }
+
+    fn head_scatter_add(&self, dst: &mut [f32], part: &[f32], bi: usize, h: usize) {
+        let (t, d, hd) = (self.cfg.t, self.cfg.d, self.cfg.hd());
+        for ti in 0..t {
+            let di = (bi * t + ti) * d + h * hd;
+            for j in 0..hd {
+                dst[di + j] += part[ti * hd + j];
+            }
+        }
+    }
+
+    /// Forward pass; returns (loss, cache).
+    fn forward(&mut self, tokens: &[i32]) -> (f32, ForwardCache) {
+        let cfg = self.cfg;
+        let (b, t, d, heads, hd) = (cfg.b, cfg.t, cfg.d, cfg.heads, cfg.hd());
+        let rows = b * t;
+        assert_eq!(tokens.len(), rows);
+
+        // embeddings
+        let tok_e = &self.params[Idx::TOK];
+        let pos_e = &self.params[Idx::POS];
+        let mut x = vec![0.0f32; rows * d];
+        for bi in 0..b {
+            for ti in 0..t {
+                let r = bi * t + ti;
+                let tok = tokens[r] as usize;
+                for j in 0..d {
+                    x[r * d + j] = tok_e[tok * d + j] + pos_e[ti * d + j];
+                }
+            }
+        }
+
+        let mut layers = Vec::with_capacity(cfg.layers);
+        let scale = 1.0 / (hd as f32).sqrt();
+        for li in 0..cfg.layers {
+            let base = Idx::layer(li);
+            let x_in = x.clone();
+            let (ln1, m1, r1) = layer_norm_fwd(
+                &x,
+                &self.params[base + Idx::LN1_S],
+                &self.params[base + Idx::LN1_B],
+                rows,
+                d,
+            );
+            let q = self
+                .backend
+                .matmul(&ln1, &self.params[base + Idx::WQ], rows, d, d);
+            let k = self
+                .backend
+                .matmul(&ln1, &self.params[base + Idx::WK], rows, d, d);
+            let v = self
+                .backend
+                .matmul(&ln1, &self.params[base + Idx::WV], rows, d, d);
+
+            // attention per (sample, head) — the Table 6 score/context GEMMs
+            let mut att = vec![0.0f32; b * heads * t * t];
+            let mut ctx = vec![0.0f32; rows * d];
+            for bi in 0..b {
+                for h in 0..heads {
+                    let qh = self.head_slice(&q, bi, h);
+                    let kh = self.head_slice(&k, bi, h);
+                    let vh = self.head_slice(&v, bi, h);
+                    let kt = transpose(&kh, t, hd);
+                    let mut scores = self.backend.matmul(&qh, &kt, t, hd, t);
+                    for s in scores.iter_mut() {
+                        *s *= scale;
+                    }
+                    causal_softmax_fwd(&mut scores, t, t);
+                    let ch = self.backend.matmul(&scores, &vh, t, t, hd);
+                    let off = (bi * heads + h) * t * t;
+                    att[off..off + t * t].copy_from_slice(&scores);
+                    self.head_scatter_add(&mut ctx, &ch, bi, h);
+                }
+            }
+            let attn_out = self
+                .backend
+                .matmul(&ctx, &self.params[base + Idx::WO], rows, d, d);
+            add_inplace(&mut x, &attn_out);
+            let x_mid = x.clone();
+
+            let (ln2, m2, r2) = layer_norm_fwd(
+                &x,
+                &self.params[base + Idx::LN2_S],
+                &self.params[base + Idx::LN2_B],
+                rows,
+                d,
+            );
+            let mut h_pre = self
+                .backend
+                .matmul(&ln2, &self.params[base + Idx::W1], rows, d, cfg.dff);
+            let b1 = &self.params[base + Idx::B1];
+            for r in 0..rows {
+                for j in 0..cfg.dff {
+                    h_pre[r * cfg.dff + j] += b1[j];
+                }
+            }
+            let h_act = gelu_fwd(&h_pre);
+            let mut out = self
+                .backend
+                .matmul(&h_act, &self.params[base + Idx::W2], rows, cfg.dff, d);
+            let b2 = &self.params[base + Idx::B2];
+            for r in 0..rows {
+                for j in 0..d {
+                    out[r * d + j] += b2[j];
+                }
+            }
+            add_inplace(&mut x, &out);
+
+            layers.push(LayerCache {
+                x_in,
+                ln1,
+                ln1_mean: m1,
+                ln1_rstd: r1,
+                q,
+                k,
+                v,
+                att,
+                ctx,
+                x_mid,
+                ln2,
+                ln2_mean: m2,
+                ln2_rstd: r2,
+                h_pre,
+                h_act,
+            });
+        }
+
+        let lnf_i = Idx::lnf(&cfg);
+        let x_final = x.clone();
+        let (lnf, mf, rf) = layer_norm_fwd(
+            &x,
+            &self.params[lnf_i],
+            &self.params[lnf_i + 1],
+            rows,
+            d,
+        );
+        // logits = lnf @ tokE^T
+        let tok_t = transpose(&self.params[Idx::TOK], cfg.vocab, d);
+        let logits = self.backend.matmul(&lnf, &tok_t, rows, d, cfg.vocab);
+        let (loss, _) = cross_entropy_fwd_bwd(&logits, tokens, b, t, cfg.vocab);
+        (
+            loss,
+            ForwardCache {
+                layers,
+                x_final,
+                lnf,
+                lnf_mean: mf,
+                lnf_rstd: rf,
+                logits,
+            },
+        )
+    }
+
+    /// Loss only (no state change) — cross-checked against the
+    /// `forward_loss` PJRT artifact.
+    pub fn loss(&mut self, tokens: &[i32]) -> f32 {
+        self.forward(tokens).0
+    }
+
+    /// Full backward; returns gradients aligned with `params`.
+    fn backward(&mut self, tokens: &[i32], cache: &ForwardCache) -> Vec<Vec<f32>> {
+        let cfg = self.cfg;
+        let (b, t, d, heads, hd, v_sz) = (cfg.b, cfg.t, cfg.d, cfg.heads, cfg.hd(), cfg.vocab);
+        let rows = b * t;
+        let mut grads: Vec<Vec<f32>> = self.params.iter().map(|p| vec![0.0; p.len()]).collect();
+
+        // CE + head
+        let (_, dlogits) = cross_entropy_fwd_bwd(&cache.logits, tokens, b, t, v_sz);
+        // d_lnf = dlogits @ tokE ; d_tokE += dlogits^T @ lnf
+        let d_lnf = self
+            .backend
+            .matmul(&dlogits, &self.params[Idx::TOK], rows, v_sz, d);
+        let dl_t = transpose(&dlogits, rows, v_sz);
+        let d_tok_head = self.backend.matmul(&dl_t, &cache.lnf, v_sz, rows, d);
+        add_inplace(&mut grads[Idx::TOK], &d_tok_head);
+
+        let lnf_i = Idx::lnf(&cfg);
+        let (mut dx, d_sf, d_bf) = layer_norm_bwd(
+            &d_lnf,
+            &cache.x_final,
+            &self.params[lnf_i],
+            &cache.lnf_mean,
+            &cache.lnf_rstd,
+            rows,
+            d,
+        );
+        grads[lnf_i] = d_sf;
+        grads[lnf_i + 1] = d_bf;
+
+        let scale = 1.0 / (hd as f32).sqrt();
+        for li in (0..cfg.layers).rev() {
+            let base = Idx::layer(li);
+            let lc = &cache.layers[li];
+
+            // ---- MLP backward ----
+            // out = gelu(ln2@W1 + b1)@W2 + b2 ; x = x_mid + out
+            let d_out = dx.clone(); // gradient into `out` (residual passthrough)
+            // b2
+            for r in 0..rows {
+                for j in 0..d {
+                    grads[base + Idx::B2][j] += d_out[r * d + j];
+                }
+            }
+            // dW2 = h_act^T @ d_out ; d_h_act = d_out @ W2^T
+            let hat = transpose(&lc.h_act, rows, cfg.dff);
+            let d_w2 = self.backend.matmul(&hat, &d_out, cfg.dff, rows, d);
+            add_inplace(&mut grads[base + Idx::W2], &d_w2);
+            let w2t = transpose(&self.params[base + Idx::W2], cfg.dff, d);
+            let d_h_act = self.backend.matmul(&d_out, &w2t, rows, d, cfg.dff);
+            let d_h_pre = gelu_bwd(&d_h_act, &lc.h_pre);
+            // b1
+            for r in 0..rows {
+                for j in 0..cfg.dff {
+                    grads[base + Idx::B1][j] += d_h_pre[r * cfg.dff + j];
+                }
+            }
+            // dW1 = ln2^T @ d_h_pre ; d_ln2 = d_h_pre @ W1^T
+            let ln2t = transpose(&lc.ln2, rows, d);
+            let d_w1 = self.backend.matmul(&ln2t, &d_h_pre, d, rows, cfg.dff);
+            add_inplace(&mut grads[base + Idx::W1], &d_w1);
+            let w1t = transpose(&self.params[base + Idx::W1], d, cfg.dff);
+            let d_ln2 = self.backend.matmul(&d_h_pre, &w1t, rows, cfg.dff, d);
+            let (d_xmid_ln, d_s2, d_b2s) = layer_norm_bwd(
+                &d_ln2,
+                &lc.x_mid,
+                &self.params[base + Idx::LN2_S],
+                &lc.ln2_mean,
+                &lc.ln2_rstd,
+                rows,
+                d,
+            );
+            grads[base + Idx::LN2_S] = d_s2;
+            grads[base + Idx::LN2_B] = d_b2s;
+            // residual: dx (into x_mid) = dx + d_xmid_ln
+            add_inplace(&mut dx, &d_xmid_ln);
+
+            // ---- attention backward ----
+            // x_mid = x_in + ctx@Wo ; d_attn_out = dx
+            let ctx_t = transpose(&lc.ctx, rows, d);
+            let d_wo = self.backend.matmul(&ctx_t, &dx, d, rows, d);
+            add_inplace(&mut grads[base + Idx::WO], &d_wo);
+            let wot = transpose(&self.params[base + Idx::WO], d, d);
+            let d_ctx = self.backend.matmul(&dx, &wot, rows, d, d);
+
+            let mut dq = vec![0.0f32; rows * d];
+            let mut dk = vec![0.0f32; rows * d];
+            let mut dv = vec![0.0f32; rows * d];
+            for bi in 0..b {
+                for h in 0..heads {
+                    let off = (bi * heads + h) * t * t;
+                    let att = &lc.att[off..off + t * t];
+                    let d_ch = self.head_slice(&d_ctx, bi, h); // (t, hd)
+                    let vh = self.head_slice(&lc.v, bi, h);
+                    let qh = self.head_slice(&lc.q, bi, h);
+                    let kh = self.head_slice(&lc.k, bi, h);
+                    // ctx_h = att @ v_h
+                    // d_att = d_ch @ v_h^T ; d_v_h = att^T @ d_ch
+                    let vt = transpose(&vh, t, hd);
+                    let d_att = self.backend.matmul(&d_ch, &vt, t, hd, t);
+                    let att_t = transpose(att, t, t);
+                    let d_vh = self.backend.matmul(&att_t, &d_ch, t, t, hd);
+                    self.head_scatter_add(&mut dv, &d_vh, bi, h);
+                    // scores backward through softmax, then scale
+                    let mut d_scores = softmax_bwd(&d_att, att, t, t);
+                    for s in d_scores.iter_mut() {
+                        *s *= scale;
+                    }
+                    // scores = q_h @ k_h^T => dq_h = d_scores @ k_h,
+                    // dk_h = d_scores^T @ q_h
+                    let d_qh = self.backend.matmul(&d_scores, &kh, t, t, hd);
+                    let ds_t = transpose(&d_scores, t, t);
+                    let d_kh = self.backend.matmul(&ds_t, &qh, t, t, hd);
+                    self.head_scatter_add(&mut dq, &d_qh, bi, h);
+                    self.head_scatter_add(&mut dk, &d_kh, bi, h);
+                }
+            }
+            // projections backward
+            let ln1t = transpose(&lc.ln1, rows, d);
+            let d_wq = self.backend.matmul(&ln1t, &dq, d, rows, d);
+            let d_wk = self.backend.matmul(&ln1t, &dk, d, rows, d);
+            let d_wv = self.backend.matmul(&ln1t, &dv, d, rows, d);
+            add_inplace(&mut grads[base + Idx::WQ], &d_wq);
+            add_inplace(&mut grads[base + Idx::WK], &d_wk);
+            add_inplace(&mut grads[base + Idx::WV], &d_wv);
+            let wqt = transpose(&self.params[base + Idx::WQ], d, d);
+            let wkt = transpose(&self.params[base + Idx::WK], d, d);
+            let wvt = transpose(&self.params[base + Idx::WV], d, d);
+            let mut d_ln1 = self.backend.matmul(&dq, &wqt, rows, d, d);
+            add_inplace(&mut d_ln1, &self.backend.matmul(&dk, &wkt, rows, d, d));
+            add_inplace(&mut d_ln1, &self.backend.matmul(&dv, &wvt, rows, d, d));
+            let (d_xin_ln, d_s1, d_b1s) = layer_norm_bwd(
+                &d_ln1,
+                &lc.x_in,
+                &self.params[base + Idx::LN1_S],
+                &lc.ln1_mean,
+                &lc.ln1_rstd,
+                rows,
+                d,
+            );
+            grads[base + Idx::LN1_S] = d_s1;
+            grads[base + Idx::LN1_B] = d_b1s;
+            add_inplace(&mut dx, &d_xin_ln);
+        }
+
+        // embeddings backward
+        for bi in 0..b {
+            for ti in 0..t {
+                let r = bi * t + ti;
+                let tok = tokens[r] as usize;
+                for j in 0..d {
+                    grads[Idx::TOK][tok * d + j] += dx[r * d + j];
+                    grads[Idx::POS][ti * d + j] += dx[r * d + j];
+                }
+            }
+        }
+        grads
+    }
+
+    /// One training step: forward + backward + Adam. Returns the loss.
+    pub fn train_step(&mut self, tokens: &[i32]) -> f32 {
+        let (loss, cache) = self.forward(tokens);
+        let grads = self.backward(tokens, &cache);
+        let mut params = std::mem::take(&mut self.params);
+        self.adam.step(&mut params, &grads);
+        self.params = params;
+        loss
+    }
+
+    /// Gradients only (for oracle tests).
+    pub fn grads(&mut self, tokens: &[i32]) -> (f32, Vec<Vec<f32>>) {
+        let (loss, cache) = self.forward(tokens);
+        let grads = self.backward(tokens, &cache);
+        (loss, grads)
+    }
+}
+
+/// Read the JAX gradient oracle (`grads0.bin`) in artifact order.
+pub fn load_grad_oracle(artifacts: &Artifacts) -> Result<Vec<Vec<f32>>> {
+    let bytes = std::fs::read(artifacts.dir.join("grads0.bin"))?;
+    let mut out = Vec::new();
+    let mut off = 0usize;
+    for name in &artifacts.param_order {
+        let n: usize = artifacts.param_shapes[name].iter().product();
+        let mut v = vec![0.0f32; n];
+        for (i, c) in bytes[off..off + 4 * n].chunks_exact(4).enumerate() {
+            v[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        out.push(v);
+        off += 4 * n;
+    }
+    Ok(out)
+}
+
+// Heavyweight oracle tests live in rust/tests/trainer_oracle.rs (they need
+// artifacts/); unit tests here cover the pure pieces.
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn param_index_layout() {
+        let cfg = TrainerConfig::tiny();
+        assert_eq!(Idx::layer(0), 2);
+        assert_eq!(Idx::layer(1), 14);
+        assert_eq!(Idx::lnf(&cfg), 26);
+        // 26 + 2 = 28 params total for 2 layers
+    }
+
+    #[test]
+    fn local_backend_counts_calls() {
+        let mut be = LocalBackend::new(1);
+        let a = vec![1.0f32; 4];
+        let b = vec![1.0f32; 4];
+        let c = be.matmul(&a, &b, 2, 2, 2);
+        assert_eq!(c, vec![2.0, 2.0, 2.0, 2.0]);
+        assert_eq!(be.gemm_calls(), 1);
+    }
+}

@@ -1,0 +1,127 @@
+//! Freivalds verification of returned sub-GEMM blocks (§6, "Robustness to
+//! poisoning attacks").
+//!
+//! For a claimed `C = A·B`, sample random `s` and check `A(B s) == C s`;
+//! repeat `iters` times (each round has false-negative probability <= 1/2
+//! for +-1 vectors; with real-valued s it is far smaller). Cost is O(n·(α+β))
+//! GEMV work per round — cheap enough for the PS to verify every block.
+
+use crate::util::rng::Rng;
+
+/// Verify `c (rows x cols) == a_strip (rows x n) · b_strip (n x cols)`.
+pub fn freivalds_check(
+    a_strip: &[f32],
+    b_strip: &[f32],
+    c: &[f32],
+    rows: usize,
+    n: usize,
+    cols: usize,
+    iters: usize,
+    rng: &mut Rng,
+    tol: f32,
+) -> bool {
+    debug_assert_eq!(a_strip.len(), rows * n);
+    debug_assert_eq!(b_strip.len(), n * cols);
+    debug_assert_eq!(c.len(), rows * cols);
+    for _ in 0..iters {
+        // s: random +-1 vector (exact in f32 arithmetic scale)
+        let s: Vec<f32> = (0..cols)
+            .map(|_| if rng.bernoulli(0.5) { 1.0 } else { -1.0 })
+            .collect();
+        // bs = B s   (n)
+        let mut bs = vec![0.0f32; n];
+        for i in 0..n {
+            let row = &b_strip[i * cols..(i + 1) * cols];
+            let mut acc = 0.0f32;
+            for j in 0..cols {
+                acc += row[j] * s[j];
+            }
+            bs[i] = acc;
+        }
+        // lhs = A bs (rows) ; rhs = C s (rows)
+        for r in 0..rows {
+            let arow = &a_strip[r * n..(r + 1) * n];
+            let mut lhs = 0.0f32;
+            for i in 0..n {
+                lhs += arow[i] * bs[i];
+            }
+            let crow = &c[r * cols..(r + 1) * cols];
+            let mut rhs = 0.0f32;
+            for j in 0..cols {
+                rhs += crow[j] * s[j];
+            }
+            // scale-aware tolerance (fp accumulation differences)
+            let scale = lhs.abs().max(rhs.abs()).max(1.0);
+            if (lhs - rhs).abs() > tol * scale {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Default tolerance: generous enough for f32 reassociation between the
+/// worker's blocked GEMM and the verifier's GEMV, tight enough to catch
+/// single-entry corruption (tested).
+pub const DEFAULT_TOL: f32 = 1e-3;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::hostgemm;
+
+    fn setting(rows: usize, n: usize, cols: usize, seed: u64) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let a: Vec<f32> = (0..rows * n).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..n * cols).map(|_| rng.normal() as f32).collect();
+        let mut c = vec![0.0f32; rows * cols];
+        hostgemm::matmul(&a, &b, &mut c, rows, n, cols);
+        (a, b, c)
+    }
+
+    #[test]
+    fn accepts_honest_blocks() {
+        for seed in 0..20 {
+            let (a, b, c) = setting(13, 64, 9, seed);
+            let mut rng = Rng::new(seed + 100);
+            assert!(freivalds_check(&a, &b, &c, 13, 64, 9, 3, &mut rng, DEFAULT_TOL));
+        }
+    }
+
+    #[test]
+    fn rejects_single_entry_corruption() {
+        let mut caught = 0;
+        let trials = 50;
+        for seed in 0..trials {
+            let (a, b, mut c) = setting(13, 64, 9, seed);
+            let mut rng = Rng::new(seed);
+            let idx = rng.below(c.len() as u64) as usize;
+            c[idx] += 0.1; // small targeted corruption
+            let mut vrng = Rng::new(seed + 1000);
+            if !freivalds_check(&a, &b, &c, 13, 64, 9, 3, &mut vrng, DEFAULT_TOL) {
+                caught += 1;
+            }
+        }
+        assert!(caught >= trials - 1, "caught {caught}/{trials}");
+    }
+
+    #[test]
+    fn rejects_adversarial_scaled_block() {
+        // worker returns 0.99 * C (proportional cheating)
+        let (a, b, c) = setting(8, 32, 8, 7);
+        let cheat: Vec<f32> = c.iter().map(|x| x * 0.99).collect();
+        let mut rng = Rng::new(8);
+        assert!(!freivalds_check(&a, &b, &cheat, 8, 32, 8, 3, &mut rng, DEFAULT_TOL));
+    }
+
+    #[test]
+    fn rejects_zero_block_unless_inputs_zero() {
+        let (a, b, c) = setting(4, 16, 4, 9);
+        let zeros = vec![0.0f32; c.len()];
+        let mut rng = Rng::new(10);
+        assert!(!freivalds_check(&a, &b, &zeros, 4, 16, 4, 2, &mut rng, DEFAULT_TOL));
+        // all-zero inputs: zero block is correct
+        let a0 = vec![0.0f32; a.len()];
+        assert!(freivalds_check(&a0, &b, &zeros, 4, 16, 4, 2, &mut rng, DEFAULT_TOL));
+    }
+}

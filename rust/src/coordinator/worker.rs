@@ -1,0 +1,191 @@
+//! Worker device: executes assigned sub-GEMM shards, models its link
+//! delays, and (optionally) misbehaves for the poisoning tests.
+//!
+//! Each worker is a thread holding only its dispatched shards — the memory
+//! model of Eq. 7. Compute uses the blocked host GEMM (the PJRT canonical-
+//! artifact path is exercised separately via [`crate::runtime::GemmExecutor`];
+//! both produce the same numerics, tested in `rust/tests/`).
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::time::Duration;
+
+use crate::cluster::device::Device;
+use crate::coordinator::protocol::{SubGemmTask, ToPs, ToWorker};
+use crate::runtime::hostgemm;
+
+/// Worker behaviour for fault-injection tests.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Behavior {
+    Honest,
+    /// returns a corrupted block (poisoning adversary, §6)
+    Corrupt,
+    /// dies after completing `n` tasks (churn)
+    DieAfter(usize),
+}
+
+/// Worker configuration.
+#[derive(Clone, Debug)]
+pub struct WorkerConfig {
+    pub device: Device,
+    pub behavior: Behavior,
+    /// scale factor applied to modeled link delays (0 disables sleeping —
+    /// tests; 1.0 = real-time emulation of the device's bandwidth)
+    pub delay_scale: f64,
+}
+
+/// Run the worker loop (call from a spawned thread).
+pub fn run(cfg: WorkerConfig, rx: Receiver<ToWorker>, tx: Sender<ToPs>) {
+    let id = cfg.device.id;
+    let mut completed = 0usize;
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            ToWorker::Ping => {
+                if tx.send(ToPs::KeepAlive { worker: id }).is_err() {
+                    break;
+                }
+            }
+            ToWorker::Shutdown => break,
+            ToWorker::Task(task) => {
+                if let Behavior::DieAfter(n) = cfg.behavior {
+                    if completed >= n {
+                        // Disappear without a trace: disconnect-based
+                        // failure detection at the PS (§3.2).
+                        let _ = tx.send(ToPs::Leaving { worker: id });
+                        break;
+                    }
+                }
+                simulate_link(&cfg, task.dl_bytes(), cfg.device.dl_bw, cfg.device.dl_lat);
+                let mut block = execute(&task);
+                if cfg.behavior == Behavior::Corrupt && !block.is_empty() {
+                    let idx = (task.task_id as usize * 7919) % block.len();
+                    block[idx] += 1.0;
+                }
+                simulate_link(&cfg, task.ul_bytes(), cfg.device.ul_bw, cfg.device.ul_lat);
+                completed += 1;
+                if tx
+                    .send(ToPs::Result {
+                        worker: id,
+                        task_id: task.task_id,
+                        block,
+                    })
+                    .is_err()
+                {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// Execute the sub-GEMM: `a_strip (rows x n) · b_strip (n x cols)`.
+pub fn execute(task: &SubGemmTask) -> Vec<f32> {
+    let mut out = vec![0.0f32; task.rows * task.cols];
+    hostgemm::matmul(
+        &task.a_strip,
+        &task.b_strip,
+        &mut out,
+        task.rows,
+        task.n,
+        task.cols,
+    );
+    out
+}
+
+fn simulate_link(cfg: &WorkerConfig, bytes: usize, bw: f64, lat: f64) {
+    if cfg.delay_scale <= 0.0 {
+        return;
+    }
+    let secs = (bytes as f64 / bw + lat) * cfg.delay_scale;
+    std::thread::sleep(Duration::from_secs_f64(secs.min(0.5)));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    fn task() -> SubGemmTask {
+        SubGemmTask {
+            task_id: 7,
+            a_strip: vec![1.0; 2 * 4],
+            b_strip: vec![2.0; 4 * 3],
+            n: 4,
+            row0: 0,
+            rows: 2,
+            col0: 0,
+            cols: 3,
+        }
+    }
+
+    fn cfg(behavior: Behavior) -> WorkerConfig {
+        WorkerConfig {
+            device: crate::cluster::device::Device::median_edge(5),
+            behavior,
+            delay_scale: 0.0,
+        }
+    }
+
+    #[test]
+    fn honest_worker_computes_correctly() {
+        let (to_w, rx) = channel();
+        let (tx, from_w) = channel();
+        let h = std::thread::spawn(move || run(cfg(Behavior::Honest), rx, tx));
+        to_w.send(ToWorker::Task(task())).unwrap();
+        match from_w.recv().unwrap() {
+            ToPs::Result {
+                worker,
+                task_id,
+                block,
+            } => {
+                assert_eq!(worker, 5);
+                assert_eq!(task_id, 7);
+                // 1-vector dot 2-vector over n=4 => every entry = 8
+                assert!(block.iter().all(|&x| (x - 8.0).abs() < 1e-6));
+            }
+            _ => panic!("expected result"),
+        }
+        to_w.send(ToWorker::Shutdown).unwrap();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn corrupt_worker_differs_from_honest() {
+        let honest = execute(&task());
+        let (to_w, rx) = channel();
+        let (tx, from_w) = channel();
+        let h = std::thread::spawn(move || run(cfg(Behavior::Corrupt), rx, tx));
+        to_w.send(ToWorker::Task(task())).unwrap();
+        if let ToPs::Result { block, .. } = from_w.recv().unwrap() {
+            assert_ne!(block, honest);
+        } else {
+            panic!();
+        }
+        drop(to_w);
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn dying_worker_announces_and_stops() {
+        let (to_w, rx) = channel();
+        let (tx, from_w) = channel();
+        let h = std::thread::spawn(move || run(cfg(Behavior::DieAfter(1)), rx, tx));
+        to_w.send(ToWorker::Task(task())).unwrap();
+        assert!(matches!(from_w.recv().unwrap(), ToPs::Result { .. }));
+        to_w.send(ToWorker::Task(task())).unwrap();
+        assert!(matches!(from_w.recv().unwrap(), ToPs::Leaving { worker: 5 }));
+        h.join().unwrap();
+        // channel closed afterwards
+        assert!(to_w.send(ToWorker::Ping).is_err());
+    }
+
+    #[test]
+    fn ping_pong_keepalive() {
+        let (to_w, rx) = channel();
+        let (tx, from_w) = channel();
+        let h = std::thread::spawn(move || run(cfg(Behavior::Honest), rx, tx));
+        to_w.send(ToWorker::Ping).unwrap();
+        assert!(matches!(from_w.recv().unwrap(), ToPs::KeepAlive { worker: 5 }));
+        to_w.send(ToWorker::Shutdown).unwrap();
+        h.join().unwrap();
+    }
+}

@@ -1,0 +1,44 @@
+//! # CLEAVE — harnessing idle edge compute for foundation-model training
+//!
+//! Reproduction of *On Harnessing Idle Compute at the Edge for Foundation
+//! Model Training* (CS.DC 2025). See `DESIGN.md` for the full system
+//! inventory and the per-experiment index, and `EXPERIMENTS.md` for the
+//! paper-vs-measured record.
+//!
+//! The crate is the **Layer-3 rust coordinator** of a three-layer stack:
+//!
+//! * **L1** — Pallas sub-GEMM kernels (`python/compile/kernels/`), the
+//!   paper's unit of distributed work, AOT-lowered to HLO text.
+//! * **L2** — a JAX transformer train step calling those kernels
+//!   (`python/compile/model.py`), also AOT-lowered.
+//! * **L3** — this crate: the parameter-server coordinator, the §4 cost
+//!   model + solver, churn recovery, the discrete simulator that regenerates
+//!   every table/figure of the paper, and the live PJRT execution path.
+//!
+//! Python never runs on the request path: `make artifacts` lowers once, and
+//! [`runtime`] loads/executes the HLO from rust via PJRT.
+//!
+//! ## Module map
+//!
+//! | module | role |
+//! |---|---|
+//! | [`util`] | offline-image substrates: PRNG, stats, JSON, CLI, threads, bench harness |
+//! | [`model`] | model specs, FLOP/memory accounting (Tables 1–4), the GEMM DAG (Table 6) |
+//! | [`cluster`] | heterogeneous device fleet, link asymmetry, Pareto tails, churn |
+//! | [`sched`] | the §4 cost model, makespan solver, output-grid tiling, §4.2 recovery, CVaR |
+//! | [`baselines`] | DTFM, Alpa, cloud estimators, recovery baselines, Appendix-A volumes |
+//! | [`sim`] | discrete per-batch simulator + failure injection (drives Figures 3–10) |
+//! | [`coordinator`] | live PS + workers: dispatch/collect, Freivalds verify, rust Adam, trainer |
+//! | [`runtime`] | PJRT bridge: HLO text -> compile -> execute; host GEMM fallback |
+
+pub mod baselines;
+pub mod cluster;
+pub mod coordinator;
+pub mod model;
+pub mod runtime;
+pub mod sched;
+pub mod sim;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

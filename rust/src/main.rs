@@ -1,0 +1,214 @@
+//! `cleave` — launcher CLI for the CLEAVE reproduction.
+//!
+//! Subcommands:
+//! * `simulate`  — solve + simulate one batch on a sampled fleet
+//! * `train`     — live end-to-end training of the tiny LM (PS + workers)
+//! * `recover`   — inject a failure and report recovery latency
+//! * `info`      — print model/fleet accounting (Tables 1–4 style)
+//!
+//! Each paper experiment also has a dedicated bench (`cargo bench`) — see
+//! DESIGN.md §5 for the experiment index.
+
+use anyhow::{bail, Result};
+
+use cleave::baselines::{alpa, dtfm};
+use cleave::cluster::fleet::{Fleet, FleetConfig};
+use cleave::coordinator::optimizer::AdamConfig;
+use cleave::coordinator::ps::{DistributedGemm, PsConfig};
+use cleave::coordinator::trainer::{DistributedBackend, Trainer, TrainerConfig};
+use cleave::coordinator::worker::Behavior;
+use cleave::model::config::{ModelSpec, TrainSetup};
+use cleave::model::dag::GemmDag;
+use cleave::model::flops;
+use cleave::model::memory::{self, ActivationPolicy};
+use cleave::runtime::executor::Artifacts;
+use cleave::sched::cost::{CostModel, GemmShape, PsParams};
+use cleave::sched::recovery::recover;
+use cleave::sched::solver::{solve_dag, solve_gemm, SolverOptions};
+use cleave::sim::batch::{simulate_batch, SimConfig};
+use cleave::util::cli::Cli;
+use cleave::util::table::Table;
+use cleave::util::{fmt_bytes, fmt_secs};
+
+fn main() {
+    let cli = Cli::new(
+        "cleave",
+        "edge-assisted foundation-model training (CS.DC 2025 reproduction)",
+    )
+    .opt("model", Some("OPT-13B"), "model preset (see model::config)")
+    .opt("devices", Some("256"), "number of edge devices")
+    .opt("batch", Some("128"), "global batch size")
+    .opt("seq", Some("1024"), "sequence length")
+    .opt("steps", Some("50"), "training steps (train subcommand)")
+    .opt("stragglers", Some("0.0"), "straggler fraction")
+    .opt("seed", Some("7"), "fleet sampling seed")
+    .opt("artifacts", Some("artifacts"), "artifacts directory")
+    .flag("median", "use the deterministic median fleet (Table 8 setup)")
+    .flag("verbose", "debug logging");
+    let args = cli.parse();
+    if args.has_flag("verbose") {
+        cleave::util::logging::set_level(cleave::util::logging::Level::Debug);
+    }
+    let cmd = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("info")
+        .to_string();
+    if let Err(e) = run(&cmd, &args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run(cmd: &str, args: &cleave::util::cli::Args) -> Result<()> {
+    let spec = ModelSpec::preset(args.get_str("model")?)?;
+    let setup = TrainSetup::default()
+        .with_batch(args.get_usize("batch")?)
+        .with_seq(args.get_usize("seq")?);
+    let n_dev = args.get_usize("devices")?;
+    let fleet = if args.has_flag("median") {
+        Fleet::median(n_dev)
+    } else {
+        Fleet::sample(
+            &FleetConfig::default()
+                .with_devices(n_dev)
+                .with_stragglers(args.get_f64("stragglers")?)
+                .with_seed(args.get_u64("seed")?),
+        )
+    };
+
+    match cmd {
+        "info" => info(&spec, &setup, &fleet),
+        "simulate" => simulate(&spec, &setup, &fleet),
+        "recover" => recover_cmd(&spec, &setup, &fleet),
+        "train" => train(args),
+        other => bail!("unknown subcommand '{other}' (info|simulate|recover|train)"),
+    }
+}
+
+fn info(spec: &ModelSpec, setup: &TrainSetup, fleet: &Fleet) -> Result<()> {
+    println!(
+        "model: {} (h={}, H={}, L={}, heads={})",
+        spec.name, spec.hidden, spec.intermediate, spec.layers, spec.heads
+    );
+    let br = flops::flops(spec, setup);
+    let mem = memory::total_memory(spec, setup, ActivationPolicy::Full);
+    let mut t = Table::new(&["quantity", "value"]);
+    t.row(&[
+        "total params".into(),
+        format!("{:.2}B", spec.total_params() as f64 / 1e9),
+    ]);
+    t.row(&["GEMM FLOPs/batch".into(), format!("{:.3e}", br.gemm())]);
+    t.row(&[
+        "GEMM share".into(),
+        format!("{:.2}%", br.gemm_share() * 100.0),
+    ]);
+    t.row(&["training memory".into(), fmt_bytes(mem.total())]);
+    t.row(&["fleet devices".into(), fleet.len().to_string()]);
+    t.row(&[
+        "aggregate eff. FLOPS".into(),
+        format!("{:.1} TFLOPS", fleet.aggregate_flops() / 1e12),
+    ]);
+    t.row(&[
+        "aggregate DL".into(),
+        format!("{}/s", fmt_bytes(fleet.aggregate_dl())),
+    ]);
+    t.print();
+    Ok(())
+}
+
+fn simulate(spec: &ModelSpec, setup: &TrainSetup, fleet: &Fleet) -> Result<()> {
+    let dag = GemmDag::build(spec, setup);
+    let cm = CostModel::default();
+    let (schedule, stats) = solve_dag(
+        &fleet.devices,
+        &dag,
+        &cm,
+        &PsParams::default(),
+        &SolverOptions::default(),
+    );
+    let r = simulate_batch(&fleet.devices, &dag, &schedule, &cm, &SimConfig::default());
+    let mut t = Table::new(&["metric", "CLEAVE"]);
+    t.row(&["per-batch time".into(), fmt_secs(r.batch_time)]);
+    t.row(&["GEMM time".into(), fmt_secs(r.gemm_time)]);
+    t.row(&["optimizer tail".into(), fmt_secs(r.opt_tail)]);
+    t.row(&["total DL".into(), fmt_bytes(r.total_dl_bytes)]);
+    t.row(&["total UL".into(), fmt_bytes(r.total_ul_bytes)]);
+    t.row(&[
+        "peak device mem".into(),
+        fmt_bytes(r.peak_device_mem_bytes),
+    ]);
+    t.row(&["solver time".into(), fmt_secs(stats.solve_time_s)]);
+    t.print();
+    // Baselines for context
+    if let Some(d) = dtfm::plan(spec, setup, &fleet.devices, 1e12) {
+        println!("DTFM per-batch: {}", fmt_secs(d.per_batch_s));
+    } else {
+        println!("DTFM: infeasible at this scale");
+    }
+    if let Some(a) = alpa::plan(spec, setup, &fleet.devices) {
+        println!("Alpa per-batch: {}", fmt_secs(a.per_batch_s));
+    } else {
+        println!("Alpa: infeasible (memory)");
+    }
+    Ok(())
+}
+
+fn recover_cmd(spec: &ModelSpec, setup: &TrainSetup, fleet: &Fleet) -> Result<()> {
+    let cm = CostModel::default();
+    let g = GemmDag::build(spec, setup).levels[0].gemms[0];
+    let shape = GemmShape::new(g.m, g.n, g.q, g.count);
+    let (a, _) = solve_gemm(&fleet.devices, shape, &cm, &SolverOptions::default());
+    let victim = a.active_devices()[0];
+    let plan = recover(&fleet.devices, &a, &[victim], &cm, &SolverOptions::default());
+    println!(
+        "failure of device {victim}: lost {} cells, re-solve {}, recompute {}, total {}",
+        plan.lost_area,
+        fmt_secs(plan.solve_time),
+        fmt_secs(plan.recompute_time),
+        fmt_secs(plan.total_latency())
+    );
+    Ok(())
+}
+
+fn train(args: &cleave::util::cli::Args) -> Result<()> {
+    let artifacts = Artifacts::load(args.get_str("artifacts")?)?;
+    let steps = args.get_usize("steps")?;
+    let n_workers = args.get_usize("devices")?.min(16);
+    let cfg = TrainerConfig::from_artifacts(&artifacts);
+    let fleet = Fleet::median(n_workers);
+    let ps = DistributedGemm::spawn(
+        fleet.devices,
+        vec![Behavior::Honest; n_workers],
+        PsConfig::default(),
+    );
+    let backend = DistributedBackend::new(ps);
+    let mut trainer = Trainer::new(
+        cfg,
+        artifacts.init_params()?,
+        AdamConfig {
+            lr: artifacts.adam_lr as f32,
+            ..Default::default()
+        },
+        backend,
+    );
+    println!(
+        "training tiny LM ({} params) on {n_workers} workers...",
+        artifacts.param_count
+    );
+    for step in 0..steps {
+        let tokens = artifacts.token_batch(step)?;
+        let loss = trainer.train_step(&tokens);
+        if step % 5 == 0 || step + 1 == steps {
+            println!("step {step:4}  loss {loss:.4}");
+        }
+    }
+    println!(
+        "dispatched {} sub-GEMM tasks, {} rejected, {} recoveries",
+        trainer.backend.ps.tasks_dispatched,
+        trainer.backend.ps.blocks_rejected,
+        trainer.backend.ps.recoveries
+    );
+    Ok(())
+}

@@ -1,0 +1,231 @@
+//! Model presets: the OPT and Llama/Llama2 families evaluated in the paper,
+//! plus tiny configs for tests and the live end-to-end example.
+
+use anyhow::{bail, Result};
+
+/// Architecture family — decides the MLP structure (OPT: 2 matrices,
+/// LLaMA/Llama2: 3 matrices — up, gate, down; paper Appendix A uses the
+/// `3hH` term for Llama).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelFamily {
+    Opt,
+    Llama,
+}
+
+/// A transformer model specification (decoder-only).
+#[derive(Clone, Debug)]
+pub struct ModelSpec {
+    pub name: String,
+    pub family: ModelFamily,
+    /// hidden dimension `h`
+    pub hidden: usize,
+    /// intermediate (MLP) dimension `H`
+    pub intermediate: usize,
+    /// number of transformer layers `L`
+    pub layers: usize,
+    /// attention heads `a`
+    pub heads: usize,
+    /// vocabulary size
+    pub vocab: usize,
+}
+
+impl ModelSpec {
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// Number of MLP weight matrices (2 for OPT, 3 for LLaMA gate).
+    pub fn mlp_mats(&self) -> usize {
+        match self.family {
+            ModelFamily::Opt => 2,
+            ModelFamily::Llama => 3,
+        }
+    }
+
+    /// Parameters in one transformer layer's GEMM weights:
+    /// `4h^2` attention (Q,K,V,O) + `mlp_mats * h * H` (paper Appendix A.1).
+    pub fn layer_gemm_params(&self) -> usize {
+        4 * self.hidden * self.hidden + self.mlp_mats() * self.hidden * self.intermediate
+    }
+
+    /// Total GEMM-weight parameters across layers (excludes embeddings,
+    /// LayerNorm — the parts CLEAVE shards).
+    pub fn gemm_params(&self) -> usize {
+        self.layers * self.layer_gemm_params()
+    }
+
+    /// Total parameter count including embeddings (approximate, tied head).
+    pub fn total_params(&self) -> usize {
+        self.gemm_params()
+            + self.vocab * self.hidden           // token embedding
+            + self.layers * 4 * self.hidden      // LN scales/biases (2 per block)
+            + 2 * self.hidden                    // final LN
+    }
+
+    /// Look up a preset by case-insensitive name (e.g. `"opt-13b"`).
+    pub fn preset(name: &str) -> Result<ModelSpec> {
+        let key = name.to_ascii_lowercase();
+        for spec in Self::all_presets() {
+            if spec.name.to_ascii_lowercase() == key {
+                return Ok(spec);
+            }
+        }
+        bail!(
+            "unknown model '{name}' (known: {})",
+            Self::all_presets()
+                .iter()
+                .map(|s| s.name.clone())
+                .collect::<Vec<_>>()
+                .join(", ")
+        )
+    }
+
+    /// Every preset used anywhere in the evaluation.
+    pub fn all_presets() -> Vec<ModelSpec> {
+        fn opt(name: &str, h: usize, l: usize, a: usize) -> ModelSpec {
+            ModelSpec {
+                name: name.to_string(),
+                family: ModelFamily::Opt,
+                hidden: h,
+                intermediate: 4 * h,
+                layers: l,
+                heads: a,
+                vocab: 50272,
+            }
+        }
+        fn llama(name: &str, h: usize, hh: usize, l: usize, a: usize) -> ModelSpec {
+            ModelSpec {
+                name: name.to_string(),
+                family: ModelFamily::Llama,
+                hidden: h,
+                intermediate: hh,
+                layers: l,
+                heads: a,
+                vocab: 32000,
+            }
+        }
+        vec![
+            // OPT family (Zhang et al. 2022)
+            opt("OPT-1.3B", 2048, 24, 32),
+            opt("OPT-2.7B", 2560, 32, 32),
+            opt("OPT-6.7B", 4096, 32, 32),
+            opt("OPT-13B", 5120, 40, 40),
+            opt("OPT-30B", 7168, 48, 56),
+            opt("OPT-66B", 9216, 64, 72),
+            // LLaMA-1 family (Tables 1/2 use "LLaMA")
+            llama("LLaMA-7B", 4096, 11008, 32, 32),
+            llama("LLaMA-13B", 5120, 13824, 40, 40),
+            llama("LLaMA-70B", 8192, 28672, 80, 64),
+            // Llama2 family (Tables 3/4, Figures)
+            llama("Llama2-7B", 4096, 11008, 32, 32),
+            llama("Llama2-13B", 5120, 13824, 40, 40),
+            llama("Llama2-70B", 8192, 28672, 80, 64),
+            // Tiny configs for tests / live end-to-end runs
+            ModelSpec {
+                name: "tiny-lm".to_string(),
+                family: ModelFamily::Opt,
+                hidden: 128,
+                intermediate: 512,
+                layers: 2,
+                heads: 4,
+                vocab: 256,
+            },
+            ModelSpec {
+                name: "tiny-100m".to_string(),
+                family: ModelFamily::Opt,
+                hidden: 768,
+                intermediate: 3072,
+                layers: 12,
+                heads: 12,
+                vocab: 50272,
+            },
+        ]
+    }
+}
+
+/// Training hyperparameters (the paper's defaults: batch 128, seq 1024,
+/// bf16 — 2 bytes per element).
+#[derive(Clone, Copy, Debug)]
+pub struct TrainSetup {
+    pub batch: usize,
+    pub seq: usize,
+    /// bytes per matrix element (`b` in §4.1; bf16 => 2)
+    pub elem_bytes: usize,
+}
+
+impl Default for TrainSetup {
+    fn default() -> Self {
+        TrainSetup {
+            batch: 128,
+            seq: 1024,
+            elem_bytes: 2,
+        }
+    }
+}
+
+impl TrainSetup {
+    pub fn with_batch(mut self, b: usize) -> Self {
+        self.batch = b;
+        self
+    }
+
+    pub fn with_seq(mut self, s: usize) -> Self {
+        self.seq = s;
+        self
+    }
+
+    pub fn tokens(&self) -> usize {
+        self.batch * self.seq
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_resolve_case_insensitively() {
+        assert_eq!(ModelSpec::preset("opt-13b").unwrap().hidden, 5120);
+        assert_eq!(ModelSpec::preset("LLAMA2-70B").unwrap().layers, 80);
+        assert!(ModelSpec::preset("gpt-5").is_err());
+    }
+
+    #[test]
+    fn param_counts_land_near_nameplate() {
+        // Within 15% of the nameplate size (embeddings/approximations aside).
+        for (name, billions) in [
+            ("OPT-1.3B", 1.3),
+            ("OPT-13B", 13.0),
+            ("Llama2-7B", 6.7),
+            ("Llama2-13B", 13.0),
+            ("Llama2-70B", 70.0),
+        ] {
+            let spec = ModelSpec::preset(name).unwrap();
+            let p = spec.total_params() as f64 / 1e9;
+            assert!(
+                (p - billions).abs() / billions < 0.18,
+                "{name}: computed {p:.2}B vs nameplate {billions}B"
+            );
+        }
+    }
+
+    #[test]
+    fn llama_has_three_mlp_matrices() {
+        assert_eq!(ModelSpec::preset("Llama2-7B").unwrap().mlp_mats(), 3);
+        assert_eq!(ModelSpec::preset("OPT-13B").unwrap().mlp_mats(), 2);
+    }
+
+    #[test]
+    fn default_setup_matches_paper() {
+        let s = TrainSetup::default();
+        assert_eq!((s.batch, s.seq, s.elem_bytes), (128, 1024, 2));
+        assert_eq!(s.tokens(), 131072);
+    }
+
+    #[test]
+    fn head_dim_divides() {
+        for spec in ModelSpec::all_presets() {
+            assert_eq!(spec.hidden % spec.heads, 0, "{}", spec.name);
+        }
+    }
+}

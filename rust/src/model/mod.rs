@@ -1,0 +1,15 @@
+//! Model specifications, FLOP/memory accounting, and the GEMM DAG.
+//!
+//! These are the paper's §2 "background facts" turned into code: Table 1
+//! (GEMM dominance), Table 2 (per-stage step breakdown), Table 3 (total
+//! training memory), Table 4 (per-device minimum under each parallelism
+//! mode), and Table 6 (the GEMM shapes in one transformer layer), plus the
+//! level-ordered GEMM DAG of §3/§4 that the scheduler consumes.
+
+pub mod config;
+pub mod dag;
+pub mod flops;
+pub mod memory;
+
+pub use config::{ModelFamily, ModelSpec};
+pub use dag::{Gemm, GemmDag, GemmKind, Level, Phase};

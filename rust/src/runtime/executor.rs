@@ -1,0 +1,279 @@
+//! Artifact registry + shape-keyed executable cache.
+//!
+//! `artifacts/metadata.json` (written by `python/compile/aot.py`) describes
+//! the canonical Pallas sub-GEMM executables, the fused train step, the
+//! initial parameters and the pre-generated token batches. [`Artifacts`]
+//! parses it; [`GemmExecutor`] lazily compiles the GEMM executables and
+//! pads arbitrary shard shapes up to the nearest canonical shape (zero
+//! padding rows/cols multiply into zeros, so the unpadded block is exact).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::pjrt::{literal_f32, to_vec_f32, Executable, PjrtRuntime};
+use crate::util::json::Json;
+
+/// Metadata for one canonical GEMM artifact.
+#[derive(Clone, Debug)]
+pub struct GemmArtifact {
+    pub m: usize,
+    pub n: usize,
+    pub q: usize,
+    pub file: String,
+}
+
+/// Parsed artifact metadata.
+#[derive(Clone, Debug)]
+pub struct Artifacts {
+    pub dir: PathBuf,
+    pub param_order: Vec<String>,
+    pub param_shapes: HashMap<String, Vec<usize>>,
+    pub n_params: usize,
+    pub train_step_file: String,
+    pub forward_loss_file: String,
+    pub gemms: Vec<GemmArtifact>,
+    pub tokens_file: String,
+    pub n_token_batches: usize,
+    pub batch: usize,
+    pub seq_len: usize,
+    pub adam_lr: f64,
+    pub param_count: usize,
+}
+
+impl Artifacts {
+    /// Load and parse `metadata.json` from the artifacts directory.
+    pub fn load<P: AsRef<Path>>(dir: P) -> Result<Artifacts> {
+        let dir = dir.as_ref().to_path_buf();
+        let meta_path = dir.join("metadata.json");
+        let text = std::fs::read_to_string(&meta_path)
+            .with_context(|| format!("read {meta_path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parse metadata.json")?;
+
+        let param_order: Vec<String> = j
+            .get("param_order")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_str().map(String::from))
+            .collect::<Result<_>>()?;
+        let mut param_shapes = HashMap::new();
+        for (k, v) in j.get("param_shapes")?.as_obj()? {
+            let dims: Vec<usize> = v
+                .as_arr()?
+                .iter()
+                .map(|d| d.as_usize())
+                .collect::<Result<_>>()?;
+            param_shapes.insert(k.clone(), dims);
+        }
+        let gemms = j
+            .get("gemms")?
+            .as_arr()?
+            .iter()
+            .map(|g| {
+                Ok(GemmArtifact {
+                    m: g.get("m")?.as_usize()?,
+                    n: g.get("n")?.as_usize()?,
+                    q: g.get("q")?.as_usize()?,
+                    file: g.get("file")?.as_str()?.to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let tokens = j.get("tokens")?;
+        let model = j.get("model")?;
+        Ok(Artifacts {
+            dir,
+            n_params: j.get("train_step")?.get("n_params")?.as_usize()?,
+            train_step_file: j
+                .get("train_step")?
+                .get("file")?
+                .as_str()?
+                .to_string(),
+            forward_loss_file: j
+                .get("forward_loss")?
+                .get("file")?
+                .as_str()?
+                .to_string(),
+            param_order,
+            param_shapes,
+            gemms,
+            tokens_file: tokens.get("file")?.as_str()?.to_string(),
+            n_token_batches: tokens.get("n_batches")?.as_usize()?,
+            batch: tokens.get("batch")?.as_usize()?,
+            seq_len: tokens.get("seq_len")?.as_usize()?,
+            adam_lr: j.get("adam")?.get("lr")?.as_f64()?,
+            param_count: model.get("param_count")?.as_usize()?,
+        })
+    }
+
+    /// Read the initial parameters as per-tensor `f32` vectors in
+    /// `param_order`.
+    pub fn init_params(&self) -> Result<Vec<Vec<f32>>> {
+        let bytes = std::fs::read(self.dir.join("init_params.bin"))?;
+        let mut out = Vec::with_capacity(self.param_order.len());
+        let mut off = 0usize;
+        for name in &self.param_order {
+            let shape = &self.param_shapes[name];
+            let n: usize = shape.iter().product();
+            let end = off + 4 * n;
+            if end > bytes.len() {
+                bail!("init_params.bin truncated at {name}");
+            }
+            let mut v = vec![0.0f32; n];
+            for (i, chunk) in bytes[off..end].chunks_exact(4).enumerate() {
+                v[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+            }
+            out.push(v);
+            off = end;
+        }
+        if off != bytes.len() {
+            bail!("init_params.bin has {} trailing bytes", bytes.len() - off);
+        }
+        Ok(out)
+    }
+
+    /// Read pre-generated token batch `idx` (i32, `batch x seq_len`).
+    pub fn token_batch(&self, idx: usize) -> Result<Vec<i32>> {
+        let per = self.batch * self.seq_len;
+        let bytes = std::fs::read(self.dir.join(&self.tokens_file))?;
+        let idx = idx % self.n_token_batches;
+        let off = idx * per * 4;
+        if off + per * 4 > bytes.len() {
+            bail!("tokens.bin too small for batch {idx}");
+        }
+        let mut v = vec![0i32; per];
+        for (i, chunk) in bytes[off..off + per * 4].chunks_exact(4).enumerate() {
+            v[i] = i32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+        }
+        Ok(v)
+    }
+}
+
+/// Lazily-compiled canonical GEMM executables with padding dispatch.
+pub struct GemmExecutor {
+    runtime: PjrtRuntime,
+    artifacts: Artifacts,
+    cache: Mutex<HashMap<(usize, usize, usize), Executable>>,
+}
+
+impl GemmExecutor {
+    pub fn new(runtime: PjrtRuntime, artifacts: Artifacts) -> GemmExecutor {
+        GemmExecutor {
+            runtime,
+            artifacts,
+            cache: Mutex::new(HashMap::new()),
+        }
+    }
+
+    pub fn artifacts(&self) -> &Artifacts {
+        &self.artifacts
+    }
+
+    /// Smallest canonical shape that fits `(m, n, q)`, if any.
+    pub fn canonical_for(&self, m: usize, n: usize, q: usize) -> Option<(usize, usize, usize)> {
+        self.artifacts
+            .gemms
+            .iter()
+            .filter(|g| g.m >= m && g.n >= n && g.q >= q)
+            .min_by_key(|g| g.m * g.n * g.q)
+            .map(|g| (g.m, g.n, g.q))
+    }
+
+    /// Execute `a(m x n) * b(n x q)` through the nearest canonical PJRT
+    /// executable (zero-padded), or `None` if no canonical shape fits —
+    /// caller falls back to [`crate::runtime::hostgemm`].
+    pub fn matmul_padded(
+        &self,
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        n: usize,
+        q: usize,
+    ) -> Result<Option<Vec<f32>>> {
+        let Some((cm, cn, cq)) = self.canonical_for(m, n, q) else {
+            return Ok(None);
+        };
+        // Pad inputs.
+        let mut ap = vec![0.0f32; cm * cn];
+        for i in 0..m {
+            ap[i * cn..i * cn + n].copy_from_slice(&a[i * n..(i + 1) * n]);
+        }
+        let mut bp = vec![0.0f32; cn * cq];
+        for i in 0..n {
+            bp[i * cq..i * cq + q].copy_from_slice(&b[i * q..(i + 1) * q]);
+        }
+
+        // Compile-once cache.
+        {
+            let cache = self.cache.lock().unwrap();
+            if !cache.contains_key(&(cm, cn, cq)) {
+                drop(cache);
+                let file = self
+                    .artifacts
+                    .gemms
+                    .iter()
+                    .find(|g| (g.m, g.n, g.q) == (cm, cn, cq))
+                    .unwrap()
+                    .file
+                    .clone();
+                let exe = self.runtime.load_hlo_text(self.artifacts.dir.join(file))?;
+                self.cache.lock().unwrap().insert((cm, cn, cq), exe);
+            }
+        }
+        let cache = self.cache.lock().unwrap();
+        let exe = cache.get(&(cm, cn, cq)).unwrap();
+        let la = literal_f32(&ap, &[cm, cn])?;
+        let lb = literal_f32(&bp, &[cn, cq])?;
+        let out = exe.run(&[la, lb])?;
+        let full = to_vec_f32(&out[0])?;
+        // Slice the unpadded block.
+        let mut c = vec![0.0f32; m * q];
+        for i in 0..m {
+            c[i * q..(i + 1) * q].copy_from_slice(&full[i * cq..i * cq + q]);
+        }
+        Ok(Some(c))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn metadata_parses() {
+        let a = Artifacts::load(artifacts_dir()).unwrap();
+        assert_eq!(a.param_order.len(), a.n_params);
+        assert!(a.gemms.len() >= 3);
+        assert_eq!(a.batch * a.seq_len, 8 * 64);
+        let total: usize = a
+            .param_order
+            .iter()
+            .map(|n| a.param_shapes[n].iter().product::<usize>())
+            .sum();
+        assert_eq!(total, a.param_count);
+    }
+
+    #[test]
+    fn init_params_and_tokens_read() {
+        let a = Artifacts::load(artifacts_dir()).unwrap();
+        let params = a.init_params().unwrap();
+        assert_eq!(params.len(), a.n_params);
+        let total: usize = params.iter().map(|p| p.len()).sum();
+        assert_eq!(total, a.param_count);
+        // tok_embed is first and non-zero
+        assert!(params[0].iter().any(|&x| x != 0.0));
+
+        let t0 = a.token_batch(0).unwrap();
+        assert_eq!(t0.len(), a.batch * a.seq_len);
+        assert!(t0.iter().all(|&t| t >= 0 && t < 256));
+        let t1 = a.token_batch(1).unwrap();
+        assert_ne!(t0, t1);
+        // wraps around
+        assert_eq!(a.token_batch(a.n_token_batches).unwrap(), t0);
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime bridge: load AOT-lowered HLO **text** artifacts, compile on
+//! the CPU PJRT client, execute from the rust hot path — plus a pure-rust
+//! blocked GEMM used by workers as a fallback and by the Freivalds verifier.
+//!
+//! This is the only module that touches the `xla` crate. Python never runs
+//! at request time: `make artifacts` produced `artifacts/*.hlo.txt` and this
+//! module is self-contained afterwards (pattern from /opt/xla-example).
+
+pub mod executor;
+pub mod hostgemm;
+pub mod pjrt;
+
+pub use executor::{Artifacts, GemmExecutor};
+pub use pjrt::PjrtRuntime;

@@ -1,0 +1,96 @@
+//! Thin wrapper over the `xla` crate: HLO text -> compile -> execute.
+//!
+//! Gotchas handled here (see /opt/xla-example/README.md):
+//! * interchange is HLO **text** — `HloModuleProto::from_text_file`
+//!   reassigns instruction ids, avoiding the 64-bit-id proto rejection;
+//! * jax lowered with `return_tuple=True`, so results decompose via
+//!   `to_tuple()`.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// A PJRT CPU runtime holding the client and compiled executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled computation.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load an HLO-text artifact and compile it.
+    pub fn load_hlo_text<P: AsRef<Path>>(&self, path: P) -> Result<Executable> {
+        let path = path.as_ref();
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parse HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {path:?}"))?;
+        Ok(Executable { exe })
+    }
+}
+
+impl Executable {
+    /// Execute with literal inputs; returns the flattened output tuple.
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let result = self.exe.execute::<xla::Literal>(inputs)?;
+        let lit = result[0][0].to_literal_sync()?;
+        // jax lowered with return_tuple=True => always a tuple root.
+        Ok(lit.to_tuple()?)
+    }
+}
+
+/// Build an `f32` literal from a slice + dims.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {dims:?} != data len {}", data.len());
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::F32,
+        dims,
+        bytes,
+    )?)
+}
+
+/// Build an `i32` literal from a slice + dims.
+pub fn literal_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let n: usize = dims.iter().product();
+    anyhow::ensure!(n == data.len(), "shape {dims:?} != data len {}", data.len());
+    let bytes: &[u8] =
+        unsafe { std::slice::from_raw_parts(data.as_ptr() as *const u8, data.len() * 4) };
+    Ok(xla::Literal::create_from_shape_and_untyped_data(
+        xla::ElementType::S32,
+        dims,
+        bytes,
+    )?)
+}
+
+/// Extract an `f32` vector from a literal.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+/// Extract a scalar `i32`.
+pub fn to_i32(lit: &xla::Literal) -> Result<i32> {
+    Ok(lit.get_first_element::<i32>()?)
+}
+
+// NOTE: PJRT integration tests live in `rust/tests/pjrt_roundtrip.rs` (they
+// need the artifacts directory, so they run under `make test` after
+// `make artifacts`).

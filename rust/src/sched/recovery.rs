@@ -1,0 +1,291 @@
+//! Churn recovery (§4.2): re-schedule the shards lost to failed devices
+//! across survivors, with cache-aware communication.
+//!
+//! Every failure event is a new, *much smaller* snapshot of the §4.1
+//! scheduling problem: decision variables span only the orphaned shards
+//! (Table 7's "churn re-solve" column). Survivors' caches are the binary
+//! `R_s`/`C_s` matrices — a survivor whose surviving rectangle shares row
+//! (column) ranges with the lost rectangle re-fetches only the missing
+//! strips, so its DL term is discounted by the overlap fraction.
+
+use crate::cluster::device::Device;
+use crate::sched::assignment::{GemmAssignment, Rect};
+use crate::sched::cost::CostModel;
+use crate::sched::solver::{solve_region_with_cache, SolverOptions, SolverStats};
+
+/// Result of a churn re-solve.
+#[derive(Clone, Debug)]
+pub struct RecoveryPlan {
+    /// replacement rectangles covering every lost shard
+    pub new_rects: Vec<Rect>,
+    /// time to redistribute + recompute the lost work (max over survivors)
+    pub recompute_time: f64,
+    /// wall-clock spent re-solving the scheduling subproblem
+    pub solve_time: f64,
+    /// lost output area (cells)
+    pub lost_area: usize,
+    pub stats: SolverStats,
+}
+
+impl RecoveryPlan {
+    /// Total recovery latency the training step observes (§5.3 / Fig. 7):
+    /// detection is via disconnect events (immediate), then re-solve, then
+    /// redistributed recompute.
+    pub fn total_latency(&self) -> f64 {
+        self.solve_time + self.recompute_time
+    }
+}
+
+/// Re-solve after `failed` devices disappear mid-GEMM.
+///
+/// `devices` is the ORIGINAL device slice the assignment was solved over;
+/// `failed` holds indices into it. Surviving devices keep their finished
+/// rectangles; each lost rectangle is re-tiled across survivors via the
+/// cache-aware cost model.
+pub fn recover(
+    devices: &[Device],
+    assignment: &GemmAssignment,
+    failed: &[usize],
+    cm: &CostModel,
+    opts: &SolverOptions,
+) -> RecoveryPlan {
+    let is_failed = |d: usize| failed.contains(&d);
+    let lost: Vec<&Rect> = assignment
+        .rects
+        .iter()
+        .filter(|r| is_failed(r.device))
+        .collect();
+    let survivors: Vec<usize> = (0..devices.len()).filter(|&d| !is_failed(d)).collect();
+    assert!(!survivors.is_empty(), "all devices failed");
+
+    let surviving_devices: Vec<Device> =
+        survivors.iter().map(|&i| devices[i].clone()).collect();
+
+    let mut new_rects = Vec::new();
+    let mut recompute_time: f64 = 0.0;
+    let mut solve_time = 0.0;
+    let mut lost_area = 0;
+    let mut agg = SolverStats::default();
+
+    for lr in &lost {
+        lost_area += lr.area();
+        // Cache discounts: fraction of the lost rect's rows/cols each
+        // survivor already holds (from its own surviving rectangles of the
+        // SAME GEMM — no cache replacement during a level, §4.2).
+        let discounts: Vec<(f64, f64)> = survivors
+            .iter()
+            .map(|&sid| {
+                let mut row_hit = 0usize;
+                let mut col_hit = 0usize;
+                for sr in assignment.rects.iter().filter(|r| r.device == sid) {
+                    row_hit = row_hit.max(sr.row_overlap(lr.row0, lr.rows));
+                    col_hit = col_hit.max(sr.col_overlap(lr.col0, lr.cols));
+                }
+                (
+                    row_hit as f64 / lr.rows as f64,
+                    col_hit as f64 / lr.cols as f64,
+                )
+            })
+            .collect();
+
+        let (rects, stats) = solve_region_with_cache(
+            &surviving_devices,
+            lr.rows,
+            lr.cols,
+            assignment.shape.n,
+            &discounts,
+            cm,
+            opts,
+        );
+        // Map rect coordinates back into the global grid and survivor ids
+        // back into original device indices.
+        for mut r in rects {
+            r.row0 += lr.row0;
+            r.col0 += lr.col0;
+            r.device = survivors[r.device];
+            new_rects.push(r);
+        }
+        recompute_time = recompute_time.max(stats.integer_makespan);
+        solve_time += stats.solve_time_s;
+        agg.devices_considered = stats.devices_considered;
+        agg.decision_vars += stats.decision_vars;
+        agg.bisection_iters += stats.bisection_iters;
+    }
+    agg.solve_time_s = solve_time;
+    agg.integer_makespan = recompute_time;
+
+    RecoveryPlan {
+        new_rects,
+        recompute_time,
+        solve_time,
+        lost_area,
+        stats: agg,
+    }
+}
+
+/// Patch an assignment with a recovery plan, producing the post-churn
+/// assignment (used by the simulator for subsequent batches).
+pub fn apply(assignment: &GemmAssignment, failed: &[usize], plan: &RecoveryPlan) -> GemmAssignment {
+    let mut rects: Vec<Rect> = assignment
+        .rects
+        .iter()
+        .filter(|r| !failed.contains(&r.device))
+        .cloned()
+        .collect();
+    rects.extend_from_slice(&plan.new_rects);
+    GemmAssignment {
+        shape: assignment.shape,
+        rects,
+        makespan: assignment.makespan.max(plan.recompute_time),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::fleet::Fleet;
+    use crate::sched::cost::GemmShape;
+    use crate::sched::solver::solve_gemm;
+    use crate::sched::tiling::verify_exact_cover;
+
+    fn setup(n_dev: usize) -> (Fleet, GemmAssignment) {
+        let fleet = Fleet::median(n_dev);
+        let shape = GemmShape::new(1024, 5120, 5120, 16);
+        let (a, _) = solve_gemm(
+            &fleet.devices,
+            shape,
+            &CostModel::default(),
+            &SolverOptions::default(),
+        );
+        (fleet, a)
+    }
+
+    #[test]
+    fn single_failure_recovers_exactly() {
+        let (fleet, a) = setup(64);
+        let victim = a.active_devices()[0];
+        let plan = recover(
+            &fleet.devices,
+            &a,
+            &[victim],
+            &CostModel::default(),
+            &SolverOptions::default(),
+        );
+        assert!(plan.lost_area > 0);
+        // new rects exactly cover the lost area
+        let covered: usize = plan.new_rects.iter().map(|r| r.area()).sum();
+        assert_eq!(covered, plan.lost_area);
+        // no new rect assigned to the failed device
+        assert!(plan.new_rects.iter().all(|r| r.device != victim));
+        // patched assignment passes full validation
+        let patched = apply(&a, &[victim], &plan);
+        patched
+            .validate(&fleet.devices, &CostModel::default())
+            .unwrap();
+    }
+
+    #[test]
+    fn recovery_much_faster_than_full_batch() {
+        // §5.3: only a small GEMM fraction is recomputed, distributed over
+        // all survivors => recovery << one GEMM makespan.
+        let (fleet, a) = setup(256);
+        let victim = a.active_devices()[3];
+        let plan = recover(
+            &fleet.devices,
+            &a,
+            &[victim],
+            &CostModel::default(),
+            &SolverOptions::default(),
+        );
+        assert!(
+            plan.recompute_time < a.makespan,
+            "recovery {} !< gemm makespan {}",
+            plan.recompute_time,
+            a.makespan
+        );
+        assert!(plan.solve_time < 1.0, "re-solve must be sub-second");
+    }
+
+    #[test]
+    fn multi_failure_recovers() {
+        let (fleet, a) = setup(64);
+        let active = a.active_devices();
+        let victims = &active[..4.min(active.len())];
+        let plan = recover(
+            &fleet.devices,
+            &a,
+            victims,
+            &CostModel::default(),
+            &SolverOptions::default(),
+        );
+        let patched = apply(&a, victims, &plan);
+        patched
+            .validate(&fleet.devices, &CostModel::default())
+            .unwrap();
+        assert!(verify_exact_cover(
+            &patched.rects,
+            a.shape.rows,
+            a.shape.q
+        ));
+    }
+
+    #[test]
+    fn cache_discount_reduces_recovery_dl() {
+        // A survivor sharing the lost rect's rows should be preferred over
+        // an identical survivor with no cache overlap. We check the plan's
+        // recompute time is <= a no-cache re-solve.
+        let (fleet, a) = setup(32);
+        let victim = a.active_devices()[0];
+        let plan_cached = recover(
+            &fleet.devices,
+            &a,
+            &[victim],
+            &CostModel::default(),
+            &SolverOptions::default(),
+        );
+        // no-cache variant: strip all other rects so overlaps are zero
+        let stripped = GemmAssignment {
+            shape: a.shape,
+            rects: a
+                .rects
+                .iter()
+                .filter(|r| r.device == victim)
+                .cloned()
+                .collect(),
+            makespan: a.makespan,
+        };
+        let plan_cold = recover(
+            &fleet.devices,
+            &stripped,
+            &[victim],
+            &CostModel::default(),
+            &SolverOptions::default(),
+        );
+        assert!(
+            plan_cached.recompute_time <= plan_cold.recompute_time * 1.05,
+            "cached {} vs cold {}",
+            plan_cached.recompute_time,
+            plan_cold.recompute_time
+        );
+    }
+
+    #[test]
+    fn idle_failed_device_costs_nothing() {
+        let (fleet, a) = setup(16);
+        // find a device with no work (may not exist at 16 median devices —
+        // then fabricate by using an out-of-assignment index if inactive)
+        let active = a.active_devices();
+        let idle: Vec<usize> = (0..fleet.len()).filter(|d| !active.contains(d)).collect();
+        if let Some(&v) = idle.first() {
+            let plan = recover(
+                &fleet.devices,
+                &a,
+                &[v],
+                &CostModel::default(),
+                &SolverOptions::default(),
+            );
+            assert_eq!(plan.lost_area, 0);
+            assert_eq!(plan.recompute_time, 0.0);
+        }
+    }
+}

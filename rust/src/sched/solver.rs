@@ -1,0 +1,473 @@
+//! The scheduling solver (§4.1): minimize per-level makespan subject to
+//! coverage, idle-or-work (Eq. 6) and memory (Eq. 7).
+//!
+//! The paper uses Gurobi on the MILP; Appendix B observes the continuous
+//! relaxation is convex and that fine-grained divisibility makes rounding
+//! loss negligible (one row–column pair). We exploit exactly that structure:
+//!
+//! 1. **Bisection on the makespan `T`** — for a candidate `T`, each device's
+//!    maximum feasible output area `a_k(T)` has a closed form
+//!    ([`CostModel::max_area_in`]); feasibility is `sum_k a_k(T) >= M·q`.
+//!    This solves the continuous relaxation to any tolerance (it is exact:
+//!    `a_k(T)` is monotone in `T`).
+//! 2. **Straggler exclusion** falls out naturally: a device whose latency
+//!    floor exceeds `T` has `a_k(T) = 0` — the Eq. 6 idle branch.
+//! 3. **Guillotine integerization** ([`crate::sched::tiling`]) converts the
+//!    target areas into an exact rectangle cover; the reported makespan is
+//!    re-evaluated on the *integer* rectangles, so rounding loss is
+//!    measured, never assumed.
+//!
+//! Shapes repeat across layers, so [`solve_dag`] solves each distinct shape
+//! once and reuses it (paper §3.2 / Appendix D) — the Table 7 cold-start
+//! regime. The churn-time incremental re-solve lives in
+//! [`crate::sched::recovery`].
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::cluster::device::Device;
+use crate::model::dag::GemmDag;
+use crate::sched::assignment::{GemmAssignment, Rect, Schedule};
+use crate::sched::cost::{opt_tail, CostModel, GemmShape, PsParams};
+use crate::sched::tiling;
+
+/// Solver options.
+#[derive(Clone, Copy, Debug)]
+pub struct SolverOptions {
+    /// bisection iterations (each halves the interval)
+    pub iters: usize,
+    /// relative tolerance on T
+    pub tol: f64,
+}
+
+impl Default for SolverOptions {
+    fn default() -> Self {
+        SolverOptions {
+            iters: 60,
+            tol: 1e-9,
+        }
+    }
+}
+
+/// Statistics of one solver run (Table 7's columns).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SolverStats {
+    pub devices_considered: usize,
+    pub decision_vars: usize,
+    pub bisection_iters: usize,
+    pub solve_time_s: f64,
+    /// continuous-relaxation optimum
+    pub continuous_makespan: f64,
+    /// achieved makespan after integerization (>= continuous)
+    pub integer_makespan: f64,
+}
+
+impl SolverStats {
+    /// Rounding loss of the integerization step.
+    pub fn rounding_loss(&self) -> f64 {
+        if self.continuous_makespan == 0.0 {
+            0.0
+        } else {
+            self.integer_makespan / self.continuous_makespan - 1.0
+        }
+    }
+}
+
+/// Solve one GEMM's assignment across `devices`.
+pub fn solve_gemm(
+    devices: &[Device],
+    shape: GemmShape,
+    cm: &CostModel,
+    opts: &SolverOptions,
+) -> (GemmAssignment, SolverStats) {
+    let t0 = Instant::now();
+    let area = shape.out_area();
+    assert!(!devices.is_empty(), "no devices");
+
+    // Upper bound: grow until feasible.
+    let mut hi = 1e-3;
+    let feasible = |t: f64| -> bool {
+        let mut sum = 0.0;
+        for d in devices {
+            sum += cm.max_area_in(d, t, &shape);
+            if sum >= area {
+                return true;
+            }
+        }
+        false
+    };
+    let mut guard = 0;
+    while !feasible(hi) {
+        hi *= 2.0;
+        guard += 1;
+        assert!(guard < 80, "no feasible makespan for shape {shape:?}");
+    }
+    let mut lo = hi / 2.0;
+    if guard == 0 {
+        lo = 0.0;
+    }
+
+    // Bisection.
+    let mut iters = 0;
+    for _ in 0..opts.iters {
+        iters += 1;
+        let mid = 0.5 * (lo + hi);
+        if feasible(mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+        if hi - lo <= opts.tol * hi {
+            break;
+        }
+    }
+    let t_star = hi;
+
+    // Target areas at T*, scaled to cover the grid exactly.
+    let mut areas: Vec<f64> = devices
+        .iter()
+        .map(|d| cm.max_area_in(d, t_star, &shape))
+        .collect();
+    let total: f64 = areas.iter().sum();
+    debug_assert!(total >= area * 0.999);
+    let scale = area / total;
+    for a in &mut areas {
+        *a *= scale;
+    }
+
+    let rects = tiling::tile(&areas, shape.rows, shape.q);
+    debug_assert!(tiling::verify_exact_cover(&rects, shape.rows, shape.q));
+
+    let mut assignment = GemmAssignment {
+        shape,
+        rects,
+        makespan: 0.0,
+    };
+    assignment.makespan = assignment.integer_makespan(devices, cm);
+
+    let stats = SolverStats {
+        devices_considered: devices.len(),
+        decision_vars: 2 * devices.len(),
+        bisection_iters: iters,
+        solve_time_s: t0.elapsed().as_secs_f64(),
+        continuous_makespan: t_star,
+        integer_makespan: assignment.makespan,
+    };
+    (assignment, stats)
+}
+
+/// Solve re-assignment of a partial region (recovery subproblem): identical
+/// machinery, but area targets come from cache-aware max-area oracles.
+/// `discounts[k] = (row_cache_frac, col_cache_frac)` reduce the DL term.
+pub fn solve_region_with_cache(
+    devices: &[Device],
+    rows: usize,
+    cols: usize,
+    n: usize,
+    discounts: &[(f64, f64)],
+    cm: &CostModel,
+    opts: &SolverOptions,
+) -> (Vec<Rect>, SolverStats) {
+    let t0 = Instant::now();
+    let area = rows as f64 * cols as f64;
+    let nb = n as f64 * cm.elem_bytes;
+
+    // Cache-aware max area: DL bytes = ((1-fr)·alpha + (1-fc)·beta)·n·b.
+    let max_area = |d: &Device, (fr, fc): (f64, f64), t: f64| -> f64 {
+        let f = if cm.use_effective_flops {
+            d.effective_flops()
+        } else {
+            d.flops
+        };
+        let a_comp = t * f / (2.0 * n as f64);
+        let a_ul = if t <= d.ul_lat {
+            0.0
+        } else {
+            (t - d.ul_lat) * d.ul_bw / cm.elem_bytes
+        };
+        let a_dl = if t <= d.dl_lat {
+            0.0
+        } else {
+            let budget = (t - d.dl_lat) * d.dl_bw / nb; // weighted alpha+beta
+            let (wr, wc) = ((1.0 - fr).max(1e-9), (1.0 - fc).max(1e-9));
+            // maximize alpha*beta s.t. wr*alpha + wc*beta = budget
+            // -> alpha = budget/(2wr), beta = budget/(2wc)
+            let alpha = (budget / (2.0 * wr)).min(rows as f64);
+            let beta = (budget / (2.0 * wc)).min(cols as f64);
+            alpha * beta
+        };
+        a_comp.min(a_ul).min(a_dl).min(area).max(0.0)
+    };
+
+    let feasible = |t: f64| {
+        let mut s = 0.0;
+        for (d, &disc) in devices.iter().zip(discounts) {
+            s += max_area(d, disc, t);
+            if s >= area {
+                return true;
+            }
+        }
+        false
+    };
+
+    let mut hi = 1e-3;
+    let mut guard = 0;
+    while !feasible(hi) {
+        hi *= 2.0;
+        guard += 1;
+        assert!(guard < 80, "recovery region infeasible");
+    }
+    let mut lo = if guard == 0 { 0.0 } else { hi / 2.0 };
+    let mut iters = 0;
+    for _ in 0..opts.iters {
+        iters += 1;
+        let mid = 0.5 * (lo + hi);
+        if feasible(mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+        if hi - lo <= opts.tol * hi {
+            break;
+        }
+    }
+    let t_star = hi;
+    let mut areas: Vec<f64> = devices
+        .iter()
+        .zip(discounts)
+        .map(|(d, &disc)| max_area(d, disc, t_star))
+        .collect();
+    let total: f64 = areas.iter().sum();
+    let scale = area / total;
+    for a in &mut areas {
+        *a *= scale;
+    }
+    let rects = tiling::tile(&areas, rows, cols);
+    let makespan = rects
+        .iter()
+        .map(|r| {
+            let d = &devices[r.device];
+            let (fr, fc) = discounts[r.device];
+            let alpha = r.rows as f64;
+            let beta = r.cols as f64;
+            let dl = (((1.0 - fr) * alpha + (1.0 - fc) * beta) * nb / d.dl_bw + d.dl_lat).max(0.0);
+            dl.max(cm.comm_ul(d, alpha, beta))
+                .max(cm.comp(d, alpha, beta, n as f64))
+        })
+        .fold(0.0, f64::max);
+
+    let stats = SolverStats {
+        devices_considered: devices.len(),
+        decision_vars: 2 * devices.len(),
+        bisection_iters: iters,
+        solve_time_s: t0.elapsed().as_secs_f64(),
+        continuous_makespan: t_star,
+        integer_makespan: makespan,
+    };
+    (rects, stats)
+}
+
+/// Solve the full DAG: one assignment per distinct shape (cold-start
+/// regime of Table 7), then accumulate Eq. 1 level costs and the optimizer
+/// tail into a [`Schedule`].
+pub fn solve_dag(
+    devices: &[Device],
+    dag: &GemmDag,
+    cm: &CostModel,
+    ps: &PsParams,
+    opts: &SolverOptions,
+) -> (Schedule, SolverStats) {
+    let t0 = Instant::now();
+    let mut by_shape: HashMap<GemmShape, GemmAssignment> = HashMap::new();
+    let mut agg = SolverStats::default();
+
+    for level in &dag.levels {
+        for g in &level.gemms {
+            let shape = GemmShape::new(g.m, g.n, g.q, g.count);
+            if !by_shape.contains_key(&shape) {
+                let (a, s) = solve_gemm(devices, shape, cm, opts);
+                agg.devices_considered = s.devices_considered;
+                agg.decision_vars += s.decision_vars;
+                agg.bisection_iters += s.bisection_iters;
+                by_shape.insert(shape, a);
+            }
+        }
+    }
+
+    // Eq. 1: C_GEMM(s) = C_GEMM(s-1) + max_p C_GEMM(s, p).
+    let mut gemm_time = 0.0;
+    for level in &dag.levels {
+        let level_cost = level
+            .gemms
+            .iter()
+            .map(|g| {
+                by_shape[&GemmShape::new(g.m, g.n, g.q, g.count)].makespan
+            })
+            .fold(0.0, f64::max);
+        gemm_time += level_cost;
+    }
+
+    // Optimizer tail over the model's weight-matrix shapes.
+    let spec = &dag.spec;
+    let mut weight_shapes: Vec<(usize, usize)> =
+        vec![(spec.hidden, spec.hidden); 4];
+    for _ in 0..(spec.mlp_mats() - 1) {
+        weight_shapes.push((spec.hidden, spec.intermediate));
+    }
+    weight_shapes.push((spec.intermediate, spec.hidden));
+    let tail = opt_tail(cm, ps, &weight_shapes);
+
+    agg.solve_time_s = t0.elapsed().as_secs_f64();
+    agg.continuous_makespan = gemm_time;
+    agg.integer_makespan = gemm_time;
+    (
+        Schedule {
+            by_shape,
+            gemm_time,
+            opt_tail: tail,
+        },
+        agg,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::fleet::{Fleet, FleetConfig};
+    use crate::model::config::{ModelSpec, TrainSetup};
+
+    fn cm() -> CostModel {
+        CostModel::default()
+    }
+
+    #[test]
+    fn solve_covers_and_validates() {
+        let fleet = Fleet::sample(&FleetConfig::default().with_devices(64));
+        let shape = GemmShape::new(1024, 4096, 4096, 8);
+        let (a, stats) = solve_gemm(&fleet.devices, shape, &cm(), &SolverOptions::default());
+        a.validate(&fleet.devices, &cm()).unwrap();
+        assert!(stats.integer_makespan > 0.0);
+        assert!(stats.continuous_makespan > 0.0);
+        // integerization should stay close to continuous optimum
+        assert!(
+            stats.rounding_loss() < 0.8,
+            "rounding loss {}",
+            stats.rounding_loss()
+        );
+    }
+
+    #[test]
+    fn makespan_monotone_in_devices() {
+        // The Fig. 8 claim: more devices => no worse makespan.
+        let shape = GemmShape::new(1024, 5120, 5120, 128);
+        let mut prev = f64::MAX;
+        for n in [32, 64, 128, 256, 512] {
+            let fleet = Fleet::median(n);
+            let (a, _) = solve_gemm(&fleet.devices, shape, &cm(), &SolverOptions::default());
+            assert!(
+                a.makespan <= prev * 1.05,
+                "n={n}: {} vs prev {prev}",
+                a.makespan
+            );
+            prev = a.makespan;
+        }
+    }
+
+    #[test]
+    fn per_device_comm_decreases_with_scale() {
+        // Fig. 1's headline: per-device DL volume shrinks as D grows.
+        let shape = GemmShape::new(1024, 5120, 5120, 128);
+        let mut prev = f64::MAX;
+        for n in [64, 256, 1024] {
+            let fleet = Fleet::median(n);
+            let (a, _) = solve_gemm(&fleet.devices, shape, &cm(), &SolverOptions::default());
+            let active = a.active_devices();
+            let mean_dl: f64 = active
+                .iter()
+                .map(|&d| a.dl_bytes_for(d, &cm()))
+                .sum::<f64>()
+                / active.len() as f64;
+            assert!(mean_dl < prev, "n={n}");
+            prev = mean_dl;
+        }
+    }
+
+    #[test]
+    fn stragglers_get_less_or_no_work() {
+        let mut fleet = Fleet::median(32);
+        // Make 4 devices extreme stragglers.
+        for d in fleet.devices.iter_mut().take(4) {
+            d.flops /= 50.0;
+            d.dl_bw /= 50.0;
+            d.ul_bw /= 50.0;
+        }
+        let shape = GemmShape::new(1024, 5120, 5120, 16);
+        let (a, _) = solve_gemm(&fleet.devices, shape, &cm(), &SolverOptions::default());
+        let area_of = |dev: usize| -> usize {
+            a.rects
+                .iter()
+                .filter(|r| r.device == dev)
+                .map(|r| r.area())
+                .sum()
+        };
+        let straggler_mean: f64 = (0..4).map(area_of).sum::<usize>() as f64 / 4.0;
+        let healthy_mean: f64 = (4..32).map(area_of).sum::<usize>() as f64 / 28.0;
+        assert!(
+            straggler_mean < healthy_mean / 5.0,
+            "straggler {straggler_mean} vs healthy {healthy_mean}"
+        );
+    }
+
+    #[test]
+    fn heterogeneous_beats_uniform_assignment() {
+        // The cost-model's makespan must beat a uniform equal-area split
+        // (what Alpa does per the paper) on a heterogeneous fleet.
+        let fleet = Fleet::sample(&FleetConfig::default().with_devices(64));
+        let shape = GemmShape::new(1024, 4096, 4096, 32);
+        let (a, _) = solve_gemm(&fleet.devices, shape, &cm(), &SolverOptions::default());
+
+        let uniform_areas = vec![shape.out_area() / 64.0; 64];
+        let rects = crate::sched::tiling::tile(&uniform_areas, shape.rows, shape.q);
+        let uniform = GemmAssignment {
+            shape,
+            rects,
+            makespan: 0.0,
+        }
+        .integer_makespan(&fleet.devices, &cm());
+        assert!(
+            a.makespan < uniform,
+            "solved {} !< uniform {uniform}",
+            a.makespan
+        );
+    }
+
+    #[test]
+    fn solve_dag_reuses_shapes() {
+        let spec = ModelSpec::preset("OPT-13B").unwrap();
+        let setup = TrainSetup::default();
+        let dag = GemmDag::build(&spec, &setup);
+        let fleet = Fleet::median(128);
+        let (sched, stats) = solve_dag(
+            &fleet.devices,
+            &dag,
+            &cm(),
+            &PsParams::default(),
+            &SolverOptions::default(),
+        );
+        // Only the distinct shapes get solved.
+        assert_eq!(sched.by_shape.len(), dag.distinct_shapes().len());
+        assert!(sched.gemm_time > 0.0);
+        assert!(sched.opt_tail > 0.0);
+        assert!(sched.batch_time() > sched.gemm_time);
+        assert!(stats.solve_time_s < 60.0);
+    }
+
+    #[test]
+    fn single_device_takes_everything() {
+        let fleet = Fleet::median(1);
+        let shape = GemmShape::new(64, 128, 64, 1);
+        let (a, _) = solve_gemm(&fleet.devices, shape, &cm(), &SolverOptions::default());
+        assert_eq!(a.rects.len(), 1);
+        assert_eq!(a.rects[0].area(), 64 * 64);
+    }
+}

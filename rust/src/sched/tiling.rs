@@ -1,0 +1,232 @@
+//! Exact integerization of the continuous area solution: recursive
+//! guillotine bisection of the output grid.
+//!
+//! Input: per-device target areas (from the bisection solver). Output: a set
+//! of disjoint rectangles exactly covering the `rows x cols` grid, one per
+//! participating device, with near-square aspect where weights allow (the
+//! squarest shard minimizes the Eq. 3 downlink term for a given area).
+//!
+//! Guarantees (tested, plus property-tested in `rust/tests/`):
+//! * exact cover — `sum(area) = rows·cols`, no overlap, no gap;
+//! * devices with zero target area receive nothing (Eq. 6 idle branch);
+//! * every emitted rect is non-empty.
+
+use crate::sched::assignment::Rect;
+
+/// Tile the `rows x cols` grid among devices proportionally to `areas`
+/// (index = device id in the solver's device slice). Zero/negative areas are
+/// excluded. Returns rects in arbitrary order.
+pub fn tile(areas: &[f64], rows: usize, cols: usize) -> Vec<Rect> {
+    assert!(rows > 0 && cols > 0);
+    let mut entries: Vec<(usize, f64)> = areas
+        .iter()
+        .enumerate()
+        .filter(|(_, &a)| a > 0.0)
+        .map(|(i, &a)| (i, a))
+        .collect();
+    if entries.is_empty() {
+        return Vec::new();
+    }
+    // More participants than cells: keep only the largest `cells`.
+    let cells = rows * cols;
+    if entries.len() > cells {
+        entries.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        entries.truncate(cells);
+    }
+    // Sort descending so bisection splits stay weight-balanced.
+    entries.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+    let mut out = Vec::with_capacity(entries.len());
+    recurse(&entries, 0, rows, 0, cols, &mut out);
+    out
+}
+
+fn recurse(
+    entries: &[(usize, f64)],
+    row0: usize,
+    rows: usize,
+    col0: usize,
+    cols: usize,
+    out: &mut Vec<Rect>,
+) {
+    debug_assert!(rows > 0 && cols > 0);
+    // A subregion can end up with fewer cells than entries after
+    // proportional cuts; drop the smallest-weight entries (they idle).
+    let trimmed: Vec<(usize, f64)>;
+    let entries = if entries.len() > rows * cols {
+        trimmed = entries[..rows * cols].to_vec(); // sorted desc already
+        &trimmed[..]
+    } else {
+        entries
+    };
+    if entries.len() == 1 {
+        out.push(Rect {
+            device: entries[0].0,
+            row0,
+            rows,
+            col0,
+            cols,
+        });
+        return;
+    }
+    // Split the entry set into two weight-balanced halves. Entries are
+    // sorted descending, so a greedy prefix split lands near 50/50.
+    let total: f64 = entries.iter().map(|e| e.1).sum();
+    let mut acc = 0.0;
+    let mut split = 1;
+    for (i, e) in entries.iter().enumerate() {
+        if i + 1 == entries.len() {
+            break;
+        }
+        acc += e.1;
+        split = i + 1;
+        if acc >= total / 2.0 {
+            break;
+        }
+    }
+    // Both sides must be hostable within the longer dimension:
+    // ceil(nl/other) + ceil(nr/other) <= len. Shift the split if not.
+    let (len, other) = if rows >= cols { (rows, cols) } else { (cols, rows) };
+    let fits = |nl: usize, nr: usize| nl.div_ceil(other) + nr.div_ceil(other) <= len;
+    while !fits(split, entries.len() - split) && split > 1 {
+        split -= 1;
+    }
+    while !fits(split, entries.len() - split) && split < entries.len() - 1 {
+        split += 1;
+    }
+    debug_assert!(fits(split, entries.len() - split), "untileable split");
+    let (left, right) = entries.split_at(split);
+    let wl: f64 = left.iter().map(|e| e.1).sum();
+    let frac = wl / total;
+
+    // Split the longer grid dimension proportionally; each side must keep
+    // at least as many cells as it has entries (so leaves stay non-empty)
+    // and at least 1 row/col.
+    if rows >= cols {
+        let cut = split_dim(rows, frac, left.len(), right.len(), cols);
+        recurse(left, row0, cut, col0, cols, out);
+        recurse(right, row0 + cut, rows - cut, col0, cols, out);
+    } else {
+        let cut = split_dim(cols, frac, left.len(), right.len(), rows);
+        recurse(left, row0, rows, col0, cut, out);
+        recurse(right, row0, rows, col0 + cut, cols - cut, out);
+    }
+}
+
+/// Choose the cut position along a dimension of length `len` for weight
+/// fraction `frac`, ensuring each side can host its entries
+/// (`side_len * other_dim >= n_entries`).
+fn split_dim(len: usize, frac: f64, n_left: usize, n_right: usize, other: usize) -> usize {
+    let mut cut = (len as f64 * frac).round() as usize;
+    let min_left = n_left.div_ceil(other).max(1);
+    let min_right = n_right.div_ceil(other).max(1);
+    cut = cut.clamp(min_left, len - min_right);
+    cut
+}
+
+/// Verify exact cover (used by tests and by debug assertions in the solver).
+pub fn verify_exact_cover(rects: &[Rect], rows: usize, cols: usize) -> bool {
+    let total: usize = rects.iter().map(|r| r.area()).sum();
+    if total != rows * cols {
+        return false;
+    }
+    for (i, a) in rects.iter().enumerate() {
+        if a.rows == 0 || a.cols == 0 || a.row0 + a.rows > rows || a.col0 + a.cols > cols {
+            return false;
+        }
+        for b in &rects[i + 1..] {
+            if a.intersects(b) {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn equal_areas_tile_exactly() {
+        let areas = vec![1.0; 16];
+        let rects = tile(&areas, 64, 64);
+        assert_eq!(rects.len(), 16);
+        assert!(verify_exact_cover(&rects, 64, 64));
+        // Equal weights on a square grid: every shard is square-ish.
+        for r in &rects {
+            let aspect = r.rows.max(r.cols) as f64 / r.rows.min(r.cols) as f64;
+            assert!(aspect <= 2.0, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn proportional_areas_respected() {
+        let areas = vec![3.0, 1.0];
+        let rects = tile(&areas, 16, 16);
+        assert!(verify_exact_cover(&rects, 16, 16));
+        let a0: usize = rects.iter().filter(|r| r.device == 0).map(|r| r.area()).sum();
+        let a1: usize = rects.iter().filter(|r| r.device == 1).map(|r| r.area()).sum();
+        let frac = a0 as f64 / (a0 + a1) as f64;
+        assert!((frac - 0.75).abs() < 0.1, "{frac}");
+    }
+
+    #[test]
+    fn zero_area_devices_idle() {
+        let areas = vec![1.0, 0.0, 2.0, 0.0];
+        let rects = tile(&areas, 32, 32);
+        assert!(verify_exact_cover(&rects, 32, 32));
+        assert!(rects.iter().all(|r| r.device == 0 || r.device == 2));
+    }
+
+    #[test]
+    fn single_device_takes_all() {
+        let rects = tile(&[5.0], 10, 20);
+        assert_eq!(rects.len(), 1);
+        assert_eq!(rects[0].area(), 200);
+    }
+
+    #[test]
+    fn more_devices_than_cells_truncates() {
+        let areas: Vec<f64> = (1..=20).map(|i| i as f64).collect();
+        let rects = tile(&areas, 2, 2); // 4 cells, 20 devices
+        assert!(verify_exact_cover(&rects, 2, 2));
+        assert!(rects.len() <= 4);
+        // the largest-area devices won
+        assert!(rects.iter().all(|r| r.device >= 16));
+    }
+
+    #[test]
+    fn random_fuzz_exact_cover() {
+        let mut rng = Rng::new(31);
+        for case in 0..200 {
+            let n = 1 + (case % 50);
+            let rows = 1 + rng.below(200) as usize;
+            let cols = 1 + rng.below(200) as usize;
+            let areas: Vec<f64> = (0..n)
+                .map(|_| if rng.bernoulli(0.1) { 0.0 } else { rng.uniform_in(0.01, 10.0) })
+                .collect();
+            if areas.iter().all(|&a| a <= 0.0) {
+                continue;
+            }
+            let rects = tile(&areas, rows, cols);
+            assert!(
+                verify_exact_cover(&rects, rows, cols),
+                "case {case}: rows={rows} cols={cols} areas={areas:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn skewed_weights_distribution() {
+        // One strong device (laptop) + many weak phones: strong device gets
+        // the dominant share, everyone covered.
+        let mut areas = vec![1.0; 63];
+        areas.push(63.0);
+        let rects = tile(&areas, 128, 128);
+        assert!(verify_exact_cover(&rects, 128, 128));
+        let strong: usize = rects.iter().filter(|r| r.device == 63).map(|r| r.area()).sum();
+        let frac = strong as f64 / (128.0 * 128.0);
+        assert!(frac > 0.35 && frac < 0.65, "{frac}");
+    }
+}

@@ -1,0 +1,486 @@
+//! Per-batch simulation: walk the solved schedule level by level (Eq. 1),
+//! evaluating each device's DL/compute/UL overlap (Eq. 2) with optional
+//! heavy-tailed latency draws, PS service-time accounting (§6 envelope),
+//! and the exposed optimizer tail.
+//!
+//! This is the measurement instrument behind Figures 3, 4, 6, 8, 9, 10 and
+//! Tables 8/9: CLEAVE's curve comes from here; baseline curves come from
+//! their cost models in [`crate::baselines`].
+
+use crate::cluster::device::Device;
+use crate::cluster::network::LatencyModel;
+use crate::model::dag::GemmDag;
+use crate::sched::assignment::Schedule;
+use crate::sched::cost::{CostModel, GemmShape, PsParams};
+use crate::util::rng::Rng;
+
+/// Which communication accounting the simulator applies (DESIGN.md §2 and
+/// EXPERIMENTS.md discuss the discrepancy in the paper's own arithmetic).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Accounting {
+    /// Eq. 3 evaluated literally per assigned rectangle: every shard's A
+    /// rows AND B columns are re-dispatched. This is the cold-start /
+    /// first-batch cost and the model under which recovery is solved.
+    ColdStart,
+    /// The paper's §3.1 steady-state accounting, used by its evaluation:
+    /// weight shards are cached on devices across batches (the §4.2 R/C
+    /// cache matrices), so per batch the network carries each layer's
+    /// boundary intermediates once (DL in, UL out), plus one upload of each
+    /// parameter gradient — "total communication per batch becomes model
+    /// size + intermediate size x number of layers".
+    SteadyState,
+}
+
+/// Simulation configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct SimConfig {
+    pub latency: LatencyModel,
+    pub ps: PsParams,
+    /// include PS dispatch service time (overlapped with device work)
+    pub model_ps_service: bool,
+    pub accounting: Accounting,
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        SimConfig {
+            latency: LatencyModel::Deterministic,
+            ps: PsParams::default(),
+            model_ps_service: true,
+            accounting: Accounting::SteadyState,
+            seed: 1,
+        }
+    }
+}
+
+impl SimConfig {
+    pub fn cold_start() -> Self {
+        SimConfig {
+            accounting: Accounting::ColdStart,
+            ..Default::default()
+        }
+    }
+}
+
+/// Result of simulating one batch.
+#[derive(Clone, Debug)]
+pub struct BatchResult {
+    /// end-to-end batch time C_BATCH
+    pub batch_time: f64,
+    /// distributed GEMM time C_GEMM(S-1)
+    pub gemm_time: f64,
+    /// exposed optimizer tail
+    pub opt_tail: f64,
+    /// total bytes over downlink / uplink across devices
+    pub total_dl_bytes: f64,
+    pub total_ul_bytes: f64,
+    /// max per-device DL/UL bytes (Figure 1's per-device metric)
+    pub max_device_dl_bytes: f64,
+    pub max_device_ul_bytes: f64,
+    /// peak per-device shard memory (Figure 5's metric)
+    pub peak_device_mem_bytes: f64,
+    /// per-level times (diagnostics)
+    pub level_times: Vec<f64>,
+    /// time the PS spent as the binding constraint (envelope check)
+    pub ps_bound_time: f64,
+}
+
+/// Simulate one batch of a solved schedule.
+pub fn simulate_batch(
+    devices: &[Device],
+    dag: &GemmDag,
+    schedule: &Schedule,
+    cm: &CostModel,
+    cfg: &SimConfig,
+) -> BatchResult {
+    match cfg.accounting {
+        Accounting::ColdStart => simulate_batch_cold(devices, dag, schedule, cm, cfg),
+        Accounting::SteadyState => simulate_batch_steady(devices, dag, schedule, cm, cfg),
+    }
+}
+
+/// §3.1 steady-state accounting, layer-wise (see [`Accounting`]): per layer
+/// and phase the network carries the boundary intermediate once each way,
+/// plus the gradient upload in backward; compute is the layer's full GEMM
+/// FLOPs. Work is split across devices by a per-layer heterogeneity-aware
+/// water-filling (same bisection idea as the §4.1 solver, over fractions).
+fn simulate_batch_steady(
+    devices: &[Device],
+    dag: &GemmDag,
+    schedule: &Schedule,
+    cm: &CostModel,
+    cfg: &SimConfig,
+) -> BatchResult {
+    use crate::model::dag::Phase;
+    let b = cm.elem_bytes;
+    let spec = &dag.spec;
+    let setup = &dag.setup;
+    let bsh = (setup.batch * setup.seq * spec.hidden) as f64;
+    let layer_params = spec.layer_gemm_params() as f64;
+
+    // Aggregate per-(phase, layer) FLOPs from the DAG.
+    let mut fwd_flops = vec![0.0f64; spec.layers];
+    let mut bwd_flops = vec![0.0f64; spec.layers];
+    for level in &dag.levels {
+        match level.phase {
+            Phase::Forward => fwd_flops[level.layer] += level.flops(),
+            Phase::Backward => bwd_flops[level.layer] += level.flops(),
+        }
+    }
+
+    // Per-stage cost of one "unit" (the whole stage) on device k:
+    // dl, ul bytes and flops; find the stage makespan by bisection over the
+    // fraction capacities.
+    let stage_time = |dl_bytes: f64, ul_bytes: f64, flops: f64| -> f64 {
+        let cap = |d: &Device, t: f64| -> f64 {
+            let f_dl = if dl_bytes == 0.0 {
+                1.0
+            } else {
+                ((t - d.dl_lat).max(0.0) * d.dl_bw / dl_bytes).min(1.0)
+            };
+            let f_ul = if ul_bytes == 0.0 {
+                1.0
+            } else {
+                ((t - d.ul_lat).max(0.0) * d.ul_bw / ul_bytes).min(1.0)
+            };
+            let f_c = if flops == 0.0 {
+                1.0
+            } else {
+                let eff = if cm.use_effective_flops {
+                    d.effective_flops()
+                } else {
+                    d.flops
+                };
+                (t * eff / flops).min(1.0)
+            };
+            f_dl.min(f_ul).min(f_c)
+        };
+        let feasible = |t: f64| devices.iter().map(|d| cap(d, t)).sum::<f64>() >= 1.0;
+        let mut hi = 1e-3;
+        let mut guard = 0;
+        while !feasible(hi) {
+            hi *= 2.0;
+            guard += 1;
+            if guard > 80 {
+                return f64::INFINITY;
+            }
+        }
+        let mut lo = if guard == 0 { 0.0 } else { hi / 2.0 };
+        for _ in 0..50 {
+            let mid = 0.5 * (lo + hi);
+            if feasible(mid) {
+                hi = mid;
+            } else {
+                lo = mid;
+            }
+        }
+        hi
+    };
+
+    let mut level_times = Vec::with_capacity(2 * spec.layers);
+    let mut total_dl = 0.0;
+    let mut total_ul = 0.0;
+    let mut ps_bound = 0.0;
+    for li in 0..spec.layers {
+        // forward: boundary intermediate in (Bsh) and out (Bsh)
+        let dl = bsh * b;
+        let ul = bsh * b;
+        let mut t = stage_time(dl, ul, fwd_flops[li]);
+        if cfg.model_ps_service {
+            let service = (dl + ul) / cfg.ps.net_bw;
+            if service > t {
+                ps_bound += service - t;
+                t = service;
+            }
+        }
+        total_dl += dl;
+        total_ul += ul;
+        level_times.push(t);
+    }
+    for li in (0..spec.layers).rev() {
+        // backward: dY in, dX out, plus the layer's parameter gradients
+        // uploaded once (§3.1 "each parameter gradient ... transmitted only
+        // once").
+        let dl = bsh * b;
+        let ul = (bsh + layer_params) * b;
+        let mut t = stage_time(dl, ul, bwd_flops[li]);
+        if cfg.model_ps_service {
+            let service = (dl + ul) / cfg.ps.net_bw;
+            if service > t {
+                ps_bound += service - t;
+                t = service;
+            }
+        }
+        total_dl += dl;
+        total_ul += ul;
+        level_times.push(t);
+    }
+
+    // Per-device memory: the Eq. 7 working set of the largest assigned
+    // shard (from the cold-start schedule) — Figure 5's metric.
+    let mut peak_mem = 0.0f64;
+    let mut max_dl_dev = 0.0f64;
+    let mut max_ul_dev = 0.0f64;
+    for a in schedule.by_shape.values() {
+        for r in &a.rects {
+            peak_mem = peak_mem.max(cm.shard_bytes(
+                r.rows as f64,
+                r.cols as f64,
+                a.shape.n as f64,
+            ));
+        }
+    }
+    // Per-device comm: steady-state share of the totals (even split bound).
+    let d = devices.len() as f64;
+    max_dl_dev = max_dl_dev.max(total_dl / d);
+    max_ul_dev = max_ul_dev.max(total_ul / d);
+
+    let gemm_time: f64 = level_times.iter().sum();
+    BatchResult {
+        batch_time: gemm_time + schedule.opt_tail,
+        gemm_time,
+        opt_tail: schedule.opt_tail,
+        total_dl_bytes: total_dl,
+        total_ul_bytes: total_ul,
+        max_device_dl_bytes: max_dl_dev,
+        max_device_ul_bytes: max_ul_dev,
+        peak_device_mem_bytes: peak_mem,
+        level_times,
+        ps_bound_time: ps_bound,
+    }
+}
+
+/// Eq. 3 literal (cold-start) accounting per assigned rectangle.
+fn simulate_batch_cold(
+    devices: &[Device],
+    dag: &GemmDag,
+    schedule: &Schedule,
+    cm: &CostModel,
+    cfg: &SimConfig,
+) -> BatchResult {
+    let mut rng = Rng::new(cfg.seed);
+    let mut level_times = Vec::with_capacity(dag.levels.len());
+    let mut total_dl = 0.0;
+    let mut total_ul = 0.0;
+    let mut dl_per_dev = vec![0.0f64; devices.len()];
+    let mut ul_per_dev = vec![0.0f64; devices.len()];
+    let mut peak_mem: f64 = 0.0;
+    let mut ps_bound = 0.0;
+
+    for level in &dag.levels {
+        let mut level_time: f64 = 0.0;
+        let mut level_payload = 0.0;
+        for g in &level.gemms {
+            let shape = GemmShape::new(g.m, g.n, g.q, g.count);
+            let a = &schedule.by_shape[&shape];
+            // Per-rect cost with (possibly stochastic) latency overheads.
+            let gemm_time = a
+                .rects
+                .iter()
+                .map(|r| {
+                    let d = &devices[r.device];
+                    let alpha = r.rows as f64;
+                    let beta = r.cols as f64;
+                    let n = shape.n as f64;
+                    let dl_lat = cfg.latency.dl_latency(d, &mut rng);
+                    let ul_lat = cfg.latency.ul_latency(d, &mut rng);
+                    let dl_bytes = (alpha + beta) * n * cm.elem_bytes;
+                    let ul_bytes = alpha * beta * cm.elem_bytes;
+                    dl_per_dev[r.device] += dl_bytes;
+                    ul_per_dev[r.device] += ul_bytes;
+                    peak_mem = peak_mem.max(cm.shard_bytes(alpha, beta, n));
+                    let t_dl = dl_bytes / d.dl_bw + dl_lat;
+                    let t_ul = ul_bytes / d.ul_bw + ul_lat;
+                    let t_comp = cm.comp(d, alpha, beta, n);
+                    t_dl.max(t_ul).max(t_comp)
+                })
+                .fold(0.0, f64::max);
+            level_time = level_time.max(gemm_time);
+            let payload: f64 = a
+                .rects
+                .iter()
+                .map(|r| (r.rows + r.cols) as f64 * shape.n as f64 * cm.elem_bytes)
+                .sum();
+            level_payload += payload;
+            total_dl += payload;
+            total_ul += a
+                .rects
+                .iter()
+                .map(|r| r.area() as f64 * cm.elem_bytes)
+                .sum::<f64>();
+        }
+        // PS serves the level's aggregate payload at its network bandwidth,
+        // overlapped with device-side work (§6: "the PS serves one DAG level
+        // at a time and overlaps that service with device-side execution").
+        if cfg.model_ps_service {
+            let service = level_payload / cfg.ps.net_bw;
+            if service > level_time {
+                ps_bound += service - level_time;
+                level_time = service;
+            }
+        }
+        level_times.push(level_time);
+    }
+
+    let gemm_time: f64 = level_times.iter().sum();
+    BatchResult {
+        batch_time: gemm_time + schedule.opt_tail,
+        gemm_time,
+        opt_tail: schedule.opt_tail,
+        total_dl_bytes: total_dl,
+        total_ul_bytes: total_ul,
+        max_device_dl_bytes: dl_per_dev.iter().cloned().fold(0.0, f64::max),
+        max_device_ul_bytes: ul_per_dev.iter().cloned().fold(0.0, f64::max),
+        peak_device_mem_bytes: peak_mem,
+        level_times,
+        ps_bound_time: ps_bound,
+    }
+}
+
+/// Convenience: solve + simulate in one call (used by benches).
+pub fn solve_and_simulate(
+    devices: &[Device],
+    dag: &GemmDag,
+    cm: &CostModel,
+    cfg: &SimConfig,
+) -> BatchResult {
+    let (schedule, _) = crate::sched::solver::solve_dag(
+        devices,
+        dag,
+        cm,
+        &cfg.ps,
+        &crate::sched::solver::SolverOptions::default(),
+    );
+    simulate_batch(devices, dag, &schedule, cm, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::fleet::Fleet;
+    use crate::model::config::{ModelSpec, TrainSetup};
+    use crate::sched::solver::{solve_dag, SolverOptions};
+
+    fn setting(n: usize) -> (Vec<Device>, GemmDag, Schedule) {
+        let fleet = Fleet::median(n);
+        let spec = ModelSpec::preset("OPT-13B").unwrap();
+        let dag = GemmDag::build(&spec, &TrainSetup::default());
+        let (schedule, _) = solve_dag(
+            &fleet.devices,
+            &dag,
+            &CostModel::default(),
+            &PsParams::default(),
+            &SolverOptions::default(),
+        );
+        (fleet.devices, dag, schedule)
+    }
+
+    #[test]
+    fn deterministic_sim_matches_schedule_cost() {
+        // Cold-start mode with deterministic latency and PS service
+        // overlapped: the sim's gemm_time equals the Eq. 1 accumulation
+        // (possibly + PS excess).
+        let (devices, dag, schedule) = setting(128);
+        let r = simulate_batch(
+            &devices,
+            &dag,
+            &schedule,
+            &CostModel::default(),
+            &SimConfig::cold_start(),
+        );
+        assert!(
+            (r.gemm_time - schedule.gemm_time - r.ps_bound_time).abs()
+                / schedule.gemm_time
+                < 1e-9
+        );
+        assert!((r.batch_time - r.gemm_time - r.opt_tail).abs() < 1e-9);
+        assert_eq!(r.level_times.len(), dag.n_levels());
+    }
+
+    #[test]
+    fn pareto_tails_slow_batches_down() {
+        let (devices, dag, schedule) = setting(64);
+        let det = simulate_batch(
+            &devices,
+            &dag,
+            &schedule,
+            &CostModel::default(),
+            &SimConfig::cold_start(),
+        );
+        let tail = simulate_batch(
+            &devices,
+            &dag,
+            &schedule,
+            &CostModel::default(),
+            &SimConfig {
+                latency: LatencyModel::ParetoTail { alpha: 1.5 },
+                seed: 3,
+                ..SimConfig::cold_start()
+            },
+        );
+        assert!(tail.batch_time > det.batch_time);
+    }
+
+    #[test]
+    fn more_devices_faster_batches() {
+        // Strong scaling (Figure 8's CLEAVE curve).
+        let (d64, dag, s64) = setting(64);
+        let (d512, _, s512) = setting(512);
+        let r64 = simulate_batch(&d64, &dag, &s64, &CostModel::default(), &SimConfig::default());
+        let r512 =
+            simulate_batch(&d512, &dag, &s512, &CostModel::default(), &SimConfig::default());
+        assert!(
+            r512.batch_time < r64.batch_time,
+            "512: {} vs 64: {}",
+            r512.batch_time,
+            r64.batch_time
+        );
+        // per-device comm falls
+        assert!(r512.max_device_dl_bytes < r64.max_device_dl_bytes);
+    }
+
+    #[test]
+    fn memory_capped_at_device_budget() {
+        // Figure 5: CLEAVE caps per-device memory below the phone limit.
+        let (devices, dag, schedule) = setting(1024);
+        let r = simulate_batch(
+            &devices,
+            &dag,
+            &schedule,
+            &CostModel::default(),
+            &SimConfig::default(),
+        );
+        let budget = devices.iter().map(|d| d.mem).fold(f64::MAX, f64::min);
+        assert!(
+            r.peak_device_mem_bytes <= budget,
+            "peak {} > budget {}",
+            r.peak_device_mem_bytes,
+            budget
+        );
+    }
+
+    #[test]
+    fn uplink_lighter_than_downlink() {
+        // §3.1 I/O asymmetry: aggregate DL exceeds UL. The weight-bearing
+        // projection/MLP GEMMs are strongly input-heavy; the attention
+        // GEMMs (n = head_dim) dilute the aggregate ratio, so the
+        // whole-batch ratio is smaller than the per-shard >100x asymmetry
+        // of the projections (asserted in sched::cost tests). Cold-start
+        // accounting (per-shard Eq. 3); steady state adds gradient uploads
+        // which bring DL/UL near 1.
+        let (devices, dag, schedule) = setting(256);
+        let r = simulate_batch(
+            &devices,
+            &dag,
+            &schedule,
+            &CostModel::default(),
+            &SimConfig::cold_start(),
+        );
+        assert!(
+            r.total_dl_bytes / r.total_ul_bytes > 1.5,
+            "DL/UL = {}",
+            r.total_dl_bytes / r.total_ul_bytes
+        );
+    }
+}

@@ -1,0 +1,133 @@
+//! Minimal discrete-event engine: a time-ordered queue of typed events with
+//! deterministic tie-breaking (insertion order). Drives the multi-batch
+//! churn simulations in [`crate::sim::failure`].
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// An event scheduled at simulated time `t` carrying payload `E`.
+struct Scheduled<E> {
+    t: f64,
+    seq: u64,
+    payload: E,
+}
+
+impl<E> PartialEq for Scheduled<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl<E> Eq for Scheduled<E> {}
+impl<E> PartialOrd for Scheduled<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl<E> Ord for Scheduled<E> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap: reverse for earliest-first, then FIFO.
+        other
+            .t
+            .partial_cmp(&self.t)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// The event queue / clock.
+pub struct Engine<E> {
+    heap: BinaryHeap<Scheduled<E>>,
+    now: f64,
+    seq: u64,
+}
+
+impl<E> Default for Engine<E> {
+    fn default() -> Self {
+        Engine {
+            heap: BinaryHeap::new(),
+            now: 0.0,
+            seq: 0,
+        }
+    }
+}
+
+impl<E> Engine<E> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current simulated time.
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    /// Schedule `payload` at absolute time `t` (must be >= now).
+    pub fn at(&mut self, t: f64, payload: E) {
+        debug_assert!(t >= self.now, "cannot schedule into the past");
+        self.heap.push(Scheduled {
+            t,
+            seq: self.seq,
+            payload,
+        });
+        self.seq += 1;
+    }
+
+    /// Schedule `payload` after a delay.
+    pub fn after(&mut self, dt: f64, payload: E) {
+        let t = self.now + dt;
+        self.at(t, payload);
+    }
+
+    /// Pop the next event, advancing the clock.
+    pub fn next(&mut self) -> Option<(f64, E)> {
+        let s = self.heap.pop()?;
+        self.now = s.t;
+        Some((s.t, s.payload))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn events_pop_in_time_order() {
+        let mut e = Engine::new();
+        e.at(3.0, "c");
+        e.at(1.0, "a");
+        e.at(2.0, "b");
+        assert_eq!(e.next().unwrap(), (1.0, "a"));
+        assert_eq!(e.next().unwrap(), (2.0, "b"));
+        assert_eq!(e.now(), 2.0);
+        assert_eq!(e.next().unwrap(), (3.0, "c"));
+        assert!(e.next().is_none());
+    }
+
+    #[test]
+    fn ties_break_fifo() {
+        let mut e = Engine::new();
+        e.at(1.0, 1);
+        e.at(1.0, 2);
+        e.at(1.0, 3);
+        assert_eq!(e.next().unwrap().1, 1);
+        assert_eq!(e.next().unwrap().1, 2);
+        assert_eq!(e.next().unwrap().1, 3);
+    }
+
+    #[test]
+    fn after_uses_current_clock() {
+        let mut e = Engine::new();
+        e.at(5.0, "x");
+        e.next();
+        e.after(1.5, "y");
+        assert_eq!(e.next().unwrap(), (6.5, "y"));
+    }
+}

@@ -1,0 +1,245 @@
+//! Mid-batch failure injection and churn runs (Figure 7, §5.3).
+//!
+//! A failure event lands at a random point inside a batch; CLEAVE detects it
+//! via the disconnect, re-solves the small recovery subproblem (§4.2) and
+//! redistributes the orphaned shards across survivors. The outcome records
+//! recovery latency and the per-batch overhead it implies, which the Fig. 7
+//! bench compares against the baseline recovery models.
+
+use crate::cluster::churn::{events, ChurnConfig, ChurnEvent};
+use crate::cluster::device::Device;
+use crate::model::dag::GemmDag;
+use crate::sched::assignment::Schedule;
+use crate::sched::cost::{CostModel, GemmShape};
+use crate::sched::recovery::{recover, RecoveryPlan};
+use crate::sched::solver::SolverOptions;
+use crate::sim::batch::{simulate_batch, BatchResult, SimConfig};
+use crate::sim::engine::Engine;
+use crate::util::rng::Rng;
+
+/// Outcome of a single injected failure.
+#[derive(Clone, Debug)]
+pub struct FailureOutcome {
+    /// which device failed
+    pub failed_device: usize,
+    /// the §4.2 re-solve + redistributed recompute latency
+    pub recovery_latency: f64,
+    /// area lost (output cells of the affected GEMM)
+    pub lost_area: usize,
+    /// batch time without the failure
+    pub clean_batch_time: f64,
+    /// batch time including recovery
+    pub batch_time_with_failure: f64,
+    pub plan: RecoveryPlan,
+}
+
+impl FailureOutcome {
+    /// Fractional throughput overhead of the failure on this batch.
+    pub fn overhead(&self) -> f64 {
+        (self.batch_time_with_failure - self.clean_batch_time) / self.clean_batch_time
+    }
+}
+
+/// Inject a single failure of `victim` during the level executing `shape`,
+/// and measure CLEAVE's recovery.
+pub fn simulate_failure(
+    devices: &[Device],
+    dag: &GemmDag,
+    schedule: &Schedule,
+    victim: usize,
+    cm: &CostModel,
+    cfg: &SimConfig,
+) -> FailureOutcome {
+    let clean = simulate_batch(devices, dag, schedule, cm, cfg);
+
+    // The failure interrupts a representative projection GEMM level
+    // (the dominant shape); the unfinished sub-GEMMs of the victim there
+    // must be redistributed.
+    let g = dag.levels[0].gemms[0];
+    let shape = GemmShape::new(g.m, g.n, g.q, g.count);
+    let assignment = &schedule.by_shape[&shape];
+    let plan = recover(devices, assignment, &[victim], cm, &SolverOptions::default());
+
+    FailureOutcome {
+        failed_device: victim,
+        recovery_latency: plan.total_latency(),
+        lost_area: plan.lost_area,
+        clean_batch_time: clean.batch_time,
+        batch_time_with_failure: clean.batch_time + plan.total_latency(),
+        plan,
+    }
+}
+
+/// A multi-batch churn run driven by the event engine: batches execute
+/// back-to-back; Poisson failures (1%/device/hr by default) interrupt them
+/// and add recovery latency. Returns per-batch results and aggregate
+/// effective throughput (the §5.3 "99.7%" accounting).
+pub struct ChurnRun {
+    pub batches: Vec<BatchResult>,
+    pub failures: usize,
+    pub total_recovery_s: f64,
+    pub effective_throughput: f64,
+}
+
+pub fn churn_run(
+    devices: &[Device],
+    dag: &GemmDag,
+    schedule: &Schedule,
+    cm: &CostModel,
+    cfg: &SimConfig,
+    churn: &ChurnConfig,
+    n_batches: usize,
+    seed: u64,
+) -> ChurnRun {
+    let mut rng = Rng::new(seed);
+    let mut eng: Engine<ChurnEvent> = Engine::new();
+
+    // Pre-compute the clean batch profile once (the schedule is static
+    // between churn events; the paper re-solves only on failure).
+    let clean = simulate_batch(devices, dag, schedule, cm, cfg);
+    // Generous horizon: failures stretch batches, so leave headroom.
+    let horizon = clean.batch_time * n_batches as f64 * 3.0 + 1.0;
+    for e in events(churn, devices.len(), horizon, &mut rng) {
+        eng.at(e.time(), e);
+    }
+
+    let mut batches = Vec::with_capacity(n_batches);
+    let mut failures = 0usize;
+    let mut total_recovery = 0.0;
+    let mut t = 0.0f64;
+
+    for _ in 0..n_batches {
+        // The batch runs over [t, end); every failure landing inside the
+        // (recovery-stretched) window adds its §4.2 recovery latency.
+        let mut end = t + clean.batch_time;
+        while let Some((et, ev)) = eng.next() {
+            if et >= end {
+                // Not in this batch: re-queue for the next one.
+                eng.at(et, ev);
+                break;
+            }
+            if let ChurnEvent::Fail { device_index, .. } = ev {
+                failures += 1;
+                let g = dag.levels[0].gemms[0];
+                let shape = GemmShape::new(g.m, g.n, g.q, g.count);
+                let assignment = &schedule.by_shape[&shape];
+                // Recovery among remaining devices (victim excluded); the
+                // device rejoins on the next GEMM round (§3.2) so the fleet
+                // size is stationary.
+                let plan = recover(
+                    devices,
+                    assignment,
+                    &[device_index % devices.len()],
+                    cm,
+                    &SolverOptions::default(),
+                );
+                total_recovery += plan.total_latency();
+                end += plan.total_latency();
+            }
+        }
+        batches.push(clean.clone());
+        t = end;
+    }
+
+    let useful = clean.batch_time * batches.len() as f64;
+    let wall = useful + total_recovery;
+    ChurnRun {
+        batches,
+        failures,
+        total_recovery_s: total_recovery,
+        effective_throughput: useful / wall,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::fleet::Fleet;
+    use crate::model::config::{ModelSpec, TrainSetup};
+    use crate::sched::cost::PsParams;
+    use crate::sched::solver::{solve_dag, SolverOptions};
+
+    fn setting(n: usize) -> (Vec<Device>, GemmDag, Schedule) {
+        let fleet = Fleet::median(n);
+        let spec = ModelSpec::preset("OPT-13B").unwrap();
+        let dag = GemmDag::build(&spec, &TrainSetup::default());
+        let (schedule, _) = solve_dag(
+            &fleet.devices,
+            &dag,
+            &CostModel::default(),
+            &PsParams::default(),
+            &SolverOptions::default(),
+        );
+        (fleet.devices, dag, schedule)
+    }
+
+    #[test]
+    fn single_failure_small_overhead() {
+        // §5.3: CLEAVE's incremental recovery => <0.3% overhead per batch.
+        let (devices, dag, schedule) = setting(256);
+        let victim = schedule
+            .by_shape
+            .values()
+            .next()
+            .unwrap()
+            .active_devices()[0];
+        let out = simulate_failure(
+            &devices,
+            &dag,
+            &schedule,
+            victim,
+            &CostModel::default(),
+            &SimConfig::default(),
+        );
+        assert!(out.recovery_latency > 0.0);
+        assert!(
+            out.overhead() < 0.02,
+            "failure overhead {} too large",
+            out.overhead()
+        );
+    }
+
+    #[test]
+    fn churn_run_high_effective_throughput() {
+        let (devices, dag, schedule) = setting(128);
+        let run = churn_run(
+            &devices,
+            &dag,
+            &schedule,
+            &CostModel::default(),
+            &SimConfig::default(),
+            &ChurnConfig {
+                fail_rate_per_hour: 1.0, // aggressive: 100x the paper's rate
+                join_rate_per_hour: 0.0,
+            },
+            10,
+            42,
+        );
+        assert_eq!(run.batches.len(), 10);
+        assert!(
+            run.effective_throughput > 0.97,
+            "throughput {}",
+            run.effective_throughput
+        );
+    }
+
+    #[test]
+    fn zero_churn_is_lossless() {
+        let (devices, dag, schedule) = setting(64);
+        let run = churn_run(
+            &devices,
+            &dag,
+            &schedule,
+            &CostModel::default(),
+            &SimConfig::default(),
+            &ChurnConfig {
+                fail_rate_per_hour: 0.0,
+                join_rate_per_hour: 0.0,
+            },
+            5,
+            1,
+        );
+        assert_eq!(run.failures, 0);
+        assert_eq!(run.effective_throughput, 1.0);
+    }
+}

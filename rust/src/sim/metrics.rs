@@ -1,0 +1,68 @@
+//! Aggregate metrics over repeated simulation runs ("All results reported
+//! are the average of multiple simulation runs", §5.1).
+
+use crate::util::stats::{Summary, Welford};
+
+/// Online accumulator for the headline per-batch metrics.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsAccumulator {
+    pub batch_time: Welford,
+    pub gemm_time: Welford,
+    pub dl_bytes: Welford,
+    pub ul_bytes: Welford,
+    pub peak_mem: Welford,
+    samples: Vec<f64>,
+}
+
+impl MetricsAccumulator {
+    pub fn push(&mut self, r: &crate::sim::batch::BatchResult) {
+        self.batch_time.push(r.batch_time);
+        self.gemm_time.push(r.gemm_time);
+        self.dl_bytes.push(r.total_dl_bytes);
+        self.ul_bytes.push(r.total_ul_bytes);
+        self.peak_mem.push(r.peak_device_mem_bytes);
+        self.samples.push(r.batch_time);
+    }
+
+    pub fn n(&self) -> u64 {
+        self.batch_time.n()
+    }
+
+    pub fn batch_summary(&self) -> Summary {
+        crate::util::stats::summarize(&self.samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::batch::BatchResult;
+
+    fn fake(t: f64) -> BatchResult {
+        BatchResult {
+            batch_time: t,
+            gemm_time: t * 0.9,
+            opt_tail: t * 0.1,
+            total_dl_bytes: 100.0,
+            total_ul_bytes: 10.0,
+            max_device_dl_bytes: 1.0,
+            max_device_ul_bytes: 0.1,
+            peak_device_mem_bytes: 5.0,
+            level_times: vec![],
+            ps_bound_time: 0.0,
+        }
+    }
+
+    #[test]
+    fn accumulates_and_summarizes() {
+        let mut acc = MetricsAccumulator::default();
+        for t in [1.0, 2.0, 3.0] {
+            acc.push(&fake(t));
+        }
+        assert_eq!(acc.n(), 3);
+        assert!((acc.batch_time.mean() - 2.0).abs() < 1e-12);
+        let s = acc.batch_summary();
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+    }
+}

@@ -1,0 +1,12 @@
+//! Discrete per-batch simulator: executes a solved [`crate::sched::Schedule`]
+//! over a fleet under the §4 cost model, with stochastic latency barriers
+//! (Appendix C), PS service accounting (§6 envelope), mid-batch failure
+//! injection, and multi-batch churn runs (Figures 3–10 are generated here).
+
+pub mod batch;
+pub mod engine;
+pub mod failure;
+pub mod metrics;
+
+pub use batch::{simulate_batch, BatchResult, SimConfig};
+pub use failure::{simulate_failure, FailureOutcome};

@@ -1,0 +1,139 @@
+//! Benchmark harness substrate (no `criterion` offline).
+//!
+//! Every `benches/*.rs` target uses this: warmup, adaptive iteration count,
+//! robust timing summary, and paper-style table emission. Also exposes
+//! [`Reporter`] which appends machine-readable JSON lines so EXPERIMENTS.md
+//! can be regenerated from recorded runs.
+
+use std::io::Write as _;
+use std::time::{Duration, Instant};
+
+use crate::util::json::{obj, Json};
+use crate::util::stats;
+
+/// Timing result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct Timing {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+}
+
+impl Timing {
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+/// Measure `f`, choosing iterations so total time is ~`budget`.
+pub fn time_fn<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> Timing {
+    // Warmup + calibration.
+    let start = Instant::now();
+    f();
+    let one = start.elapsed().max(Duration::from_nanos(50));
+    let iters = (budget.as_secs_f64() / one.as_secs_f64()).clamp(3.0, 1000.0) as u32;
+
+    let mut samples = Vec::with_capacity(iters as usize);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64());
+    }
+    let s = stats::summarize(&samples);
+    Timing {
+        name: name.to_string(),
+        iters,
+        mean: Duration::from_secs_f64(s.mean),
+        p50: Duration::from_secs_f64(s.p50),
+        p95: Duration::from_secs_f64(s.p95),
+        min: Duration::from_secs_f64(s.min),
+    }
+}
+
+/// Quick single-shot wall-clock measurement.
+pub fn time_once<R, F: FnOnce() -> R>(f: F) -> (R, Duration) {
+    let t = Instant::now();
+    let r = f();
+    (r, t.elapsed())
+}
+
+/// Bench reporter: prints a titled report and appends JSON lines to
+/// `target/bench_results.jsonl` for post-processing.
+pub struct Reporter {
+    bench: String,
+    rows: Vec<Json>,
+}
+
+impl Reporter {
+    pub fn new(bench: &str, title: &str) -> Self {
+        println!("\n=== {bench}: {title} ===");
+        Reporter {
+            bench: bench.to_string(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Record one labelled scalar series point (also printed by the caller
+    /// through `util::table`).
+    pub fn record(&mut self, fields: Vec<(&str, Json)>) {
+        self.rows.push(obj(fields));
+    }
+
+    /// Flush results to `target/bench_results.jsonl`.
+    pub fn finish(self) {
+        let line = obj(vec![
+            ("bench", Json::from(self.bench.as_str())),
+            ("rows", Json::Arr(self.rows)),
+        ])
+        .to_string_compact();
+        let path = std::path::Path::new("target");
+        let _ = std::fs::create_dir_all(path);
+        if let Ok(mut f) = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path.join("bench_results.jsonl"))
+        {
+            let _ = writeln!(f, "{line}");
+        }
+        println!();
+    }
+}
+
+/// `1.23 ms`-style duration display.
+pub fn fmt_duration(d: Duration) -> String {
+    crate::util::fmt_secs(d.as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_fn_produces_sane_stats() {
+        let t = time_fn("noop", Duration::from_millis(20), || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(t.iters >= 3);
+        assert!(t.min <= t.mean);
+        assert!(t.p50 <= t.p95.max(t.p50));
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, d) = time_once(|| 7 * 6);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+
+    #[test]
+    fn reporter_writes_jsonl() {
+        let mut r = Reporter::new("unit_test_bench", "writer check");
+        r.record(vec![("x", Json::from(1usize))]);
+        r.finish();
+        let content = std::fs::read_to_string("target/bench_results.jsonl").unwrap();
+        assert!(content.lines().any(|l| l.contains("unit_test_bench")));
+    }
+}

@@ -1,0 +1,230 @@
+//! Minimal CLI argument parser (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! auto-generated `--help`. Used by the `cleave` launcher and every example.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Declarative option spec.
+#[derive(Clone, Debug)]
+pub struct OptSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub is_flag: bool,
+}
+
+/// Parsed arguments.
+#[derive(Debug, Default)]
+pub struct Args {
+    values: BTreeMap<String, String>,
+    flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+/// CLI definition + parser.
+pub struct Cli {
+    pub name: &'static str,
+    pub about: &'static str,
+    specs: Vec<OptSpec>,
+}
+
+impl Cli {
+    pub fn new(name: &'static str, about: &'static str) -> Self {
+        Cli {
+            name,
+            about,
+            specs: Vec::new(),
+        }
+    }
+
+    /// Register `--name <value>` with an optional default.
+    pub fn opt(mut self, name: &'static str, default: Option<&'static str>, help: &'static str) -> Self {
+        self.specs.push(OptSpec {
+            name,
+            help,
+            default,
+            is_flag: false,
+        });
+        self
+    }
+
+    /// Register a boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(OptSpec {
+            name,
+            help,
+            default: None,
+            is_flag: true,
+        });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\nOptions:\n", self.name, self.about);
+        for spec in &self.specs {
+            let head = if spec.is_flag {
+                format!("  --{}", spec.name)
+            } else {
+                format!("  --{} <v>", spec.name)
+            };
+            let dflt = spec
+                .default
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("{head:<28}{}{dflt}\n", spec.help));
+        }
+        s.push_str("  --help                    show this help\n");
+        s
+    }
+
+    /// Parse a raw argv (excluding the program name).
+    pub fn parse_from<I: IntoIterator<Item = String>>(&self, argv: I) -> Result<Args> {
+        let mut args = Args::default();
+        for spec in &self.specs {
+            if let Some(d) = spec.default {
+                args.values.insert(spec.name.to_string(), d.to_string());
+            }
+        }
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if a == "--help" || a == "-h" {
+                bail!("{}", self.usage());
+            }
+            if let Some(stripped) = a.strip_prefix("--") {
+                let (key, inline_val) = match stripped.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (stripped.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| anyhow!("unknown option --{key}\n\n{}", self.usage()))?;
+                if spec.is_flag {
+                    if inline_val.is_some() {
+                        bail!("flag --{key} takes no value");
+                    }
+                    args.flags.push(key);
+                } else {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => it
+                            .next()
+                            .ok_or_else(|| anyhow!("option --{key} requires a value"))?,
+                    };
+                    args.values.insert(key, v);
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    /// Parse the process arguments; print usage and exit on `--help`.
+    pub fn parse(&self) -> Args {
+        match self.parse_from(std::env::args().skip(1)) {
+            Ok(a) => a,
+            Err(e) => {
+                eprintln!("{e}");
+                std::process::exit(2);
+            }
+        }
+    }
+}
+
+impl Args {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_str(&self, key: &str) -> Result<&str> {
+        self.get(key).ok_or_else(|| anyhow!("missing --{key}"))
+    }
+
+    pub fn get_usize(&self, key: &str) -> Result<usize> {
+        self.get_str(key)?
+            .parse()
+            .map_err(|_| anyhow!("--{key} must be an integer"))
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64> {
+        self.get_str(key)?
+            .parse()
+            .map_err(|_| anyhow!("--{key} must be a number"))
+    }
+
+    pub fn get_u64(&self, key: &str) -> Result<u64> {
+        self.get_str(key)?
+            .parse()
+            .map_err(|_| anyhow!("--{key} must be an integer"))
+    }
+
+    pub fn has_flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cli() -> Cli {
+        Cli::new("test", "test cli")
+            .opt("devices", Some("128"), "number of devices")
+            .opt("model", None, "model preset")
+            .flag("verbose", "chatty output")
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = cli().parse_from(argv(&[])).unwrap();
+        assert_eq!(a.get_usize("devices").unwrap(), 128);
+        assert!(a.get("model").is_none());
+        assert!(!a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn key_value_both_styles() {
+        let a = cli()
+            .parse_from(argv(&["--devices", "512", "--model=opt-13b", "--verbose"]))
+            .unwrap();
+        assert_eq!(a.get_usize("devices").unwrap(), 512);
+        assert_eq!(a.get_str("model").unwrap(), "opt-13b");
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn positional_collected() {
+        let a = cli().parse_from(argv(&["run", "--devices", "4", "extra"])).unwrap();
+        assert_eq!(a.positional, vec!["run", "extra"]);
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(cli().parse_from(argv(&["--nope"])).is_err());
+    }
+
+    #[test]
+    fn missing_value_rejected() {
+        assert!(cli().parse_from(argv(&["--devices"])).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_rejected() {
+        assert!(cli().parse_from(argv(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn bad_number_reported() {
+        let a = cli().parse_from(argv(&["--devices", "many"])).unwrap();
+        assert!(a.get_usize("devices").is_err());
+    }
+}

@@ -1,0 +1,114 @@
+//! Tiny leveled logger (no external logging stack on the request path).
+//!
+//! Level is set once (env `CLEAVE_LOG` = error|warn|info|debug|trace or via
+//! [`set_level`]); macros compile to a branch on an atomic load.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
+}
+
+static LEVEL: AtomicU8 = AtomicU8::new(2); // Info
+static INIT: std::sync::Once = std::sync::Once::new();
+
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+pub fn level() -> Level {
+    init_from_env();
+    match LEVEL.load(Ordering::Relaxed) {
+        0 => Level::Error,
+        1 => Level::Warn,
+        2 => Level::Info,
+        3 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+fn init_from_env() {
+    INIT.call_once(|| {
+        if let Ok(v) = std::env::var("CLEAVE_LOG") {
+            let l = match v.to_ascii_lowercase().as_str() {
+                "error" => Level::Error,
+                "warn" => Level::Warn,
+                "debug" => Level::Debug,
+                "trace" => Level::Trace,
+                _ => Level::Info,
+            };
+            LEVEL.store(l as u8, Ordering::Relaxed);
+        }
+    });
+}
+
+pub fn enabled(l: Level) -> bool {
+    l <= level()
+}
+
+pub fn log(l: Level, module: &str, msg: std::fmt::Arguments) {
+    if enabled(l) {
+        let tag = match l {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        eprintln!("[{tag}] {module}: {msg}");
+    }
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Info,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Warn,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Debug,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_ordering() {
+        assert!(Level::Error < Level::Trace);
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Info);
+    }
+}

@@ -1,0 +1,67 @@
+//! Substrate utilities built from scratch (the build image is offline, so
+//! `rand`, `serde`, `clap`, `criterion`, and `proptest` are unavailable —
+//! each gets a purpose-built replacement here, per DESIGN.md §4).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+pub mod threadpool;
+
+/// Human-friendly byte formatting (e.g. `1.5 GB`), used in reports.
+pub fn fmt_bytes(b: f64) -> String {
+    const UNITS: [&str; 6] = ["B", "KB", "MB", "GB", "TB", "PB"];
+    let mut v = b;
+    let mut u = 0;
+    while v >= 1000.0 && u < UNITS.len() - 1 {
+        v /= 1000.0;
+        u += 1;
+    }
+    if v >= 100.0 {
+        format!("{v:.0} {}", UNITS[u])
+    } else if v >= 10.0 {
+        format!("{v:.1} {}", UNITS[u])
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Human-friendly seconds formatting (`56 ms`, `2.25 s`, `10.3 min`).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1} ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.1} us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.1} ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{s:.2} s")
+    } else if s < 7200.0 {
+        format!("{:.1} min", s / 60.0)
+    } else {
+        format!("{:.1} h", s / 3600.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(fmt_bytes(512.0), "512 B");
+        assert_eq!(fmt_bytes(1.5e9), "1.50 GB");
+        assert_eq!(fmt_bytes(267e6), "267 MB");
+    }
+
+    #[test]
+    fn secs_formatting() {
+        assert_eq!(fmt_secs(0.056), "56.0 ms");
+        assert_eq!(fmt_secs(2.25), "2.25 s");
+        assert_eq!(fmt_secs(600.0), "10.0 min");
+    }
+}

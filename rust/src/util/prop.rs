@@ -1,0 +1,123 @@
+//! Property-testing helper (no `proptest` offline).
+//!
+//! [`check`] runs a property over `n` PRNG-generated cases; on failure it
+//! performs a bounded greedy shrink by re-running the generator with "size"
+//! scaled down, and reports the smallest failing seed. Generators are plain
+//! closures over [`Rng`] + a size hint, which keeps case construction close
+//! to the invariant being tested.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_size: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config {
+            cases: 100,
+            seed: 0xC1EA_4E5E,
+            max_size: 64,
+        }
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated inputs. `gen` receives an RNG and a
+/// size hint that ramps from 1 to `max_size` across cases (small cases first,
+/// like proptest). Panics with the failing seed/size on the first violation,
+/// after trying smaller sizes with the same seed to shrink.
+pub fn check<T: std::fmt::Debug>(
+    cfg: Config,
+    mut gen: impl FnMut(&mut Rng, usize) -> T,
+    mut prop: impl FnMut(&T) -> bool,
+) {
+    for case in 0..cfg.cases {
+        let size = 1 + (case * cfg.max_size) / cfg.cases.max(1);
+        let seed = cfg.seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let input = gen(&mut rng, size);
+        if !prop(&input) {
+            // Greedy shrink: retry same seed at smaller sizes.
+            let mut smallest = (size, format!("{input:?}"));
+            let mut s = size / 2;
+            while s >= 1 {
+                let mut rng = Rng::new(seed);
+                let candidate = gen(&mut rng, s);
+                if !prop(&candidate) {
+                    smallest = (s, format!("{candidate:?}"));
+                    if s == 1 {
+                        break;
+                    }
+                    s /= 2;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property failed (seed={seed}, size={}): input = {}",
+                smallest.0, smallest.1
+            );
+        }
+    }
+}
+
+/// Shorthand with default config.
+pub fn quick<T: std::fmt::Debug>(
+    gen: impl FnMut(&mut Rng, usize) -> T,
+    prop: impl FnMut(&T) -> bool,
+) {
+    check(Config::default(), gen, prop)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check(
+            Config {
+                cases: 50,
+                ..Default::default()
+            },
+            |r, size| (0..size).map(|_| r.below(100)).collect::<Vec<_>>(),
+            |v| {
+                count += 1;
+                v.iter().all(|&x| x < 100)
+            },
+        );
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        quick(
+            |r, size| r.below(size as u64 + 1),
+            |&x| x < 5, // fails once size grows
+        );
+    }
+
+    #[test]
+    fn sizes_ramp_up() {
+        let mut max_seen = 0;
+        check(
+            Config {
+                cases: 64,
+                max_size: 64,
+                ..Default::default()
+            },
+            |_, size| size,
+            |&s| {
+                max_seen = max_seen.max(s);
+                true
+            },
+        );
+        assert!(max_seen >= 60);
+    }
+}

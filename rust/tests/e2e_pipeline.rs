@@ -1,0 +1,184 @@
+//! End-to-end pipeline integration: solve -> simulate -> fail -> recover ->
+//! continue, across the realistic paper configurations; plus the §5.2
+//! headline comparisons at reduced scale (the full sweeps live in benches).
+
+use cleave::baselines::{alpa, cloud, dtfm};
+use cleave::cluster::churn::ChurnConfig;
+use cleave::cluster::fleet::{Fleet, FleetConfig};
+use cleave::model::config::{ModelSpec, TrainSetup};
+use cleave::model::dag::GemmDag;
+use cleave::sched::cost::{CostModel, PsParams};
+use cleave::sched::solver::{solve_dag, SolverOptions};
+use cleave::sim::batch::{simulate_batch, SimConfig};
+use cleave::sim::failure::{churn_run, simulate_failure};
+
+fn solve_sim(
+    spec: &str,
+    n_dev: usize,
+) -> (
+    Vec<cleave::cluster::device::Device>,
+    GemmDag,
+    cleave::sched::assignment::Schedule,
+) {
+    let spec = ModelSpec::preset(spec).unwrap();
+    let setup = TrainSetup::default();
+    let dag = GemmDag::build(&spec, &setup);
+    let fleet = Fleet::sample(&FleetConfig::default().with_devices(n_dev));
+    let cm = CostModel::default().with_effective_flops();
+    let (schedule, _) = solve_dag(
+        &fleet.devices,
+        &dag,
+        &cm,
+        &PsParams::default(),
+        &SolverOptions::default(),
+    );
+    (fleet.devices, dag, schedule)
+}
+
+#[test]
+fn cleave_beats_edge_baselines_at_shared_scale() {
+    // Figure 3's shape at 256 devices, OPT-13B: CLEAVE several times faster
+    // than DTFM and Alpa under the same latency accounting.
+    let spec = ModelSpec::preset("OPT-13B").unwrap();
+    let setup = TrainSetup::default();
+    let fleet = Fleet::sample(&FleetConfig::default().with_devices(256));
+    let cm = CostModel::default().with_effective_flops();
+    let dag = GemmDag::build(&spec, &setup);
+    let (schedule, _) = solve_dag(
+        &fleet.devices,
+        &dag,
+        &cm,
+        &PsParams::default(),
+        &SolverOptions::default(),
+    );
+    let r = simulate_batch(&fleet.devices, &dag, &schedule, &cm, &SimConfig::default());
+
+    let d = dtfm::plan_with(&spec, &setup, &fleet.devices, 1e12, false).unwrap();
+    let a = alpa::plan_with(&spec, &setup, &fleet.devices, false).unwrap();
+    assert!(
+        d.per_batch_s / r.batch_time > 3.0,
+        "DTFM {} vs CLEAVE {} (x{:.1})",
+        d.per_batch_s,
+        r.batch_time,
+        d.per_batch_s / r.batch_time
+    );
+    assert!(
+        a.per_batch_s / r.batch_time > 3.0,
+        "Alpa {} vs CLEAVE {}",
+        a.per_batch_s,
+        r.batch_time
+    );
+}
+
+#[test]
+fn cleave_within_reach_of_cloud() {
+    // §5.2: cloud-comparable per-batch runtime under matched envelopes.
+    // At 512 median devices for Llama2-13B the paper reports CLEAVE 16.6 s
+    // vs cloud 33.6 s; our cost model should land within the same order.
+    let spec = ModelSpec::preset("Llama2-13B").unwrap();
+    let setup = TrainSetup::default();
+    let fleet = Fleet::median(512);
+    let cm = CostModel::default();
+    let dag = GemmDag::build(&spec, &setup);
+    let (schedule, _) = solve_dag(
+        &fleet.devices,
+        &dag,
+        &cm,
+        &PsParams::default(),
+        &SolverOptions::default(),
+    );
+    let r = simulate_batch(&fleet.devices, &dag, &schedule, &cm, &SimConfig::default());
+    let cloud_t = cloud::single_gpu_batch_time(&spec, &setup, &cloud::GpuParams::default());
+    let ratio = r.batch_time / cloud_t;
+    assert!(
+        ratio < 10.0,
+        "CLEAVE {} vs cloud {cloud_t}: ratio {ratio}",
+        r.batch_time
+    );
+}
+
+#[test]
+fn failure_mid_batch_then_continue() {
+    let (devices, dag, schedule) = solve_sim("OPT-13B", 128);
+    let victim = schedule
+        .by_shape
+        .values()
+        .next()
+        .unwrap()
+        .active_devices()[0];
+    let cm = CostModel::default().with_effective_flops();
+    let out = simulate_failure(&devices, &dag, &schedule, victim, &cm, &SimConfig::default());
+    assert!(out.recovery_latency > 0.0);
+    assert!(out.recovery_latency < out.clean_batch_time * 0.1);
+    assert!(out.lost_area > 0);
+}
+
+#[test]
+fn long_churn_run_keeps_throughput() {
+    let (devices, dag, schedule) = solve_sim("OPT-13B", 128);
+    let cm = CostModel::default().with_effective_flops();
+    let run = churn_run(
+        &devices,
+        &dag,
+        &schedule,
+        &cm,
+        &SimConfig::default(),
+        &ChurnConfig {
+            fail_rate_per_hour: 0.5, // 50x the paper's base rate
+            join_rate_per_hour: 0.0,
+        },
+        20,
+        9,
+    );
+    assert_eq!(run.batches.len(), 20);
+    assert!(
+        run.effective_throughput > 0.95,
+        "throughput {} with {} failures",
+        run.effective_throughput,
+        run.failures
+    );
+}
+
+#[test]
+fn scales_to_thousands_where_baselines_cannot() {
+    // §5.5 / Fig 8: CLEAVE operates at 2048+ devices; DTFM's solver
+    // explodes, Alpa cannot fit phones.
+    let spec = ModelSpec::preset("OPT-13B").unwrap();
+    let setup = TrainSetup::default();
+    let fleet = Fleet::sample(&FleetConfig {
+        n_devices: 2048,
+        phone_fraction: 1.0,
+        ..Default::default()
+    });
+    let cm = CostModel::default().with_effective_flops();
+    let dag = GemmDag::build(&spec, &setup);
+    let (schedule, stats) = solve_dag(
+        &fleet.devices,
+        &dag,
+        &cm,
+        &PsParams::default(),
+        &SolverOptions::default(),
+    );
+    let r = simulate_batch(&fleet.devices, &dag, &schedule, &cm, &SimConfig::default());
+    assert!(r.batch_time.is_finite() && r.batch_time > 0.0);
+    assert!(
+        stats.solve_time_s < 120.0,
+        "cold-start solve {}",
+        stats.solve_time_s
+    );
+    // memory capped under the phone budget (Fig 5)
+    assert!(r.peak_device_mem_bytes < 512e6);
+    // baselines fail or fall far behind here: DTFM's solver exhausts
+    // memory; Alpa (if it squeezes under the phone budget with deep TP)
+    // pays the per-layer AllReduce and lands an order of magnitude slower.
+    assert!(dtfm::plan(&spec, &setup, &fleet.devices, 1e12).is_none());
+    match alpa::plan(&spec, &setup, &fleet.devices) {
+        None => {}
+        Some(a) => assert!(
+            a.per_batch_s / r.batch_time > 5.0,
+            "Alpa {} vs CLEAVE {}",
+            a.per_batch_s,
+            r.batch_time
+        ),
+    }
+}

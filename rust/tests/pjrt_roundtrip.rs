@@ -1,0 +1,148 @@
+//! Integration: the AOT bridge end to end — HLO-text artifacts produced by
+//! `python/compile/aot.py` (L1 Pallas kernels inside an L2 jax program)
+//! load, compile and execute correctly from rust via PJRT.
+//!
+//! Requires `make artifacts` (the Makefile test target guarantees it).
+
+use cleave::runtime::executor::{Artifacts, GemmExecutor};
+use cleave::runtime::hostgemm;
+use cleave::runtime::pjrt::{literal_f32, literal_i32, to_vec_f32, PjrtRuntime};
+use cleave::util::rng::Rng;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn oracle() -> cleave::util::json::Json {
+    let text = std::fs::read_to_string(artifacts_dir().join("oracle.json")).unwrap();
+    cleave::util::json::Json::parse(&text).unwrap()
+}
+
+#[test]
+fn pallas_gemm_artifact_matches_host_gemm() {
+    let rt = PjrtRuntime::cpu().unwrap();
+    let arts = Artifacts::load(artifacts_dir()).unwrap();
+    let g = &arts.gemms[0]; // 64x64x64
+    let exe = rt.load_hlo_text(arts.dir.join(&g.file)).unwrap();
+
+    let mut rng = Rng::new(42);
+    let a: Vec<f32> = (0..g.m * g.n).map(|_| rng.normal() as f32).collect();
+    let b: Vec<f32> = (0..g.n * g.q).map(|_| rng.normal() as f32).collect();
+    let la = literal_f32(&a, &[g.m, g.n]).unwrap();
+    let lb = literal_f32(&b, &[g.n, g.q]).unwrap();
+    let out = exe.run(&[la, lb]).unwrap();
+    let c = to_vec_f32(&out[0]).unwrap();
+
+    let mut want = vec![0.0f32; g.m * g.q];
+    hostgemm::matmul(&a, &b, &mut want, g.m, g.n, g.q);
+    assert_eq!(c.len(), want.len());
+    for (x, y) in c.iter().zip(&want) {
+        assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+    }
+}
+
+#[test]
+fn padded_executor_handles_odd_shapes() {
+    let rt = PjrtRuntime::cpu().unwrap();
+    let arts = Artifacts::load(artifacts_dir()).unwrap();
+    let exec = GemmExecutor::new(rt, arts);
+    let mut rng = Rng::new(7);
+    for &(m, n, q) in &[(10usize, 50usize, 30usize), (64, 64, 64), (100, 300, 100)] {
+        let a: Vec<f32> = (0..m * n).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..n * q).map(|_| rng.normal() as f32).collect();
+        let got = exec
+            .matmul_padded(&a, &b, m, n, q)
+            .unwrap()
+            .expect("canonical shape should fit");
+        let mut want = vec![0.0f32; m * q];
+        hostgemm::matmul(&a, &b, &mut want, m, n, q);
+        for (x, y) in got.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-3, "({m},{n},{q}): {x} vs {y}");
+        }
+    }
+    // Way-too-big shape: no canonical artifact fits.
+    assert!(exec.canonical_for(4096, 4096, 4096).is_none());
+}
+
+#[test]
+fn forward_loss_artifact_matches_oracle() {
+    let rt = PjrtRuntime::cpu().unwrap();
+    let arts = Artifacts::load(artifacts_dir()).unwrap();
+    let exe = rt.load_hlo_text(arts.dir.join(&arts.forward_loss_file)).unwrap();
+
+    let params = arts.init_params().unwrap();
+    let mut inputs = Vec::new();
+    for (name, p) in arts.param_order.iter().zip(&params) {
+        let dims = &arts.param_shapes[name];
+        inputs.push(literal_f32(p, dims).unwrap());
+    }
+    let tokens = arts.token_batch(0).unwrap();
+    inputs.push(literal_i32(&tokens, &[arts.batch, arts.seq_len]).unwrap());
+
+    let out = exe.run(&inputs).unwrap();
+    let loss = out[0].get_first_element::<f32>().unwrap();
+    let want = oracle().get("loss0").unwrap().as_f64().unwrap() as f32;
+    assert!(
+        (loss - want).abs() < 1e-4,
+        "artifact loss {loss} vs oracle {want}"
+    );
+}
+
+#[test]
+fn train_step_artifact_reproduces_loss_trajectory() {
+    // Drive the fused fwd+bwd+Adam artifact for several steps from rust and
+    // match the JAX-recorded loss curve — the full L1+L2+L3 composition.
+    let rt = PjrtRuntime::cpu().unwrap();
+    let arts = Artifacts::load(artifacts_dir()).unwrap();
+    let exe = rt.load_hlo_text(arts.dir.join(&arts.train_step_file)).unwrap();
+
+    let n = arts.n_params;
+    let params = arts.init_params().unwrap();
+    let mut state: Vec<xla::Literal> = Vec::with_capacity(3 * n + 1);
+    for (name, p) in arts.param_order.iter().zip(&params) {
+        state.push(literal_f32(p, &arts.param_shapes[name]).unwrap());
+    }
+    for name in &arts.param_order {
+        let dims = &arts.param_shapes[name];
+        let len: usize = dims.iter().product();
+        state.push(literal_f32(&vec![0.0; len], dims).unwrap());
+    }
+    for name in &arts.param_order {
+        let dims = &arts.param_shapes[name];
+        let len: usize = dims.iter().product();
+        state.push(literal_f32(&vec![0.0; len], dims).unwrap());
+    }
+    state.push(literal_i32(&[0], &[]).unwrap_or_else(|_| {
+        // scalar literal: dims = []
+        cleave::runtime::pjrt::literal_i32(&[0], &[]).unwrap()
+    }));
+
+    let want: Vec<f64> = oracle()
+        .get("losses")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|x| x.as_f64().unwrap())
+        .collect();
+
+    let steps = 6.min(want.len());
+    for (step, want_loss) in want.iter().take(steps).enumerate() {
+        let tokens = arts.token_batch(step).unwrap();
+        let mut inputs: Vec<xla::Literal> = Vec::with_capacity(3 * n + 2);
+        for lit in &state {
+            inputs.push(lit.clone());
+        }
+        inputs.push(literal_i32(&tokens, &[arts.batch, arts.seq_len]).unwrap());
+        let out = exe.run(&inputs).unwrap();
+        assert_eq!(out.len(), 3 * n + 2);
+        let loss = out[3 * n + 1].get_first_element::<f32>().unwrap();
+        assert!(
+            (loss as f64 - want_loss).abs() < 2e-4,
+            "step {step}: loss {loss} vs oracle {want_loss}"
+        );
+        // thread the state through
+        state = out;
+        state.truncate(3 * n + 1);
+    }
+}

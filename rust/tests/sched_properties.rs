@@ -1,0 +1,174 @@
+//! Property-based tests on the scheduler invariants (DESIGN.md §7) using
+//! the in-crate property harness (`util::prop`).
+
+use cleave::cluster::device::Device;
+use cleave::cluster::fleet::{Fleet, FleetConfig};
+use cleave::sched::cost::{CostModel, GemmShape};
+use cleave::sched::recovery::{apply, recover};
+use cleave::sched::solver::{solve_gemm, SolverOptions};
+use cleave::sched::tiling;
+use cleave::util::prop::{check, Config};
+use cleave::util::rng::Rng;
+
+fn random_fleet(rng: &mut Rng, size: usize) -> Vec<Device> {
+    let cfg = FleetConfig {
+        n_devices: 2 + (size % 64),
+        phone_fraction: rng.uniform(),
+        straggler_fraction: if rng.bernoulli(0.3) { 0.1 } else { 0.0 },
+        straggler_factor: 10.0,
+        utilization: 1.0,
+        seed: rng.next_u64(),
+    };
+    Fleet::sample(&cfg).devices
+}
+
+fn random_shape(rng: &mut Rng) -> GemmShape {
+    let m = 1 << (5 + rng.below(6)); // 32..1024
+    let n = 1 << (5 + rng.below(8)); // 32..4096
+    let q = 1 << (5 + rng.below(8));
+    let count = 1 << rng.below(6); // 1..32
+    GemmShape::new(m, n, q, count)
+}
+
+#[test]
+fn prop_solver_coverage_and_constraints() {
+    // For ANY fleet and GEMM shape: exact coverage, disjointness,
+    // idle-or-work (Eq. 6), memory (Eq. 7) — via validate().
+    check(
+        Config {
+            cases: 40,
+            seed: 0xA11CE,
+            max_size: 64,
+        },
+        |rng, size| {
+            let fleet = random_fleet(rng, size);
+            let shape = random_shape(rng);
+            (fleet, shape)
+        },
+        |(fleet, shape)| {
+            let cm = CostModel::default();
+            let (a, _) = solve_gemm(fleet, *shape, &cm, &SolverOptions::default());
+            a.validate(fleet, &cm).is_ok()
+        },
+    );
+}
+
+#[test]
+fn prop_tiling_exact_cover_arbitrary_weights() {
+    check(
+        Config {
+            cases: 120,
+            seed: 0xBEE,
+            max_size: 100,
+        },
+        |rng, size| {
+            let n = 1 + size;
+            let rows = 1 + rng.below(300) as usize;
+            let cols = 1 + rng.below(300) as usize;
+            let areas: Vec<f64> = (0..n)
+                .map(|_| {
+                    if rng.bernoulli(0.15) {
+                        0.0
+                    } else {
+                        rng.uniform_in(1e-6, 100.0)
+                    }
+                })
+                .collect();
+            (areas, rows, cols)
+        },
+        |(areas, rows, cols)| {
+            if areas.iter().all(|&a| a <= 0.0) {
+                return true;
+            }
+            let rects = tiling::tile(areas, *rows, *cols);
+            tiling::verify_exact_cover(&rects, *rows, *cols)
+        },
+    );
+}
+
+#[test]
+fn prop_recovery_preserves_coverage() {
+    // After ANY subset of active devices fails, recover+apply yields a
+    // valid assignment over the survivors.
+    check(
+        Config {
+            cases: 25,
+            seed: 0xDEAD,
+            max_size: 48,
+        },
+        |rng, size| {
+            let fleet = random_fleet(rng, size.max(4));
+            let shape = random_shape(rng);
+            let kill = 1 + rng.below(3) as usize;
+            (fleet, shape, kill, rng.next_u64())
+        },
+        |(fleet, shape, kill, seed)| {
+            let cm = CostModel::default();
+            let (a, _) = solve_gemm(fleet, *shape, &cm, &SolverOptions::default());
+            let active = a.active_devices();
+            if active.len() <= *kill {
+                return true; // cannot kill everyone
+            }
+            let mut rng = Rng::new(*seed);
+            let victims: Vec<usize> = rng
+                .choose_k(active.len(), *kill)
+                .into_iter()
+                .map(|i| active[i])
+                .collect();
+            let plan = recover(fleet, &a, &victims, &cm, &SolverOptions::default());
+            let patched = apply(&a, &victims, &plan);
+            // coverage + disjointness + no rect on dead devices
+            patched.rects.iter().all(|r| !victims.contains(&r.device))
+                && tiling::verify_exact_cover(&patched.rects, a.shape.rows, a.shape.q)
+        },
+    );
+}
+
+#[test]
+fn prop_makespan_never_worse_with_more_devices() {
+    // Monotonicity (Fig. 8's premise), allowing 10% integerization noise.
+    check(
+        Config {
+            cases: 20,
+            seed: 0xF00,
+            max_size: 32,
+        },
+        |rng, _| {
+            let n = 4 + rng.below(60) as usize;
+            let shape = random_shape(rng);
+            (n, shape)
+        },
+        |(n, shape)| {
+            let cm = CostModel::default();
+            let small = Fleet::median(*n);
+            let big = Fleet::median(n * 2);
+            let (a1, _) = solve_gemm(&small.devices, *shape, &cm, &SolverOptions::default());
+            let (a2, _) = solve_gemm(&big.devices, *shape, &cm, &SolverOptions::default());
+            a2.makespan <= a1.makespan * 1.10
+        },
+    );
+}
+
+#[test]
+fn prop_continuous_lower_bounds_integer() {
+    // The continuous relaxation is a true lower bound on the integer
+    // makespan (up to fp tolerance) — the solver never reports an integer
+    // schedule better than its own relaxation.
+    check(
+        Config {
+            cases: 30,
+            seed: 0xCAFE,
+            max_size: 64,
+        },
+        |rng, size| {
+            let fleet = random_fleet(rng, size);
+            let shape = random_shape(rng);
+            (fleet, shape)
+        },
+        |(fleet, shape)| {
+            let cm = CostModel::default();
+            let (_, stats) = solve_gemm(fleet, *shape, &cm, &SolverOptions::default());
+            stats.integer_makespan >= stats.continuous_makespan * 0.95
+        },
+    );
+}
