@@ -2,18 +2,28 @@
 //! re-optimization (1024 devices, Llama2-70B). Shape: cold start covers
 //! the full shape set (paper's Gurobi: ~10 min); churn re-solve touches
 //! only the orphaned shards and completes in (milli)seconds.
+//!
+//! Also measures the fleet-scale fast path (`sched::fastpath`): seed
+//! (reference) cold solve vs fast-path cold vs memo-warm `solve_dag` on an
+//! OPT-13B DAG at D = 128 / 1k / 8k, recorded to `BENCH_solver.json` so
+//! the solver perf trajectory is tracked across PRs.
 
 #[path = "common.rs"]
 mod common;
 
-use cleave::cluster::fleet::Fleet;
+use std::time::Instant;
+
+use cleave::cluster::fleet::{Fleet, FleetConfig};
 use cleave::model::config::{ModelSpec, TrainSetup};
 use cleave::model::dag::GemmDag;
 use cleave::sched::cost::{CostModel, GemmShape, PsParams};
+use cleave::sched::fastpath::SolverCache;
 use cleave::sched::recovery::recover;
-use cleave::sched::solver::{solve_dag, solve_gemm, SolverOptions};
+use cleave::sched::solver::{
+    solve_dag, solve_dag_cached, solve_dag_reference, solve_gemm, SolverOptions,
+};
 use cleave::util::bench::Reporter;
-use cleave::util::json::Json;
+use cleave::util::json::{obj, Json};
 use cleave::util::table::Table;
 
 fn main() {
@@ -71,5 +81,106 @@ fn main() {
     ]);
     assert!(cold.solve_time_s < 600.0, "must beat the paper's 10 minutes");
     assert!(plan.solve_time < 5.0, "re-solve must be (sub)seconds");
+
+    // ---- fast-path sweep: seed cold vs fast cold vs memo-warm solve_dag,
+    // OPT-13B DAG, heterogeneous fleets at D = 128 / 1k / 8k.
+    let spec13 = ModelSpec::preset("OPT-13B").unwrap();
+    let dag13 = GemmDag::build(&spec13, &setup);
+    let opts = SolverOptions::default();
+    let ps = PsParams::default();
+    let mut sweep_rows: Vec<Json> = Vec::new();
+    let mut t2 = Table::new(&[
+        "D",
+        "seed cold",
+        "fast cold",
+        "fast warm",
+        "speedup (cold)",
+        "speedup (warm)",
+    ]);
+    let mut speedup_at_8k = (0.0f64, 0.0f64);
+    for &d in &[128usize, 1024, 8192] {
+        let fleet = Fleet::sample(&FleetConfig::default().with_devices(d));
+
+        let t = Instant::now();
+        let (sched_ref, _) = solve_dag_reference(&fleet.devices, &dag13, &cm, &ps, &opts);
+        let seed_cold_s = t.elapsed().as_secs_f64();
+
+        let t = Instant::now();
+        let (sched_fast, _) = solve_dag(&fleet.devices, &dag13, &cm, &ps, &opts);
+        let fast_cold_s = t.elapsed().as_secs_f64();
+
+        let mut cache = SolverCache::new();
+        let _ = solve_dag_cached(&fleet.devices, &dag13, &cm, &ps, &opts, &mut cache);
+        let t = Instant::now();
+        let (sched_warm, _) = solve_dag_cached(&fleet.devices, &dag13, &cm, &ps, &opts, &mut cache);
+        let fast_warm_s = t.elapsed().as_secs_f64().max(1e-9);
+
+        let rel_diff = (sched_fast.gemm_time - sched_ref.gemm_time).abs() / sched_ref.gemm_time;
+        assert!(
+            rel_diff <= 1e-6,
+            "fast path diverged from seed solver at D={d}: rel {rel_diff}"
+        );
+        assert_eq!(sched_warm.gemm_time, sched_fast.gemm_time, "memo must be exact");
+
+        let speedup_cold = seed_cold_s / fast_cold_s.max(1e-9);
+        let speedup_warm = seed_cold_s / fast_warm_s;
+        if d == 8192 {
+            speedup_at_8k = (speedup_cold, speedup_warm);
+        }
+        t2.row(&[
+            d.to_string(),
+            common::secs(seed_cold_s),
+            common::secs(fast_cold_s),
+            common::secs(fast_warm_s),
+            format!("{speedup_cold:.1}x"),
+            format!("{speedup_warm:.0}x"),
+        ]);
+        sweep_rows.push(obj(vec![
+            ("d", Json::from(d)),
+            ("seed_cold_s", Json::from(seed_cold_s)),
+            ("fast_cold_s", Json::from(fast_cold_s)),
+            ("fast_warm_s", Json::from(fast_warm_s)),
+            ("speedup_cold", Json::from(speedup_cold)),
+            ("speedup_warm", Json::from(speedup_warm)),
+            ("gemm_time_rel_diff", Json::from(rel_diff)),
+        ]));
+        rep.record(vec![
+            ("d", Json::from(d)),
+            ("seed_cold_s", Json::from(seed_cold_s)),
+            ("fast_cold_s", Json::from(fast_cold_s)),
+            ("fast_warm_s", Json::from(fast_warm_s)),
+        ]);
+    }
+    println!("\nsolve_dag fast path (OPT-13B DAG, heterogeneous fleet):");
+    t2.print();
+
+    let bench_json = obj(vec![
+        ("bench", Json::from("table7_solver")),
+        ("model", Json::from("OPT-13B")),
+        ("llama70b_cold_start_s", Json::from(cold.solve_time_s)),
+        ("llama70b_resolve_s", Json::from(plan.solve_time)),
+        ("sweep", Json::Arr(sweep_rows)),
+    ])
+    .to_string_compact();
+    if let Err(e) = std::fs::write("BENCH_solver.json", &bench_json) {
+        eprintln!("warning: could not write BENCH_solver.json: {e}");
+    } else {
+        println!("\nwrote BENCH_solver.json");
+    }
+
+    // Two-part perf gate at D=8192: the warm (memo) path carries the >=5x
+    // claim for churn/straggler sweeps, and the cold fast path must never
+    // regress below the seed solver (so a fast-path slowdown fails loudly
+    // instead of hiding behind the always-fast memo hit).
+    assert!(
+        speedup_at_8k.1 >= 5.0,
+        "warm fast path must be >= 5x the seed solver at D=8192 (got {:.1}x)",
+        speedup_at_8k.1
+    );
+    assert!(
+        speedup_at_8k.0 >= 1.0,
+        "cold fast path regressed below the seed solver at D=8192 ({:.2}x)",
+        speedup_at_8k.0
+    );
     rep.finish();
 }

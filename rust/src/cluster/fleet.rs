@@ -56,6 +56,107 @@ impl FleetConfig {
     }
 }
 
+/// Structure-of-arrays (SoA) snapshot of a device slice.
+///
+/// The §4.1 solver fast path, the recovery region solver and the
+/// steady-state water-filling all scan device parameters linearly; flat
+/// arrays keep those scans cache-friendly and SIMD-amenable instead of
+/// chasing `Device` structs. `version` is a content fingerprint (FNV-1a
+/// over the parameter bits): identical fleets rebuild to identical
+/// versions, which makes it usable as the fleet key in solver memoization
+/// (`sched::fastpath::SolverCache`).
+#[derive(Clone, Debug)]
+pub struct FleetView {
+    /// peak FLOPS per device
+    pub flops: Vec<f64>,
+    /// utilization-scaled FLOPS per device
+    pub eff_flops: Vec<f64>,
+    pub ul_bw: Vec<f64>,
+    pub dl_bw: Vec<f64>,
+    pub ul_lat: Vec<f64>,
+    pub dl_lat: Vec<f64>,
+    pub mem: Vec<f64>,
+    /// content fingerprint — the "fleet version" for memo keys
+    pub version: u64,
+}
+
+fn fnv1a(h: u64, x: u64) -> u64 {
+    (h ^ x).wrapping_mul(0x100_0000_01b3)
+}
+
+impl FleetView {
+    /// Build the SoA view of a device slice.
+    pub fn build(devices: &[Device]) -> FleetView {
+        let mut v = FleetView::with_capacity(devices.len());
+        for d in devices {
+            v.push(d);
+        }
+        v.version = v.fingerprint();
+        v
+    }
+
+    /// Build the view of a subset (e.g. churn survivors) without cloning
+    /// the `Device` structs first.
+    pub fn build_subset(devices: &[Device], idx: &[usize]) -> FleetView {
+        let mut v = FleetView::with_capacity(idx.len());
+        for &i in idx {
+            v.push(&devices[i]);
+        }
+        v.version = v.fingerprint();
+        v
+    }
+
+    fn with_capacity(n: usize) -> FleetView {
+        FleetView {
+            flops: Vec::with_capacity(n),
+            eff_flops: Vec::with_capacity(n),
+            ul_bw: Vec::with_capacity(n),
+            dl_bw: Vec::with_capacity(n),
+            ul_lat: Vec::with_capacity(n),
+            dl_lat: Vec::with_capacity(n),
+            mem: Vec::with_capacity(n),
+            version: 0,
+        }
+    }
+
+    fn push(&mut self, d: &Device) {
+        self.flops.push(d.flops);
+        self.eff_flops.push(d.effective_flops());
+        self.ul_bw.push(d.ul_bw);
+        self.dl_bw.push(d.dl_bw);
+        self.ul_lat.push(d.ul_lat);
+        self.dl_lat.push(d.dl_lat);
+        self.mem.push(d.mem);
+    }
+
+    fn fingerprint(&self) -> u64 {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        h = fnv1a(h, self.flops.len() as u64);
+        for arr in [
+            &self.flops,
+            &self.eff_flops,
+            &self.ul_bw,
+            &self.dl_bw,
+            &self.ul_lat,
+            &self.dl_lat,
+            &self.mem,
+        ] {
+            for &x in arr.iter() {
+                h = fnv1a(h, x.to_bits());
+            }
+        }
+        h
+    }
+
+    pub fn len(&self) -> usize {
+        self.flops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.flops.is_empty()
+    }
+}
+
 /// A sampled device fleet.
 #[derive(Clone, Debug)]
 pub struct Fleet {
@@ -150,6 +251,11 @@ impl Fleet {
         Some(self.devices.remove(pos))
     }
 
+    /// SoA snapshot of the current devices (see [`FleetView`]).
+    pub fn view(&self) -> FleetView {
+        FleetView::build(&self.devices)
+    }
+
     /// Compute heterogeneity: coefficient of variation of effective FLOPS
     /// (Appendix B's `c_v`).
     pub fn compute_cv(&self) -> f64 {
@@ -242,6 +348,32 @@ mod tests {
         assert!(f.remove(3).is_some());
         assert!(f.remove(3).is_none());
         assert_eq!(f.len(), 9);
+    }
+
+    #[test]
+    fn fleet_view_mirrors_devices_and_fingerprints_content() {
+        let f = Fleet::sample(&FleetConfig::default().with_devices(32));
+        let v = f.view();
+        assert_eq!(v.len(), 32);
+        for (k, d) in f.devices.iter().enumerate() {
+            assert_eq!(v.flops[k], d.flops);
+            assert_eq!(v.eff_flops[k], d.effective_flops());
+            assert_eq!(v.ul_bw[k], d.ul_bw);
+            assert_eq!(v.dl_bw[k], d.dl_bw);
+            assert_eq!(v.ul_lat[k], d.ul_lat);
+            assert_eq!(v.dl_lat[k], d.dl_lat);
+            assert_eq!(v.mem[k], d.mem);
+        }
+        // same content => same version; different content => different
+        let again = f.view();
+        assert_eq!(v.version, again.version);
+        let other = Fleet::sample(&FleetConfig::default().with_devices(32).with_seed(99)).view();
+        assert_ne!(v.version, other.version);
+        // subset view == view of the subset's clones
+        let idx = [3usize, 7, 11];
+        let sub = FleetView::build_subset(&f.devices, &idx);
+        let cloned: Vec<Device> = idx.iter().map(|&i| f.devices[i].clone()).collect();
+        assert_eq!(sub.version, FleetView::build(&cloned).version);
     }
 
     #[test]

@@ -16,6 +16,7 @@
 //! `C_BATCH = C_GEMM(S-1) + C_OPTTAIL^PS`.
 
 use crate::cluster::device::Device;
+use crate::cluster::fleet::FleetView;
 
 /// A GEMM scheduling shape: `count` independent instances of
 /// `(m x n)·(n x q)` are aggregated into a single `rows x q` output grid
@@ -84,6 +85,16 @@ impl CostModel {
         }
     }
 
+    /// FLOPS of device `k` in an SoA fleet view, honoring
+    /// `use_effective_flops` — the view-side twin of `flops_of`.
+    pub fn flops_of_view(&self, view: &FleetView, k: usize) -> f64 {
+        if self.use_effective_flops {
+            view.eff_flops[k]
+        } else {
+            view.flops[k]
+        }
+    }
+
     /// Downlink time (Eq. 3, first line).
     pub fn comm_dl(&self, dev: &Device, alpha: f64, beta: f64, n: f64) -> f64 {
         if alpha <= 0.0 && beta <= 0.0 {
@@ -135,24 +146,67 @@ impl CostModel {
     /// bounds; uplink and compute depend only on the area. Memory (Eq. 7)
     /// is a quadratic bound on `sqrt(a)` for square shards.
     pub fn max_area_in(&self, dev: &Device, t: f64, shape: &GemmShape) -> f64 {
+        self.max_area_in_raw(
+            self.flops_of(dev),
+            dev.ul_bw,
+            dev.ul_lat,
+            dev.dl_bw,
+            dev.dl_lat,
+            dev.mem,
+            t,
+            shape,
+        )
+    }
+
+    /// [`Self::max_area_in`] for device `k` of an SoA fleet view — the
+    /// flat-array route the solver fast path scans.
+    pub fn max_area_in_view(&self, view: &FleetView, k: usize, t: f64, shape: &GemmShape) -> f64 {
+        self.max_area_in_raw(
+            self.flops_of_view(view, k),
+            view.ul_bw[k],
+            view.ul_lat[k],
+            view.dl_bw[k],
+            view.dl_lat[k],
+            view.mem[k],
+            t,
+            shape,
+        )
+    }
+
+    /// The `max_area_in` core over scalar device parameters (`flops` must
+    /// already honor `use_effective_flops`). Kept bit-identical to the
+    /// historical `&Device` formula so the fast path and the reference
+    /// solver agree exactly.
+    #[allow(clippy::too_many_arguments)]
+    pub fn max_area_in_raw(
+        &self,
+        flops: f64,
+        ul_bw: f64,
+        ul_lat: f64,
+        dl_bw: f64,
+        dl_lat: f64,
+        mem: f64,
+        t: f64,
+        shape: &GemmShape,
+    ) -> f64 {
         let n = shape.n as f64;
         let b = self.elem_bytes;
         let rows = shape.rows as f64;
         let q = shape.q as f64;
 
         // UL bound: a·b/Wu + Lu <= t
-        let a_ul = if t <= dev.ul_lat {
+        let a_ul = if t <= ul_lat {
             0.0
         } else {
-            (t - dev.ul_lat) * dev.ul_bw / b
+            (t - ul_lat) * ul_bw / b
         };
         // Compute bound: 2·a·n/F <= t
-        let a_comp = t * self.flops_of(dev) / (2.0 * n);
+        let a_comp = t * flops / (2.0 * n);
         // DL bound: (alpha+beta)·n·b/Wd + Ld <= t, squarest shard first.
-        let a_dl = if t <= dev.dl_lat {
+        let a_dl = if t <= dl_lat {
             0.0
         } else {
-            let budget = (t - dev.dl_lat) * dev.dl_bw / (n * b); // alpha+beta budget
+            let budget = (t - dl_lat) * dl_bw / (n * b); // alpha+beta budget
             let side = budget / 2.0;
             let max_side = rows.min(q);
             if side <= max_side {
@@ -165,12 +219,35 @@ impl CostModel {
         };
         // Memory bound (Eq. 7): b·a + 2·n·b·sqrt(a) <= M  (square shard)
         let a_mem = {
-            let m = dev.mem;
-            let s = ((n * n * b * b + b * m).sqrt() - n * b) / b;
+            let s = ((n * n * b * b + b * mem).sqrt() - n * b) / b;
             (s * s).max(0.0)
         };
 
         a_ul.min(a_comp).min(a_dl).min(a_mem).min(shape.out_area()).max(0.0)
+    }
+
+    /// [`Self::comm_ul`] over view arrays.
+    pub fn comm_ul_view(&self, view: &FleetView, k: usize, alpha: f64, beta: f64) -> f64 {
+        if alpha <= 0.0 || beta <= 0.0 {
+            return 0.0;
+        }
+        alpha * beta * self.elem_bytes / view.ul_bw[k] + view.ul_lat[k]
+    }
+
+    /// [`Self::comp`] over view arrays.
+    pub fn comp_view(&self, view: &FleetView, k: usize, alpha: f64, beta: f64, n: f64) -> f64 {
+        2.0 * alpha * beta * n / self.flops_of_view(view, k)
+    }
+
+    /// [`Self::gemm_cost`] over view arrays (bit-identical expressions).
+    pub fn gemm_cost_view(&self, view: &FleetView, k: usize, alpha: f64, beta: f64, n: f64) -> f64 {
+        if alpha <= 0.0 || beta <= 0.0 {
+            return 0.0; // idle device (Eq. 6 idle branch)
+        }
+        let dl = (alpha * n * self.elem_bytes + n * beta * self.elem_bytes) / view.dl_bw[k]
+            + view.dl_lat[k];
+        dl.max(self.comm_ul_view(view, k, alpha, beta))
+            .max(self.comp_view(view, k, alpha, beta, n))
     }
 
     /// PS-side optimizer time for one weight matrix (Eq. 5):
@@ -326,6 +403,29 @@ mod tests {
         d.mem = 1000.0 * cm.elem_bytes; // 1000 elements of storage
         assert!(cm.memory_ok(&d, 10.0, 10.0, 4.0)); // 40+40+100=180 <= 1000
         assert!(!cm.memory_ok(&d, 100.0, 100.0, 4.0)); // 400+400+10000 > 1000
+    }
+
+    #[test]
+    fn view_costs_bit_match_device_costs() {
+        use crate::cluster::fleet::{Fleet, FleetConfig, FleetView};
+        let fleet = Fleet::sample(&FleetConfig::default().with_devices(24));
+        let view = FleetView::build(&fleet.devices);
+        let shape = GemmShape::new(512, 2048, 1024, 4);
+        for cm in [CostModel::default(), CostModel::default().with_effective_flops()] {
+            for (k, d) in fleet.devices.iter().enumerate() {
+                for i in 1..20 {
+                    let t = i as f64 * 0.013;
+                    assert_eq!(
+                        cm.max_area_in(d, t, &shape),
+                        cm.max_area_in_view(&view, k, t, &shape)
+                    );
+                }
+                let (a, b_, n) = (37.0, 19.0, shape.n as f64);
+                assert_eq!(cm.gemm_cost(d, a, b_, n), cm.gemm_cost_view(&view, k, a, b_, n));
+                assert_eq!(cm.comm_ul(d, a, b_), cm.comm_ul_view(&view, k, a, b_));
+                assert_eq!(cm.comp(d, a, b_, n), cm.comp_view(&view, k, a, b_, n));
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,930 @@
+//! # Solver fast path
+//!
+//! Fleet-scale acceleration of the §4.1 bisection solver. The reference
+//! solver re-scans every `Device` on every feasibility probe —
+//! O(shapes x probes x D) pointer-chasing — which makes the Fig. 8/9 and
+//! Table 7 sweeps the slowest part of the repo once fleets reach
+//! thousands of devices. This module makes each probe O(log D) and the
+//! per-DAG solve parallel over distinct shapes, while reproducing the
+//! reference solver's answers (validated bit-for-bit in the property
+//! tests for the fleets exercised there; guaranteed within fp noise
+//! everywhere else).
+//!
+//! ## The breakpoint / prefix-sum oracle
+//!
+//! [`CostModel::max_area_in`] is, per device, the pointwise minimum of a
+//! small family of monotone pieces of `t`:
+//!
+//! * uplink `su·(t − L^u)` and compute `sc·t` — linear;
+//! * downlink — a chain of three pieces with breakpoints where the
+//!   squarest-shard side saturates the grid: quadratic
+//!   `(g/2)^2·(t − L^d)^2`, then linear, then the saturated constant;
+//! * the Eq. 7 memory cap and the `M·q` grid cap — constants.
+//!
+//! [`ShapeOracle::build`] computes, per device, the exact piecewise-min
+//! description of that function (domain edges plus pairwise crossings,
+//! each in closed form), converts the segment transitions into *events*
+//! `(t, Δvalue, Δslope, Δcurvature)`, sorts all events once per
+//! (fleet, shape), and sweeps them accumulating a recentered quadratic
+//! state per segment. A feasibility probe is then a binary search over
+//! the event times plus an O(1) polynomial evaluation —
+//! `sum_k a_k(t)` in O(log D) instead of O(D).
+//!
+//! Two numerical details keep the oracle interchangeable with the scan:
+//! the swept state is recentered at every segment start (evaluating
+//! expanded polynomial coefficients at large `t` would cancel
+//! catastrophically), and segments where every active device sits in a
+//! constant piece report the exactly-summed constant instead of the
+//! swept value (constant pieces are terminal per device, so that sum
+//! accumulates monotonically without cancellation — this matters when
+//! the feasibility boundary lands on a capped plateau, where the curve
+//! is flat and any drift would shift `T*` macroscopically).
+//!
+//! ## When the fallback scan engages
+//!
+//! The exact oracle requires finite, positive bandwidth/compute
+//! parameters and a well-formed shape; [`ShapeOracle::build`] returns
+//! `None` otherwise and the solver falls back to a chunked flat-array
+//! scan over the [`FleetView`] (parallelized via `scoped_map` above
+//! [`PAR_SCAN_THRESHOLD`] devices). The recovery region solver and the
+//! steady-state water-filling always use the scan route: their
+//! per-device oracles (cache-discounted downlink, fractional capacity
+//! clamped at 1) do not satisfy the piecewise-decomposition
+//! precondition exploited here.
+//!
+//! ## Warm starts and memoization
+//!
+//! [`SolverCache`] carries two reuse levels across solves: an exact memo
+//! keyed by (fleet fingerprint, cost-model/options context, shape) that
+//! returns the previously solved assignment outright, and per-shape
+//! `T*` hints that warm-start the bisection bracket when the fleet has
+//! churned (`solve_dag_cached`, `sched::recovery`). Cold
+//! [`crate::sched::solver::solve_gemm`] calls keep the reference
+//! bracket protocol exactly so results stay reproducible
+//! call-by-call.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::cluster::device::Device;
+use crate::cluster::fleet::FleetView;
+use crate::model::dag::GemmDag;
+use crate::sched::assignment::{GemmAssignment, Schedule};
+use crate::sched::cost::{opt_tail, CostModel, GemmShape, PsParams};
+use crate::sched::solver::{SolverOptions, SolverStats};
+use crate::sched::tiling;
+use crate::util::threadpool::{chunk_ranges, chunked_sum, default_threads, scoped_map};
+
+/// Device count above which flat-array scans are chunked across threads.
+pub const PAR_SCAN_THRESHOLD: usize = 4096;
+
+/// One monotone piece of a device's `max_area_in`, in shift-stable form.
+#[derive(Clone, Copy, PartialEq, Debug)]
+enum Piece {
+    /// `slope * (t - off)` — uplink (off = L^u), compute (off = 0), or the
+    /// saturated-side downlink phase (off = L^d + ms/g)
+    Lin { slope: f64, off: f64 },
+    /// `aq * (t - ld)^2` — square-shard downlink phase
+    Quad { aq: f64, ld: f64 },
+    /// memory/grid cap or fully saturated downlink
+    Const { c: f64 },
+}
+
+impl Piece {
+    fn value(&self, t: f64) -> f64 {
+        match *self {
+            Piece::Lin { slope, off } => slope * (t - off),
+            Piece::Quad { aq, ld } => {
+                let u = t - ld;
+                aq * u * u
+            }
+            Piece::Const { c } => c,
+        }
+    }
+
+    fn slope_at(&self, t: f64) -> f64 {
+        match *self {
+            Piece::Lin { slope, .. } => slope,
+            Piece::Quad { aq, ld } => 2.0 * aq * (t - ld),
+            Piece::Const { .. } => 0.0,
+        }
+    }
+
+    fn curvature(&self) -> f64 {
+        match *self {
+            Piece::Quad { aq, .. } => aq,
+            _ => 0.0,
+        }
+    }
+
+    fn is_const(&self) -> bool {
+        matches!(self, Piece::Const { .. })
+    }
+
+    fn const_value(&self) -> f64 {
+        match *self {
+            Piece::Const { c } => c,
+            _ => 0.0,
+        }
+    }
+
+    /// Absolute-coordinate `(slope, intercept)` of a non-quadratic piece.
+    fn as_line(&self) -> (f64, f64) {
+        match *self {
+            Piece::Lin { slope, off } => (slope, -slope * off),
+            Piece::Const { c } => (0.0, c),
+            Piece::Quad { .. } => unreachable!("quad pieces are not lines"),
+        }
+    }
+}
+
+/// A piece-transition event of one device: at `t`, the aggregate gains
+/// `dv`/`ds`/`da` in value/slope/curvature, `dc` in const-piece sum and
+/// `dnn` in the number of devices on non-constant pieces.
+#[derive(Clone, Copy)]
+struct Event {
+    t: f64,
+    dv: f64,
+    ds: f64,
+    da: f64,
+    dc: f64,
+    dnn: i64,
+}
+
+/// Emit the piecewise-min segment-transition events of one device's
+/// `max_area_in(t)` into `events`. Returns `None` when the decomposition
+/// precondition fails (caller falls back to the scan oracle).
+#[allow(clippy::too_many_arguments)]
+fn emit_device_events(
+    flops: f64,
+    ul_bw: f64,
+    ul_lat: f64,
+    dl_bw: f64,
+    dl_lat: f64,
+    mem: f64,
+    shape: &GemmShape,
+    b: f64,
+    events: &mut Vec<Event>,
+    scratch: &mut Vec<f64>,
+) -> Option<()> {
+    let n = shape.n as f64;
+    let rows = shape.rows as f64;
+    let q = shape.q as f64;
+    let finite = flops.is_finite()
+        && ul_bw.is_finite()
+        && dl_bw.is_finite()
+        && ul_lat.is_finite()
+        && dl_lat.is_finite()
+        && mem.is_finite();
+    if !finite
+        || !(flops > 0.0 && ul_bw > 0.0 && dl_bw > 0.0)
+        || !(ul_lat >= 0.0 && dl_lat >= 0.0 && mem >= 0.0)
+        || !(n > 0.0 && rows > 0.0 && q > 0.0 && b > 0.0)
+    {
+        return None;
+    }
+
+    let oa = rows * q;
+    let ms = rows.min(q);
+    let su = ul_bw / b;
+    let sc = flops / (2.0 * n);
+    let g = dl_bw / (n * b);
+    // Eq. 7 memory cap for square shards, exactly as max_area_in computes it.
+    let sm = ((n * n * b * b + b * mem).sqrt() - n * b) / b;
+    let cap = (sm * sm).max(0.0).min(oa);
+    if !(cap > 0.0) {
+        return Some(()); // contributes zero area at every t
+    }
+    let t0 = ul_lat.max(dl_lat);
+    let tq = dl_lat + 2.0 * ms / g; // downlink: quad -> linear
+    let tl = dl_lat + (ms + rows.max(q)) / g; // downlink: linear -> saturated
+    if !(t0.is_finite() && tq.is_finite() && tl.is_finite()) {
+        return None;
+    }
+
+    let p_ul = Piece::Lin { slope: su, off: ul_lat };
+    let p_comp = Piece::Lin { slope: sc, off: 0.0 };
+    let aq = g * g / 4.0;
+    let p_dlq = Piece::Quad { aq, ld: dl_lat };
+    let p_dll = Piece::Lin { slope: ms * g, off: dl_lat + ms / g };
+    let p_cap = Piece::Const { c: cap };
+    // COMP >= UL for every t >= L^u whenever sc >= su: prune it then.
+    let keep_comp = sc < su;
+
+    // Candidate breakpoints: domain edges + pairwise piece crossings.
+    // (The saturated-downlink constant `oa` never crosses below `cap`
+    // since cap <= oa, so it contributes no candidates of its own.)
+    fn push_cand(scratch: &mut Vec<f64>, t0: f64, t: f64) {
+        if t.is_finite() && t > t0 {
+            scratch.push(t);
+        }
+    }
+    scratch.clear();
+    let lins = [p_ul, p_dll, p_cap, p_comp];
+    let nl = if keep_comp { 4 } else { 3 };
+    let lins = &lins[..nl];
+    for i in 0..lins.len() {
+        for j in (i + 1)..lins.len() {
+            let (s1, c1) = lins[i].as_line();
+            let (s2, c2) = lins[j].as_line();
+            if s1 != s2 {
+                push_cand(scratch, t0, (c2 - c1) / (s1 - s2));
+            }
+        }
+    }
+    for p in lins.iter() {
+        // aq·u^2 = sl·(u + ld) + c with u = t − ld
+        let (sl, c) = p.as_line();
+        let bq = -sl;
+        let cq = -(sl * dl_lat + c);
+        let disc = bq * bq - 4.0 * aq * cq;
+        if disc >= 0.0 && aq > 0.0 {
+            let sq = disc.sqrt();
+            push_cand(scratch, t0, dl_lat + (-bq - sq) / (2.0 * aq));
+            push_cand(scratch, t0, dl_lat + (-bq + sq) / (2.0 * aq));
+        }
+    }
+    push_cand(scratch, t0, tq);
+    push_cand(scratch, t0, tl);
+    scratch.sort_unstable_by(|a, b| a.total_cmp(b));
+    scratch.dedup();
+
+    let dl_piece = |t: f64| -> Piece {
+        if t <= tq {
+            p_dlq
+        } else if t <= tl {
+            p_dll
+        } else {
+            Piece::Const { c: oa }
+        }
+    };
+    let min_piece = |t: f64| -> Piece {
+        let mut best = p_ul;
+        let mut bv = p_ul.value(t);
+        let mut consider = |p: Piece| {
+            let v = p.value(t);
+            if v < bv {
+                bv = v;
+                best = p;
+            }
+        };
+        consider(dl_piece(t));
+        consider(p_cap);
+        if keep_comp {
+            consider(p_comp);
+        }
+        best
+    };
+
+    // Walk segments [start_i, start_{i+1}), choosing the min piece at the
+    // midpoint (no crossing lies inside a segment, so the choice holds on
+    // the whole segment); merge runs of the same piece and emit deltas.
+    // The pre-first-event state is Const(0): a_k(t) = 0 below t0.
+    let mut prev = Piece::Const { c: 0.0 };
+    let n_cand = scratch.len();
+    for i in 0..=n_cand {
+        let start = if i == 0 { t0 } else { scratch[i - 1] };
+        let mid = if i < n_cand {
+            0.5 * (start + scratch[i])
+        } else {
+            start * 2.0 + 1.0
+        };
+        let p = min_piece(mid);
+        if p == prev {
+            continue;
+        }
+        events.push(Event {
+            t: start,
+            dv: p.value(start) - prev.value(start),
+            ds: p.slope_at(start) - prev.slope_at(start),
+            da: p.curvature() - prev.curvature(),
+            dc: p.const_value() - prev.const_value(),
+            dnn: i64::from(!p.is_const()) - i64::from(!prev.is_const()),
+        });
+        prev = p;
+    }
+    // Every device must end on a constant piece (its cap); if fp noise in
+    // the candidates broke that, reject the oracle rather than risk an
+    // inexact tail.
+    if !prev.is_const() {
+        return None;
+    }
+    Some(())
+}
+
+/// Exact O(log D)-per-probe feasibility oracle for one (fleet, shape):
+/// `total_area(t) = sum_k max_area_in(k, t)` from sorted breakpoints and
+/// per-segment quadratic state. See the module docs.
+pub struct ShapeOracle {
+    ts: Vec<f64>,
+    v: Vec<f64>,
+    s: Vec<f64>,
+    a: Vec<f64>,
+    /// exact sum of const-piece values per segment
+    cs: Vec<f64>,
+    /// number of devices on non-constant pieces per segment
+    nn: Vec<i64>,
+}
+
+impl ShapeOracle {
+    /// Build the oracle, or `None` when a device's parameters fall outside
+    /// the exact-decomposition precondition (the caller then uses the
+    /// chunked scan fallback).
+    pub fn build(view: &FleetView, cm: &CostModel, shape: &GemmShape) -> Option<ShapeOracle> {
+        let d = view.len();
+        if d == 0 {
+            return None;
+        }
+        let b = cm.elem_bytes;
+        let gen_range = |lo: usize, hi: usize| -> Option<Vec<Event>> {
+            let mut events = Vec::with_capacity((hi - lo) * 6);
+            let mut scratch: Vec<f64> = Vec::with_capacity(32);
+            for k in lo..hi {
+                emit_device_events(
+                    cm.flops_of_view(view, k),
+                    view.ul_bw[k],
+                    view.ul_lat[k],
+                    view.dl_bw[k],
+                    view.dl_lat[k],
+                    view.mem[k],
+                    shape,
+                    b,
+                    &mut events,
+                    &mut scratch,
+                )?;
+            }
+            Some(events)
+        };
+        let mut events = if d >= PAR_SCAN_THRESHOLD {
+            let threads = default_threads();
+            let ranges = chunk_ranges(d, threads);
+            let parts = scoped_map(&ranges, threads, |&(lo, hi)| gen_range(lo, hi));
+            let mut all = Vec::new();
+            for p in parts {
+                all.extend(p?);
+            }
+            all
+        } else {
+            gen_range(0, d)?
+        };
+        events.sort_unstable_by(|x, y| x.t.total_cmp(&y.t));
+
+        let mut ts: Vec<f64> = Vec::with_capacity(events.len());
+        let mut vv: Vec<f64> = Vec::with_capacity(events.len());
+        let mut ss: Vec<f64> = Vec::with_capacity(events.len());
+        let mut aa: Vec<f64> = Vec::with_capacity(events.len());
+        let mut cc: Vec<f64> = Vec::with_capacity(events.len());
+        let mut nnv: Vec<i64> = Vec::with_capacity(events.len());
+        let (mut v, mut s, mut a, mut c) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        let mut nn: i64 = 0;
+        let mut last_t = f64::NAN;
+        for e in &events {
+            if !last_t.is_nan() && e.t > last_t {
+                let dt = e.t - last_t;
+                v = v + s * dt + a * dt * dt;
+                s += 2.0 * a * dt;
+            }
+            v += e.dv;
+            s += e.ds;
+            a += e.da;
+            c += e.dc;
+            nn += e.dnn;
+            if !ts.is_empty() && *ts.last().unwrap() == e.t {
+                let i = ts.len() - 1;
+                vv[i] = v;
+                ss[i] = s;
+                aa[i] = a;
+                cc[i] = c;
+                nnv[i] = nn;
+            } else {
+                ts.push(e.t);
+                vv.push(v);
+                ss.push(s);
+                aa.push(a);
+                cc.push(c);
+                nnv.push(nn);
+            }
+            last_t = e.t;
+        }
+        Some(ShapeOracle {
+            ts,
+            v: vv,
+            s: ss,
+            a: aa,
+            cs: cc,
+            nn: nnv,
+        })
+    }
+
+    /// `sum_k max_area_in(k, t)` in O(log D).
+    pub fn total_area(&self, t: f64) -> f64 {
+        let idx = self.ts.partition_point(|&x| x <= t);
+        if idx == 0 {
+            return 0.0;
+        }
+        let i = idx - 1;
+        if self.nn[i] == 0 {
+            // all active devices are capped: exact flat plateau
+            return self.cs[i];
+        }
+        let dt = t - self.ts[i];
+        self.v[i] + self.s[i] * dt + self.a[i] * dt * dt
+    }
+
+    /// The terminal plateau `sum_k cap_k` — the largest coverable area.
+    pub fn plateau(&self) -> f64 {
+        if let (Some(&nn), Some(&cs)) = (self.nn.last(), self.cs.last()) {
+            if nn == 0 {
+                return cs;
+            }
+        }
+        // empty fleet contributes nothing; build() guarantees every device
+        // ends on a constant piece, so nn.last() is 0 whenever it exists
+        0.0
+    }
+
+    /// Number of breakpoint segments (diagnostics).
+    pub fn segments(&self) -> usize {
+        self.ts.len()
+    }
+}
+
+/// Fallback feasibility scan over the SoA view (early-exit when serial,
+/// chunk-parallel above [`PAR_SCAN_THRESHOLD`]). `threads` is hoisted by
+/// the caller so probes don't re-query the thread count.
+fn scan_feasible(
+    view: &FleetView,
+    cm: &CostModel,
+    t: f64,
+    shape: &GemmShape,
+    area: f64,
+    threads: usize,
+) -> bool {
+    let d = view.len();
+    if d >= PAR_SCAN_THRESHOLD {
+        chunked_sum(d, threads, |lo, hi| {
+            (lo..hi).map(|k| cm.max_area_in_view(view, k, t, shape)).sum()
+        }) >= area
+    } else {
+        let mut sum = 0.0;
+        for k in 0..d {
+            sum += cm.max_area_in_view(view, k, t, shape);
+            if sum >= area {
+                return true;
+            }
+        }
+        false
+    }
+}
+
+/// Per-device target areas at `t` (chunk-parallel fill for large fleets;
+/// each element is computed independently, so the values are identical to
+/// the serial reference loop).
+fn areas_at(view: &FleetView, cm: &CostModel, t: f64, shape: &GemmShape) -> Vec<f64> {
+    let d = view.len();
+    if d >= PAR_SCAN_THRESHOLD {
+        let threads = default_threads();
+        let ranges = chunk_ranges(d, threads);
+        let parts = scoped_map(&ranges, threads, |&(lo, hi)| {
+            (lo..hi)
+                .map(|k| cm.max_area_in_view(view, k, t, shape))
+                .collect::<Vec<f64>>()
+        });
+        parts.into_iter().flatten().collect()
+    } else {
+        (0..d).map(|k| cm.max_area_in_view(view, k, t, shape)).collect()
+    }
+}
+
+/// Shared bisection bracket: replicate the reference protocol exactly when
+/// cold (`hi = 1e-3` doubling), or start from a warm `hint` and re-verify.
+/// Returns `(lo, hi)` with `lo` infeasible (or 0) and `hi` feasible.
+pub(crate) fn bisection_bracket<F: Fn(f64) -> bool>(
+    feasible: &F,
+    hint: Option<f64>,
+    what: &str,
+) -> (f64, f64) {
+    match hint {
+        None => {
+            let mut hi = 1e-3;
+            let mut guard = 0;
+            while !feasible(hi) {
+                hi *= 2.0;
+                guard += 1;
+                assert!(guard < 80, "no feasible makespan: {what}");
+            }
+            (if guard == 0 { 0.0 } else { hi / 2.0 }, hi)
+        }
+        Some(h) => {
+            let mut hi = (h * 1.25).max(1e-9);
+            let mut guard = 0;
+            while !feasible(hi) {
+                hi *= 2.0;
+                guard += 1;
+                assert!(guard < 80, "no feasible makespan: {what}");
+            }
+            let mut lo = hi * 0.5;
+            if guard == 0 {
+                let mut shrink = 0;
+                while feasible(lo) {
+                    hi = lo;
+                    lo *= 0.5;
+                    shrink += 1;
+                    if shrink >= 80 {
+                        lo = 0.0;
+                        break;
+                    }
+                }
+            }
+            (lo, hi)
+        }
+    }
+}
+
+/// Assemble the [`Schedule`] from solved per-shape assignments: Eq. 1
+/// level-cost accumulation plus the PS optimizer tail. Shared by the fast
+/// and reference DAG solvers so the two can never disagree on this step.
+pub(crate) fn assemble_schedule(
+    dag: &GemmDag,
+    cm: &CostModel,
+    ps: &PsParams,
+    by_shape: HashMap<GemmShape, GemmAssignment>,
+) -> Schedule {
+    // Eq. 1: C_GEMM(s) = C_GEMM(s-1) + max_p C_GEMM(s, p).
+    let mut gemm_time = 0.0;
+    for level in &dag.levels {
+        let level_cost = level
+            .gemms
+            .iter()
+            .map(|g| by_shape[&GemmShape::new(g.m, g.n, g.q, g.count)].makespan)
+            .fold(0.0, f64::max);
+        gemm_time += level_cost;
+    }
+
+    // Optimizer tail over the model's weight-matrix shapes.
+    let spec = &dag.spec;
+    let mut weight_shapes: Vec<(usize, usize)> = vec![(spec.hidden, spec.hidden); 4];
+    for _ in 0..(spec.mlp_mats() - 1) {
+        weight_shapes.push((spec.hidden, spec.intermediate));
+    }
+    weight_shapes.push((spec.intermediate, spec.hidden));
+    let tail = opt_tail(cm, ps, &weight_shapes);
+
+    Schedule {
+        by_shape,
+        gemm_time,
+        opt_tail: tail,
+    }
+}
+
+fn integer_makespan_view(a: &GemmAssignment, view: &FleetView, cm: &CostModel) -> f64 {
+    let n = a.shape.n as f64;
+    a.rects
+        .iter()
+        .map(|r| cm.gemm_cost_view(view, r.device, r.rows as f64, r.cols as f64, n))
+        .fold(0.0, f64::max)
+}
+
+/// Solve one GEMM over an SoA fleet view with the O(log D) oracle (or the
+/// scan fallback), using the reference solver's exact bracket protocol.
+pub fn solve_gemm_fast(
+    view: &FleetView,
+    shape: GemmShape,
+    cm: &CostModel,
+    opts: &SolverOptions,
+) -> (GemmAssignment, SolverStats) {
+    solve_gemm_view_impl(view, shape, cm, opts, None)
+}
+
+/// [`solve_gemm_fast`] with a warm-start bracket around `hint` (a prior
+/// `T*` for this shape on a similar fleet). The bracket is re-verified by
+/// feasibility probes, so a stale hint costs a few O(log D) probes, never
+/// correctness.
+pub fn solve_gemm_warm(
+    view: &FleetView,
+    shape: GemmShape,
+    cm: &CostModel,
+    opts: &SolverOptions,
+    hint: f64,
+) -> (GemmAssignment, SolverStats) {
+    solve_gemm_view_impl(view, shape, cm, opts, Some(hint))
+}
+
+fn solve_gemm_view_impl(
+    view: &FleetView,
+    shape: GemmShape,
+    cm: &CostModel,
+    opts: &SolverOptions,
+    hint: Option<f64>,
+) -> (GemmAssignment, SolverStats) {
+    let t0c = Instant::now();
+    let area = shape.out_area();
+    assert!(!view.is_empty(), "no devices");
+
+    let oracle = ShapeOracle::build(view, cm, &shape);
+    let threads = default_threads();
+    let feasible = |t: f64| -> bool {
+        match &oracle {
+            Some(o) => o.total_area(t) >= area,
+            None => scan_feasible(view, cm, t, &shape, area, threads),
+        }
+    };
+
+    // Bracket: cold solves replicate the reference protocol exactly;
+    // warm solves start from the hint and re-verify.
+    let (mut lo, mut hi) =
+        bisection_bracket(&feasible, hint, &format!("shape {shape:?}"));
+
+    // Bisection (identical to the reference loop).
+    let mut iters = 0;
+    for _ in 0..opts.iters {
+        iters += 1;
+        let mid = 0.5 * (lo + hi);
+        if feasible(mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+        if hi - lo <= opts.tol * hi {
+            break;
+        }
+    }
+    let t_star = hi;
+
+    // Target areas at T*, scaled to cover the grid exactly.
+    let mut areas = areas_at(view, cm, t_star, &shape);
+    let total: f64 = areas.iter().sum();
+    debug_assert!(total >= area * 0.999);
+    let scale = area / total;
+    for a in &mut areas {
+        *a *= scale;
+    }
+
+    let rects = tiling::tile(&areas, shape.rows, shape.q);
+    debug_assert!(tiling::verify_exact_cover(&rects, shape.rows, shape.q));
+
+    let mut assignment = GemmAssignment {
+        shape,
+        rects,
+        makespan: 0.0,
+    };
+    assignment.makespan = integer_makespan_view(&assignment, view, cm);
+
+    let stats = SolverStats {
+        devices_considered: view.len(),
+        decision_vars: 2 * view.len(),
+        bisection_iters: iters,
+        solve_time_s: t0c.elapsed().as_secs_f64(),
+        continuous_makespan: t_star,
+        integer_makespan: assignment.makespan,
+    };
+    (assignment, stats)
+}
+
+/// Warm-start and memoization state shared across solves (benches, churn
+/// sweeps, the recovery path). See the module docs.
+#[derive(Default)]
+pub struct SolverCache {
+    /// last `T*` per shape (any fleet) — warm-start bracket hints
+    hints: HashMap<GemmShape, f64>,
+    /// exact reuse keyed by (fleet fingerprint + solver context, shape)
+    memo: HashMap<(u64, GemmShape), (GemmAssignment, SolverStats)>,
+}
+
+impl SolverCache {
+    pub fn new() -> SolverCache {
+        SolverCache::default()
+    }
+
+    pub fn clear(&mut self) {
+        self.hints.clear();
+        self.memo.clear();
+    }
+
+    /// Number of memoized exact solves (diagnostics).
+    pub fn memo_len(&self) -> usize {
+        self.memo.len()
+    }
+}
+
+fn fnv1a(h: u64, x: u64) -> u64 {
+    (h ^ x).wrapping_mul(0x100_0000_01b3)
+}
+
+/// Context key: fleet content + cost-model flags + solver options. Two
+/// solves with equal context and shape are bit-identical, so the memo may
+/// return the stored assignment outright.
+fn cache_ctx(view: &FleetView, cm: &CostModel, opts: &SolverOptions) -> u64 {
+    let mut h = view.version;
+    h = fnv1a(h, cm.elem_bytes.to_bits());
+    h = fnv1a(h, u64::from(cm.use_effective_flops));
+    h = fnv1a(h, opts.iters as u64);
+    h = fnv1a(h, opts.tol.to_bits());
+    h
+}
+
+/// Solve the full DAG: one assignment per distinct shape, solved in
+/// parallel across the thread pool, with optional warm-start/memo reuse.
+/// This is the engine behind [`crate::sched::solver::solve_dag`] and
+/// [`crate::sched::solver::solve_dag_cached`].
+pub fn solve_dag_fast(
+    devices: &[Device],
+    dag: &GemmDag,
+    cm: &CostModel,
+    ps: &PsParams,
+    opts: &SolverOptions,
+    mut cache: Option<&mut SolverCache>,
+) -> (Schedule, SolverStats) {
+    let t0 = Instant::now();
+    let view = FleetView::build(devices);
+    let ctx = cache_ctx(&view, cm, opts);
+
+    // Distinct shapes in first-seen DAG order (deterministic aggregation).
+    let mut shapes: Vec<GemmShape> = Vec::new();
+    for level in &dag.levels {
+        for g in &level.gemms {
+            let shape = GemmShape::new(g.m, g.n, g.q, g.count);
+            if !shapes.contains(&shape) {
+                shapes.push(shape);
+            }
+        }
+    }
+
+    // Snapshot reuse state, then solve the remaining shapes in parallel.
+    type Job = (GemmShape, Option<f64>, Option<(GemmAssignment, SolverStats)>);
+    let jobs: Vec<Job> = shapes
+        .iter()
+        .map(|shape| match cache.as_deref() {
+            Some(c) => (
+                *shape,
+                c.hints.get(shape).copied(),
+                c.memo.get(&(ctx, *shape)).cloned(),
+            ),
+            None => (*shape, None, None),
+        })
+        .collect();
+    let threads = default_threads().min(jobs.len()).max(1);
+    let solved: Vec<(GemmAssignment, SolverStats)> =
+        scoped_map(&jobs, threads, |(shape, hint, memo)| {
+            if let Some((a, s)) = memo {
+                let mut s = *s;
+                s.solve_time_s = 0.0; // reused, not re-solved
+                return (a.clone(), s);
+            }
+            match hint {
+                Some(h) => solve_gemm_warm(&view, *shape, cm, opts, *h),
+                None => solve_gemm_fast(&view, *shape, cm, opts),
+            }
+        });
+
+    let mut by_shape: HashMap<GemmShape, GemmAssignment> = HashMap::new();
+    let mut agg = SolverStats {
+        devices_considered: devices.len(),
+        ..SolverStats::default()
+    };
+    for (shape, (a, s)) in shapes.iter().zip(&solved) {
+        agg.decision_vars += s.decision_vars;
+        agg.bisection_iters += s.bisection_iters;
+        if let Some(c) = cache.as_deref_mut() {
+            c.hints.insert(*shape, s.continuous_makespan);
+            if c.memo.len() > 8192 {
+                c.memo.clear(); // churn sweeps never need more; bound memory
+            }
+            c.memo.insert((ctx, *shape), (a.clone(), *s));
+        }
+        by_shape.insert(*shape, a.clone());
+    }
+
+    let schedule = assemble_schedule(dag, cm, ps, by_shape);
+    agg.solve_time_s = t0.elapsed().as_secs_f64();
+    agg.continuous_makespan = schedule.gemm_time;
+    agg.integer_makespan = schedule.gemm_time;
+    (schedule, agg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::fleet::{Fleet, FleetConfig};
+    use crate::model::config::{ModelSpec, TrainSetup};
+
+    fn cm() -> CostModel {
+        CostModel::default()
+    }
+
+    #[test]
+    fn oracle_matches_scan_across_time_grid() {
+        for (d, seed) in [(1usize, 1u64), (7, 2), (64, 3), (300, 4)] {
+            let fleet = Fleet::sample(
+                &FleetConfig::default()
+                    .with_devices(d)
+                    .with_stragglers(if d >= 10 { 0.1 } else { 0.0 })
+                    .with_seed(seed),
+            );
+            let view = fleet.view();
+            let shape = GemmShape::new(256, 1024, 512, 4);
+            let oracle = ShapeOracle::build(&view, &cm(), &shape).expect("oracle precondition");
+            for k in 0..70 {
+                let t = 1e-4 * 1.45f64.powi(k);
+                let scan: f64 = (0..d)
+                    .map(|i| cm().max_area_in_view(&view, i, t, &shape))
+                    .sum();
+                let fast = oracle.total_area(t);
+                assert!(
+                    (scan - fast).abs() <= 1e-8 * scan.abs().max(1e-9),
+                    "D={d} t={t}: scan={scan} fast={fast}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn oracle_plateau_is_exact_aggregate_cap() {
+        let fleet = Fleet::sample(&FleetConfig::default().with_devices(48));
+        let view = fleet.view();
+        let shape = GemmShape::new(64, 32, 128, 1);
+        let oracle = ShapeOracle::build(&view, &cm(), &shape).unwrap();
+        let far: f64 = (0..48)
+            .map(|i| cm().max_area_in_view(&view, i, 1e15, &shape))
+            .sum();
+        assert_eq!(oracle.total_area(1e15), oracle.plateau());
+        assert!((oracle.plateau() - far).abs() <= 1e-9 * far);
+        assert!(oracle.segments() > 0);
+    }
+
+    #[test]
+    fn oracle_is_zero_below_latency_floors() {
+        let fleet = Fleet::median(16);
+        let view = fleet.view();
+        let shape = GemmShape::new(1024, 4096, 4096, 1);
+        let oracle = ShapeOracle::build(&view, &cm(), &shape).unwrap();
+        assert_eq!(oracle.total_area(0.0), 0.0);
+        assert_eq!(oracle.total_area(0.019), 0.0); // < L = 20 ms
+        assert!(oracle.total_area(0.05) > 0.0);
+    }
+
+    #[test]
+    fn warm_solve_matches_cold_within_tolerance() {
+        let fleet = Fleet::sample(&FleetConfig::default().with_devices(96));
+        let view = fleet.view();
+        let shape = GemmShape::new(1024, 4096, 4096, 8);
+        let opts = SolverOptions::default();
+        let (ca, cs) = solve_gemm_fast(&view, shape, &cm(), &opts);
+        for hint_scale in [0.25, 1.0, 7.0] {
+            let (wa, ws) = solve_gemm_warm(
+                &view,
+                shape,
+                &cm(),
+                &opts,
+                cs.continuous_makespan * hint_scale,
+            );
+            let rel = (ws.continuous_makespan - cs.continuous_makespan).abs()
+                / cs.continuous_makespan;
+            assert!(rel <= 1e-6, "hint x{hint_scale}: rel={rel}");
+            let mrel = (wa.makespan - ca.makespan).abs() / ca.makespan;
+            assert!(mrel <= 1e-6, "hint x{hint_scale}: makespan rel={mrel}");
+        }
+    }
+
+    #[test]
+    fn dag_cache_memoizes_exact_resolves() {
+        let spec = ModelSpec::preset("OPT-13B").unwrap();
+        let dag = GemmDag::build(&spec, &TrainSetup::default());
+        let fleet = Fleet::median(64);
+        let opts = SolverOptions::default();
+        let mut cache = SolverCache::new();
+        let (s1, st1) = solve_dag_fast(
+            &fleet.devices,
+            &dag,
+            &cm(),
+            &PsParams::default(),
+            &opts,
+            Some(&mut cache),
+        );
+        assert!(cache.memo_len() > 0);
+        let (s2, st2) = solve_dag_fast(
+            &fleet.devices,
+            &dag,
+            &cm(),
+            &PsParams::default(),
+            &opts,
+            Some(&mut cache),
+        );
+        // exact reuse: bit-identical schedule, typically much faster
+        assert_eq!(s1.gemm_time, s2.gemm_time);
+        assert_eq!(s1.opt_tail, s2.opt_tail);
+        assert_eq!(st1.decision_vars, st2.decision_vars);
+        // a churned fleet misses the memo but reuses warm hints
+        let mut churned = fleet.clone();
+        churned.remove(0);
+        let (s3, _) = solve_dag_fast(
+            &churned.devices,
+            &dag,
+            &cm(),
+            &PsParams::default(),
+            &opts,
+            Some(&mut cache),
+        );
+        assert!(s3.gemm_time >= s1.gemm_time * 0.99);
+    }
+}

@@ -8,15 +8,24 @@
 //! feasibility in closed form) followed by guillotine integerization of the
 //! output grid — see DESIGN.md §2 for why this preserves the paper's
 //! behaviour, and `benches/table7_solver.rs` for the measured solve-time
-//! regimes (cold-start vs churn re-solve).
+//! regimes (cold-start vs churn re-solve vs fast path).
+//!
+//! Fleet-scale solves route through [`fastpath`]: SoA fleet views, an
+//! O(log D) breakpoint/prefix-sum feasibility oracle, parallel
+//! distinct-shape solves, and warm-start/memo reuse across churn sweeps.
 
 pub mod assignment;
 pub mod cost;
 pub mod cvar;
+pub mod fastpath;
 pub mod recovery;
 pub mod solver;
 pub mod tiling;
 
 pub use assignment::{GemmAssignment, Rect, Schedule};
 pub use cost::{CostModel, GemmShape};
-pub use solver::{solve_dag, solve_gemm, SolverOptions, SolverStats};
+pub use fastpath::{ShapeOracle, SolverCache};
+pub use solver::{
+    solve_dag, solve_dag_cached, solve_dag_reference, solve_gemm, solve_gemm_reference,
+    SolverOptions, SolverStats,
+};

@@ -9,9 +9,10 @@
 //! strips, so its DL term is discounted by the overlap fraction.
 
 use crate::cluster::device::Device;
+use crate::cluster::fleet::FleetView;
 use crate::sched::assignment::{GemmAssignment, Rect};
 use crate::sched::cost::CostModel;
-use crate::sched::solver::{solve_region_with_cache, SolverOptions, SolverStats};
+use crate::sched::solver::{solve_region_with_cache_view, SolverOptions, SolverStats};
 
 /// Result of a churn re-solve.
 #[derive(Clone, Debug)]
@@ -58,14 +59,18 @@ pub fn recover(
     let survivors: Vec<usize> = (0..devices.len()).filter(|&d| !is_failed(d)).collect();
     assert!(!survivors.is_empty(), "all devices failed");
 
-    let surviving_devices: Vec<Device> =
-        survivors.iter().map(|&i| devices[i].clone()).collect();
+    // SoA view of the survivors, built once for every region re-solve (the
+    // old path cloned the survivor `Device` structs per recover call).
+    let view = FleetView::build_subset(devices, &survivors);
 
     let mut new_rects = Vec::new();
     let mut recompute_time: f64 = 0.0;
     let mut solve_time = 0.0;
     let mut lost_area = 0;
     let mut agg = SolverStats::default();
+    // Consecutive lost rects pose near-identical region problems: chain the
+    // previous T* as a warm-start bracket hint.
+    let mut hint: Option<f64> = None;
 
     for lr in &lost {
         lost_area += lr.area();
@@ -88,15 +93,17 @@ pub fn recover(
             })
             .collect();
 
-        let (rects, stats) = solve_region_with_cache(
-            &surviving_devices,
+        let (rects, stats) = solve_region_with_cache_view(
+            &view,
             lr.rows,
             lr.cols,
             assignment.shape.n,
             &discounts,
             cm,
             opts,
+            hint,
         );
+        hint = Some(stats.continuous_makespan);
         // Map rect coordinates back into the global grid and survivor ids
         // back into original device indices.
         for mut r in rects {
@@ -106,8 +113,8 @@ pub fn recover(
             new_rects.push(r);
         }
         recompute_time = recompute_time.max(stats.integer_makespan);
-        solve_time += stats.solve_time_s;
         agg.devices_considered = stats.devices_considered;
+        solve_time += stats.solve_time_s;
         agg.decision_vars += stats.decision_vars;
         agg.bisection_iters += stats.bisection_iters;
     }

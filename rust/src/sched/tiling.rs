@@ -27,14 +27,14 @@ pub fn tile(areas: &[f64], rows: usize, cols: usize) -> Vec<Rect> {
     if entries.is_empty() {
         return Vec::new();
     }
-    // More participants than cells: keep only the largest `cells`.
+    // Sort descending so bisection splits stay weight-balanced, then (if
+    // there are more participants than cells) keep only the largest
+    // `cells` — one sort covers both needs.
+    entries.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
     let cells = rows * cols;
     if entries.len() > cells {
-        entries.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
         entries.truncate(cells);
     }
-    // Sort descending so bisection splits stay weight-balanced.
-    entries.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
     let mut out = Vec::with_capacity(entries.len());
     recurse(&entries, 0, rows, 0, cols, &mut out);
     out

@@ -8,7 +8,10 @@
 //! their cost models in [`crate::baselines`].
 
 use crate::cluster::device::Device;
+use crate::cluster::fleet::FleetView;
 use crate::cluster::network::LatencyModel;
+use crate::sched::fastpath::PAR_SCAN_THRESHOLD;
+use crate::util::threadpool::{chunked_sum, default_threads};
 use crate::model::dag::GemmDag;
 use crate::sched::assignment::Schedule;
 use crate::sched::cost::{CostModel, GemmShape, PsParams};
@@ -131,32 +134,46 @@ fn simulate_batch_steady(
 
     // Per-stage cost of one "unit" (the whole stage) on device k:
     // dl, ul bytes and flops; find the stage makespan by bisection over the
-    // fraction capacities.
+    // fraction capacities. The capacity scan runs over the SoA fleet view
+    // (flat arrays; chunk-parallel above the fast-path threshold) — this
+    // water-filling is the same bisection idea as the §4.1 solver but its
+    // per-device oracle (fractions clamped at 1) does not satisfy the
+    // breakpoint-oracle precondition, so it uses the scan route.
+    let view = FleetView::build(devices);
+    let nd = view.len();
+    let threads = default_threads();
     let stage_time = |dl_bytes: f64, ul_bytes: f64, flops: f64| -> f64 {
-        let cap = |d: &Device, t: f64| -> f64 {
+        let cap = |k: usize, t: f64| -> f64 {
             let f_dl = if dl_bytes == 0.0 {
                 1.0
             } else {
-                ((t - d.dl_lat).max(0.0) * d.dl_bw / dl_bytes).min(1.0)
+                ((t - view.dl_lat[k]).max(0.0) * view.dl_bw[k] / dl_bytes).min(1.0)
             };
             let f_ul = if ul_bytes == 0.0 {
                 1.0
             } else {
-                ((t - d.ul_lat).max(0.0) * d.ul_bw / ul_bytes).min(1.0)
+                ((t - view.ul_lat[k]).max(0.0) * view.ul_bw[k] / ul_bytes).min(1.0)
             };
             let f_c = if flops == 0.0 {
                 1.0
             } else {
                 let eff = if cm.use_effective_flops {
-                    d.effective_flops()
+                    view.eff_flops[k]
                 } else {
-                    d.flops
+                    view.flops[k]
                 };
                 (t * eff / flops).min(1.0)
             };
             f_dl.min(f_ul).min(f_c)
         };
-        let feasible = |t: f64| devices.iter().map(|d| cap(d, t)).sum::<f64>() >= 1.0;
+        let feasible = |t: f64| -> bool {
+            if nd >= PAR_SCAN_THRESHOLD {
+                chunked_sum(nd, threads, |lo, hi| (lo..hi).map(|k| cap(k, t)).sum())
+                    >= 1.0
+            } else {
+                (0..nd).map(|k| cap(k, t)).sum::<f64>() >= 1.0
+            }
+        };
         let mut hi = 1e-3;
         let mut guard = 0;
         while !feasible(hi) {

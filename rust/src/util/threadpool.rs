@@ -69,7 +69,12 @@ impl Drop for ThreadPool {
 }
 
 /// Apply `f` to every item in parallel, preserving order of results.
-/// Spawns scoped threads in chunks of at most `threads`.
+///
+/// Results land in chunked `split_at_mut`-style slots: the output vector is
+/// split into ~8 chunks per worker, each chunk claimed exactly once through
+/// an atomic cursor and written through its own (never-contended) lock.
+/// The previous implementation funneled every single result write through
+/// one global `Mutex<&mut Vec>`, serializing parallel sweeps on that lock.
 pub fn scoped_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
 where
     T: Sync,
@@ -78,22 +83,82 @@ where
 {
     assert!(threads > 0);
     let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = threads.min(n);
     let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-    let next = std::sync::atomic::AtomicUsize::new(0);
-    let out_ptr = Mutex::new(&mut out);
-    std::thread::scope(|scope| {
-        for _ in 0..threads.min(n.max(1)) {
-            scope.spawn(|| loop {
-                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-                if i >= n {
-                    break;
-                }
-                let r = f(&items[i]);
-                out_ptr.lock().unwrap()[i] = Some(r);
-            });
+    if workers == 1 {
+        for (slot, item) in out.iter_mut().zip(items) {
+            *slot = Some(f(item));
         }
-    });
+    } else {
+        // ~8 chunks per worker keeps dynamic load balance for uneven work
+        // without per-item synchronization.
+        let chunk = ((n + workers * 8 - 1) / (workers * 8)).max(1);
+        let slots: Vec<Mutex<(usize, &mut [Option<R>])>> = out
+            .chunks_mut(chunk)
+            .enumerate()
+            .map(|(ci, s)| Mutex::new((ci * chunk, s)))
+            .collect();
+        let next = std::sync::atomic::AtomicUsize::new(0);
+        std::thread::scope(|scope| {
+            for _ in 0..workers {
+                scope.spawn(|| loop {
+                    let ci = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    if ci >= slots.len() {
+                        break;
+                    }
+                    let mut slot = slots[ci].lock().unwrap();
+                    let start = slot.0;
+                    for (j, cell) in slot.1.iter_mut().enumerate() {
+                        *cell = Some(f(&items[start + j]));
+                    }
+                });
+            }
+        });
+    }
     out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+/// Number of hardware threads to use for parallel sweeps.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Split `0..n` into at most `workers` contiguous non-empty ranges.
+pub fn chunk_ranges(n: usize, workers: usize) -> Vec<(usize, usize)> {
+    if n == 0 {
+        return Vec::new();
+    }
+    let workers = workers.min(n).max(1);
+    let chunk = (n + workers - 1) / workers;
+    (0..workers)
+        .map(|w| (w * chunk, ((w + 1) * chunk).min(n)))
+        .filter(|&(a, b)| a < b)
+        .collect()
+}
+
+/// Sum `f(lo, hi)` over `n` items split into one contiguous range per
+/// worker, in deterministic (range-order) reduction. Used by the solver
+/// fallback scans above the parallelism threshold.
+pub fn chunked_sum<F>(n: usize, threads: usize, f: F) -> f64
+where
+    F: Fn(usize, usize) -> f64 + Sync,
+{
+    if n == 0 {
+        return 0.0;
+    }
+    let workers = threads.min(n).max(1);
+    if workers == 1 {
+        return f(0, n);
+    }
+    let ranges = chunk_ranges(n, workers);
+    scoped_map(&ranges, workers, |&(a, b)| f(a, b))
+        .into_iter()
+        .sum()
 }
 
 /// Completion latch: wait until `n` jobs signal done.
@@ -170,5 +235,35 @@ mod tests {
         assert_eq!(out, vec![2, 3, 4]);
         let empty: Vec<i32> = vec![];
         assert!(scoped_map(&empty, 4, |&x: &i32| x).is_empty());
+    }
+
+    #[test]
+    fn scoped_map_more_threads_than_items() {
+        let out = scoped_map(&[10, 20], 16, |&x| x / 10);
+        assert_eq!(out, vec![1, 2]);
+    }
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for (n, w) in [(0usize, 4usize), (3, 8), (10, 3), (10_000, 7)] {
+            let ranges = chunk_ranges(n, w);
+            let total: usize = ranges.iter().map(|&(a, b)| b - a).sum();
+            assert_eq!(total, n);
+            for win in ranges.windows(2) {
+                assert_eq!(win[0].1, win[1].0, "contiguous");
+            }
+            assert!(ranges.len() <= w.max(1));
+        }
+    }
+
+    #[test]
+    fn chunked_sum_matches_serial() {
+        let xs: Vec<f64> = (0..10_000).map(|i| (i as f64).sin()).collect();
+        let serial: f64 = xs.iter().sum();
+        for threads in [1, 2, 7] {
+            let par = chunked_sum(xs.len(), threads, |a, b| xs[a..b].iter().sum());
+            assert!((par - serial).abs() < 1e-9, "threads={threads}");
+        }
+        assert_eq!(chunked_sum(0, 4, |_, _| 1.0), 0.0);
     }
 }

@@ -5,7 +5,7 @@ use cleave::cluster::device::Device;
 use cleave::cluster::fleet::{Fleet, FleetConfig};
 use cleave::sched::cost::{CostModel, GemmShape};
 use cleave::sched::recovery::{apply, recover};
-use cleave::sched::solver::{solve_gemm, SolverOptions};
+use cleave::sched::solver::{solve_gemm, solve_gemm_reference, SolverOptions};
 use cleave::sched::tiling;
 use cleave::util::prop::{check, Config};
 use cleave::util::rng::Rng;
@@ -146,6 +146,88 @@ fn prop_makespan_never_worse_with_more_devices() {
             let (a2, _) = solve_gemm(&big.devices, *shape, &cm, &SolverOptions::default());
             a2.makespan <= a1.makespan * 1.10
         },
+    );
+}
+
+#[test]
+fn prop_fastpath_matches_reference_solver() {
+    // The O(log D) breakpoint-oracle fast path and the O(D)-scan reference
+    // solver must agree on the solved makespans within 1e-6 across random
+    // heterogeneous fleets (D in {1, 7, 64, 1000}), including straggler
+    // exclusion. (In practice they agree bit-for-bit: the fast path
+    // replays the reference bracket protocol against an exact oracle.)
+    check(
+        Config {
+            cases: 24,
+            seed: 0xFA57_0001,
+            max_size: 64,
+        },
+        |rng, _size| {
+            let d = [1usize, 7, 64, 1000][rng.below(4) as usize];
+            let straggle = d >= 10 && rng.bernoulli(0.5);
+            let cfg = FleetConfig {
+                n_devices: d,
+                phone_fraction: rng.uniform(),
+                straggler_fraction: if straggle { 0.25 } else { 0.0 },
+                straggler_factor: 50.0,
+                utilization: 1.0,
+                seed: rng.next_u64(),
+            };
+            (Fleet::sample(&cfg).devices, random_shape(rng))
+        },
+        |(fleet, shape)| {
+            let cm = CostModel::default();
+            let opts = SolverOptions::default();
+            let (fa, fs) = solve_gemm(fleet, *shape, &cm, &opts);
+            let (ra, rs) = solve_gemm_reference(fleet, *shape, &cm, &opts);
+            let close = |x: f64, y: f64| {
+                (x - y).abs() <= 1e-6 * x.abs().max(y.abs()).max(1e-12)
+            };
+            close(fs.continuous_makespan, rs.continuous_makespan)
+                && close(fs.integer_makespan, rs.integer_makespan)
+                && close(fa.makespan, ra.makespan)
+                && fa.validate(fleet, &cm).is_ok()
+        },
+    );
+}
+
+#[test]
+fn fastpath_straggler_exclusion_matches_reference() {
+    // Extreme stragglers must be excluded identically by both solvers —
+    // the Eq. 6 idle branch is where the oracle's per-device latency
+    // breakpoints matter most.
+    let mut fleet = Fleet::median(32);
+    for d in fleet.devices.iter_mut().take(4) {
+        d.flops /= 50.0;
+        d.dl_bw /= 50.0;
+        d.ul_bw /= 50.0;
+    }
+    let cm = CostModel::default();
+    let opts = SolverOptions::default();
+    let shape = GemmShape::new(1024, 5120, 5120, 16);
+    let (fa, fs) = solve_gemm(&fleet.devices, shape, &cm, &opts);
+    let (ra, rs) = solve_gemm_reference(&fleet.devices, shape, &cm, &opts);
+    assert!(
+        (fs.continuous_makespan - rs.continuous_makespan).abs()
+            <= 1e-6 * rs.continuous_makespan
+    );
+    assert!((fa.makespan - ra.makespan).abs() <= 1e-6 * ra.makespan);
+    assert_eq!(fa.active_devices(), ra.active_devices());
+}
+
+#[test]
+fn fastpath_single_device_matches_reference() {
+    let fleet = Fleet::median(1);
+    let cm = CostModel::default();
+    let opts = SolverOptions::default();
+    let shape = GemmShape::new(64, 128, 64, 1);
+    let (fa, fs) = solve_gemm(&fleet.devices, shape, &cm, &opts);
+    let (ra, rs) = solve_gemm_reference(&fleet.devices, shape, &cm, &opts);
+    assert_eq!(fa.rects.len(), 1);
+    assert_eq!(fa.rects, ra.rects);
+    assert!(
+        (fs.continuous_makespan - rs.continuous_makespan).abs()
+            <= 1e-6 * rs.continuous_makespan
     );
 }
 
