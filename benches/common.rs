@@ -13,7 +13,8 @@ use cleave::model::config::{ModelSpec, TrainSetup};
 use cleave::model::dag::GemmDag;
 use cleave::sched::assignment::Schedule;
 use cleave::sched::cost::{CostModel, PsParams};
-use cleave::sched::solver::{solve_dag, SolverOptions, SolverStats};
+use cleave::sched::fastpath::SolverCache;
+use cleave::sched::solver::{solve_dag, solve_dag_cached, SolverOptions, SolverStats};
 use cleave::sim::batch::{simulate_batch, BatchResult, SimConfig};
 
 /// Solve + simulate one CLEAVE batch on a sampled heterogeneous fleet.
@@ -36,6 +37,31 @@ pub fn cleave_batch_on(
         &cm,
         &PsParams::default(),
         &SolverOptions::default(),
+    );
+    let r = simulate_batch(devices, &dag, &schedule, &cm, &SimConfig::default());
+    (r, schedule, stats)
+}
+
+/// [`cleave_batch_on`] with a persistent [`SolverCache`] threaded through
+/// the sweep: repeated fleets hit the exact memo, churned/rescaled fleets
+/// warm-start their bisection brackets from the previous point's per-shape
+/// `T*` — so figure/table sweeps exercise the warm fast path end-to-end
+/// instead of re-solving every point cold (ROADMAP open item).
+pub fn cleave_batch_cached(
+    spec: &ModelSpec,
+    setup: &TrainSetup,
+    devices: &[Device],
+    cache: &mut SolverCache,
+) -> (BatchResult, Schedule, SolverStats) {
+    let cm = CostModel::default().with_effective_flops();
+    let dag = GemmDag::build(spec, setup);
+    let (schedule, stats) = solve_dag_cached(
+        devices,
+        &dag,
+        &cm,
+        &PsParams::default(),
+        &SolverOptions::default(),
+        cache,
     );
     let r = simulate_batch(devices, &dag, &schedule, &cm, &SimConfig::default());
     (r, schedule, stats)

@@ -7,6 +7,7 @@ mod common;
 
 use cleave::baselines::{alpa, dtfm};
 use cleave::model::config::{ModelSpec, TrainSetup};
+use cleave::sched::fastpath::SolverCache;
 use cleave::util::bench::Reporter;
 use cleave::util::json::Json;
 use cleave::util::table::Table;
@@ -16,11 +17,14 @@ fn main() {
     let spec = ModelSpec::preset("OPT-13B").unwrap();
     let mut t = Table::new(&["batch", "#devices", "CLEAVE", "DTFM", "Alpa"]);
     let mut cleave_times = Vec::new();
+    // warm cache across batch sizes (shapes scale with batch; brackets
+    // still warm-start from the previous size's T*)
+    let mut cache = SolverCache::new();
     for batch in [16usize, 32, 64, 128, 256, 512] {
         let setup = TrainSetup::default().with_batch(batch);
         let n = (batch / 2).max(8); // mini-batch of 2 per device
         let fleet = common::default_fleet(n);
-        let (r, _, _) = common::cleave_batch_on(&spec, &setup, &fleet.devices);
+        let (r, _, _) = common::cleave_batch_cached(&spec, &setup, &fleet.devices, &mut cache);
         let d = dtfm::plan_with(&spec, &setup, &fleet.devices, 1e13, false).map(|p| p.per_batch_s);
         let a = alpa::plan_with(&spec, &setup, &fleet.devices, false).map(|p| p.per_batch_s);
         t.row(&[

@@ -1,0 +1,224 @@
+//! Selection under churn (the paper's third pillar, beyond its printed
+//! figures): per-batch time and tails vs candidate-pool size for a
+//! straggler-laden pool, with admission take-all / cost-model-guided /
+//! oracle. Shape: take-all trusts advertised capability and pays the
+//! hidden-straggler blow-up (Fig. 6's baseline behaviour); cost-guided
+//! selection on the reliability-discounted planning view recovers most of
+//! the oracle's throughput (paper pillar: "effectively accounts for device
+//! heterogeneity and churn").
+//!
+//! Emits `BENCH_selection.json` (headline speedups + the admission
+//! cost/throughput frontier) and gates on:
+//! * guided >= 1.5x take-all on mean per-batch time at straggler
+//!   fraction 0.3;
+//! * the admission loop runs warm — cold solves bounded by the number of
+//!   distinct DAG shapes even at pool sizes >= 1k.
+//!
+//! `cargo bench --bench fig11_selection -- --smoke` runs a tiny pool (CI).
+
+#[path = "common.rs"]
+mod common;
+
+use cleave::cluster::churn::ChurnConfig;
+use cleave::cluster::fleet::FleetConfig;
+use cleave::cluster::pool::{DevicePool, PoolConfig};
+use cleave::model::config::{ModelSpec, TrainSetup};
+use cleave::model::dag::GemmDag;
+use cleave::sched::cost::{CostModel, PsParams};
+use cleave::sched::fastpath::{distinct_shapes, SolverCache};
+use cleave::sched::select::{select_devices, SelectConfig};
+use cleave::sim::session::{run_session, Policy, SessionConfig, SessionReport};
+use cleave::util::bench::Reporter;
+use cleave::util::json::{obj, Json};
+use cleave::util::table::Table;
+
+const STRAGGLER_FRACTION: f64 = 0.3;
+
+fn pool_cfg(n: usize) -> PoolConfig {
+    PoolConfig {
+        fleet: FleetConfig {
+            n_devices: n,
+            straggler_fraction: STRAGGLER_FRACTION,
+            seed: 11,
+            ..FleetConfig::default()
+        },
+        ..PoolConfig::default()
+    }
+}
+
+fn report_json(r: &SessionReport) -> Json {
+    obj(vec![
+        ("mean_batch_s", Json::from(r.mean_batch_s)),
+        ("p95_batch_s", Json::from(r.p95_batch_s)),
+        ("effective_throughput", Json::from(r.effective_throughput)),
+        ("failures", Json::from(r.failures)),
+        ("joins", Json::from(r.joins)),
+        (
+            "admitted_final",
+            Json::from(r.decisions.last().map(|d| d.admitted).unwrap_or(0)),
+        ),
+        (
+            "stragglers_admitted_final",
+            Json::from(r.decisions.last().map(|d| d.stragglers_admitted).unwrap_or(0)),
+        ),
+        ("cold_solves", Json::from(r.solver.cold_solves)),
+        ("warm_solves", Json::from(r.solver.warm_solves)),
+        ("memo_hits", Json::from(r.solver.memo_hits)),
+    ])
+}
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut rep = Reporter::new(
+        "fig11_selection",
+        "cost-model-guided fleet admission under churn",
+    );
+    let spec = ModelSpec::preset("OPT-13B").unwrap();
+    let setup = TrainSetup::default();
+    let dag = GemmDag::build(&spec, &setup);
+    let cm = CostModel::default().with_effective_flops();
+    let ps = PsParams::default();
+    let n_shapes = distinct_shapes(&dag).len();
+
+    let sizes: &[usize] = if smoke { &[48] } else { &[128, 256, 1024] };
+    let n_batches = if smoke { 4 } else { 10 };
+    let churn = ChurnConfig {
+        fail_rate_per_hour: 0.05, // 5x the paper's rate: livelier sessions
+        join_rate_per_hour: 60.0,
+    };
+
+    let mut t = Table::new(&[
+        "pool",
+        "take-all",
+        "guided",
+        "oracle",
+        "speedup",
+        "p95 take-all",
+        "p95 guided",
+        "probes",
+    ]);
+    let mut rows: Vec<Json> = Vec::new();
+    // (pool, speedup, session cold solves, frontier cold solves) — gated
+    // after BENCH_selection.json is written so the artifact always lands.
+    let mut gates: Vec<(usize, f64, usize, usize)> = Vec::new();
+
+    for &n in sizes {
+        let session_cfg = |policy: Policy| SessionConfig {
+            n_batches,
+            epoch_batches: 3,
+            churn,
+            policy,
+            ..SessionConfig::default()
+        };
+        let run = |policy: Policy| -> SessionReport {
+            let mut pool = DevicePool::sample(&pool_cfg(n));
+            run_session(&mut pool, &dag, &cm, &ps, &session_cfg(policy))
+        };
+        let take_all = run(Policy::TakeAll);
+        let guided = run(Policy::CostGuided);
+        let oracle = run(Policy::Oracle);
+        let speedup = take_all.mean_batch_s / guided.mean_batch_s;
+        let probes: usize = guided.decisions.iter().map(|d| d.probes).sum();
+
+        // The admission cost/throughput frontier of the initial decision
+        // (standalone, so the JSON carries the probed (n, T*, costs) curve).
+        let pool = DevicePool::sample(&pool_cfg(n));
+        let selectable = pool.selectable();
+        let mut cache = SolverCache::new();
+        let frontier_out = select_devices(
+            &pool.planning_devices(&selectable),
+            &dag,
+            &cm,
+            &ps,
+            &SelectConfig::default(),
+            &mut cache,
+        );
+        let frontier: Vec<Json> = frontier_out
+            .frontier
+            .iter()
+            .map(|p| {
+                obj(vec![
+                    ("n", Json::from(p.n)),
+                    ("t_star_s", Json::from(p.t_star)),
+                    ("ps_cost_s", Json::from(p.ps_cost)),
+                    ("churn_loss_s", Json::from(p.churn_loss)),
+                    ("objective_s", Json::from(p.objective)),
+                ])
+            })
+            .collect();
+
+        t.row(&[
+            n.to_string(),
+            common::secs(take_all.mean_batch_s),
+            common::secs(guided.mean_batch_s),
+            common::secs(oracle.mean_batch_s),
+            format!("{speedup:.2}x"),
+            common::secs(take_all.p95_batch_s),
+            common::secs(guided.p95_batch_s),
+            probes.to_string(),
+        ]);
+        rep.record(vec![
+            ("pool", Json::from(n)),
+            ("takeall_mean_s", Json::from(take_all.mean_batch_s)),
+            ("guided_mean_s", Json::from(guided.mean_batch_s)),
+            ("oracle_mean_s", Json::from(oracle.mean_batch_s)),
+            ("speedup", Json::from(speedup)),
+        ]);
+        rows.push(obj(vec![
+            ("pool", Json::from(n)),
+            ("take_all", report_json(&take_all)),
+            ("guided", report_json(&guided)),
+            ("oracle", report_json(&oracle)),
+            ("speedup_guided_vs_takeall", Json::from(speedup)),
+            ("selection_probes", Json::from(probes)),
+            ("frontier", Json::Arr(frontier)),
+        ]));
+
+        gates.push((n, speedup, guided.solver.cold_solves, cache.stats().cold_solves));
+    }
+    t.print();
+    println!(
+        "\nselection on the reliability-discounted planning view right-sizes or\n\
+         evicts hidden stragglers; take-all trusts advertised capability and\n\
+         pays ~the straggler factor per level (Fig. 6 baseline behaviour)"
+    );
+
+    let bench_json = obj(vec![
+        ("bench", Json::from("fig11_selection")),
+        ("model", Json::from("OPT-13B")),
+        ("straggler_fraction", Json::from(STRAGGLER_FRACTION)),
+        ("smoke", Json::from(smoke)),
+        ("n_batches", Json::from(n_batches)),
+        ("rows", Json::Arr(rows)),
+    ])
+    .to_string_compact();
+    if let Err(e) = std::fs::write("BENCH_selection.json", &bench_json) {
+        eprintln!("warning: could not write BENCH_selection.json: {e}");
+    } else {
+        println!("\nwrote BENCH_selection.json");
+    }
+    rep.finish();
+
+    // Gates (after the artifact is written, so a failure still leaves the
+    // recorded numbers behind for diagnosis).
+    for (n, speedup, session_cold, frontier_cold) in gates {
+        // Gate 1: selection must beat take-all admission >= 1.5x on
+        // per-batch time for the straggler-laden pool.
+        assert!(
+            speedup >= 1.5,
+            "guided selection must beat take-all >= 1.5x at straggler \
+             fraction {STRAGGLER_FRACTION} (pool {n}: {speedup:.2}x)"
+        );
+        // Gate 2: the admission loop runs on the warm fast path — only the
+        // first solve per distinct shape may be cold, at every pool size
+        // (including >= 1k: no cold O(D) scans inside the probe loop).
+        assert!(
+            session_cold <= n_shapes,
+            "admission loop went cold at pool {n}: {session_cold} cold solves > {n_shapes} shapes"
+        );
+        assert!(
+            frontier_cold <= n_shapes,
+            "frontier probes went cold at pool {n}"
+        );
+    }
+}

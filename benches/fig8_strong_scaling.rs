@@ -7,6 +7,7 @@ mod common;
 
 use cleave::baselines::{alpa, dtfm};
 use cleave::model::config::{ModelSpec, TrainSetup};
+use cleave::sched::fastpath::SolverCache;
 use cleave::util::bench::Reporter;
 use cleave::util::json::Json;
 use cleave::util::table::Table;
@@ -17,9 +18,11 @@ fn main() {
     let setup = TrainSetup::default();
     let mut t = Table::new(&["#devices", "CLEAVE", "DTFM", "Alpa", "CLEAVE speedup/2x"]);
     let mut prev: Option<f64> = None;
+    // warm-start each fleet size's solve from the previous one's T* hints
+    let mut cache = SolverCache::new();
     for n in [32usize, 64, 128, 256, 512, 1024, 2048, 4096] {
         let fleet = common::default_fleet(n);
-        let (r, _, _) = common::cleave_batch_on(&spec, &setup, &fleet.devices);
+        let (r, _, _) = common::cleave_batch_cached(&spec, &setup, &fleet.devices, &mut cache);
         let d = dtfm::plan(&spec, &setup, &fleet.devices, 1e12).map(|p| p.per_batch_s);
         let a = alpa::plan_with(&spec, &setup, &fleet.devices, false).map(|p| p.per_batch_s);
         let speedup = prev.map(|p| format!("{:.2}x", p / r.batch_time)).unwrap_or("-".into());

@@ -8,6 +8,7 @@ mod common;
 
 use cleave::baselines::{alpa, dtfm};
 use cleave::model::config::{ModelSpec, TrainSetup};
+use cleave::sched::fastpath::SolverCache;
 use cleave::util::bench::Reporter;
 use cleave::util::json::Json;
 use cleave::util::table::Table;
@@ -15,6 +16,9 @@ use cleave::util::table::Table;
 fn main() {
     let mut rep = Reporter::new("fig9_model_scaling", "model-size weak scaling (Figure 9)");
     let setup = TrainSetup::default();
+    // persistent cache across the model sweep: shapes shared between model
+    // sizes (attention geometry repeats) reuse their bracket hints
+    let mut cache = SolverCache::new();
     // devices proportional to model size; 70B -> 1024 (paper's anchor).
     let cases = [
         ("OPT-1.3B", 20usize),
@@ -29,7 +33,7 @@ fn main() {
     for (name, n) in cases {
         let spec = ModelSpec::preset(name).unwrap();
         let fleet = common::default_fleet(n);
-        let (r, _, _) = common::cleave_batch_on(&spec, &setup, &fleet.devices);
+        let (r, _, _) = common::cleave_batch_cached(&spec, &setup, &fleet.devices, &mut cache);
         let d = dtfm::plan(&spec, &setup, &fleet.devices, 1e12).map(|p| p.per_batch_s);
         let a = alpa::plan_with(&spec, &setup, &fleet.devices, false).map(|p| p.per_batch_s);
         t.row(&[

@@ -1,0 +1,120 @@
+//! Device-selection session walkthrough: a candidate pool with hidden
+//! stragglers and churn, run as a long-horizon multi-batch session under
+//! the three membership policies (take-all / cost-guided / oracle), with
+//! the admission cost/throughput frontier of the first decision printed.
+//!
+//! Run: `cargo run --release --example session_select -- --devices 256 --stragglers 0.3`
+
+use cleave::cluster::churn::ChurnConfig;
+use cleave::cluster::fleet::FleetConfig;
+use cleave::cluster::pool::{DevicePool, PoolConfig};
+use cleave::model::config::{ModelSpec, TrainSetup};
+use cleave::model::dag::GemmDag;
+use cleave::sched::cost::{CostModel, PsParams};
+use cleave::sched::fastpath::SolverCache;
+use cleave::sched::select::{select_devices, SelectConfig};
+use cleave::sim::session::{run_session, Policy, SessionConfig};
+use cleave::util::cli::Cli;
+use cleave::util::fmt_secs;
+use cleave::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let args = Cli::new("session_select", "fleet admission under churn")
+        .opt("model", Some("OPT-13B"), "model preset")
+        .opt("devices", Some("256"), "candidate pool size")
+        .opt("stragglers", Some("0.3"), "hidden-straggler fraction")
+        .opt("batches", Some("8"), "session length in batches")
+        .opt("seed", Some("11"), "pool seed")
+        .parse();
+    let spec = ModelSpec::preset(args.get_str("model")?)?;
+    let setup = TrainSetup::default();
+    let dag = GemmDag::build(&spec, &setup);
+    let cm = CostModel::default().with_effective_flops();
+    let ps = PsParams::default();
+    let pool_cfg = PoolConfig {
+        fleet: FleetConfig {
+            n_devices: args.get_usize("devices")?,
+            straggler_fraction: args.get_f64("stragglers")?,
+            seed: args.get_u64("seed")?,
+            ..FleetConfig::default()
+        },
+        ..PoolConfig::default()
+    };
+
+    // The first admission decision, with its probed frontier.
+    let pool = DevicePool::sample(&pool_cfg);
+    let selectable = pool.selectable();
+    let mut cache = SolverCache::new();
+    let out = select_devices(
+        &pool.planning_devices(&selectable),
+        &dag,
+        &cm,
+        &ps,
+        &SelectConfig::default(),
+        &mut cache,
+    );
+    println!(
+        "pool {} ({} hidden stragglers): admitted {} (stragglers among them: {}), {} probes",
+        pool.len(),
+        pool.n_stragglers(&selectable),
+        out.admitted.len(),
+        pool.n_stragglers(
+            &out.admitted.iter().map(|&j| selectable[j]).collect::<Vec<_>>()
+        ),
+        out.probes
+    );
+    let mut ft = Table::new(&["admitted n", "T*", "PS fan-out", "churn loss", "objective"]);
+    for p in &out.frontier {
+        ft.row(&[
+            p.n.to_string(),
+            fmt_secs(p.t_star),
+            fmt_secs(p.ps_cost),
+            fmt_secs(p.churn_loss),
+            fmt_secs(p.objective),
+        ]);
+    }
+    ft.print();
+
+    // Full sessions under churn, one per membership policy.
+    let churn = ChurnConfig {
+        fail_rate_per_hour: 0.05,
+        join_rate_per_hour: 60.0,
+    };
+    let mut st = Table::new(&[
+        "policy",
+        "mean batch",
+        "p95 batch",
+        "throughput",
+        "failures",
+        "joins",
+        "final admitted",
+    ]);
+    for policy in [Policy::TakeAll, Policy::CostGuided, Policy::Oracle] {
+        let mut pool = DevicePool::sample(&pool_cfg);
+        let cfg = SessionConfig {
+            n_batches: args.get_usize("batches")?,
+            epoch_batches: 3,
+            churn,
+            policy,
+            ..SessionConfig::default()
+        };
+        let r = run_session(&mut pool, &dag, &cm, &ps, &cfg);
+        let last = r.decisions.last().expect("at least the initial decision");
+        st.row(&[
+            policy.name().into(),
+            fmt_secs(r.mean_batch_s),
+            fmt_secs(r.p95_batch_s),
+            format!("{:.1}%", r.effective_throughput * 100.0),
+            r.failures.to_string(),
+            r.joins.to_string(),
+            format!("{} ({} stragglers)", last.admitted, last.stragglers_admitted),
+        ]);
+    }
+    st.print();
+    println!(
+        "\ntake-all trusts advertised capability and pays the hidden-straggler\n\
+         blow-up; cost-guided admission on the reliability-discounted view\n\
+         recovers most of the oracle's throughput"
+    );
+    Ok(())
+}

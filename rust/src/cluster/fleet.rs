@@ -163,6 +163,43 @@ pub struct Fleet {
     pub devices: Vec<Device>,
 }
 
+/// Sample one device from the §2.1 measurement priors — the per-device core
+/// of [`Fleet::sample`] (the draw order is part of the crate's determinism
+/// contract), also used by [`crate::cluster::pool::DevicePool`] to sample
+/// session joiners one at a time.
+pub fn sample_device(rng: &mut Rng, cfg: &FleetConfig, id: DeviceId) -> Device {
+    let is_phone = rng.bernoulli(cfg.phone_fraction);
+    let class = if is_phone {
+        DeviceClass::Phone
+    } else {
+        DeviceClass::Laptop
+    };
+    let flops = match class {
+        DeviceClass::Phone => rng.uniform_in(5e12, 7e12),
+        DeviceClass::Laptop => rng.uniform_in(15e12, 27e12),
+    };
+    let dl_bw = rng.uniform_in(10e6, 100e6);
+    // uplink: 5-10 MB/s but never faster than DL (asymmetry >= 1)
+    let ul_bw = rng.uniform_in(5e6, 10e6).min(dl_bw);
+    let dl_lat = rng.uniform_in(0.010, 0.050);
+    let ul_lat = rng.uniform_in(0.010, 0.050);
+    Device {
+        id,
+        class,
+        flops,
+        utilization: cfg.utilization,
+        dl_bw,
+        ul_bw,
+        dl_lat,
+        ul_lat,
+        mem: match class {
+            DeviceClass::Phone => PHONE_MEM,
+            DeviceClass::Laptop => LAPTOP_MEM,
+        },
+        straggler: false,
+    }
+}
+
 impl Fleet {
     /// Sample a heterogeneous fleet.
     ///
@@ -175,36 +212,7 @@ impl Fleet {
         let mut rng = Rng::new(cfg.seed);
         let mut devices = Vec::with_capacity(cfg.n_devices);
         for id in 0..cfg.n_devices {
-            let is_phone = rng.bernoulli(cfg.phone_fraction);
-            let class = if is_phone {
-                DeviceClass::Phone
-            } else {
-                DeviceClass::Laptop
-            };
-            let flops = match class {
-                DeviceClass::Phone => rng.uniform_in(5e12, 7e12),
-                DeviceClass::Laptop => rng.uniform_in(15e12, 27e12),
-            };
-            let dl_bw = rng.uniform_in(10e6, 100e6);
-            // uplink: 5-10 MB/s but never faster than DL (asymmetry >= 1)
-            let ul_bw = rng.uniform_in(5e6, 10e6).min(dl_bw);
-            let dl_lat = rng.uniform_in(0.010, 0.050);
-            let ul_lat = rng.uniform_in(0.010, 0.050);
-            devices.push(Device {
-                id: id as DeviceId,
-                class,
-                flops,
-                utilization: cfg.utilization,
-                dl_bw,
-                ul_bw,
-                dl_lat,
-                ul_lat,
-                mem: match class {
-                    DeviceClass::Phone => PHONE_MEM,
-                    DeviceClass::Laptop => LAPTOP_MEM,
-                },
-                straggler: false,
-            });
+            devices.push(sample_device(&mut rng, cfg, id as DeviceId));
         }
         // Straggler injection: uniformly chosen, 10x slower in compute AND
         // both link directions (Figure 6's setting).

@@ -1,10 +1,13 @@
 //! The edge-device substrate: heterogeneous fleets, asymmetric links,
-//! heavy-tailed latency, and churn (paper §2.1 and Appendix C).
+//! heavy-tailed latency, churn (paper §2.1 and Appendix C), and candidate
+//! pools with membership state for long-horizon sessions.
 
 pub mod churn;
 pub mod device;
 pub mod fleet;
 pub mod network;
+pub mod pool;
 
 pub use device::{Device, DeviceClass, DeviceId};
 pub use fleet::{Fleet, FleetConfig};
+pub use pool::{Availability, DevicePool, PoolConfig};

@@ -1,0 +1,359 @@
+//! Candidate device pools for long-horizon training sessions — the
+//! substrate of the paper's third pillar ("a cost optimization model to
+//! guide device selection and training workload distribution").
+//!
+//! A [`DevicePool`] layers membership state over the sampled fleet: every
+//! device is a *candidate*, an *active* participant, or *departed* (churned
+//! out). Two capability records are kept per device:
+//!
+//! * `advertised` — what the device registers with the PS (its optimistic
+//!   capability report);
+//! * `delivered` — what it actually sustains under load. Hidden stragglers
+//!   (Figure 6's population) advertise clean parameters but deliver
+//!   `straggler_factor`x less compute and bandwidth.
+//!
+//! The pool also carries a noisy *reliability estimate* per device — the
+//! coordinator's belief about `delivered / advertised`, as a real system
+//! would accumulate from per-shard service-time observations. The
+//! [`DevicePool::planning_devices`] view (advertised scaled by estimated
+//! reliability) is what the cost-model-guided selector
+//! ([`crate::sched::select`]) plans against; take-all admission plans on
+//! the raw advertised reports; an oracle plans on `delivered` directly.
+//!
+//! Joins follow a diurnal availability profile
+//! ([`DevicePool::availability_factor`]): edge devices are idle — and thus
+//! available — mostly around a peak hour, which the session simulator uses
+//! to thin the Poisson join stream for scenario diversity.
+
+use crate::cluster::device::{Device, DeviceId};
+use crate::cluster::fleet::{sample_device, Fleet, FleetConfig};
+use crate::util::rng::Rng;
+
+/// Membership state of a pool device.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Availability {
+    /// registered with the PS, not currently in the active training set
+    Candidate,
+    /// admitted to the active training set
+    Active,
+    /// churned out (disconnected / withdrawn); never re-admitted as-is —
+    /// a returning device re-registers as a fresh join
+    Departed,
+}
+
+/// Pool sampling configuration.
+#[derive(Clone, Debug)]
+pub struct PoolConfig {
+    /// candidate-pool priors; `straggler_fraction` here is the *hidden*
+    /// straggler rate (stragglers advertise clean parameters)
+    pub fleet: FleetConfig,
+    /// relative noise (std) of the reliability estimate around the true
+    /// delivered/advertised ratio
+    pub reliability_noise: f64,
+    /// diurnal availability swing in [0, 1]: 0 = flat, 1 = full swing
+    pub diurnal_amplitude: f64,
+    /// local hour of peak availability (edge devices idle in the evening)
+    pub peak_hour: f64,
+    /// seed for reliability noise and join sampling (independent of the
+    /// fleet seed so the same pool can replay different join streams)
+    pub seed: u64,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig {
+            fleet: FleetConfig::default(),
+            reliability_noise: 0.2,
+            diurnal_amplitude: 0.5,
+            peak_hour: 20.0,
+            seed: 7,
+        }
+    }
+}
+
+/// One pool member: paired capability records + the coordinator's
+/// reliability belief + membership state.
+#[derive(Clone, Debug)]
+pub struct PoolDevice {
+    /// capability the device registered (optimistic for hidden stragglers)
+    pub advertised: Device,
+    /// capability it actually sustains (what simulation executes at)
+    pub delivered: Device,
+    /// noisy estimate of delivered/advertised in (0, 1]
+    pub reliability: f64,
+    pub state: Availability,
+}
+
+/// A candidate pool with membership state, layered over [`Fleet`] sampling.
+#[derive(Clone, Debug)]
+pub struct DevicePool {
+    pub devices: Vec<PoolDevice>,
+    cfg: PoolConfig,
+    rng: Rng,
+    next_id: DeviceId,
+}
+
+impl DevicePool {
+    /// Sample a candidate pool. The advertised record of each device is its
+    /// straggler-free twin (same seed, same priors — see the pairing test
+    /// in [`crate::cluster::fleet`]); `delivered` carries the hidden
+    /// degradation.
+    pub fn sample(cfg: &PoolConfig) -> DevicePool {
+        let delivered = Fleet::sample(&cfg.fleet);
+        let clean_cfg = FleetConfig {
+            straggler_fraction: 0.0,
+            ..cfg.fleet.clone()
+        };
+        let advertised = Fleet::sample(&clean_cfg);
+        let mut rng = Rng::new(cfg.seed ^ 0x9E37_79B9_7F4A_7C15);
+        let devices = advertised
+            .devices
+            .into_iter()
+            .zip(delivered.devices)
+            .map(|(adv, del)| {
+                let reliability = estimate_reliability(&adv, &del, cfg.reliability_noise, &mut rng);
+                PoolDevice {
+                    advertised: adv,
+                    delivered: del,
+                    reliability,
+                    state: Availability::Candidate,
+                }
+            })
+            .collect::<Vec<_>>();
+        let next_id = devices.len() as DeviceId;
+        DevicePool {
+            devices,
+            cfg: cfg.clone(),
+            rng,
+            next_id,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    /// Indices eligible for admission (candidate or currently active).
+    pub fn selectable(&self) -> Vec<usize> {
+        (0..self.devices.len())
+            .filter(|&i| self.devices[i].state != Availability::Departed)
+            .collect()
+    }
+
+    /// Indices currently in the active training set.
+    pub fn active(&self) -> Vec<usize> {
+        (0..self.devices.len())
+            .filter(|&i| self.devices[i].state == Availability::Active)
+            .collect()
+    }
+
+    /// Replace the active set: everything in `idx` becomes `Active`, every
+    /// other non-departed device drops back to `Candidate`.
+    pub fn set_active(&mut self, idx: &[usize]) {
+        for d in &mut self.devices {
+            if d.state == Availability::Active {
+                d.state = Availability::Candidate;
+            }
+        }
+        for &i in idx {
+            assert!(
+                self.devices[i].state == Availability::Candidate,
+                "cannot activate departed device {i}"
+            );
+            self.devices[i].state = Availability::Active;
+        }
+    }
+
+    /// Mark a device as churned out.
+    pub fn depart(&mut self, idx: usize) {
+        self.devices[idx].state = Availability::Departed;
+    }
+
+    /// A new device joins the pool as a candidate (hidden-straggler chance
+    /// follows the pool priors). Returns its index.
+    pub fn join(&mut self) -> usize {
+        let adv = sample_device(&mut self.rng, &self.cfg.fleet, self.next_id);
+        self.next_id += 1;
+        let mut del = adv.clone();
+        if self.rng.bernoulli(self.cfg.fleet.straggler_fraction) {
+            del.straggler = true;
+            del.flops /= self.cfg.fleet.straggler_factor;
+            del.dl_bw /= self.cfg.fleet.straggler_factor;
+            del.ul_bw /= self.cfg.fleet.straggler_factor;
+        }
+        let reliability =
+            estimate_reliability(&adv, &del, self.cfg.reliability_noise, &mut self.rng);
+        self.devices.push(PoolDevice {
+            advertised: adv,
+            delivered: del,
+            reliability,
+            state: Availability::Candidate,
+        });
+        self.devices.len() - 1
+    }
+
+    /// Diurnal availability multiplier in `[1 - amplitude, 1]`, peaking at
+    /// `peak_hour` (inhomogeneous-Poisson thinning factor for joins).
+    pub fn availability_factor(&self, t_secs: f64) -> f64 {
+        let a = self.cfg.diurnal_amplitude.clamp(0.0, 1.0);
+        let hour = (t_secs / 3600.0).rem_euclid(24.0);
+        let phase = (hour - self.cfg.peak_hour) / 24.0 * std::f64::consts::TAU;
+        1.0 - a * 0.5 * (1.0 - phase.cos())
+    }
+
+    /// Advertised capability records of `idx` (what take-all admission
+    /// schedules against).
+    pub fn advertised_devices(&self, idx: &[usize]) -> Vec<Device> {
+        idx.iter().map(|&i| self.devices[i].advertised.clone()).collect()
+    }
+
+    /// Delivered capability records of `idx` (what simulation executes at;
+    /// also the oracle planner's view).
+    pub fn delivered_devices(&self, idx: &[usize]) -> Vec<Device> {
+        idx.iter().map(|&i| self.devices[i].delivered.clone()).collect()
+    }
+
+    /// Reliability-discounted planning view of `idx`: advertised compute and
+    /// bandwidth scaled by the estimated reliability. This is the
+    /// cost-model-guided selector's belief about deliverable capability.
+    pub fn planning_devices(&self, idx: &[usize]) -> Vec<Device> {
+        idx.iter()
+            .map(|&i| {
+                let p = &self.devices[i];
+                let mut d = p.advertised.clone();
+                d.flops *= p.reliability;
+                d.dl_bw *= p.reliability;
+                d.ul_bw *= p.reliability;
+                d
+            })
+            .collect()
+    }
+
+    /// How many of `idx` are hidden stragglers (ground truth; used by
+    /// benches/tests to audit selection decisions).
+    pub fn n_stragglers(&self, idx: &[usize]) -> usize {
+        idx.iter().filter(|&&i| self.devices[i].delivered.straggler).count()
+    }
+}
+
+/// Noisy reliability estimate: the true delivered/advertised compute ratio
+/// perturbed by relative Gaussian noise, clamped into (0, 1].
+fn estimate_reliability(adv: &Device, del: &Device, noise: f64, rng: &mut Rng) -> f64 {
+    let ratio = del.flops / adv.flops;
+    (ratio * (1.0 + noise * rng.normal())).clamp(0.02, 1.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool_cfg(n: usize, straggle: f64) -> PoolConfig {
+        PoolConfig {
+            fleet: FleetConfig {
+                n_devices: n,
+                straggler_fraction: straggle,
+                ..FleetConfig::default()
+            },
+            ..PoolConfig::default()
+        }
+    }
+
+    #[test]
+    fn advertised_is_clean_twin_of_delivered() {
+        let pool = DevicePool::sample(&pool_cfg(100, 0.3));
+        let n_straggle = pool.devices.iter().filter(|d| d.delivered.straggler).count();
+        assert_eq!(n_straggle, 30);
+        for d in &pool.devices {
+            assert!(!d.advertised.straggler);
+            if d.delivered.straggler {
+                assert!((d.advertised.flops / d.delivered.flops - 10.0).abs() < 1e-9);
+                assert!((d.advertised.dl_bw / d.delivered.dl_bw - 10.0).abs() < 1e-9);
+            } else {
+                assert_eq!(d.advertised.flops, d.delivered.flops);
+                assert_eq!(d.advertised.dl_bw, d.delivered.dl_bw);
+            }
+        }
+    }
+
+    #[test]
+    fn reliability_estimates_separate_stragglers() {
+        let pool = DevicePool::sample(&pool_cfg(400, 0.3));
+        let mean = |straggler: bool| -> f64 {
+            let v: Vec<f64> = pool
+                .devices
+                .iter()
+                .filter(|d| d.delivered.straggler == straggler)
+                .map(|d| d.reliability)
+                .collect();
+            v.iter().sum::<f64>() / v.len() as f64
+        };
+        assert!(mean(false) > 0.8, "healthy mean {}", mean(false));
+        assert!(mean(true) < 0.2, "straggler mean {}", mean(true));
+        for d in &pool.devices {
+            assert!(d.reliability > 0.0 && d.reliability <= 1.0);
+        }
+    }
+
+    #[test]
+    fn planning_view_discounts_by_reliability() {
+        let pool = DevicePool::sample(&pool_cfg(20, 0.5));
+        let idx: Vec<usize> = (0..20).collect();
+        let plan = pool.planning_devices(&idx);
+        for (i, d) in plan.iter().enumerate() {
+            let p = &pool.devices[i];
+            assert!((d.flops - p.advertised.flops * p.reliability).abs() < 1.0);
+            assert!((d.dl_bw - p.advertised.dl_bw * p.reliability).abs() < 1e-6);
+            assert_eq!(d.mem, p.advertised.mem);
+        }
+    }
+
+    #[test]
+    fn membership_transitions() {
+        let mut pool = DevicePool::sample(&pool_cfg(8, 0.0));
+        assert_eq!(pool.selectable().len(), 8);
+        assert!(pool.active().is_empty());
+        pool.set_active(&[1, 3, 5]);
+        assert_eq!(pool.active(), vec![1, 3, 5]);
+        pool.depart(3);
+        assert_eq!(pool.selectable().len(), 7);
+        pool.set_active(&[1, 2]);
+        assert_eq!(pool.active(), vec![1, 2]);
+        // departed devices never come back under the same index
+        assert!(!pool.selectable().contains(&3));
+    }
+
+    #[test]
+    fn joins_extend_pool_with_fresh_ids() {
+        let mut pool = DevicePool::sample(&pool_cfg(10, 0.5));
+        let a = pool.join();
+        let b = pool.join();
+        assert_eq!((a, b), (10, 11));
+        assert_eq!(pool.len(), 12);
+        assert_ne!(pool.devices[a].advertised.id, pool.devices[b].advertised.id);
+        assert_eq!(pool.devices[a].state, Availability::Candidate);
+        // joiners can be hidden stragglers too: many joins hit both kinds
+        let mut seen = [false, false];
+        for _ in 0..64 {
+            let j = pool.join();
+            seen[usize::from(pool.devices[j].delivered.straggler)] = true;
+        }
+        assert_eq!(seen, [true, true]);
+    }
+
+    #[test]
+    fn diurnal_availability_peaks_at_peak_hour() {
+        let pool = DevicePool::sample(&pool_cfg(4, 0.0));
+        let peak = pool.availability_factor(20.0 * 3600.0);
+        let trough = pool.availability_factor(8.0 * 3600.0);
+        assert!((peak - 1.0).abs() < 1e-12);
+        assert!((trough - 0.5).abs() < 1e-12, "trough {trough}");
+        for h in 0..48 {
+            let f = pool.availability_factor(h as f64 * 3600.0);
+            assert!((0.5..=1.0).contains(&f));
+        }
+    }
+}

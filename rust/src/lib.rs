@@ -24,10 +24,10 @@
 //! |---|---|
 //! | [`util`] | offline-image substrates: PRNG, stats, JSON, CLI, threads, bench harness |
 //! | [`model`] | model specs, FLOP/memory accounting (Tables 1–4), the GEMM DAG (Table 6) |
-//! | [`cluster`] | heterogeneous device fleet, link asymmetry, Pareto tails, churn |
-//! | [`sched`] | the §4 cost model, makespan solver, output-grid tiling, §4.2 recovery, CVaR |
+//! | [`cluster`] | heterogeneous device fleet, link asymmetry, Pareto tails, churn, candidate pools |
+//! | [`sched`] | the §4 cost model, makespan solver, output-grid tiling, §4.2 recovery, CVaR, device selection |
 //! | [`baselines`] | DTFM, Alpa, cloud estimators, recovery baselines, Appendix-A volumes |
-//! | [`sim`] | discrete per-batch simulator + failure injection (drives Figures 3–10) |
+//! | [`sim`] | discrete per-batch simulator + failure injection + selection sessions (Figures 3–10, fig11) |
 //! | [`coordinator`] | live PS + workers: dispatch/collect, Freivalds verify, rust Adam, trainer |
 //! | [`runtime`] | PJRT bridge: HLO text -> compile -> execute; host GEMM fallback |
 

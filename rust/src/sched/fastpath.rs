@@ -681,6 +681,20 @@ fn solve_gemm_view_impl(
     (assignment, stats)
 }
 
+/// Reuse counters of a [`SolverCache`] — how each per-shape solve was
+/// served. The admission loop ([`crate::sched::select`]) and
+/// `benches/fig11_selection.rs` assert on these: after the first cold
+/// solve per shape, every selection probe must run memo- or hint-warm.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    /// exact (fleet fingerprint + context, shape) memo returns
+    pub memo_hits: usize,
+    /// solves bracket-warm-started from a prior per-shape `T*` hint
+    pub warm_solves: usize,
+    /// solves with neither memo nor hint (cold bracket protocol)
+    pub cold_solves: usize,
+}
+
 /// Warm-start and memoization state shared across solves (benches, churn
 /// sweeps, the recovery path). See the module docs.
 #[derive(Default)]
@@ -689,6 +703,7 @@ pub struct SolverCache {
     hints: HashMap<GemmShape, f64>,
     /// exact reuse keyed by (fleet fingerprint + solver context, shape)
     memo: HashMap<(u64, GemmShape), (GemmAssignment, SolverStats)>,
+    stats: CacheStats,
 }
 
 impl SolverCache {
@@ -699,11 +714,17 @@ impl SolverCache {
     pub fn clear(&mut self) {
         self.hints.clear();
         self.memo.clear();
+        self.stats = CacheStats::default();
     }
 
     /// Number of memoized exact solves (diagnostics).
     pub fn memo_len(&self) -> usize {
         self.memo.len()
+    }
+
+    /// How the solves routed through this cache were served.
+    pub fn stats(&self) -> CacheStats {
+        self.stats
     }
 }
 
@@ -723,6 +744,22 @@ fn cache_ctx(view: &FleetView, cm: &CostModel, opts: &SolverOptions) -> u64 {
     h
 }
 
+/// Distinct GEMM scheduling shapes of a DAG in first-seen order — the
+/// per-shape solve unit shared by the DAG solvers, the admission optimizer
+/// ([`crate::sched::select`]), and the bench warm-path gates.
+pub fn distinct_shapes(dag: &GemmDag) -> Vec<GemmShape> {
+    let mut shapes: Vec<GemmShape> = Vec::new();
+    for level in &dag.levels {
+        for g in &level.gemms {
+            let shape = GemmShape::new(g.m, g.n, g.q, g.count);
+            if !shapes.contains(&shape) {
+                shapes.push(shape);
+            }
+        }
+    }
+    shapes
+}
+
 /// Solve the full DAG: one assignment per distinct shape, solved in
 /// parallel across the thread pool, with optional warm-start/memo reuse.
 /// This is the engine behind [`crate::sched::solver::solve_dag`] and
@@ -738,17 +775,7 @@ pub fn solve_dag_fast(
     let t0 = Instant::now();
     let view = FleetView::build(devices);
     let ctx = cache_ctx(&view, cm, opts);
-
-    // Distinct shapes in first-seen DAG order (deterministic aggregation).
-    let mut shapes: Vec<GemmShape> = Vec::new();
-    for level in &dag.levels {
-        for g in &level.gemms {
-            let shape = GemmShape::new(g.m, g.n, g.q, g.count);
-            if !shapes.contains(&shape) {
-                shapes.push(shape);
-            }
-        }
-    }
+    let shapes = distinct_shapes(dag);
 
     // Snapshot reuse state, then solve the remaining shapes in parallel.
     type Job = (GemmShape, Option<f64>, Option<(GemmAssignment, SolverStats)>);
@@ -782,10 +809,17 @@ pub fn solve_dag_fast(
         devices_considered: devices.len(),
         ..SolverStats::default()
     };
-    for (shape, (a, s)) in shapes.iter().zip(&solved) {
+    for ((shape, hint, memo), (a, s)) in jobs.iter().zip(&solved) {
         agg.decision_vars += s.decision_vars;
         agg.bisection_iters += s.bisection_iters;
         if let Some(c) = cache.as_deref_mut() {
+            if memo.is_some() {
+                c.stats.memo_hits += 1;
+            } else if hint.is_some() {
+                c.stats.warm_solves += 1;
+            } else {
+                c.stats.cold_solves += 1;
+            }
             c.hints.insert(*shape, s.continuous_makespan);
             if c.memo.len() > 8192 {
                 c.memo.clear(); // churn sweeps never need more; bound memory
@@ -884,6 +918,35 @@ mod tests {
             let mrel = (wa.makespan - ca.makespan).abs() / ca.makespan;
             assert!(mrel <= 1e-6, "hint x{hint_scale}: makespan rel={mrel}");
         }
+    }
+
+    #[test]
+    fn cache_stats_track_reuse_levels() {
+        let spec = ModelSpec::preset("OPT-13B").unwrap();
+        let dag = GemmDag::build(&spec, &TrainSetup::default());
+        let fleet = Fleet::median(32);
+        let opts = SolverOptions::default();
+        let ps = PsParams::default();
+        let mut cache = SolverCache::new();
+        let _ = solve_dag_fast(&fleet.devices, &dag, &cm(), &ps, &opts, Some(&mut cache));
+        let s1 = cache.stats();
+        assert!(s1.cold_solves > 0);
+        assert_eq!((s1.memo_hits, s1.warm_solves), (0, 0));
+        // identical fleet: every shape is an exact memo hit
+        let _ = solve_dag_fast(&fleet.devices, &dag, &cm(), &ps, &opts, Some(&mut cache));
+        let s2 = cache.stats();
+        assert_eq!(s2.memo_hits, s1.cold_solves);
+        assert_eq!(s2.cold_solves, s1.cold_solves);
+        // churned fleet: misses the memo but every shape has a warm hint —
+        // nothing ever solves cold again
+        let mut churned = fleet.clone();
+        churned.remove(0);
+        let _ = solve_dag_fast(&churned.devices, &dag, &cm(), &ps, &opts, Some(&mut cache));
+        let s3 = cache.stats();
+        assert_eq!(s3.cold_solves, s1.cold_solves);
+        assert_eq!(s3.warm_solves, s1.cold_solves);
+        cache.clear();
+        assert_eq!(cache.stats(), CacheStats::default());
     }
 
     #[test]

@@ -13,18 +13,25 @@
 //! Fleet-scale solves route through [`fastpath`]: SoA fleet views, an
 //! O(log D) breakpoint/prefix-sum feasibility oracle, parallel
 //! distinct-shape solves, and warm-start/memo reuse across churn sweeps.
+//!
+//! Device selection ([`select`]) closes the paper's third pillar: a
+//! marginal-utility admission optimizer that probes solved `T*` (warm, via
+//! the fast path) against PS fan-out, CVaR tail risk, and expected churn
+//! loss, reporting the cost/throughput frontier.
 
 pub mod assignment;
 pub mod cost;
 pub mod cvar;
 pub mod fastpath;
 pub mod recovery;
+pub mod select;
 pub mod solver;
 pub mod tiling;
 
 pub use assignment::{GemmAssignment, Rect, Schedule};
 pub use cost::{CostModel, GemmShape};
-pub use fastpath::{ShapeOracle, SolverCache};
+pub use fastpath::{CacheStats, ShapeOracle, SolverCache};
+pub use select::{select_devices, FrontierPoint, SelectConfig, SelectionOutcome};
 pub use solver::{
     solve_dag, solve_dag_cached, solve_dag_reference, solve_gemm, solve_gemm_reference,
     SolverOptions, SolverStats,

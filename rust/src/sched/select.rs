@@ -1,0 +1,457 @@
+//! Cost-model-guided device selection (the paper's third pillar): a
+//! marginal-utility admission optimizer over a candidate pool.
+//!
+//! Admitting a device is never free: each active participant adds PS
+//! fan-out/service time, churn exposure (one more Poisson failure source
+//! whose mid-batch departure costs a §4.2 recovery), and tail risk
+//! (Appendix C). Its benefit — the reduction in solved makespan `T*` — has
+//! sharply diminishing returns and is near zero for stragglers. This module
+//! searches that trade-off explicitly:
+//!
+//! * candidates are ordered by a heterogeneity-aware capability score
+//!   ([`CostModel::max_area_in`] at a reference horizon, so compute, both
+//!   link directions, latency floors and memory all enter);
+//! * prefix sets of that order are probed by *solving* them — each probe is
+//!   a [`solve_dag_cached`] call whose feasibility oracle is the O(log D)
+//!   breakpoint/prefix-sum [`crate::sched::fastpath::ShapeOracle`] and
+//!   whose bisection bracket is warm-started from the previous probe's
+//!   per-shape `T*` hints, so the admission loop never re-runs the cold
+//!   bracket protocol (asserted via [`crate::sched::fastpath::CacheStats`]);
+//! * the probed `(n, T*, costs)` points form the reported
+//!   **cost/throughput frontier**; a geometric sweep plus local refinement
+//!   finds the objective minimum, and a final eviction pass drops admitted
+//!   devices the solver left idle (the Eq. 6 idle branch made their
+//!   admission pure cost).
+//!
+//! Straggler risk enters through the Appendix-C CVaR adjustment
+//! ([`crate::sched::cvar::risk_adjusted`]): planning latencies are replaced
+//! by their Pareto `CVaR_beta`, so the probed `T*` prices tail risk, not
+//! the mean. Expected churn loss comes from the §2.3 Poisson model
+//! ([`expected_failures`]).
+
+use std::collections::BTreeMap;
+
+use crate::cluster::churn::{expected_failures, ChurnConfig};
+use crate::cluster::device::Device;
+use crate::model::dag::GemmDag;
+use crate::sched::assignment::Schedule;
+use crate::sched::cost::{CostModel, GemmShape, PsParams};
+use crate::sched::cvar::risk_adjusted;
+use crate::sched::fastpath::{distinct_shapes, SolverCache};
+use crate::sched::solver::{solve_dag_cached, SolverOptions};
+
+/// Reference horizon for the capability ordering score.
+const SCORE_HORIZON_S: f64 = 2.0;
+/// "Infinite" horizon used to read a device's memory-capped max area.
+const CAP_HORIZON_S: f64 = 1e18;
+
+/// Admission-cost model configuration.
+#[derive(Clone, Debug)]
+pub struct SelectConfig {
+    /// PS fan-out/service time per admitted device per batch (connection
+    /// handling + dispatch bookkeeping on top of the payload service the
+    /// simulator already accounts at [`PsParams::net_bw`])
+    pub ps_conn_s: f64,
+    /// Appendix-C tail planning: replace planning latencies by their Pareto
+    /// `CVaR_beta` with `(alpha, beta)`; `None` plans on the mean
+    pub cvar: Option<(f64, f64)>,
+    /// churn process the admitted set is exposed to
+    pub churn: ChurnConfig,
+    /// expected recovery latency per failure, as a fraction of batch time
+    /// (redistributed recompute across survivors, §5.3)
+    pub recovery_frac: f64,
+    /// fixed §4.2 re-solve cost per failure, seconds
+    pub resolve_s: f64,
+    pub opts: SolverOptions,
+    /// local-refinement rounds around the best frontier point
+    pub refine_rounds: usize,
+}
+
+impl Default for SelectConfig {
+    fn default() -> Self {
+        SelectConfig {
+            ps_conn_s: 5e-4,
+            cvar: Some((2.0, 0.05)),
+            churn: ChurnConfig::default(),
+            recovery_frac: 0.02,
+            resolve_s: 0.02,
+            opts: SolverOptions::default(),
+            refine_rounds: 8,
+        }
+    }
+}
+
+/// One probed admission size on the cost/throughput frontier.
+#[derive(Clone, Copy, Debug)]
+pub struct FrontierPoint {
+    /// admitted device count
+    pub n: usize,
+    /// solved (risk-adjusted) per-batch time estimate at this size
+    pub t_star: f64,
+    /// PS fan-out/service cost per batch
+    pub ps_cost: f64,
+    /// expected churn loss per batch
+    pub churn_loss: f64,
+    /// `t_star + ps_cost + churn_loss` — what admission minimizes
+    pub objective: f64,
+}
+
+/// Result of one admission optimization.
+#[derive(Clone, Debug)]
+pub struct SelectionOutcome {
+    /// admitted indices into the candidate slice, sorted ascending
+    pub admitted: Vec<usize>,
+    /// planned (risk-adjusted) per-batch time of the admitted set
+    pub t_star: f64,
+    /// planned per-batch objective of the admitted set
+    pub objective: f64,
+    /// probed `(n, T*, costs)` points, ascending in `n` (the eviction-pass
+    /// point, if adopted, is appended last and may repeat an `n`)
+    pub frontier: Vec<FrontierPoint>,
+    /// number of DAG solves spent probing (all memo- or hint-warm after the
+    /// first per shape)
+    pub probes: usize,
+}
+
+fn objective_point(k: usize, batch_s: f64, cfg: &SelectConfig) -> FrontierPoint {
+    let ps_cost = k as f64 * cfg.ps_conn_s;
+    let churn_loss = expected_failures(&cfg.churn, k, batch_s)
+        * (cfg.recovery_frac * batch_s + cfg.resolve_s);
+    FrontierPoint {
+        n: k,
+        t_star: batch_s,
+        ps_cost,
+        churn_loss,
+        objective: batch_s + ps_cost + churn_loss,
+    }
+}
+
+/// Smallest prefix of `order` whose aggregate memory-capped areas cover
+/// every distinct DAG shape (probing below this would make the bisection
+/// bracket search diverge), with headroom against sitting exactly on the
+/// cap boundary where `T*` explodes.
+fn min_feasible_prefix(
+    planning: &[Device],
+    order: &[usize],
+    dag: &GemmDag,
+    cm: &CostModel,
+) -> usize {
+    let n = order.len();
+    let mut k_min = 1usize;
+    for shape in &distinct_shapes(dag) {
+        let area = shape.out_area();
+        let mut acc = 0.0;
+        let mut k = 0usize;
+        for &i in order {
+            acc += cm.max_area_in(&planning[i], CAP_HORIZON_S, shape);
+            k += 1;
+            if acc >= area {
+                break;
+            }
+        }
+        if acc < area {
+            k = n; // infeasible even with everyone: let the solve surface it
+        }
+        k_min = k_min.max(k);
+    }
+    ((k_min + k_min / 4 + 1).min(n)).max(1)
+}
+
+/// Probe state: solved prefix points plus the shared warm cache.
+struct Prober<'a> {
+    planning: &'a [Device],
+    order: &'a [usize],
+    dag: &'a GemmDag,
+    cm: &'a CostModel,
+    ps: &'a PsParams,
+    cfg: &'a SelectConfig,
+    cache: &'a mut SolverCache,
+    probed: BTreeMap<usize, FrontierPoint>,
+    probes: usize,
+}
+
+impl Prober<'_> {
+    /// Solve the subset given by local positions into `order`.
+    fn solve(&mut self, local: &[usize]) -> Schedule {
+        let subset: Vec<Device> = local
+            .iter()
+            .map(|&j| self.planning[self.order[j]].clone())
+            .collect();
+        let (sched, _) =
+            solve_dag_cached(&subset, self.dag, self.cm, self.ps, &self.cfg.opts, self.cache);
+        self.probes += 1;
+        sched
+    }
+
+    /// Probe the best-`k` prefix (cached per `k`).
+    fn prefix(&mut self, k: usize) -> FrontierPoint {
+        if let Some(p) = self.probed.get(&k) {
+            return *p;
+        }
+        let local: Vec<usize> = (0..k).collect();
+        let sched = self.solve(&local);
+        let p = objective_point(k, sched.batch_time(), self.cfg);
+        self.probed.insert(k, p);
+        p
+    }
+
+    /// Re-materialize a prefix schedule (exact memo hit after `prefix`).
+    fn schedule_of(&mut self, k: usize) -> Schedule {
+        let local: Vec<usize> = (0..k).collect();
+        self.solve(&local)
+    }
+
+    /// Probe an arbitrary subset (the eviction pass).
+    fn subset(&mut self, local: &[usize]) -> FrontierPoint {
+        let sched = self.solve(local);
+        objective_point(local.len(), sched.batch_time(), self.cfg)
+    }
+}
+
+/// Optimize admission over `candidates` (the caller's planning view — e.g.
+/// [`crate::cluster::pool::DevicePool::planning_devices`]): minimize the
+/// per-batch objective `T* + PS fan-out + expected churn loss`, with `T*`
+/// solved under the CVaR latency adjustment. Probes share `cache`, so
+/// chaining the same cache across membership epochs keeps every probe on
+/// the warm fast path.
+pub fn select_devices(
+    candidates: &[Device],
+    dag: &GemmDag,
+    cm: &CostModel,
+    ps: &PsParams,
+    cfg: &SelectConfig,
+    cache: &mut SolverCache,
+) -> SelectionOutcome {
+    assert!(!candidates.is_empty(), "empty candidate pool");
+    let planning: Vec<Device> = match cfg.cvar {
+        Some((alpha, beta)) => risk_adjusted(candidates, alpha, beta),
+        None => candidates.to_vec(),
+    };
+    let n = planning.len();
+
+    // Capability ordering at a reference horizon; ties broken by raw FLOPS.
+    let g0 = dag.levels[0].gemms[0];
+    let ref_shape = GemmShape::new(g0.m, g0.n, g0.q, g0.count);
+    let scores: Vec<f64> = planning
+        .iter()
+        .map(|d| cm.max_area_in(d, SCORE_HORIZON_S, &ref_shape))
+        .collect();
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&a, &b| {
+        scores[b]
+            .total_cmp(&scores[a])
+            .then(planning[b].flops.total_cmp(&planning[a].flops))
+    });
+
+    let k_min = min_feasible_prefix(&planning, &order, dag, cm);
+    let mut prober = Prober {
+        planning: &planning,
+        order: &order,
+        dag,
+        cm,
+        ps,
+        cfg,
+        cache,
+        probed: BTreeMap::new(),
+        probes: 0,
+    };
+
+    // Geometric sweep of prefix sizes (always including the take-all point,
+    // so selection can never report worse than admitting everyone).
+    let mut ks: Vec<usize> = Vec::new();
+    let mut k = k_min;
+    while k < n {
+        ks.push(k);
+        k = (k * 2).min(n);
+    }
+    ks.push(n);
+
+    let mut best = prober.prefix(ks[0]);
+    for &k in &ks[1..] {
+        let p = prober.prefix(k);
+        if p.objective < best.objective {
+            best = p;
+        }
+    }
+
+    // Local refinement around the sweep minimum (J is near-unimodal in the
+    // prefix size: T* falls with diminishing returns, costs rise linearly).
+    let mut step = (best.n / 8).max(1);
+    for _ in 0..cfg.refine_rounds {
+        let lo = best.n.saturating_sub(step).max(k_min);
+        let hi = (best.n + step).min(n);
+        let mut improved = false;
+        for cand in [lo, hi] {
+            if cand == best.n {
+                continue;
+            }
+            let p = prober.prefix(cand);
+            if p.objective < best.objective {
+                best = p;
+                improved = true;
+            }
+        }
+        if !improved {
+            if step == 1 {
+                break;
+            }
+            step = (step / 2).max(1);
+        }
+    }
+
+    // Eviction pass: devices the solver left idle (Eq. 6) buy nothing and
+    // still cost fan-out + churn exposure — drop them and re-verify.
+    let sched = prober.schedule_of(best.n);
+    let mut used = vec![false; best.n];
+    for a in sched.by_shape.values() {
+        for r in &a.rects {
+            used[r.device] = true;
+        }
+    }
+    let kept: Vec<usize> = (0..best.n).filter(|&j| used[j]).collect();
+    let mut chosen: Vec<usize> = (0..best.n).collect();
+    let mut final_point = best;
+    let mut evicted_point: Option<FrontierPoint> = None;
+    if !kept.is_empty() && kept.len() < best.n {
+        let p = prober.subset(&kept);
+        if p.objective <= final_point.objective {
+            chosen = kept;
+            final_point = p;
+            evicted_point = Some(p);
+        }
+    }
+
+    let mut admitted: Vec<usize> = chosen.iter().map(|&j| order[j]).collect();
+    admitted.sort_unstable();
+    let mut frontier: Vec<FrontierPoint> = prober.probed.values().copied().collect();
+    if let Some(p) = evicted_point {
+        frontier.push(p);
+    }
+    SelectionOutcome {
+        admitted,
+        t_star: final_point.t_star,
+        objective: final_point.objective,
+        frontier,
+        probes: prober.probes,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::fleet::{Fleet, FleetConfig};
+    use crate::model::config::{ModelSpec, TrainSetup};
+
+    fn setting(n: usize) -> (Vec<Device>, GemmDag) {
+        let fleet = Fleet::sample(&FleetConfig::default().with_devices(n));
+        let spec = ModelSpec::preset("OPT-13B").unwrap();
+        (fleet.devices, GemmDag::build(&spec, &TrainSetup::default()))
+    }
+
+    #[test]
+    fn admits_valid_nonempty_subset_with_frontier() {
+        let (devices, dag) = setting(64);
+        let cm = CostModel::default();
+        let mut cache = SolverCache::new();
+        let out = select_devices(
+            &devices,
+            &dag,
+            &cm,
+            &PsParams::default(),
+            &SelectConfig::default(),
+            &mut cache,
+        );
+        assert!(!out.admitted.is_empty() && out.admitted.len() <= 64);
+        for w in out.admitted.windows(2) {
+            assert!(w[0] < w[1], "admitted must be sorted unique");
+        }
+        assert!(out.admitted.iter().all(|&i| i < 64));
+        assert!(out.t_star > 0.0 && out.objective >= out.t_star);
+        assert!(out.frontier.len() >= 2);
+        assert!(out.probes >= out.frontier.len());
+        // frontier T* is monotone non-increasing in n (admission never
+        // hurts the solved makespan) within integerization noise
+        for w in out.frontier.windows(2) {
+            if w[1].n > w[0].n {
+                assert!(
+                    w[1].t_star <= w[0].t_star * 1.10,
+                    "T* rose from n={} ({}) to n={} ({})",
+                    w[0].n,
+                    w[0].t_star,
+                    w[1].n,
+                    w[1].t_star
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn frontier_costs_decompose() {
+        let (devices, dag) = setting(32);
+        let cm = CostModel::default();
+        let cfg = SelectConfig {
+            churn: ChurnConfig {
+                fail_rate_per_hour: 1.0,
+                join_rate_per_hour: 0.0,
+            },
+            ..SelectConfig::default()
+        };
+        let mut cache = SolverCache::new();
+        let out = select_devices(&devices, &dag, &cm, &PsParams::default(), &cfg, &mut cache);
+        for p in &out.frontier {
+            assert!((p.ps_cost - p.n as f64 * cfg.ps_conn_s).abs() < 1e-12);
+            assert!(p.churn_loss > 0.0);
+            let sum = p.t_star + p.ps_cost + p.churn_loss;
+            assert!((p.objective - sum).abs() < 1e-9 * sum);
+        }
+    }
+
+    #[test]
+    fn never_worse_than_take_all() {
+        let (devices, dag) = setting(48);
+        let cm = CostModel::default();
+        let mut cache = SolverCache::new();
+        let out = select_devices(
+            &devices,
+            &dag,
+            &cm,
+            &PsParams::default(),
+            &SelectConfig::default(),
+            &mut cache,
+        );
+        // the sweep always probes n = pool size, so the reported objective
+        // can never exceed take-all admission
+        let take_all = out
+            .frontier
+            .iter()
+            .find(|p| p.n == 48)
+            .expect("take-all point must be on the frontier");
+        assert!(out.objective <= take_all.objective + 1e-12);
+    }
+
+    #[test]
+    fn probes_run_warm_after_first_shape_solve() {
+        let (devices, dag) = setting(96);
+        let cm = CostModel::default();
+        let mut cache = SolverCache::new();
+        let out = select_devices(
+            &devices,
+            &dag,
+            &cm,
+            &PsParams::default(),
+            &SelectConfig::default(),
+            &mut cache,
+        );
+        let stats = cache.stats();
+        // only the very first probe solves each distinct shape cold; every
+        // later probe in the admission loop is hint- or memo-warm
+        assert!(out.probes > 1);
+        assert!(stats.cold_solves > 0);
+        assert_eq!(
+            stats.warm_solves + stats.memo_hits,
+            (out.probes - 1) * stats.cold_solves,
+            "every solve after the first per shape must be warm: probes={} {stats:?}",
+            out.probes
+        );
+    }
+}

@@ -14,7 +14,7 @@ struct Scheduled<E> {
 
 impl<E> PartialEq for Scheduled<E> {
     fn eq(&self, other: &Self) -> bool {
-        self.t == other.t && self.seq == other.seq
+        self.cmp(other) == Ordering::Equal
     }
 }
 impl<E> Eq for Scheduled<E> {}
@@ -26,11 +26,11 @@ impl<E> PartialOrd for Scheduled<E> {
 impl<E> Ord for Scheduled<E> {
     fn cmp(&self, other: &Self) -> Ordering {
         // BinaryHeap is a max-heap: reverse for earliest-first, then FIFO.
-        other
-            .t
-            .partial_cmp(&self.t)
-            .unwrap_or(Ordering::Equal)
-            .then(other.seq.cmp(&self.seq))
+        // `total_cmp` (not `partial_cmp.unwrap_or(Equal)`) keeps the heap
+        // invariant a total order even if a non-finite time slips in:
+        // NaN == Equal would silently corrupt pop ordering for every
+        // element it is compared against.
+        other.t.total_cmp(&self.t).then(other.seq.cmp(&self.seq))
     }
 }
 
@@ -61,8 +61,10 @@ impl<E> Engine<E> {
         self.now
     }
 
-    /// Schedule `payload` at absolute time `t` (must be >= now).
+    /// Schedule `payload` at absolute time `t` (must be >= now and not
+    /// NaN — a NaN event time would otherwise poison the queue order).
     pub fn at(&mut self, t: f64, payload: E) {
+        assert!(!t.is_nan(), "cannot schedule an event at NaN time");
         debug_assert!(t >= self.now, "cannot schedule into the past");
         self.heap.push(Scheduled {
             t,
@@ -129,5 +131,26 @@ mod tests {
         e.next();
         e.after(1.5, "y");
         assert_eq!(e.next().unwrap(), (6.5, "y"));
+    }
+
+    #[test]
+    #[should_panic(expected = "NaN")]
+    fn nan_event_times_are_rejected() {
+        let mut e = Engine::new();
+        e.at(f64::NAN, "poison");
+    }
+
+    #[test]
+    fn non_finite_times_keep_total_order() {
+        // The Ord impl is a total order (f64::total_cmp), so infinities
+        // sort deterministically instead of corrupting the heap.
+        let mut e = Engine::new();
+        e.at(f64::INFINITY, "last");
+        e.at(1.0, "first");
+        e.at(2.0, "second");
+        assert_eq!(e.next().unwrap().1, "first");
+        assert_eq!(e.next().unwrap().1, "second");
+        assert_eq!(e.next().unwrap().1, "last");
+        assert!(e.next().is_none());
     }
 }

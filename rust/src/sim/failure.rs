@@ -9,7 +9,7 @@
 use crate::cluster::churn::{events, ChurnConfig, ChurnEvent};
 use crate::cluster::device::Device;
 use crate::model::dag::GemmDag;
-use crate::sched::assignment::Schedule;
+use crate::sched::assignment::{GemmAssignment, Schedule};
 use crate::sched::cost::{CostModel, GemmShape};
 use crate::sched::recovery::{recover, RecoveryPlan};
 use crate::sched::solver::SolverOptions;
@@ -77,6 +77,13 @@ pub fn simulate_failure(
 pub struct ChurnRun {
     pub batches: Vec<BatchResult>,
     pub failures: usize,
+    /// `Join` events consumed: each returns the longest-departed device to
+    /// service (§3.2 — it re-syncs its cached shards on the next GEMM
+    /// round, so no latency is exposed)
+    pub joins: usize,
+    /// joins that arrived with nobody departed — standby capacity beyond
+    /// the stationary fleet
+    pub standby_joins: usize,
     pub total_recovery_s: f64,
     pub effective_throughput: f64,
 }
@@ -92,20 +99,61 @@ pub fn churn_run(
     seed: u64,
 ) -> ChurnRun {
     let mut rng = Rng::new(seed);
-    let mut eng: Engine<ChurnEvent> = Engine::new();
-
-    // Pre-compute the clean batch profile once (the schedule is static
-    // between churn events; the paper re-solves only on failure).
-    let clean = simulate_batch(devices, dag, schedule, cm, cfg);
     // Generous horizon: failures stretch batches, so leave headroom.
+    let clean = simulate_batch(devices, dag, schedule, cm, cfg);
     let horizon = clean.batch_time * n_batches as f64 * 3.0 + 1.0;
-    for e in events(churn, devices.len(), horizon, &mut rng) {
-        eng.at(e.time(), e);
+    let evs = events(churn, devices.len(), horizon, &mut rng);
+    churn_run_core(devices, dag, schedule, cm, n_batches, &evs, clean)
+}
+
+/// The deterministic-event core of [`churn_run`] (and the regression
+/// surface for `Join` handling): run `n_batches` against a caller-supplied
+/// churn event sequence.
+///
+/// A `Fail` of an in-service device charges the §4.2 recovery latency and
+/// marks it departed; repeat failures of a departed device are no-ops (it
+/// holds no work). A `Join` returns the longest-departed device to service
+/// — the paper's §3.2 rejoin, free of exposed latency because the R/C cache
+/// matrices re-sync during the next round — or counts as standby capacity
+/// when nobody is departed. The schedule itself stays fixed (the paper
+/// re-solves only the recovery subproblem); membership-adaptive re-solving
+/// lives in [`crate::sim::session`].
+pub fn churn_run_events(
+    devices: &[Device],
+    dag: &GemmDag,
+    schedule: &Schedule,
+    cm: &CostModel,
+    cfg: &SimConfig,
+    n_batches: usize,
+    evs: &[ChurnEvent],
+) -> ChurnRun {
+    let clean = simulate_batch(devices, dag, schedule, cm, cfg);
+    churn_run_core(devices, dag, schedule, cm, n_batches, evs, clean)
+}
+
+/// Shared core of [`churn_run`] / [`churn_run_events`], taking the clean
+/// batch profile the callers already computed.
+fn churn_run_core(
+    devices: &[Device],
+    dag: &GemmDag,
+    schedule: &Schedule,
+    cm: &CostModel,
+    n_batches: usize,
+    evs: &[ChurnEvent],
+    clean: BatchResult,
+) -> ChurnRun {
+    let mut eng: Engine<ChurnEvent> = Engine::new();
+    for e in evs {
+        eng.at(e.time(), *e);
     }
 
     let mut batches = Vec::with_capacity(n_batches);
     let mut failures = 0usize;
+    let mut joins = 0usize;
+    let mut standby_joins = 0usize;
     let mut total_recovery = 0.0;
+    // Devices currently departed, in departure order (FIFO rejoin).
+    let mut down: Vec<usize> = Vec::new();
     let mut t = 0.0f64;
 
     for _ in 0..n_batches {
@@ -118,23 +166,55 @@ pub fn churn_run(
                 eng.at(et, ev);
                 break;
             }
-            if let ChurnEvent::Fail { device_index, .. } = ev {
-                failures += 1;
-                let g = dag.levels[0].gemms[0];
-                let shape = GemmShape::new(g.m, g.n, g.q, g.count);
-                let assignment = &schedule.by_shape[&shape];
-                // Recovery among remaining devices (victim excluded); the
-                // device rejoins on the next GEMM round (§3.2) so the fleet
-                // size is stationary.
-                let plan = recover(
-                    devices,
-                    assignment,
-                    &[device_index % devices.len()],
-                    cm,
-                    &SolverOptions::default(),
-                );
-                total_recovery += plan.total_latency();
-                end += plan.total_latency();
+            match ev {
+                ChurnEvent::Fail { device_index, .. } => {
+                    let victim = device_index % devices.len();
+                    if down.contains(&victim) {
+                        continue; // already departed: no work to lose
+                    }
+                    failures += 1;
+                    let mut failed_set = down.clone();
+                    failed_set.push(victim);
+                    if failed_set.len() >= devices.len() {
+                        down.push(victim);
+                        continue; // nobody left to recover onto
+                    }
+                    let g = dag.levels[0].gemms[0];
+                    let shape = GemmShape::new(g.m, g.n, g.q, g.count);
+                    let assignment = &schedule.by_shape[&shape];
+                    // Shards of already-departed devices were recovered
+                    // when *they* failed: strip their rects so only the
+                    // new victim's shards count as lost, while the
+                    // survivor set still excludes everyone down.
+                    let current = GemmAssignment {
+                        shape: assignment.shape,
+                        rects: assignment
+                            .rects
+                            .iter()
+                            .filter(|r| !down.contains(&r.device))
+                            .cloned()
+                            .collect(),
+                        makespan: assignment.makespan,
+                    };
+                    let plan = recover(
+                        devices,
+                        &current,
+                        &failed_set,
+                        cm,
+                        &SolverOptions::default(),
+                    );
+                    total_recovery += plan.total_latency();
+                    end += plan.total_latency();
+                    down.push(victim);
+                }
+                ChurnEvent::Join { .. } => {
+                    joins += 1;
+                    if down.is_empty() {
+                        standby_joins += 1;
+                    } else {
+                        down.remove(0); // longest-departed rejoins first
+                    }
+                }
             }
         }
         batches.push(clean.clone());
@@ -146,6 +226,8 @@ pub fn churn_run(
     ChurnRun {
         batches,
         failures,
+        joins,
+        standby_joins,
         total_recovery_s: total_recovery,
         effective_throughput: useful / wall,
     }
@@ -221,6 +303,77 @@ mod tests {
             "throughput {}",
             run.effective_throughput
         );
+    }
+
+    #[test]
+    fn join_events_are_consumed_not_dropped() {
+        // Regression: `ChurnEvent::Join` used to be generated by
+        // `cluster::churn::events` but silently discarded by churn runs.
+        let (devices, dag, schedule) = setting(32);
+        // victim must hold work in the dominant shape the run recovers
+        let g = dag.levels[0].gemms[0];
+        let dom = GemmShape::new(g.m, g.n, g.q, g.count);
+        let victim = schedule.by_shape[&dom].active_devices()[0];
+        let fail = |t: f64| ChurnEvent::Fail {
+            t,
+            device_index: victim,
+        };
+        let run = |evs: &[ChurnEvent]| {
+            churn_run_events(
+                &devices,
+                &dag,
+                &schedule,
+                &CostModel::default(),
+                &SimConfig::default(),
+                2,
+                evs,
+            )
+        };
+
+        // Without a join, a departed device cannot fail twice.
+        let no_join = run(&[fail(1e-3), fail(2e-3)]);
+        assert_eq!(no_join.failures, 1);
+        assert_eq!(no_join.joins, 0);
+
+        // A join in between returns it to service — the second failure is
+        // real again and charges a second recovery.
+        let with_join = run(&[
+            fail(1e-3),
+            ChurnEvent::Join { t: 1.5e-3 },
+            fail(2e-3),
+        ]);
+        assert_eq!(with_join.failures, 2);
+        assert_eq!(with_join.joins, 1);
+        assert_eq!(with_join.standby_joins, 0);
+        assert!(with_join.total_recovery_s > no_join.total_recovery_s);
+        assert!(with_join.effective_throughput < no_join.effective_throughput);
+
+        // A join with nobody departed is standby capacity.
+        let standby = run(&[ChurnEvent::Join { t: 1e-3 }]);
+        assert_eq!((standby.joins, standby.standby_joins), (1, 1));
+        assert_eq!(standby.failures, 0);
+        assert_eq!(standby.effective_throughput, 1.0);
+    }
+
+    #[test]
+    fn generated_joins_flow_through_churn_run() {
+        let (devices, dag, schedule) = setting(16);
+        let run = churn_run(
+            &devices,
+            &dag,
+            &schedule,
+            &CostModel::default(),
+            &SimConfig::default(),
+            &ChurnConfig {
+                fail_rate_per_hour: 0.0,
+                join_rate_per_hour: 3600.0, // ~one per simulated second
+            },
+            3,
+            11,
+        );
+        assert!(run.joins > 0, "generated joins must be consumed");
+        assert_eq!(run.standby_joins, run.joins);
+        assert_eq!(run.failures, 0);
     }
 
     #[test]

@@ -1,12 +1,15 @@
 //! Discrete per-batch simulator: executes a solved [`crate::sched::Schedule`]
 //! over a fleet under the §4 cost model, with stochastic latency barriers
 //! (Appendix C), PS service accounting (§6 envelope), mid-batch failure
-//! injection, and multi-batch churn runs (Figures 3–10 are generated here).
+//! injection, multi-batch churn runs (Figures 3–10 are generated here),
+//! and long-horizon selection sessions over candidate pools ([`session`]).
 
 pub mod batch;
 pub mod engine;
 pub mod failure;
 pub mod metrics;
+pub mod session;
 
 pub use batch::{simulate_batch, BatchResult, SimConfig};
 pub use failure::{simulate_failure, FailureOutcome};
+pub use session::{run_session, Policy, SessionConfig, SessionReport};

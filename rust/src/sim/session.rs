@@ -1,0 +1,458 @@
+//! Long-horizon multi-batch training sessions under churn — the closed
+//! loop the paper's third pillar implies: churn process → membership
+//! decision → scheduler → simulator.
+//!
+//! A session drives the discrete-event [`Engine`] over many batches of a
+//! [`crate::cluster::pool::DevicePool`], consuming both
+//! [`ChurnEvent::Fail`] *and* [`ChurnEvent::Join`] events:
+//!
+//! * **Fail** of an active device mid-batch charges the §4.2 recovery
+//!   latency ([`recover`] over the delivered capabilities), departs the
+//!   device permanently, and re-solves the schedule over the survivors —
+//!   warm, through the session-wide [`SolverCache`] chained across every
+//!   re-solve.
+//! * **Join** registers a fresh candidate (thinned by the pool's diurnal
+//!   availability profile); it becomes admissible at the next membership
+//!   epoch.
+//! * Every `epoch_batches`, membership is re-decided by the configured
+//!   [`Policy`]: admit everything on its advertised capability (`TakeAll`),
+//!   run the cost-model-guided optimizer on the reliability-discounted
+//!   planning view (`CostGuided`), or run it on the true delivered
+//!   capabilities (`Oracle` — perfect knowledge, the upper bound).
+//!
+//! Batches are *measured* by [`simulate_batch`] on delivered capabilities,
+//! so a schedule solved on optimistic advertised reports pays the Fig. 6
+//! hidden-straggler blow-up — which is exactly what selection is for. The
+//! report records per-batch times, recovery latencies, selection decisions,
+//! and the solver-cache reuse counters (the admission loop must run warm).
+
+use crate::cluster::churn::{events, ChurnConfig, ChurnEvent};
+use crate::cluster::device::Device;
+use crate::cluster::pool::DevicePool;
+use crate::model::dag::GemmDag;
+use crate::sched::assignment::Schedule;
+use crate::sched::cost::{CostModel, GemmShape, PsParams};
+use crate::sched::fastpath::{CacheStats, SolverCache};
+use crate::sched::recovery::recover;
+use crate::sched::select::{select_devices, SelectConfig};
+use crate::sched::solver::solve_dag_cached;
+use crate::sim::batch::{simulate_batch, SimConfig};
+use crate::sim::engine::Engine;
+use crate::util::rng::Rng;
+use crate::util::stats::summarize;
+
+/// Membership policy of a session.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// admit every non-departed device; plan on advertised capability
+    TakeAll,
+    /// cost-model-guided admission on the reliability-discounted planning
+    /// view ([`crate::sched::select`])
+    CostGuided,
+    /// the same optimizer with perfect knowledge of delivered capability
+    Oracle,
+}
+
+impl Policy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::TakeAll => "take-all",
+            Policy::CostGuided => "cost-guided",
+            Policy::Oracle => "oracle",
+        }
+    }
+}
+
+/// Session configuration.
+#[derive(Clone, Debug)]
+pub struct SessionConfig {
+    pub n_batches: usize,
+    /// re-run selection every this many batches (0 = only at session start)
+    pub epoch_batches: usize,
+    pub churn: ChurnConfig,
+    pub select: SelectConfig,
+    pub policy: Policy,
+    pub sim: SimConfig,
+    pub seed: u64,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        SessionConfig {
+            n_batches: 12,
+            epoch_batches: 4,
+            churn: ChurnConfig::default(),
+            select: SelectConfig::default(),
+            policy: Policy::CostGuided,
+            sim: SimConfig::cold_start(),
+            seed: 7,
+        }
+    }
+}
+
+/// One membership decision (recorded at session start and every epoch).
+#[derive(Clone, Copy, Debug)]
+pub struct SelectionDecision {
+    pub batch_index: usize,
+    /// selectable pool size at decision time
+    pub pool_size: usize,
+    pub admitted: usize,
+    /// previously active devices dropped by this decision
+    pub evicted: usize,
+    /// hidden stragglers among the admitted (ground-truth audit)
+    pub stragglers_admitted: usize,
+    /// planner's (risk-adjusted) per-batch estimate; 0 for take-all
+    pub t_star_planned: f64,
+    /// planner's objective; 0 for take-all
+    pub objective: f64,
+    /// DAG solves spent probing admission sizes
+    pub probes: usize,
+}
+
+/// Outcome of a session run.
+#[derive(Clone, Debug)]
+pub struct SessionReport {
+    /// wall-clock per batch (includes recovery latency and PS fan-out)
+    pub batch_times: Vec<f64>,
+    /// §4.2 recovery latency of each mid-batch failure
+    pub recovery_latencies: Vec<f64>,
+    pub decisions: Vec<SelectionDecision>,
+    pub failures: usize,
+    pub joins: usize,
+    pub mean_batch_s: f64,
+    pub p95_batch_s: f64,
+    /// useful batch work / wall-clock (recovery is the loss term)
+    pub effective_throughput: f64,
+    /// session-wide solver-cache reuse counters
+    pub solver: CacheStats,
+}
+
+/// Immutable per-session context threaded through the helpers.
+struct Ctx<'a> {
+    dag: &'a GemmDag,
+    cm: &'a CostModel,
+    ps: &'a PsParams,
+    cfg: &'a SessionConfig,
+}
+
+fn choose_active(
+    pool: &mut DevicePool,
+    ctx: &Ctx,
+    cache: &mut SolverCache,
+    batch_index: usize,
+    decisions: &mut Vec<SelectionDecision>,
+) -> Vec<usize> {
+    let selectable = pool.selectable();
+    assert!(!selectable.is_empty(), "candidate pool exhausted");
+    let prev_active = pool.active();
+    let cfg = ctx.cfg;
+    let (chosen, t_star, objective, probes) = match cfg.policy {
+        Policy::TakeAll => (selectable.clone(), 0.0, 0.0, 0),
+        Policy::CostGuided | Policy::Oracle => {
+            let view = if cfg.policy == Policy::CostGuided {
+                pool.planning_devices(&selectable)
+            } else {
+                pool.delivered_devices(&selectable)
+            };
+            let out = select_devices(&view, ctx.dag, ctx.cm, ctx.ps, &cfg.select, cache);
+            let chosen: Vec<usize> = out.admitted.iter().map(|&j| selectable[j]).collect();
+            (chosen, out.t_star, out.objective, out.probes)
+        }
+    };
+    pool.set_active(&chosen);
+    let evicted = prev_active.iter().filter(|&&i| !chosen.contains(&i)).count();
+    decisions.push(SelectionDecision {
+        batch_index,
+        pool_size: selectable.len(),
+        admitted: chosen.len(),
+        evicted,
+        stragglers_admitted: pool.n_stragglers(&chosen),
+        t_star_planned: t_star,
+        objective,
+        probes,
+    });
+    chosen
+}
+
+/// Solve the schedule for the active set on the policy's planning view;
+/// return it with the delivered devices the simulator executes at.
+fn solve_active(
+    pool: &DevicePool,
+    active: &[usize],
+    ctx: &Ctx,
+    cache: &mut SolverCache,
+) -> (Schedule, Vec<Device>) {
+    let plan_view = match ctx.cfg.policy {
+        Policy::TakeAll => pool.advertised_devices(active),
+        Policy::CostGuided => pool.planning_devices(active),
+        Policy::Oracle => pool.delivered_devices(active),
+    };
+    let (schedule, _) =
+        solve_dag_cached(&plan_view, ctx.dag, ctx.cm, ctx.ps, &ctx.cfg.select.opts, cache);
+    (schedule, pool.delivered_devices(active))
+}
+
+/// Run one multi-batch session over `pool`. The pool is mutated: joins
+/// extend it, failures depart devices, membership states track decisions.
+pub fn run_session(
+    pool: &mut DevicePool,
+    dag: &GemmDag,
+    cm: &CostModel,
+    ps: &PsParams,
+    cfg: &SessionConfig,
+) -> SessionReport {
+    assert!(cfg.n_batches > 0, "session needs at least one batch");
+    let ctx = Ctx { dag, cm, ps, cfg };
+    let mut rng = Rng::new(cfg.seed);
+    let mut cache = SolverCache::new();
+    let mut decisions: Vec<SelectionDecision> = Vec::new();
+    let mut batch_times: Vec<f64> = Vec::with_capacity(cfg.n_batches);
+    let mut recovery_latencies: Vec<f64> = Vec::new();
+    let (mut failures, mut joins) = (0usize, 0usize);
+
+    // Initial membership + schedule + clean batch profile.
+    let mut active = choose_active(pool, &ctx, &mut cache, 0, &mut decisions);
+    let (mut schedule, mut true_devices) = solve_active(pool, &active, &ctx, &mut cache);
+    let mut clean = simulate_batch(&true_devices, dag, &schedule, cm, &cfg.sim);
+
+    // Churn stream over a generous horizon (rates follow the initial
+    // membership; the §2.3 process is stationary per device).
+    let mut eng: Engine<ChurnEvent> = Engine::new();
+    let horizon = (clean.batch_time * cfg.n_batches as f64 * 30.0).max(7200.0);
+    for e in events(&cfg.churn, active.len(), horizon, &mut rng) {
+        eng.at(e.time(), e);
+    }
+
+    let mut t = 0.0f64;
+    for bi in 0..cfg.n_batches {
+        if bi > 0 && cfg.epoch_batches > 0 && bi % cfg.epoch_batches == 0 {
+            // Membership epoch: pick up joins, drop the departed, re-balance.
+            let prev = active.clone();
+            active = choose_active(pool, &ctx, &mut cache, bi, &mut decisions);
+            if active != prev {
+                let solved = solve_active(pool, &active, &ctx, &mut cache);
+                schedule = solved.0;
+                true_devices = solved.1;
+                clean = simulate_batch(&true_devices, dag, &schedule, cm, &cfg.sim);
+            }
+        }
+        let fanout = active.len() as f64 * cfg.select.ps_conn_s;
+        let mut end = t + clean.batch_time + fanout;
+        while let Some((et, ev)) = eng.next() {
+            if et >= end {
+                eng.at(et, ev); // beyond this batch: requeue
+                break;
+            }
+            match ev {
+                ChurnEvent::Fail { device_index, .. } => {
+                    if active.len() <= 1 {
+                        continue; // keep the last device alive
+                    }
+                    let pos = device_index % active.len();
+                    failures += 1;
+                    // §4.2 recovery of the dominant-shape shards, measured
+                    // at delivered capability.
+                    let g = dag.levels[0].gemms[0];
+                    let shape = GemmShape::new(g.m, g.n, g.q, g.count);
+                    let assignment = &schedule.by_shape[&shape];
+                    let plan = recover(&true_devices, assignment, &[pos], cm, &cfg.select.opts);
+                    let lat = plan.total_latency();
+                    recovery_latencies.push(lat);
+                    end += lat;
+                    // Permanent departure: shrink membership, re-solve warm.
+                    pool.depart(active[pos]);
+                    active.remove(pos);
+                    let solved = solve_active(pool, &active, &ctx, &mut cache);
+                    schedule = solved.0;
+                    true_devices = solved.1;
+                    clean = simulate_batch(&true_devices, dag, &schedule, cm, &cfg.sim);
+                }
+                ChurnEvent::Join { .. } => {
+                    // Diurnal thinning of the inhomogeneous join process.
+                    if rng.uniform() < pool.availability_factor(et) {
+                        pool.join();
+                        joins += 1;
+                    }
+                }
+            }
+        }
+        batch_times.push(end - t);
+        t = end;
+    }
+
+    let s = summarize(&batch_times);
+    let wall: f64 = batch_times.iter().sum();
+    let lost: f64 = recovery_latencies.iter().sum();
+    SessionReport {
+        mean_batch_s: s.mean,
+        p95_batch_s: s.p95,
+        effective_throughput: if wall > 0.0 { (wall - lost) / wall } else { 1.0 },
+        solver: cache.stats(),
+        batch_times,
+        recovery_latencies,
+        decisions,
+        failures,
+        joins,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::fleet::FleetConfig;
+    use crate::cluster::pool::PoolConfig;
+    use crate::model::config::{ModelSpec, TrainSetup};
+
+    fn pool_cfg(n: usize, straggle: f64) -> PoolConfig {
+        PoolConfig {
+            fleet: FleetConfig {
+                n_devices: n,
+                straggler_fraction: straggle,
+                ..FleetConfig::default()
+            },
+            ..PoolConfig::default()
+        }
+    }
+
+    fn dag() -> GemmDag {
+        let spec = ModelSpec::preset("OPT-13B").unwrap();
+        GemmDag::build(&spec, &TrainSetup::default())
+    }
+
+    fn no_churn() -> ChurnConfig {
+        ChurnConfig {
+            fail_rate_per_hour: 0.0,
+            join_rate_per_hour: 0.0,
+        }
+    }
+
+    #[test]
+    fn clean_take_all_session_is_stationary() {
+        let mut pool = DevicePool::sample(&pool_cfg(24, 0.0));
+        let dag = dag();
+        let cfg = SessionConfig {
+            n_batches: 5,
+            epoch_batches: 2,
+            churn: no_churn(),
+            policy: Policy::TakeAll,
+            ..SessionConfig::default()
+        };
+        let r = run_session(
+            &mut pool,
+            &dag,
+            &CostModel::default(),
+            &PsParams::default(),
+            &cfg,
+        );
+        assert_eq!(r.batch_times.len(), 5);
+        assert_eq!((r.failures, r.joins), (0, 0));
+        assert_eq!(r.effective_throughput, 1.0);
+        for w in r.batch_times.windows(2) {
+            assert!((w[0] - w[1]).abs() < 1e-9, "stationary batches expected");
+        }
+        // decisions at batch 0 and the epochs (2, 4), all admitting everyone
+        assert_eq!(r.decisions.len(), 3);
+        for d in &r.decisions {
+            assert_eq!(d.admitted, 24);
+            assert_eq!(d.evicted, 0);
+        }
+    }
+
+    #[test]
+    fn guided_selection_beats_take_all_on_hidden_stragglers() {
+        let dag = dag();
+        let cm = CostModel::default();
+        let ps = PsParams::default();
+        let mean = |policy: Policy| -> f64 {
+            let mut pool = DevicePool::sample(&pool_cfg(48, 0.3));
+            let cfg = SessionConfig {
+                n_batches: 4,
+                epoch_batches: 2,
+                churn: no_churn(),
+                policy,
+                ..SessionConfig::default()
+            };
+            run_session(&mut pool, &dag, &cm, &ps, &cfg).mean_batch_s
+        };
+        let take_all = mean(Policy::TakeAll);
+        let guided = mean(Policy::CostGuided);
+        let oracle = mean(Policy::Oracle);
+        assert!(
+            take_all >= guided * 1.5,
+            "selection must beat take-all >= 1.5x on hidden stragglers: \
+             take-all {take_all} vs guided {guided}"
+        );
+        // noisy reliability estimates land near the perfect-knowledge
+        // bound (the gap is bounded by the worst straggler's estimate
+        // overshoot, ~1 + noise * max|N| over the straggler draws)
+        assert!(
+            guided <= oracle * 1.8,
+            "guided {guided} vs oracle {oracle}"
+        );
+    }
+
+    #[test]
+    fn failures_depart_devices_and_charge_recovery() {
+        let mut pool = DevicePool::sample(&pool_cfg(32, 0.0));
+        let dag = dag();
+        let cfg = SessionConfig {
+            n_batches: 5,
+            epoch_batches: 2,
+            churn: ChurnConfig {
+                fail_rate_per_hour: 20.0,
+                join_rate_per_hour: 0.0,
+            },
+            policy: Policy::TakeAll,
+            ..SessionConfig::default()
+        };
+        let r = run_session(
+            &mut pool,
+            &dag,
+            &CostModel::default(),
+            &PsParams::default(),
+            &cfg,
+        );
+        assert_eq!(r.batch_times.len(), 5);
+        assert!(r.failures > 0, "aggressive churn must produce failures");
+        assert_eq!(r.recovery_latencies.len(), r.failures);
+        assert!(r.recovery_latencies.iter().all(|&x| x >= 0.0));
+        assert!(r.recovery_latencies.iter().sum::<f64>() > 0.0);
+        assert!(r.effective_throughput < 1.0);
+        assert!(r.effective_throughput > 0.5, "{}", r.effective_throughput);
+        // departures shrink the admitted set at later epochs (and possibly
+        // further between the last epoch and session end)
+        let last = r.decisions.last().unwrap();
+        assert!(last.admitted < 32);
+        assert!(pool.active().len() <= last.admitted);
+    }
+
+    #[test]
+    fn joins_replenish_the_pool() {
+        let mut pool = DevicePool::sample(&pool_cfg(16, 0.0));
+        let dag = dag();
+        let cfg = SessionConfig {
+            n_batches: 4,
+            epoch_batches: 2,
+            churn: ChurnConfig {
+                fail_rate_per_hour: 0.0,
+                join_rate_per_hour: 3600.0, // ~1/s at the availability peak
+            },
+            policy: Policy::TakeAll,
+            ..SessionConfig::default()
+        };
+        let r = run_session(
+            &mut pool,
+            &dag,
+            &CostModel::default(),
+            &PsParams::default(),
+            &cfg,
+        );
+        assert!(r.joins > 0, "join stream must be consumed");
+        assert_eq!(pool.len(), 16 + r.joins);
+        // joined candidates are picked up at the next membership epoch
+        let first = r.decisions.first().unwrap();
+        let last = r.decisions.last().unwrap();
+        assert!(last.pool_size > first.pool_size);
+        assert!(last.admitted > first.admitted);
+    }
+}

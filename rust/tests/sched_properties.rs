@@ -3,10 +3,16 @@
 
 use cleave::cluster::device::Device;
 use cleave::cluster::fleet::{Fleet, FleetConfig};
-use cleave::sched::cost::{CostModel, GemmShape};
+use cleave::cluster::pool::{DevicePool, PoolConfig};
+use cleave::model::config::{ModelSpec, TrainSetup};
+use cleave::model::dag::GemmDag;
+use cleave::sched::cost::{CostModel, GemmShape, PsParams};
+use cleave::sched::fastpath::SolverCache;
 use cleave::sched::recovery::{apply, recover};
-use cleave::sched::solver::{solve_gemm, solve_gemm_reference, SolverOptions};
+use cleave::sched::select::{select_devices, SelectConfig};
+use cleave::sched::solver::{solve_dag, solve_gemm, solve_gemm_reference, SolverOptions};
 use cleave::sched::tiling;
+use cleave::sim::batch::{simulate_batch, SimConfig};
 use cleave::util::prop::{check, Config};
 use cleave::util::rng::Rng;
 
@@ -228,6 +234,94 @@ fn fastpath_single_device_matches_reference() {
     assert!(
         (fs.continuous_makespan - rs.continuous_makespan).abs()
             <= 1e-6 * rs.continuous_makespan
+    );
+}
+
+#[test]
+fn prop_admission_never_increases_t_star() {
+    // Selection invariant (sched::select): admitting one more device only
+    // adds capacity, so the solved continuous T* never increases.
+    check(
+        Config {
+            cases: 20,
+            seed: 0x5E1E_C701,
+            max_size: 48,
+        },
+        |rng, size| {
+            let fleet = random_fleet(rng, size.max(6));
+            let shape = random_shape(rng);
+            let k = 1 + rng.below((fleet.len() - 1) as u64) as usize;
+            (fleet, shape, k)
+        },
+        |(fleet, shape, k)| {
+            let cm = CostModel::default();
+            let opts = SolverOptions::default();
+            let (_, with_k) = solve_gemm(&fleet[..*k], *shape, &cm, &opts);
+            let (_, with_k1) = solve_gemm(&fleet[..k + 1], *shape, &cm, &opts);
+            with_k1.continuous_makespan <= with_k.continuous_makespan * (1.0 + 1e-6)
+        },
+    );
+}
+
+#[test]
+fn selection_recovers_fig6_exclusion_behaviour() {
+    // Fig. 6's exclusion behaviour: a solver that SEES true parameters
+    // right-sizes stragglers away and degrades only by the lost capacity.
+    // When stragglers hide behind clean advertised reports, the selection
+    // subsystem (reliability-discounted planning + admission) must recover
+    // at least that: within the reliability-noise envelope of the
+    // perfect-knowledge baseline, and >= 1.5x better than take-all.
+    let pool = DevicePool::sample(&PoolConfig {
+        fleet: FleetConfig {
+            n_devices: 48,
+            straggler_fraction: 0.3,
+            ..FleetConfig::default()
+        },
+        ..PoolConfig::default()
+    });
+    let spec = ModelSpec::preset("OPT-13B").unwrap();
+    let dag = GemmDag::build(&spec, &TrainSetup::default());
+    let cm = CostModel::default();
+    let ps = PsParams::default();
+    let opts = SolverOptions::default();
+    let sim = SimConfig::cold_start();
+    let all = pool.selectable();
+
+    let measure = |plan_view: &[Device], exec: &[Device]| -> f64 {
+        let (schedule, _) = solve_dag(plan_view, &dag, &cm, &ps, &opts);
+        simulate_batch(exec, &dag, &schedule, &cm, &sim).batch_time
+    };
+
+    let delivered = pool.delivered_devices(&all);
+    let advertised = pool.advertised_devices(&all);
+    // perfect-knowledge exclusion baseline (solver right-sizes stragglers)
+    let exclusion = measure(&delivered, &delivered);
+    // take-all trusting advertised reports: the hidden-straggler blow-up
+    let take_all = measure(&advertised, &delivered);
+    // cost-model-guided selection on the noisy planning view
+    let mut cache = SolverCache::new();
+    let out = select_devices(
+        &pool.planning_devices(&all),
+        &dag,
+        &cm,
+        &ps,
+        &SelectConfig::default(),
+        &mut cache,
+    );
+    let chosen: Vec<usize> = out.admitted.iter().map(|&j| all[j]).collect();
+    let guided = measure(
+        &pool.planning_devices(&chosen),
+        &pool.delivered_devices(&chosen),
+    );
+
+    assert!(
+        take_all >= guided * 1.5,
+        "selection must beat take-all >= 1.5x: take-all {take_all} vs guided {guided}"
+    );
+    assert!(
+        guided <= exclusion * 1.75,
+        "selection must recover the Fig. 6 exclusion behaviour within the \
+         reliability-noise envelope: guided {guided} vs exclusion {exclusion}"
     );
 }
 
