@@ -2,20 +2,17 @@
 //! the tightened pipeline bound (Eqs. 9'-11) and the Appendix C.4
 //! speculative/coded mitigation analysis.
 
-#[path = "common.rs"]
-mod common;
-
 use cleave::baselines::volume::{
     allreduce_latency, dl_crossover_devices, pipeline_makespan, ul_crossover_devices,
 };
 use cleave::model::config::{ModelSpec, TrainSetup};
 use cleave::sched::cvar::{coded_kth_latency, optimal_replication, replicated_latency};
-use cleave::util::bench::Reporter;
+use cleave::util::bench::bench_setup;
 use cleave::util::json::Json;
 use cleave::util::table::Table;
 
 fn main() {
-    let mut rep = Reporter::new("appendix_a_crossover", "crossover + tail mitigation (App A/C)");
+    let (_args, mut rep) = bench_setup("appendix_a_crossover", "crossover + tail mitigation (App A/C)");
     let setup = TrainSetup::default();
     let mut t = Table::new(&["Model", "UL crossover D", "DL crossover D"]);
     for name in ["Llama2-7B", "Llama2-13B", "Llama2-70B", "OPT-13B"] {

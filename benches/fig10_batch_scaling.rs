@@ -2,44 +2,45 @@
 //! a mini-batch of 2 (devices = batch/2). Shape: CLEAVE nearly flat; DTFM
 //! fine at small batches (PP) but degrades once DP kicks in; Alpa ~7x.
 
-#[path = "common.rs"]
-mod common;
-
-use cleave::baselines::{alpa, dtfm};
-use cleave::model::config::{ModelSpec, TrainSetup};
-use cleave::sched::fastpath::SolverCache;
-use cleave::util::bench::Reporter;
+use cleave::api::{AlpaPlanner, CleavePlanner, DtfmPlanner, Planner, Scenario};
+use cleave::util::bench::bench_setup;
+use cleave::util::fmt_secs;
 use cleave::util::json::Json;
 use cleave::util::table::Table;
 
 fn main() {
-    let mut rep = Reporter::new("fig10_batch_scaling", "batch-size weak scaling (Figure 10)");
-    let spec = ModelSpec::preset("OPT-13B").unwrap();
+    let (args, mut rep) = bench_setup("fig10_batch_scaling", "batch-size weak scaling (Figure 10)");
+    let batches: &[usize] = if args.smoke {
+        &[16, 64]
+    } else {
+        &[16, 32, 64, 128, 256, 512]
+    };
     let mut t = Table::new(&["batch", "#devices", "CLEAVE", "DTFM", "Alpa"]);
     let mut cleave_times = Vec::new();
-    // warm cache across batch sizes (shapes scale with batch; brackets
+    // warm planner across batch sizes (shapes scale with batch; brackets
     // still warm-start from the previous size's T*)
-    let mut cache = SolverCache::new();
-    for batch in [16usize, 32, 64, 128, 256, 512] {
-        let setup = TrainSetup::default().with_batch(batch);
+    let mut cleave = CleavePlanner::cached();
+    let mut dtfm = DtfmPlanner::runtime_only().with_solver_mem_limit(1e13);
+    let mut alpa = AlpaPlanner::runtime_only();
+    for &batch in batches {
         let n = (batch / 2).max(8); // mini-batch of 2 per device
-        let fleet = common::default_fleet(n);
-        let (r, _, _) = common::cleave_batch_cached(&spec, &setup, &fleet.devices, &mut cache);
-        let d = dtfm::plan_with(&spec, &setup, &fleet.devices, 1e13, false).map(|p| p.per_batch_s);
-        let a = alpa::plan_with(&spec, &setup, &fleet.devices, false).map(|p| p.per_batch_s);
+        let scenario = Scenario::model("OPT-13B").batch(batch).devices(n);
+        let mut planners: Vec<&mut dyn Planner> = vec![&mut cleave, &mut dtfm, &mut alpa];
+        let rs = scenario.compare(&mut planners).unwrap();
+        let c = rs[0].per_batch().unwrap();
         t.row(&[
             batch.to_string(),
             n.to_string(),
-            common::secs(r.batch_time),
-            d.map(common::secs).unwrap_or("OOM".into()),
-            a.map(common::secs).unwrap_or("OOM".into()),
+            fmt_secs(c),
+            rs[1].per_batch().map(fmt_secs).unwrap_or("OOM".into()),
+            rs[2].per_batch().map(fmt_secs).unwrap_or("OOM".into()),
         ]);
         rep.record(vec![
             ("batch", Json::from(batch)),
             ("devices", Json::from(n)),
-            ("cleave_s", Json::from(r.batch_time)),
+            ("cleave_s", Json::from(c)),
         ]);
-        cleave_times.push(r.batch_time);
+        cleave_times.push(c);
     }
     t.print();
     let max = cleave_times.iter().cloned().fold(0.0, f64::max);

@@ -16,76 +16,49 @@
 //!
 //! `cargo bench --bench fig11_selection -- --smoke` runs a tiny pool (CI).
 
-#[path = "common.rs"]
-mod common;
-
+use cleave::api::{CleavePlanner, Scenario};
 use cleave::cluster::churn::ChurnConfig;
 use cleave::cluster::fleet::FleetConfig;
-use cleave::cluster::pool::{DevicePool, PoolConfig};
-use cleave::model::config::{ModelSpec, TrainSetup};
-use cleave::model::dag::GemmDag;
-use cleave::sched::cost::{CostModel, PsParams};
-use cleave::sched::fastpath::{distinct_shapes, SolverCache};
-use cleave::sched::select::{select_devices, SelectConfig};
-use cleave::sim::session::{run_session, Policy, SessionConfig, SessionReport};
-use cleave::util::bench::Reporter;
+use cleave::cluster::pool::PoolConfig;
+use cleave::sched::fastpath::distinct_shapes;
+use cleave::sim::session::{Policy, SessionReport};
+use cleave::util::bench::{bench_setup, write_artifact};
+use cleave::util::fmt_secs;
 use cleave::util::json::{obj, Json};
 use cleave::util::table::Table;
 
 const STRAGGLER_FRACTION: f64 = 0.3;
 
-fn pool_cfg(n: usize) -> PoolConfig {
-    PoolConfig {
-        fleet: FleetConfig {
-            n_devices: n,
-            straggler_fraction: STRAGGLER_FRACTION,
-            seed: 11,
-            ..FleetConfig::default()
-        },
-        ..PoolConfig::default()
-    }
-}
-
-fn report_json(r: &SessionReport) -> Json {
-    obj(vec![
-        ("mean_batch_s", Json::from(r.mean_batch_s)),
-        ("p95_batch_s", Json::from(r.p95_batch_s)),
-        ("effective_throughput", Json::from(r.effective_throughput)),
-        ("failures", Json::from(r.failures)),
-        ("joins", Json::from(r.joins)),
-        (
-            "admitted_final",
-            Json::from(r.decisions.last().map(|d| d.admitted).unwrap_or(0)),
-        ),
-        (
-            "stragglers_admitted_final",
-            Json::from(r.decisions.last().map(|d| d.stragglers_admitted).unwrap_or(0)),
-        ),
-        ("cold_solves", Json::from(r.solver.cold_solves)),
-        ("warm_solves", Json::from(r.solver.warm_solves)),
-        ("memo_hits", Json::from(r.solver.memo_hits)),
-    ])
+fn scenario(n: usize, n_batches: usize, policy: Policy) -> Scenario {
+    Scenario::model("OPT-13B")
+        .pool_cfg(PoolConfig {
+            fleet: FleetConfig {
+                n_devices: n,
+                straggler_fraction: STRAGGLER_FRACTION,
+                seed: 11,
+                ..FleetConfig::default()
+            },
+            ..PoolConfig::default()
+        })
+        .devices(n)
+        .churn(ChurnConfig {
+            fail_rate_per_hour: 0.05, // 5x the paper's rate: livelier sessions
+            join_rate_per_hour: 60.0,
+        })
+        .batches(n_batches)
+        .epoch_batches(3)
+        .policy(policy)
 }
 
 fn main() {
-    let smoke = std::env::args().any(|a| a == "--smoke");
-    let mut rep = Reporter::new(
+    let (args, mut rep) = bench_setup(
         "fig11_selection",
         "cost-model-guided fleet admission under churn",
     );
-    let spec = ModelSpec::preset("OPT-13B").unwrap();
-    let setup = TrainSetup::default();
-    let dag = GemmDag::build(&spec, &setup);
-    let cm = CostModel::default().with_effective_flops();
-    let ps = PsParams::default();
-    let n_shapes = distinct_shapes(&dag).len();
+    let n_shapes = distinct_shapes(&scenario(48, 1, Policy::TakeAll).dag().unwrap()).len();
 
-    let sizes: &[usize] = if smoke { &[48] } else { &[128, 256, 1024] };
-    let n_batches = if smoke { 4 } else { 10 };
-    let churn = ChurnConfig {
-        fail_rate_per_hour: 0.05, // 5x the paper's rate: livelier sessions
-        join_rate_per_hour: 60.0,
-    };
+    let sizes: &[usize] = if args.smoke { &[48] } else { &[128, 256, 1024] };
+    let n_batches = if args.smoke { 4 } else { 10 };
 
     let mut t = Table::new(&[
         "pool",
@@ -103,16 +76,13 @@ fn main() {
     let mut gates: Vec<(usize, f64, usize, usize)> = Vec::new();
 
     for &n in sizes {
-        let session_cfg = |policy: Policy| SessionConfig {
-            n_batches,
-            epoch_batches: 3,
-            churn,
-            policy,
-            ..SessionConfig::default()
-        };
         let run = |policy: Policy| -> SessionReport {
-            let mut pool = DevicePool::sample(&pool_cfg(n));
-            run_session(&mut pool, &dag, &cm, &ps, &session_cfg(policy))
+            scenario(n, n_batches, policy)
+                .run_session(&mut CleavePlanner::cached())
+                .unwrap()
+                .session()
+                .expect("session report")
+                .clone()
         };
         let take_all = run(Policy::TakeAll);
         let guided = run(Policy::CostGuided);
@@ -122,39 +92,19 @@ fn main() {
 
         // The admission cost/throughput frontier of the initial decision
         // (standalone, so the JSON carries the probed (n, T*, costs) curve).
-        let pool = DevicePool::sample(&pool_cfg(n));
-        let selectable = pool.selectable();
-        let mut cache = SolverCache::new();
-        let frontier_out = select_devices(
-            &pool.planning_devices(&selectable),
-            &dag,
-            &cm,
-            &ps,
-            &SelectConfig::default(),
-            &mut cache,
-        );
-        let frontier: Vec<Json> = frontier_out
-            .frontier
-            .iter()
-            .map(|p| {
-                obj(vec![
-                    ("n", Json::from(p.n)),
-                    ("t_star_s", Json::from(p.t_star)),
-                    ("ps_cost_s", Json::from(p.ps_cost)),
-                    ("churn_loss_s", Json::from(p.churn_loss)),
-                    ("objective_s", Json::from(p.objective)),
-                ])
-            })
-            .collect();
+        let (frontier_out, frontier_stats) = scenario(n, n_batches, Policy::CostGuided)
+            .selection_frontier()
+            .unwrap();
+        let frontier: Vec<Json> = frontier_out.frontier.iter().map(|p| p.to_json()).collect();
 
         t.row(&[
             n.to_string(),
-            common::secs(take_all.mean_batch_s),
-            common::secs(guided.mean_batch_s),
-            common::secs(oracle.mean_batch_s),
+            fmt_secs(take_all.mean_batch_s),
+            fmt_secs(guided.mean_batch_s),
+            fmt_secs(oracle.mean_batch_s),
             format!("{speedup:.2}x"),
-            common::secs(take_all.p95_batch_s),
-            common::secs(guided.p95_batch_s),
+            fmt_secs(take_all.p95_batch_s),
+            fmt_secs(guided.p95_batch_s),
             probes.to_string(),
         ]);
         rep.record(vec![
@@ -166,15 +116,20 @@ fn main() {
         ]);
         rows.push(obj(vec![
             ("pool", Json::from(n)),
-            ("take_all", report_json(&take_all)),
-            ("guided", report_json(&guided)),
-            ("oracle", report_json(&oracle)),
+            ("take_all", take_all.to_json()),
+            ("guided", guided.to_json()),
+            ("oracle", oracle.to_json()),
             ("speedup_guided_vs_takeall", Json::from(speedup)),
             ("selection_probes", Json::from(probes)),
             ("frontier", Json::Arr(frontier)),
         ]));
 
-        gates.push((n, speedup, guided.solver.cold_solves, cache.stats().cold_solves));
+        gates.push((
+            n,
+            speedup,
+            guided.solver.cold_solves,
+            frontier_stats.cold_solves,
+        ));
     }
     t.print();
     println!(
@@ -187,16 +142,11 @@ fn main() {
         ("bench", Json::from("fig11_selection")),
         ("model", Json::from("OPT-13B")),
         ("straggler_fraction", Json::from(STRAGGLER_FRACTION)),
-        ("smoke", Json::from(smoke)),
+        ("smoke", Json::from(args.smoke)),
         ("n_batches", Json::from(n_batches)),
         ("rows", Json::Arr(rows)),
-    ])
-    .to_string_compact();
-    if let Err(e) = std::fs::write("BENCH_selection.json", &bench_json) {
-        eprintln!("warning: could not write BENCH_selection.json: {e}");
-    } else {
-        println!("\nwrote BENCH_selection.json");
-    }
+    ]);
+    write_artifact(args.artifact_path("BENCH_selection.json"), &bench_json);
     rep.finish();
 
     // Gates (after the artifact is written, so a failure still leaves the

@@ -5,17 +5,15 @@
 //! places the crossover near the top of the paper's 8192-device range —
 //! see EXPERIMENTS.md on the paper's Appendix-A formula).
 
-#[path = "common.rs"]
-mod common;
-
 use cleave::baselines::{ideal, volume};
 use cleave::model::config::{ModelSpec, TrainSetup};
-use cleave::util::bench::Reporter;
+use cleave::util::bench::bench_setup;
+use cleave::util::fmt_bytes;
 use cleave::util::json::Json;
 use cleave::util::table::Table;
 
 fn main() {
-    let mut rep = Reporter::new("fig1_comm_volume", "per-device comm volume (Figure 1)");
+    let (_args, mut rep) = bench_setup("fig1_comm_volume", "per-device comm volume (Figure 1)");
     let spec = ModelSpec::preset("Llama2-13B").unwrap();
     let setup = TrainSetup::default();
     let b = setup.elem_bytes as f64;
@@ -28,10 +26,10 @@ fn main() {
         let id = ideal::ideal_per_device(&spec, &setup, d) * b;
         t.row(&[
             d.to_string(),
-            common::gb(id),
-            common::gb(cdl),
-            common::gb(cul),
-            common::gb(base),
+            fmt_bytes(id),
+            fmt_bytes(cdl),
+            fmt_bytes(cul),
+            fmt_bytes(base),
         ]);
         rep.record(vec![
             ("devices", Json::from(d)),

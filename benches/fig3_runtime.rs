@@ -3,52 +3,57 @@
 //! Shape: CLEAVE cloud-comparable (within ~2x, faster for big models);
 //! DTFM 8-10x slower; Alpa worse; DTFM absent for >=65B (solver OOM).
 
-#[path = "common.rs"]
-mod common;
-
-use cleave::baselines::{alpa, cloud, dtfm};
-use cleave::model::config::{ModelSpec, TrainSetup};
-use cleave::util::bench::Reporter;
+use cleave::api::{AlpaPlanner, CleavePlanner, CloudPlanner, DtfmPlanner, Planner, Scenario};
+use cleave::util::bench::bench_setup;
 use cleave::util::json::Json;
 use cleave::util::table::Table;
 
 fn main() {
-    let mut rep = Reporter::new("fig3_runtime", "normalized per-batch runtime (Figure 3)");
-    let setup = TrainSetup::default();
+    let (args, mut rep) = bench_setup("fig3_runtime", "normalized per-batch runtime (Figure 3)");
     // paper pairs model sizes with device counts (scaling with model size)
-    let cases = [
-        ("OPT-1.3B", 64usize),
-        ("OPT-6.7B", 128),
-        ("OPT-13B", 256),
-        ("Llama2-13B", 512),
-        ("OPT-66B", 1024),
-        ("Llama2-70B", 1024),
-    ];
-    let gpu = cloud::GpuParams::default();
+    let cases: &[(&str, usize)] = if args.smoke {
+        &[("OPT-1.3B", 64), ("OPT-13B", 256)]
+    } else {
+        &[
+            ("OPT-1.3B", 64),
+            ("OPT-6.7B", 128),
+            ("OPT-13B", 256),
+            ("Llama2-13B", 512),
+            ("OPT-66B", 1024),
+            ("Llama2-70B", 1024),
+        ]
+    };
+    let mut cloud = CloudPlanner::new();
+    let mut cleave = CleavePlanner::new();
+    // DTFM keeps its device-memory check here (OOM is part of the figure);
+    // Alpa plots runtime past its OOM point, as in the paper.
+    let mut dtfm = DtfmPlanner::new();
+    let mut alpa = AlpaPlanner::runtime_only();
     let mut t = Table::new(&["Model", "#dev", "cloud", "CLEAVE", "DTFM", "Alpa"]);
-    for (name, n) in cases {
-        let spec = ModelSpec::preset(name).unwrap();
-        let fleet = common::default_fleet(n);
-        let (r, _, _) = common::cleave_batch_on(&spec, &setup, &fleet.devices);
-        let cloud_t = cloud::single_gpu_batch_time(&spec, &setup, &gpu);
-        let norm = |x: f64| format!("{:.2}x", x / cloud_t);
-        let dt = dtfm::plan(&spec, &setup, &fleet.devices, 1e12);
-        let al = alpa::plan_with(&spec, &setup, &fleet.devices, false);
+    for &(name, n) in cases {
+        let scenario = Scenario::model(name).devices(n);
+        let mut planners: Vec<&mut dyn Planner> =
+            vec![&mut cloud, &mut cleave, &mut dtfm, &mut alpa];
+        let rs = scenario.compare(&mut planners).unwrap();
+        let cloud_t = rs[0].per_batch().unwrap();
+        let norm = |x: Option<f64>| {
+            x.map(|v| format!("{:.2}x", v / cloud_t)).unwrap_or("OOM".into())
+        };
         t.row(&[
             name.into(),
             n.to_string(),
             "1.00x".into(),
-            norm(r.batch_time),
-            dt.map(|p| norm(p.per_batch_s)).unwrap_or("OOM".into()),
-            al.map(|p| norm(p.per_batch_s)).unwrap_or("OOM".into()),
+            norm(rs[1].per_batch()),
+            norm(rs[2].per_batch()),
+            norm(rs[3].per_batch()),
         ]);
         rep.record(vec![
             ("model", Json::from(name)),
             ("devices", Json::from(n)),
             ("cloud_s", Json::from(cloud_t)),
-            ("cleave_s", Json::from(r.batch_time)),
-            ("dtfm_s", dt.map(|p| Json::from(p.per_batch_s)).unwrap_or(Json::Null)),
-            ("alpa_s", al.map(|p| Json::from(p.per_batch_s)).unwrap_or(Json::Null)),
+            ("cleave_s", Json::from(rs[1].per_batch().unwrap())),
+            ("dtfm_s", rs[2].per_batch().map(Json::from).unwrap_or(Json::Null)),
+            ("alpa_s", rs[3].per_batch().map(Json::from).unwrap_or(Json::Null)),
         ]);
     }
     t.print();

@@ -2,43 +2,43 @@
 //! proportionally with GPU count. Shape: CLEAVE stays within ~2x of the
 //! multi-GPU cloud while the baselines fail to benefit from more devices.
 
-#[path = "common.rs"]
-mod common;
-
-use cleave::baselines::{alpa, cloud, dtfm};
-use cleave::model::config::{ModelSpec, TrainSetup};
-use cleave::util::bench::Reporter;
+use cleave::api::{AlpaPlanner, CleavePlanner, CloudPlanner, DtfmPlanner, Planner, Scenario};
+use cleave::util::bench::bench_setup;
 use cleave::util::json::Json;
 use cleave::util::table::Table;
 
 fn main() {
-    let mut rep = Reporter::new("fig4_multigpu", "multi-GPU comparison (Figure 4)");
-    let spec = ModelSpec::preset("OPT-13B").unwrap();
-    let setup = TrainSetup::default();
-    let gpu = cloud::GpuParams::default();
+    let (args, mut rep) = bench_setup("fig4_multigpu", "multi-GPU comparison (Figure 4)");
+    let gpus: &[usize] = if args.smoke { &[1, 2] } else { &[1, 2, 4, 8] };
     // 256 edge devices per GPU (the Figure 3 pairing scaled out).
     let mut t = Table::new(&["#GPUs", "#devices", "cloud", "CLEAVE", "DTFM", "Alpa"]);
-    for n_gpus in [1usize, 2, 4, 8] {
+    let mut cleave = CleavePlanner::cached();
+    let mut dtfm = DtfmPlanner::runtime_only();
+    let mut alpa = AlpaPlanner::runtime_only();
+    for &n_gpus in gpus {
         let n_dev = 256 * n_gpus;
-        let fleet = common::default_fleet(n_dev);
-        let (r, _, _) = common::cleave_batch_on(&spec, &setup, &fleet.devices);
-        let cloud_t = cloud::multi_gpu_batch_time(&spec, &setup, &gpu, n_gpus);
-        let norm = |x: f64| format!("{:.2}x", x / cloud_t);
-        let dt = dtfm::plan_with(&spec, &setup, &fleet.devices, 1e12, false);
-        let al = alpa::plan_with(&spec, &setup, &fleet.devices, false);
+        let scenario = Scenario::model("OPT-13B").devices(n_dev);
+        let mut cloud = CloudPlanner::multi(n_gpus);
+        let mut planners: Vec<&mut dyn Planner> =
+            vec![&mut cloud, &mut cleave, &mut dtfm, &mut alpa];
+        let rs = scenario.compare(&mut planners).unwrap();
+        let cloud_t = rs[0].per_batch().unwrap();
+        let norm = |x: Option<f64>| {
+            x.map(|v| format!("{:.2}x", v / cloud_t)).unwrap_or("OOM".into())
+        };
         t.row(&[
             n_gpus.to_string(),
             n_dev.to_string(),
             "1.00x".into(),
-            norm(r.batch_time),
-            dt.map(|p| norm(p.per_batch_s)).unwrap_or("OOM".into()),
-            al.map(|p| norm(p.per_batch_s)).unwrap_or("OOM".into()),
+            norm(rs[1].per_batch()),
+            norm(rs[2].per_batch()),
+            norm(rs[3].per_batch()),
         ]);
         rep.record(vec![
             ("n_gpus", Json::from(n_gpus)),
             ("devices", Json::from(n_dev)),
             ("cloud_s", Json::from(cloud_t)),
-            ("cleave_s", Json::from(r.batch_time)),
+            ("cleave_s", Json::from(rs[1].per_batch().unwrap())),
         ]);
     }
     t.print();

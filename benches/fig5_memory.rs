@@ -2,43 +2,56 @@
 //! model sizes. Shape: CLEAVE caps below the 512 MB phone line for every
 //! model; DTFM/Alpa grow with model size and OOM for large models.
 
-#[path = "common.rs"]
-mod common;
-
-use cleave::baselines::{alpa, dtfm};
-use cleave::model::config::{ModelSpec, TrainSetup};
+use cleave::api::{AlpaPlanner, CleavePlanner, DtfmPlanner, Scenario};
 use cleave::model::memory::PHONE_MEM_BYTES;
-use cleave::util::bench::Reporter;
+use cleave::util::bench::bench_setup;
+use cleave::util::fmt_bytes;
 use cleave::util::json::Json;
 use cleave::util::table::Table;
 
 fn main() {
-    let mut rep = Reporter::new("fig5_memory", "per-device memory, 8192 candidates (Figure 5)");
-    let setup = TrainSetup::default();
-    let fleet = common::default_fleet(2048); // solver fleet (CLEAVE picks shard sizes)
-    let big_fleet = common::default_fleet(8192);
+    let (args, mut rep) = bench_setup("fig5_memory", "per-device memory, 8192 candidates (Figure 5)");
+    let models: &[&str] = if args.smoke {
+        &["OPT-1.3B", "OPT-13B"]
+    } else {
+        &["OPT-1.3B", "OPT-13B", "OPT-30B", "OPT-66B", "Llama2-70B"]
+    };
+    let mut cleave = CleavePlanner::new(); // cold per model, as the figure measures
+    let mut dtfm = DtfmPlanner::runtime_only().with_solver_mem_limit(1e15);
+    let mut alpa = AlpaPlanner::new(); // memory check on: OOM is the story
     let mut t = Table::new(&["Model", "CLEAVE", "DTFM", "Alpa", "phone limit"]);
-    for name in ["OPT-1.3B", "OPT-13B", "OPT-30B", "OPT-66B", "Llama2-70B"] {
-        let spec = ModelSpec::preset(name).unwrap();
-        let (r, _, _) = common::cleave_batch_on(&spec, &setup, &fleet.devices);
-        let dt = dtfm::plan_with(&spec, &setup, &big_fleet.devices, 1e15, false)
-            .map(|p| p.per_device_mem_bytes);
-        let al = alpa::plan(&spec, &setup, &big_fleet.devices).map(|p| p.per_device_mem_bytes);
+    for &name in models {
+        // solver fleet at 2048 (CLEAVE picks shard sizes); baselines sized
+        // against the full 8192-candidate pool
+        let solver_scenario = Scenario::model(name).devices(2048);
+        let pool_scenario = Scenario::model(name).devices(8192);
+        let c = solver_scenario.run_batch(&mut cleave).unwrap();
+        let peak = c.batch().unwrap().peak_device_mem_bytes;
+        let dt = pool_scenario
+            .run_batch(&mut dtfm)
+            .unwrap()
+            .estimate()
+            .map(|e| e.per_device_mem_bytes);
+        let al = pool_scenario
+            .run_batch(&mut alpa)
+            .unwrap()
+            .estimate()
+            .map(|e| e.per_device_mem_bytes);
         t.row(&[
             name.into(),
-            common::gb(r.peak_device_mem_bytes),
-            dt.map(common::gb).unwrap_or("OOM".into()),
-            al.map(common::gb).unwrap_or("OOM".into()),
-            common::gb(PHONE_MEM_BYTES),
+            fmt_bytes(peak),
+            dt.map(fmt_bytes).unwrap_or("OOM".into()),
+            al.map(fmt_bytes).unwrap_or("OOM".into()),
+            fmt_bytes(PHONE_MEM_BYTES),
         ]);
         rep.record(vec![
             ("model", Json::from(name)),
-            ("cleave_b", Json::from(r.peak_device_mem_bytes)),
+            ("cleave_b", Json::from(peak)),
             ("dtfm_b", dt.map(Json::from).unwrap_or(Json::Null)),
             ("alpa_b", al.map(Json::from).unwrap_or(Json::Null)),
         ]);
         assert!(
-            r.peak_device_mem_bytes < PHONE_MEM_BYTES,
+            peak < PHONE_MEM_BYTES,
             "{name}: CLEAVE must cap below the phone budget"
         );
     }

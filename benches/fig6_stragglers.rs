@@ -3,63 +3,58 @@
 //! stragglers 10x slower). Shape: CLEAVE degrades gently (~5% from ideal
 //! redistribution); baselines blow up ~10x by 20% stragglers.
 
-#[path = "common.rs"]
-mod common;
-
-use cleave::baselines::{alpa, dtfm};
-use cleave::cluster::fleet::{Fleet, FleetConfig};
-use cleave::model::config::{ModelSpec, TrainSetup};
-use cleave::sched::fastpath::SolverCache;
-use cleave::util::bench::Reporter;
+use cleave::api::{AlpaPlanner, Axis, CleavePlanner, DtfmPlanner, Planner, Scenario};
+use cleave::util::bench::bench_setup;
 use cleave::util::json::Json;
 use cleave::util::table::Table;
 
 fn main() {
-    let mut rep = Reporter::new("fig6_stragglers", "straggler sensitivity (Figure 6)");
-    let spec = ModelSpec::preset("OPT-13B").unwrap();
-    let setup = TrainSetup::default();
-    let mut t = Table::new(&["straggler %", "CLEAVE", "DTFM", "Alpa", "ideal redistribution"]);
-    let mut base: Option<(f64, f64, f64)> = None;
-    // one warm solver cache across the sweep: each straggler fraction
+    let (args, mut rep) = bench_setup("fig6_stragglers", "straggler sensitivity (Figure 6)");
+    let fracs: &[f64] = if args.smoke {
+        &[0.0, 0.10]
+    } else {
+        &[0.0, 0.05, 0.10, 0.15, 0.20]
+    };
+    // one warm CLEAVE planner across the sweep: each straggler fraction
     // re-solves with bracket hints from the previous one
-    let mut cache = SolverCache::new();
-    for frac in [0.0, 0.05, 0.10, 0.15, 0.20] {
-        let fleet = Fleet::sample(
-            &FleetConfig::default()
-                .with_devices(32)
-                .with_stragglers(frac),
-        );
-        let (r, _, _) = common::cleave_batch_cached(&spec, &setup, &fleet.devices, &mut cache);
-        let d = dtfm::plan_with(&spec, &setup, &fleet.devices, 1e13, false)
-            .unwrap()
-            .per_batch_s;
-        let a = alpa::plan_with(&spec, &setup, &fleet.devices, false)
-            .unwrap()
-            .per_batch_s;
-        if base.is_none() {
-            base = Some((r.batch_time, d, a));
-        }
-        let (bc, bd, ba) = base.unwrap();
+    let mut cleave = CleavePlanner::cached();
+    let mut dtfm = DtfmPlanner::runtime_only().with_solver_mem_limit(1e13);
+    let mut alpa = AlpaPlanner::runtime_only();
+    let mut planners: Vec<&mut dyn Planner> = vec![&mut cleave, &mut dtfm, &mut alpa];
+    let points = Scenario::model("OPT-13B")
+        .devices(32)
+        .run_sweep(Axis::Stragglers, fracs, &mut planners)
+        .unwrap();
+
+    let mut t = Table::new(&["straggler %", "CLEAVE", "DTFM", "Alpa", "ideal redistribution"]);
+    let base: Vec<f64> = points[0]
+        .reports
+        .iter()
+        .map(|r| r.per_batch().unwrap())
+        .collect();
+    for p in &points {
+        let frac = p.value;
+        let norm = |i: usize| p.reports[i].per_batch().unwrap() / base[i];
         // ideal: work redistributes at infinitesimal granularity — runtime
         // scales with lost aggregate capacity only.
         let healthy_cap = 1.0 - frac + frac / 10.0;
         t.row(&[
             format!("{:.0}%", frac * 100.0),
-            format!("{:.2}x", r.batch_time / bc),
-            format!("{:.2}x", d / bd),
-            format!("{:.2}x", a / ba),
+            format!("{:.2}x", norm(0)),
+            format!("{:.2}x", norm(1)),
+            format!("{:.2}x", norm(2)),
             format!("{:.2}x", 1.0 / healthy_cap),
         ]);
         rep.record(vec![
             ("straggler_frac", Json::from(frac)),
-            ("cleave_norm", Json::from(r.batch_time / bc)),
-            ("dtfm_norm", Json::from(d / bd)),
-            ("alpa_norm", Json::from(a / ba)),
+            ("cleave_norm", Json::from(norm(0))),
+            ("dtfm_norm", Json::from(norm(1))),
+            ("alpa_norm", Json::from(norm(2))),
         ]);
     }
     t.print();
     println!("\npaper shape: CLEAVE ~5% above ideal; baselines up to ~10x at 20%");
-    let cs = cache.stats();
+    let cs = cleave.solver_cache().unwrap().stats();
     println!(
         "solver cache: {} cold / {} warm / {} memo solves across the sweep",
         cs.cold_solves, cs.warm_solves, cs.memo_hits

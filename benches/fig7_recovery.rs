@@ -3,9 +3,6 @@
 //! survivors) orders of magnitude below layer-recompute baselines, which
 //! sit far below checkpoint-restore.
 
-#[path = "common.rs"]
-mod common;
-
 use cleave::baselines::recovery::baseline_recovery;
 use cleave::cluster::fleet::Fleet;
 use cleave::model::config::{ModelSpec, TrainSetup};
@@ -13,13 +10,14 @@ use cleave::model::dag::GemmDag;
 use cleave::sched::cost::{CostModel, GemmShape};
 use cleave::sched::recovery::recover;
 use cleave::sched::solver::{solve_gemm, SolverOptions};
-use cleave::util::bench::Reporter;
+use cleave::util::bench::bench_setup;
+use cleave::util::fmt_secs;
 use cleave::util::json::Json;
 use cleave::util::stats;
 use cleave::util::table::Table;
 
 fn main() {
-    let mut rep = Reporter::new("fig7_recovery", "failure recovery latency (Figure 7)");
+    let (_args, mut rep) = bench_setup("fig7_recovery", "failure recovery latency (Figure 7)");
     let spec = ModelSpec::preset("OPT-13B").unwrap();
     let setup = TrainSetup::default();
     let fleet = Fleet::median(256);
@@ -50,7 +48,7 @@ fn main() {
     ] {
         t.row(&[
             name.into(),
-            common::secs(s),
+            fmt_secs(s),
             format!("{:.0}x", s / cleave),
         ]);
         rep.record(vec![("system", Json::from(name)), ("latency_s", Json::from(s))]);

@@ -2,44 +2,50 @@
 //! fixed batch size. Shape: CLEAVE falls near-linearly (~1.8x per doubling
 //! in the paper); DTFM plateaus/regresses; Alpa gains only ~1.3x.
 
-#[path = "common.rs"]
-mod common;
-
-use cleave::baselines::{alpa, dtfm};
-use cleave::model::config::{ModelSpec, TrainSetup};
-use cleave::sched::fastpath::SolverCache;
-use cleave::util::bench::Reporter;
+use cleave::api::{AlpaPlanner, Axis, CleavePlanner, DtfmPlanner, Planner, Scenario};
+use cleave::util::bench::bench_setup;
+use cleave::util::fmt_secs;
 use cleave::util::json::Json;
 use cleave::util::table::Table;
 
 fn main() {
-    let mut rep = Reporter::new("fig8_strong_scaling", "device-count scaling (Figure 8)");
-    let spec = ModelSpec::preset("OPT-13B").unwrap();
-    let setup = TrainSetup::default();
+    let (args, mut rep) = bench_setup("fig8_strong_scaling", "device-count scaling (Figure 8)");
+    let counts: &[f64] = if args.smoke {
+        &[32.0, 64.0, 128.0]
+    } else {
+        &[32.0, 64.0, 128.0, 256.0, 512.0, 1024.0, 2048.0, 4096.0]
+    };
+    // warm-start each fleet size's solve from the previous one's T* hints
+    let mut cleave = CleavePlanner::cached();
+    let mut dtfm = DtfmPlanner::new(); // DP+PP solver OOMs beyond 512 devices
+    let mut alpa = AlpaPlanner::runtime_only();
+    let mut planners: Vec<&mut dyn Planner> = vec![&mut cleave, &mut dtfm, &mut alpa];
+    let points = Scenario::model("OPT-13B")
+        .run_sweep(Axis::Devices, counts, &mut planners)
+        .unwrap();
+
     let mut t = Table::new(&["#devices", "CLEAVE", "DTFM", "Alpa", "CLEAVE speedup/2x"]);
     let mut prev: Option<f64> = None;
-    // warm-start each fleet size's solve from the previous one's T* hints
-    let mut cache = SolverCache::new();
-    for n in [32usize, 64, 128, 256, 512, 1024, 2048, 4096] {
-        let fleet = common::default_fleet(n);
-        let (r, _, _) = common::cleave_batch_cached(&spec, &setup, &fleet.devices, &mut cache);
-        let d = dtfm::plan(&spec, &setup, &fleet.devices, 1e12).map(|p| p.per_batch_s);
-        let a = alpa::plan_with(&spec, &setup, &fleet.devices, false).map(|p| p.per_batch_s);
-        let speedup = prev.map(|p| format!("{:.2}x", p / r.batch_time)).unwrap_or("-".into());
+    for p in &points {
+        let n = p.value as usize;
+        let c = p.reports[0].per_batch().unwrap();
+        let d = p.reports[1].per_batch();
+        let a = p.reports[2].per_batch();
+        let speedup = prev.map(|pv| format!("{:.2}x", pv / c)).unwrap_or("-".into());
         t.row(&[
             n.to_string(),
-            common::secs(r.batch_time),
-            d.map(common::secs).unwrap_or("OOM".into()),
-            a.map(common::secs).unwrap_or("OOM".into()),
+            fmt_secs(c),
+            d.map(fmt_secs).unwrap_or("OOM".into()),
+            a.map(fmt_secs).unwrap_or("OOM".into()),
             speedup,
         ]);
         rep.record(vec![
             ("devices", Json::from(n)),
-            ("cleave_s", Json::from(r.batch_time)),
+            ("cleave_s", Json::from(c)),
             ("dtfm_s", d.map(Json::from).unwrap_or(Json::Null)),
             ("alpa_s", a.map(Json::from).unwrap_or(Json::Null)),
         ]);
-        prev = Some(r.batch_time);
+        prev = Some(c);
     }
     t.print();
     println!("\npaper shape: CLEAVE ~1.8x per doubling; DTFM flat (even regresses 32->64);\nDTFM OOMs beyond 512; CLEAVE alone operates at 1024-8192");

@@ -3,52 +3,52 @@
 //! flat; DTFM cannot reach the big models; Alpa's uniform assignment
 //! creates stragglers.
 
-#[path = "common.rs"]
-mod common;
-
-use cleave::baselines::{alpa, dtfm};
-use cleave::model::config::{ModelSpec, TrainSetup};
-use cleave::sched::fastpath::SolverCache;
-use cleave::util::bench::Reporter;
+use cleave::api::{AlpaPlanner, CleavePlanner, DtfmPlanner, Planner, Scenario};
+use cleave::util::bench::bench_setup;
+use cleave::util::fmt_secs;
 use cleave::util::json::Json;
 use cleave::util::table::Table;
 
 fn main() {
-    let mut rep = Reporter::new("fig9_model_scaling", "model-size weak scaling (Figure 9)");
-    let setup = TrainSetup::default();
-    // persistent cache across the model sweep: shapes shared between model
-    // sizes (attention geometry repeats) reuse their bracket hints
-    let mut cache = SolverCache::new();
+    let (args, mut rep) = bench_setup("fig9_model_scaling", "model-size weak scaling (Figure 9)");
+    // persistent warm planner across the model sweep: shapes shared between
+    // model sizes (attention geometry repeats) reuse their bracket hints
+    let mut cleave = CleavePlanner::cached();
+    let mut dtfm = DtfmPlanner::new();
+    let mut alpa = AlpaPlanner::runtime_only();
     // devices proportional to model size; 70B -> 1024 (paper's anchor).
-    let cases = [
-        ("OPT-1.3B", 20usize),
-        ("OPT-6.7B", 98),
-        ("OPT-13B", 190),
-        ("OPT-30B", 439),
-        ("OPT-66B", 966),
-        ("Llama2-70B", 1024),
-    ];
+    let cases: &[(&str, usize)] = if args.smoke {
+        &[("OPT-1.3B", 20), ("OPT-13B", 190)]
+    } else {
+        &[
+            ("OPT-1.3B", 20),
+            ("OPT-6.7B", 98),
+            ("OPT-13B", 190),
+            ("OPT-30B", 439),
+            ("OPT-66B", 966),
+            ("Llama2-70B", 1024),
+        ]
+    };
     let mut t = Table::new(&["Model", "#devices", "CLEAVE", "DTFM", "Alpa"]);
     let mut cleave_times = Vec::new();
-    for (name, n) in cases {
-        let spec = ModelSpec::preset(name).unwrap();
-        let fleet = common::default_fleet(n);
-        let (r, _, _) = common::cleave_batch_cached(&spec, &setup, &fleet.devices, &mut cache);
-        let d = dtfm::plan(&spec, &setup, &fleet.devices, 1e12).map(|p| p.per_batch_s);
-        let a = alpa::plan_with(&spec, &setup, &fleet.devices, false).map(|p| p.per_batch_s);
+    for &(name, n) in cases {
+        let scenario = Scenario::model(name).devices(n);
+        let mut planners: Vec<&mut dyn Planner> = vec![&mut cleave, &mut dtfm, &mut alpa];
+        let rs = scenario.compare(&mut planners).unwrap();
+        let c = rs[0].per_batch().unwrap();
         t.row(&[
             name.into(),
             n.to_string(),
-            common::secs(r.batch_time),
-            d.map(common::secs).unwrap_or("OOM".into()),
-            a.map(common::secs).unwrap_or("OOM".into()),
+            fmt_secs(c),
+            rs[1].per_batch().map(fmt_secs).unwrap_or("OOM".into()),
+            rs[2].per_batch().map(fmt_secs).unwrap_or("OOM".into()),
         ]);
         rep.record(vec![
             ("model", Json::from(name)),
             ("devices", Json::from(n)),
-            ("cleave_s", Json::from(r.batch_time)),
+            ("cleave_s", Json::from(c)),
         ]);
-        cleave_times.push(r.batch_time);
+        cleave_times.push(c);
     }
     t.print();
     // flatness: max/min within a factor the paper's figure shows (~2x)

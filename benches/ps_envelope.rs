@@ -2,58 +2,117 @@
 //! 200 Gbps CPU PS while devices compute. Shape: ~1000-2000 concurrent
 //! participants per PS; the QKV example's aggregate per-GEMM downlink is
 //! served in milliseconds; multi-PS splits demand ~1/N.
+//!
+//! Also *measures* the envelope ([`cleave::sched::cost::PsEnvelope`]):
+//! the largest swept participant count the PS sustains below the bind
+//! gate, priced per connection as `batch_s / participants` — the constant
+//! the admission objective consumes via `PsParams::from_envelope` /
+//! `Scenario::ps_envelope` (ROADMAP follow-up). Recorded to
+//! `BENCH_ps_envelope.json`.
 
-#[path = "common.rs"]
-mod common;
-
+use cleave::api::{CleavePlanner, Scenario};
 use cleave::cluster::network::ps_service_time;
-use cleave::model::config::{ModelSpec, TrainSetup};
-use cleave::model::dag::GemmDag;
-use cleave::sched::cost::{CostModel, PsParams};
-use cleave::sched::solver::{solve_dag, SolverOptions};
-use cleave::sim::batch::{simulate_batch, SimConfig};
-use cleave::util::bench::Reporter;
-use cleave::util::json::Json;
+use cleave::sched::cost::{PsEnvelope, PsParams};
+use cleave::sched::select::SelectConfig;
+use cleave::util::bench::{bench_setup, write_artifact};
+use cleave::util::fmt_secs;
+use cleave::util::json::{obj, Json};
 use cleave::util::table::Table;
 
+/// PS share of batch time below which the PS is "inside the envelope".
+const BIND_GATE: f64 = 0.05;
+
 fn main() {
-    let mut rep = Reporter::new("ps_envelope", "single-PS operating envelope (§6)");
+    let (args, mut rep) = bench_setup("ps_envelope", "single-PS operating envelope (§6)");
     // The paper's worked example: 4096x4096 QKV GEMM, 1000 devices.
     let ps = PsParams::default();
     let per_gemm_dl = 65e6; // §6: ~65 MB aggregate per-GEMM downlink
     println!(
         "§6 example: 65 MB aggregate per-GEMM DL served in {} at 25 GB/s (paper: ~2.6 ms)",
-        common::secs(ps_service_time(per_gemm_dl, ps.net_bw))
+        fmt_secs(ps_service_time(per_gemm_dl, ps.net_bw))
     );
 
-    let spec = ModelSpec::preset("Llama2-13B").unwrap();
-    let setup = TrainSetup::default();
+    let counts: &[usize] = if args.smoke {
+        &[256, 512]
+    } else {
+        &[256, 512, 1024, 2048, 4096]
+    };
+    let mut planner = CleavePlanner::cached();
     let mut t = Table::new(&["#devices", "batch time", "PS-bound excess", "PS share of batch"]);
-    for n in [256usize, 512, 1024, 2048, 4096] {
-        let fleet = common::default_fleet(n);
-        let cm = CostModel::default().with_effective_flops();
-        let dag = GemmDag::build(&spec, &setup);
-        let (schedule, _) = solve_dag(&fleet.devices, &dag, &cm, &ps, &SolverOptions::default());
-        let r = simulate_batch(&fleet.devices, &dag, &schedule, &cm, &SimConfig::default());
+    let mut rows: Vec<Json> = Vec::new();
+    // (participants, batch_s) of the largest in-envelope operating point
+    let mut envelope: Option<PsEnvelope> = None;
+    for &n in counts {
+        let report = Scenario::model("Llama2-13B")
+            .devices(n)
+            .run_batch(&mut planner)
+            .unwrap();
+        let r = report.batch().expect("executable CLEAVE plan");
+        let share = r.ps_bound_time / r.batch_time;
         t.row(&[
             n.to_string(),
-            common::secs(r.batch_time),
-            common::secs(r.ps_bound_time),
-            format!("{:.2}%", 100.0 * r.ps_bound_time / r.batch_time),
+            fmt_secs(r.batch_time),
+            fmt_secs(r.ps_bound_time),
+            format!("{:.2}%", 100.0 * share),
         ]);
         rep.record(vec![
             ("devices", Json::from(n)),
             ("batch_s", Json::from(r.batch_time)),
             ("ps_bound_s", Json::from(r.ps_bound_time)),
         ]);
+        rows.push(obj(vec![
+            ("devices", Json::from(n)),
+            ("batch_s", Json::from(r.batch_time)),
+            ("ps_bound_s", Json::from(r.ps_bound_time)),
+            ("ps_share", Json::from(share)),
+        ]));
+        if share < BIND_GATE {
+            envelope = Some(PsEnvelope {
+                participants: n,
+                batch_s: r.batch_time,
+            });
+        }
         if n <= 2048 {
             assert!(
-                r.ps_bound_time / r.batch_time < 0.05,
+                share < BIND_GATE,
                 "PS must not be the bottleneck inside the envelope (n={n})"
             );
         }
     }
     t.print();
-    println!("\nmulti-PS model: N balanced instances split per-PS demand ~1/N (§6)");
+
+    // The measured envelope, consumed by the admission objective.
+    let env = envelope.expect("at least one in-envelope operating point");
+    let measured = PsParams::from_envelope(&env);
+    let select = SelectConfig::default().with_ps(&measured);
+    println!(
+        "\nmeasured envelope: {} participants at {} per batch -> conn_s {} \
+         (prior {}); admission fan-out re-priced via SelectConfig::with_ps",
+        env.participants,
+        fmt_secs(env.batch_s),
+        fmt_secs(select.ps_conn_s),
+        fmt_secs(PsParams::default().conn_s),
+    );
+    // Thread it through the facade once so the wiring stays exercised.
+    let wired = Scenario::model("Llama2-13B").ps_envelope(&env);
+    assert_eq!(
+        wired.select_config().ps_conn_s.to_bits(),
+        env.conn_s().to_bits(),
+        "Scenario::ps_envelope must re-price the admission fan-out"
+    );
+
+    write_artifact(
+        args.artifact_path("BENCH_ps_envelope.json"),
+        &obj(vec![
+            ("bench", Json::from("ps_envelope")),
+            ("model", Json::from("Llama2-13B")),
+            ("bind_gate", Json::from(BIND_GATE)),
+            ("participants", Json::from(env.participants)),
+            ("envelope_batch_s", Json::from(env.batch_s)),
+            ("conn_s", Json::from(env.conn_s())),
+            ("rows", Json::Arr(rows)),
+        ]),
+    );
+    println!("multi-PS model: N balanced instances split per-PS demand ~1/N (§6)");
     rep.finish();
 }

@@ -2,16 +2,13 @@
 //! constants) + the §6 energy-ratio model. Shape: CPU-only PS is ~4.9-6.2x
 //! cheaper than 8xA100 instances.
 
-#[path = "common.rs"]
-mod common;
-
 use cleave::baselines::cloud::{cost_ratio, pricing_table, EnergyModel};
-use cleave::util::bench::Reporter;
+use cleave::util::bench::bench_setup;
 use cleave::util::json::Json;
 use cleave::util::table::Table;
 
 fn main() {
-    let mut rep = Reporter::new("table10_cost", "infrastructure cost (Table 10)");
+    let (_args, mut rep) = bench_setup("table10_cost", "infrastructure cost (Table 10)");
     let rows = pricing_table();
     let ps = rows[3];
     let mut t = Table::new(&["Instance", "Accelerator", "GPU mem", "Host mem", "$/hr", "vs PS"]);

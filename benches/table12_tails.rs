@@ -3,17 +3,14 @@
 //! Carlo vs closed form. Shape: Pareto grows as D^{1/alpha}, far above the
 //! exponential's log growth; heavier tails dominate at scale.
 
-#[path = "common.rs"]
-mod common;
-
 use cleave::cluster::network::{expected_barrier_max, expected_barrier_max_exponential, LatencyModel};
-use cleave::util::bench::Reporter;
+use cleave::util::bench::bench_setup;
 use cleave::util::json::Json;
 use cleave::util::stats::pareto_expected_max;
 use cleave::util::table::Table;
 
 fn main() {
-    let mut rep = Reporter::new("table12_tails", "E[max latency] scaling (Table 12)");
+    let (_args, mut rep) = bench_setup("table12_tails", "E[max latency] scaling (Table 12)");
     let mut t = Table::new(&["Distribution", "E[max] D=100", "E[max] D=1000", "closed form D=1000"]);
     let e100 = expected_barrier_max_exponential(1.0, 100);
     let e1000 = expected_barrier_max_exponential(1.0, 1000);

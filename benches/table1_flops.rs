@@ -1,17 +1,14 @@
 //! Table 1: GEMM vs non-GEMM FLOPs across the LLaMA family.
 //! Paper's shape: GEMM share > 99% for 7B/13B/70B.
 
-#[path = "common.rs"]
-mod common;
-
 use cleave::model::config::{ModelSpec, TrainSetup};
 use cleave::model::flops;
-use cleave::util::bench::Reporter;
+use cleave::util::bench::bench_setup;
 use cleave::util::json::Json;
 use cleave::util::table::Table;
 
 fn main() {
-    let mut rep = Reporter::new("table1_flops", "GEMM vs non-GEMM FLOPs (Table 1)");
+    let (_args, mut rep) = bench_setup("table1_flops", "GEMM vs non-GEMM FLOPs (Table 1)");
     let setup = TrainSetup::default();
     let mut t = Table::new(&["Model", "GEMM TFLOPs", "non-GEMM TFLOPs", "GEMM share"]);
     for name in ["LLaMA-7B", "LLaMA-13B", "LLaMA-70B"] {

@@ -3,17 +3,15 @@
 //! PS-hosted optimizer. Shape: bwd ~ 2x fwd; GEMM share > 99%; optimizer
 //! ~2.25 s at 150 GB/s host memory.
 
-#[path = "common.rs"]
-mod common;
-
 use cleave::model::config::{ModelSpec, TrainSetup};
 use cleave::model::flops::stage_times;
-use cleave::util::bench::Reporter;
+use cleave::util::bench::bench_setup;
+use cleave::util::fmt_secs;
 use cleave::util::json::Json;
 use cleave::util::table::Table;
 
 fn main() {
-    let mut rep = Reporter::new("table2_step", "per-step stage breakdown (Table 2)");
+    let (_args, mut rep) = bench_setup("table2_step", "per-step stage breakdown (Table 2)");
     let spec = ModelSpec::preset("LLaMA-13B").unwrap();
     let setup = TrainSetup::default();
     let mut t = Table::new(&["Stage", "Phone (5TF)", "Laptop (27TF)", "Cloud A100 (312TF)"]);
@@ -24,25 +22,25 @@ fn main() {
         .collect();
     t.row(&[
         "Fwd GEMM".into(),
-        common::secs(st[0].fwd_gemm_s),
-        common::secs(st[1].fwd_gemm_s),
-        common::secs(st[2].fwd_gemm_s),
+        fmt_secs(st[0].fwd_gemm_s),
+        fmt_secs(st[1].fwd_gemm_s),
+        fmt_secs(st[2].fwd_gemm_s),
     ]);
     t.row(&[
         "Fwd non-GEMM".into(),
-        common::secs(st[0].fwd_non_gemm_s),
-        common::secs(st[1].fwd_non_gemm_s),
-        common::secs(st[2].fwd_non_gemm_s),
+        fmt_secs(st[0].fwd_non_gemm_s),
+        fmt_secs(st[1].fwd_non_gemm_s),
+        fmt_secs(st[2].fwd_non_gemm_s),
     ]);
     t.row(&[
         "Bwd GEMM".into(),
-        common::secs(st[0].bwd_gemm_s),
-        common::secs(st[1].bwd_gemm_s),
-        common::secs(st[2].bwd_gemm_s),
+        fmt_secs(st[0].bwd_gemm_s),
+        fmt_secs(st[1].bwd_gemm_s),
+        fmt_secs(st[2].bwd_gemm_s),
     ]);
     t.row(&[
         "Optimizer (PS host)".into(),
-        common::secs(st[0].optimizer_s),
+        fmt_secs(st[0].optimizer_s),
         "same".into(),
         "same".into(),
     ]);

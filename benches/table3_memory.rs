@@ -2,17 +2,15 @@
 //! Llama2 7B/13B/70B at batch 128, seq 1024. Shape: activations dominate,
 //! totals are TB-scale.
 
-#[path = "common.rs"]
-mod common;
-
 use cleave::model::config::{ModelSpec, TrainSetup};
 use cleave::model::memory::{total_memory, ActivationPolicy};
-use cleave::util::bench::Reporter;
+use cleave::util::bench::bench_setup;
+use cleave::util::fmt_bytes;
 use cleave::util::json::Json;
 use cleave::util::table::Table;
 
 fn main() {
-    let mut rep = Reporter::new("table3_memory", "total training memory (Table 3)");
+    let (_args, mut rep) = bench_setup("table3_memory", "total training memory (Table 3)");
     let setup = TrainSetup::default();
     let mut t = Table::new(&["Model", "Total", "Parameters", "Optimizer", "Activation"]);
     for name in ["Llama2-7B", "Llama2-13B", "Llama2-70B"] {
@@ -20,10 +18,10 @@ fn main() {
         let m = total_memory(&spec, &setup, ActivationPolicy::Full);
         t.row(&[
             name.into(),
-            common::gb(m.total()),
-            common::gb(m.params_bytes),
-            common::gb(m.optimizer_bytes),
-            common::gb(m.activation_bytes),
+            fmt_bytes(m.total()),
+            fmt_bytes(m.params_bytes),
+            fmt_bytes(m.optimizer_bytes),
+            fmt_bytes(m.activation_bytes),
         ]);
         rep.record(vec![
             ("model", Json::from(name)),

@@ -1,17 +1,15 @@
 //! Table 4: minimum per-device memory under DP / PP / DP+PP / DP+PP+TP.
 //! Shape: only TP-class sharding reaches the 512 MB phone budget.
 
-#[path = "common.rs"]
-mod common;
-
 use cleave::model::config::{ModelSpec, TrainSetup};
 use cleave::model::memory::{table4_row, ActivationPolicy, PHONE_MEM_BYTES};
-use cleave::util::bench::Reporter;
+use cleave::util::bench::bench_setup;
+use cleave::util::fmt_bytes;
 use cleave::util::json::Json;
 use cleave::util::table::Table;
 
 fn main() {
-    let mut rep = Reporter::new("table4_parallelism", "per-device memory by mode (Table 4)");
+    let (_args, mut rep) = bench_setup("table4_parallelism", "per-device memory by mode (Table 4)");
     let setup = TrainSetup::default();
     let mut t = Table::new(&["Model", "DP(128)", "PP(32)", "DP+PP(4K)", "DP+PP+TP(>8K)"]);
     for name in ["Llama2-7B", "Llama2-13B", "Llama2-70B"] {
@@ -20,10 +18,10 @@ fn main() {
             table4_row(&spec, &setup, ActivationPolicy::SelectiveRecompute);
         t.row(&[
             name.into(),
-            common::gb(dp),
-            common::gb(pp),
-            common::gb(dppp),
-            format!("{}~{}", common::gb(lo), common::gb(hi)),
+            fmt_bytes(dp),
+            fmt_bytes(pp),
+            fmt_bytes(dppp),
+            format!("{}~{}", fmt_bytes(lo), fmt_bytes(hi)),
         ]);
         rep.record(vec![
             ("model", Json::from(name)),
@@ -37,7 +35,7 @@ fn main() {
     t.print();
     println!(
         "phone usable memory limit: {} — only the TP column reaches it (paper's claim)",
-        common::gb(PHONE_MEM_BYTES)
+        fmt_bytes(PHONE_MEM_BYTES)
     );
     rep.finish();
 }

@@ -8,9 +8,6 @@
 //! OPT-13B DAG at D = 128 / 1k / 8k, recorded to `BENCH_solver.json` so
 //! the solver perf trajectory is tracked across PRs.
 
-#[path = "common.rs"]
-mod common;
-
 use std::time::Instant;
 
 use cleave::cluster::fleet::{Fleet, FleetConfig};
@@ -22,12 +19,13 @@ use cleave::sched::recovery::recover;
 use cleave::sched::solver::{
     solve_dag, solve_dag_cached, solve_dag_reference, solve_gemm, SolverOptions,
 };
-use cleave::util::bench::Reporter;
+use cleave::util::bench::{bench_setup, write_artifact};
+use cleave::util::fmt_secs;
 use cleave::util::json::{obj, Json};
 use cleave::util::table::Table;
 
 fn main() {
-    let mut rep = Reporter::new("table7_solver", "solver regimes (Table 7)");
+    let (args, mut rep) = bench_setup("table7_solver", "solver regimes (Table 7)");
     let spec = ModelSpec::preset("Llama2-70B").unwrap();
     let setup = TrainSetup::default();
     let fleet = Fleet::median(1024);
@@ -62,17 +60,17 @@ fn main() {
     ]);
     t.row(&[
         "Solve time".into(),
-        common::secs(cold.solve_time_s),
-        common::secs(plan.solve_time),
+        fmt_secs(cold.solve_time_s),
+        fmt_secs(plan.solve_time),
     ]);
     t.print();
     println!(
         "\npaper: cold ~10 min (Gurobi MILP), churn re-solve seconds. Our bisection\n\
          solver replaces the MILP (DESIGN.md §2): cold start {} — {}x under the\n\
          paper's budget; re-solve {}.",
-        common::secs(cold.solve_time_s),
+        fmt_secs(cold.solve_time_s),
         (600.0 / cold.solve_time_s) as u64,
-        common::secs(plan.solve_time)
+        fmt_secs(plan.solve_time)
     );
     rep.record(vec![
         ("cold_start_s", Json::from(cold.solve_time_s)),
@@ -98,7 +96,12 @@ fn main() {
         "speedup (warm)",
     ]);
     let mut speedup_at_8k = (0.0f64, 0.0f64);
-    for &d in &[128usize, 1024, 8192] {
+    let sweep_d: &[usize] = if args.smoke {
+        &[128, 1024]
+    } else {
+        &[128, 1024, 8192]
+    };
+    for &d in sweep_d {
         let fleet = Fleet::sample(&FleetConfig::default().with_devices(d));
 
         let t = Instant::now();
@@ -129,9 +132,9 @@ fn main() {
         }
         t2.row(&[
             d.to_string(),
-            common::secs(seed_cold_s),
-            common::secs(fast_cold_s),
-            common::secs(fast_warm_s),
+            fmt_secs(seed_cold_s),
+            fmt_secs(fast_cold_s),
+            fmt_secs(fast_warm_s),
             format!("{speedup_cold:.1}x"),
             format!("{speedup_warm:.0}x"),
         ]);
@@ -159,26 +162,23 @@ fn main() {
         ("model", Json::from("OPT-13B")),
         ("llama70b_cold_start_s", Json::from(cold.solve_time_s)),
         ("llama70b_resolve_s", Json::from(plan.solve_time)),
+        ("smoke", Json::from(args.smoke)),
         ("sweep", Json::Arr(sweep_rows)),
-    ])
-    .to_string_compact();
-    if let Err(e) = std::fs::write("BENCH_solver.json", &bench_json) {
-        eprintln!("warning: could not write BENCH_solver.json: {e}");
-    } else {
-        println!("\nwrote BENCH_solver.json");
-    }
+    ]);
+    write_artifact(args.artifact_path("BENCH_solver.json"), &bench_json);
 
-    // Two-part perf gate at D=8192: the warm (memo) path carries the >=5x
-    // claim for churn/straggler sweeps, and the cold fast path must never
-    // regress below the seed solver (so a fast-path slowdown fails loudly
-    // instead of hiding behind the always-fast memo hit).
+    // Two-part perf gate at D=8192 (skipped under --smoke, which stops at
+    // 1024): the warm (memo) path carries the >=5x claim for
+    // churn/straggler sweeps, and the cold fast path must never regress
+    // below the seed solver (so a fast-path slowdown fails loudly instead
+    // of hiding behind the always-fast memo hit).
     assert!(
-        speedup_at_8k.1 >= 5.0,
+        args.smoke || speedup_at_8k.1 >= 5.0,
         "warm fast path must be >= 5x the seed solver at D=8192 (got {:.1}x)",
         speedup_at_8k.1
     );
     assert!(
-        speedup_at_8k.0 >= 1.0,
+        args.smoke || speedup_at_8k.0 >= 1.0,
         "cold fast path regressed below the seed solver at D=8192 ({:.2}x)",
         speedup_at_8k.0
     );

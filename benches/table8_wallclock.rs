@@ -3,57 +3,42 @@
 //! 55 MB/s DL, 7.5 MB/s UL). Shape: CLEAVE within ~2x of cloud at 256-512
 //! devices, faster than cloud at 1024 for 70B; DTFM ~hundreds-thousands s.
 
-#[path = "common.rs"]
-mod common;
-
-use cleave::baselines::{cloud, dtfm};
-use cleave::cluster::fleet::Fleet;
-use cleave::model::config::{ModelSpec, TrainSetup};
-use cleave::model::dag::GemmDag;
-use cleave::sched::cost::{CostModel, PsParams};
-use cleave::sched::solver::{solve_dag, SolverOptions};
-use cleave::sim::batch::{simulate_batch, SimConfig};
-use cleave::util::bench::Reporter;
+use cleave::api::{CleavePlanner, CloudPlanner, DtfmPlanner, Planner, Scenario};
+use cleave::util::bench::bench_setup;
 use cleave::util::json::Json;
 use cleave::util::table::Table;
 
 fn main() {
-    let mut rep = Reporter::new("table8_wallclock", "absolute per-batch seconds (Table 8)");
-    let setup = TrainSetup::default();
-    let gpu = cloud::GpuParams::default();
-    let cases = [
-        ("OPT-13B", 256usize, 3466.7),
-        ("Llama2-13B", 512, 3466.7),
-        ("Llama2-70B", 1024, f64::NAN),
-    ];
+    let (args, mut rep) = bench_setup("table8_wallclock", "absolute per-batch seconds (Table 8)");
+    let cases: &[(&str, usize)] = if args.smoke {
+        &[("OPT-13B", 256)]
+    } else {
+        &[("OPT-13B", 256), ("Llama2-13B", 512), ("Llama2-70B", 1024)]
+    };
+    let mut cloud = CloudPlanner::new();
+    let mut cleave = CleavePlanner::new();
+    let mut dtfm = DtfmPlanner::runtime_only();
     let mut t = Table::new(&["Configuration", "Cloud (A100)", "CLEAVE", "DTFM"]);
-    for (name, n, _paper_dtfm) in cases {
-        let spec = ModelSpec::preset(name).unwrap();
-        let fleet = Fleet::median(n);
+    for &(name, n) in cases {
         // Table 8 uses raw cost-model FLOPS on median devices.
-        let cm = CostModel::default();
-        let dag = GemmDag::build(&spec, &setup);
-        let (schedule, _) = solve_dag(
-            &fleet.devices,
-            &dag,
-            &cm,
-            &PsParams::default(),
-            &SolverOptions::default(),
-        );
-        let r = simulate_batch(&fleet.devices, &dag, &schedule, &cm, &SimConfig::default());
-        let cloud_t = cloud::single_gpu_batch_time(&spec, &setup, &gpu);
-        let dt = dtfm::plan_with(&spec, &setup, &fleet.devices, 1e12, false);
+        let scenario = Scenario::model(name).devices(n).median_fleet().raw_flops();
+        let mut planners: Vec<&mut dyn Planner> = vec![&mut cloud, &mut cleave, &mut dtfm];
+        let rs = scenario.compare(&mut planners).unwrap();
+        let cloud_t = rs[0].per_batch().unwrap();
         t.row(&[
             format!("{n} devices + {name}"),
-            format!("{:.1} s", cloud_t),
-            format!("{:.1} s", r.batch_time),
-            dt.map(|p| format!("{:.1} s", p.per_batch_s)).unwrap_or("-".into()),
+            format!("{cloud_t:.1} s"),
+            format!("{:.1} s", rs[1].per_batch().unwrap()),
+            rs[2]
+                .per_batch()
+                .map(|x| format!("{x:.1} s"))
+                .unwrap_or("-".into()),
         ]);
         rep.record(vec![
             ("model", Json::from(name)),
             ("devices", Json::from(n)),
             ("cloud_s", Json::from(cloud_t)),
-            ("cleave_s", Json::from(r.batch_time)),
+            ("cleave_s", Json::from(rs[1].per_batch().unwrap())),
         ]);
     }
     t.print();

@@ -3,27 +3,23 @@
 //! w/o heterogeneity awareness (uniform assignment). Reported relative to
 //! the complete system, like the paper (comm / memory / runtime).
 
-#[path = "common.rs"]
-mod common;
-
-use cleave::baselines::alpa;
-use cleave::model::config::{ModelSpec, TrainSetup};
-use cleave::model::dag::GemmDag;
-use cleave::sched::cost::CostModel;
-use cleave::util::bench::Reporter;
+use cleave::api::{AlpaPlanner, CleavePlanner, Scenario};
+use cleave::util::bench::bench_setup;
 use cleave::util::json::Json;
+use cleave::util::{fmt_bytes, fmt_secs};
 use cleave::util::table::Table;
 
 fn main() {
-    let mut rep = Reporter::new("table9_ablation", "component ablations (Table 9)");
-    let spec = ModelSpec::preset("Llama2-13B").unwrap();
-    let setup = TrainSetup::default();
-    let fleet = common::default_fleet(1024);
-    let cm = CostModel::default().with_effective_flops();
-    let dag = GemmDag::build(&spec, &setup);
+    let (args, mut rep) = bench_setup("table9_ablation", "component ablations (Table 9)");
+    let n = if args.smoke { 256 } else { 1024 };
+    let scenario = Scenario::model("Llama2-13B").devices(n);
+    let setup = scenario.train_setup();
+    let fleet = scenario.fleet();
+    let dag = scenario.dag().unwrap();
 
     // --- complete system ---
-    let (full, schedule, _) = common::cleave_batch_on(&spec, &setup, &fleet.devices);
+    let report = scenario.run_batch(&mut CleavePlanner::new()).unwrap();
+    let full = report.batch().expect("executable CLEAVE plan");
     let full_comm = (full.total_dl_bytes + full.total_ul_bytes) / fleet.len() as f64;
     let full_mem = full.peak_device_mem_bytes;
     let full_rt = full.batch_time;
@@ -57,9 +53,13 @@ fn main() {
 
     // --- w/o PS: peer-to-peer collectives (Alpa-style volume/runtime);
     // optimizer state must live on devices (memory grows accordingly).
-    let al = alpa::plan_with(&spec, &setup, &fleet.devices, false).unwrap();
+    let al = scenario
+        .run_batch(&mut AlpaPlanner::runtime_only())
+        .unwrap();
+    let al = al.estimate().expect("Alpa estimate");
     let wo_ps_comm = al.per_device_comm_elems * setup.elem_bytes as f64;
     let wo_ps_rt = al.per_batch_s;
+    let spec = scenario.spec().unwrap();
     let wo_ps_mem = full_mem + 10.0 * spec.total_params() as f64 / fleet.len() as f64;
 
     // --- w/o heterogeneity: uniform equal-area assignment — slowest device
@@ -73,9 +73,9 @@ fn main() {
     let mut t = Table::new(&["Design", "Comm", "Memory", "Runtime"]);
     t.row(&[
         "CLEAVE".into(),
-        common::gb(full_comm),
-        common::gb(full_mem),
-        common::secs(full_rt),
+        fmt_bytes(full_comm),
+        fmt_bytes(full_mem),
+        fmt_secs(full_rt),
     ]);
     t.row(&[
         "w/o TP".into(),
@@ -109,6 +109,5 @@ fn main() {
         ]);
         assert!(r > 1.0, "{k}: every ablation must hurt runtime");
     }
-    let _ = schedule;
     rep.finish();
 }

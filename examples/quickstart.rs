@@ -1,16 +1,11 @@
 //! Quickstart: solve a CLEAVE schedule for a paper-scale configuration,
 //! simulate one training batch, and compare against the DTFM/Alpa/cloud
-//! baselines — the §5.2 experiment in miniature.
+//! baselines — the §5.2 experiment in miniature, driven entirely through
+//! the [`cleave::api::Scenario`] facade (every system is a `Planner`).
 //!
 //! Run: `cargo run --release --example quickstart -- [--model OPT-13B] [--devices 512]`
 
-use cleave::baselines::{alpa, cloud, dtfm};
-use cleave::cluster::fleet::{Fleet, FleetConfig};
-use cleave::model::config::{ModelSpec, TrainSetup};
-use cleave::model::dag::GemmDag;
-use cleave::sched::cost::{CostModel, PsParams};
-use cleave::sched::solver::{solve_dag, SolverOptions};
-use cleave::sim::batch::{simulate_batch, SimConfig};
+use cleave::api::{AlpaPlanner, CleavePlanner, CloudPlanner, DtfmPlanner, Planner, Scenario};
 use cleave::util::cli::Cli;
 use cleave::util::table::Table;
 use cleave::util::{fmt_bytes, fmt_secs};
@@ -20,10 +15,10 @@ fn main() -> anyhow::Result<()> {
         .opt("model", Some("OPT-13B"), "model preset")
         .opt("devices", Some("512"), "edge device count")
         .parse();
-    let spec = ModelSpec::preset(args.get_str("model")?)?;
-    let setup = TrainSetup::default();
-    let n = args.get_usize("devices")?;
-    let fleet = Fleet::sample(&FleetConfig::default().with_devices(n));
+    let scenario = Scenario::model(args.get_str("model")?).devices(args.get_usize("devices")?);
+    let spec = scenario.spec()?;
+    let fleet = scenario.fleet();
+    let n = fleet.len();
 
     println!(
         "== CLEAVE quickstart: {} on {n} heterogeneous edge devices ==",
@@ -36,7 +31,7 @@ fn main() -> anyhow::Result<()> {
         fleet.compute_cv()
     );
 
-    let dag = GemmDag::build(&spec, &setup);
+    let dag = scenario.dag()?;
     println!(
         "GEMM DAG: {} levels, {} distinct shapes, {:.2e} FLOPs/batch",
         dag.n_levels(),
@@ -44,47 +39,43 @@ fn main() -> anyhow::Result<()> {
         dag.total_flops()
     );
 
-    let cm = CostModel::default().with_effective_flops();
-    let (schedule, stats) = solve_dag(
-        &fleet.devices,
-        &dag,
-        &cm,
-        &PsParams::default(),
-        &SolverOptions::default(),
-    );
-    println!(
-        "solver: {} decision vars over {} devices in {}",
-        stats.decision_vars,
-        stats.devices_considered,
-        fmt_secs(stats.solve_time_s)
-    );
+    // One facade call per system: CLEAVE solves + simulates, the baselines
+    // evaluate their closed forms (runtime-only, like the paper's figures).
+    let mut cleave = CleavePlanner::new();
+    let mut cloud = CloudPlanner::new();
+    let mut dtfm = DtfmPlanner::runtime_only();
+    let mut alpa = AlpaPlanner::runtime_only();
+    let mut planners: Vec<&mut dyn Planner> =
+        vec![&mut cleave, &mut cloud, &mut dtfm, &mut alpa];
+    let reports = scenario.compare(&mut planners)?;
 
-    let r = simulate_batch(&fleet.devices, &dag, &schedule, &cm, &SimConfig::default());
+    let r = reports[0].batch().expect("CLEAVE plans are executable");
+    if let cleave::api::ReportDetail::Batch { stats, .. } = &reports[0].detail {
+        println!(
+            "solver: {} decision vars over {} devices in {}",
+            stats.decision_vars,
+            stats.devices_considered,
+            fmt_secs(stats.solve_time_s)
+        );
+    }
 
     let mut t = Table::new(&["system", "per-batch", "vs CLEAVE"]);
     t.row(&["CLEAVE".into(), fmt_secs(r.batch_time), "1.0x".into()]);
-    let cloud_t = cloud::single_gpu_batch_time(&spec, &setup, &cloud::GpuParams::default());
-    t.row(&[
-        "cloud 1xA100 (offload)".into(),
-        fmt_secs(cloud_t),
-        format!("{:.1}x", cloud_t / r.batch_time),
-    ]);
-    match dtfm::plan_with(&spec, &setup, &fleet.devices, 1e12, false) {
-        Some(p) => t.row(&[
-            "DTFM (DP+PP)".into(),
-            fmt_secs(p.per_batch_s),
-            format!("{:.1}x", p.per_batch_s / r.batch_time),
-        ]),
-        None => t.row_strs(&["DTFM (DP+PP)", "solver OOM", "-"]),
+    let label = |p: &str| -> String {
+        match p {
+            "cloud" => "cloud 1xA100 (offload)".into(),
+            "DTFM" => "DTFM (DP+PP)".into(),
+            "Alpa" => "Alpa (DP+PP+TP)".into(),
+            other => other.into(),
+        }
     };
-    match alpa::plan_with(&spec, &setup, &fleet.devices, false) {
-        Some(p) => t.row(&[
-            "Alpa (DP+PP+TP)".into(),
-            fmt_secs(p.per_batch_s),
-            format!("{:.1}x", p.per_batch_s / r.batch_time),
-        ]),
-        None => t.row_strs(&["Alpa (DP+PP+TP)", "infeasible", "-"]),
-    };
+    for rep in &reports[1..] {
+        let lbl = label(&rep.planner);
+        match rep.per_batch() {
+            Some(s) => t.row(&[lbl, fmt_secs(s), format!("{:.1}x", s / r.batch_time)]),
+            None => t.row_strs(&[lbl.as_str(), "infeasible", "-"]),
+        }
+    }
     t.print();
     println!(
         "\nper-device peak memory {} (phone budget {}); DL {} UL {} per batch",

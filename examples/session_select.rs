@@ -1,19 +1,19 @@
 //! Device-selection session walkthrough: a candidate pool with hidden
 //! stragglers and churn, run as a long-horizon multi-batch session under
 //! the three membership policies (take-all / cost-guided / oracle), with
-//! the admission cost/throughput frontier of the first decision printed.
+//! the admission cost/throughput frontier of the first decision printed —
+//! all through the [`cleave::api::Scenario`] facade. A final
+//! planner-vs-planner table runs DTFM under the *same* churn stream
+//! (baselines restart the in-flight batch on failure; CLEAVE pays §4.2
+//! shard recovery).
 //!
 //! Run: `cargo run --release --example session_select -- --devices 256 --stragglers 0.3`
 
+use cleave::api::{CleavePlanner, DtfmPlanner, Planner, Scenario};
 use cleave::cluster::churn::ChurnConfig;
 use cleave::cluster::fleet::FleetConfig;
 use cleave::cluster::pool::{DevicePool, PoolConfig};
-use cleave::model::config::{ModelSpec, TrainSetup};
-use cleave::model::dag::GemmDag;
-use cleave::sched::cost::{CostModel, PsParams};
-use cleave::sched::fastpath::SolverCache;
-use cleave::sched::select::{select_devices, SelectConfig};
-use cleave::sim::session::{run_session, Policy, SessionConfig};
+use cleave::sim::session::Policy;
 use cleave::util::cli::Cli;
 use cleave::util::fmt_secs;
 use cleave::util::table::Table;
@@ -26,11 +26,6 @@ fn main() -> anyhow::Result<()> {
         .opt("batches", Some("8"), "session length in batches")
         .opt("seed", Some("11"), "pool seed")
         .parse();
-    let spec = ModelSpec::preset(args.get_str("model")?)?;
-    let setup = TrainSetup::default();
-    let dag = GemmDag::build(&spec, &setup);
-    let cm = CostModel::default().with_effective_flops();
-    let ps = PsParams::default();
     let pool_cfg = PoolConfig {
         fleet: FleetConfig {
             n_devices: args.get_usize("devices")?,
@@ -40,19 +35,19 @@ fn main() -> anyhow::Result<()> {
         },
         ..PoolConfig::default()
     };
+    let scenario = Scenario::model(args.get_str("model")?)
+        .pool_cfg(pool_cfg.clone())
+        .churn(ChurnConfig {
+            fail_rate_per_hour: 0.05,
+            join_rate_per_hour: 60.0,
+        })
+        .batches(args.get_usize("batches")?)
+        .epoch_batches(3);
 
     // The first admission decision, with its probed frontier.
     let pool = DevicePool::sample(&pool_cfg);
     let selectable = pool.selectable();
-    let mut cache = SolverCache::new();
-    let out = select_devices(
-        &pool.planning_devices(&selectable),
-        &dag,
-        &cm,
-        &ps,
-        &SelectConfig::default(),
-        &mut cache,
-    );
+    let (out, _) = scenario.selection_frontier()?;
     println!(
         "pool {} ({} hidden stragglers): admitted {} (stragglers among them: {}), {} probes",
         pool.len(),
@@ -76,10 +71,6 @@ fn main() -> anyhow::Result<()> {
     ft.print();
 
     // Full sessions under churn, one per membership policy.
-    let churn = ChurnConfig {
-        fail_rate_per_hour: 0.05,
-        join_rate_per_hour: 60.0,
-    };
     let mut st = Table::new(&[
         "policy",
         "mean batch",
@@ -90,15 +81,11 @@ fn main() -> anyhow::Result<()> {
         "final admitted",
     ]);
     for policy in [Policy::TakeAll, Policy::CostGuided, Policy::Oracle] {
-        let mut pool = DevicePool::sample(&pool_cfg);
-        let cfg = SessionConfig {
-            n_batches: args.get_usize("batches")?,
-            epoch_batches: 3,
-            churn,
-            policy,
-            ..SessionConfig::default()
-        };
-        let r = run_session(&mut pool, &dag, &cm, &ps, &cfg);
+        let report = scenario
+            .clone()
+            .policy(policy)
+            .run_session(&mut CleavePlanner::cached())?;
+        let r = report.session().expect("session report");
         let last = r.decisions.last().expect("at least the initial decision");
         st.row(&[
             policy.name().into(),
@@ -115,6 +102,34 @@ fn main() -> anyhow::Result<()> {
         "\ntake-all trusts advertised capability and pays the hidden-straggler\n\
          blow-up; cost-guided admission on the reliability-discounted view\n\
          recovers most of the oracle's throughput"
+    );
+
+    // Planner-vs-planner under the same churn process (take-all admission,
+    // so the planner — not the membership policy — is the variable).
+    let churny = scenario.policy(Policy::TakeAll);
+    let mut pt = Table::new(&["planner", "mean batch", "failures", "mean recovery"]);
+    let mut cleave = CleavePlanner::cached();
+    let mut dtfm = DtfmPlanner::runtime_only();
+    let planners: [&mut dyn Planner; 2] = [&mut cleave, &mut dtfm];
+    for planner in planners {
+        let report = churny.run_session(planner)?;
+        let r = report.session().expect("session report");
+        let mean_rec = if r.recovery_latencies.is_empty() {
+            0.0
+        } else {
+            r.recovery_latencies.iter().sum::<f64>() / r.recovery_latencies.len() as f64
+        };
+        pt.row(&[
+            report.planner.clone(),
+            fmt_secs(r.mean_batch_s),
+            r.failures.to_string(),
+            fmt_secs(mean_rec),
+        ]);
+    }
+    pt.print();
+    println!(
+        "CLEAVE re-shards lost work over survivors (§4.2, ms-scale); the\n\
+         synchronous baselines restart the in-flight batch"
     );
     Ok(())
 }

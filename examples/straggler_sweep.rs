@@ -1,16 +1,11 @@
 //! Straggler sweep (the Figure 6 scenario): vary the straggler fraction and
 //! watch CLEAVE's cost model route work away from 10x-slower devices while
-//! the synchronous baselines stall behind them.
+//! the synchronous baselines stall behind them — one
+//! [`cleave::api::Scenario::run_sweep`] call.
 //!
 //! Run: `cargo run --release --example straggler_sweep`
 
-use cleave::baselines::{alpa, dtfm};
-use cleave::cluster::fleet::{Fleet, FleetConfig};
-use cleave::model::config::{ModelSpec, TrainSetup};
-use cleave::model::dag::GemmDag;
-use cleave::sched::cost::{CostModel, PsParams};
-use cleave::sched::solver::{solve_dag, SolverOptions};
-use cleave::sim::batch::{simulate_batch, SimConfig};
+use cleave::api::{AlpaPlanner, Axis, CleavePlanner, DtfmPlanner, Planner, Scenario};
 use cleave::util::cli::Cli;
 use cleave::util::table::Table;
 
@@ -19,45 +14,39 @@ fn main() -> anyhow::Result<()> {
         .opt("model", Some("OPT-13B"), "model preset")
         .opt("devices", Some("32"), "device count (paper: 32)")
         .parse();
-    let spec = ModelSpec::preset(args.get_str("model")?)?;
-    let setup = TrainSetup::default();
-    let n = args.get_usize("devices")?;
-    let cm = CostModel::default().with_effective_flops();
-    let dag = GemmDag::build(&spec, &setup);
+    let scenario = Scenario::model(args.get_str("model")?).devices(args.get_usize("devices")?);
+    let spec = scenario.spec()?;
+    let n = scenario.n_devices();
 
-    let mut rows = Vec::new();
-    let mut base: Option<(f64, Option<f64>, Option<f64>)> = None;
-    for frac in [0.0, 0.05, 0.10, 0.15, 0.20] {
-        let fleet = Fleet::sample(
-            &FleetConfig::default()
-                .with_devices(n)
-                .with_stragglers(frac),
-        );
-        let (schedule, _) = solve_dag(
-            &fleet.devices,
-            &dag,
-            &cm,
-            &PsParams::default(),
-            &SolverOptions::default(),
-        );
-        let r = simulate_batch(&fleet.devices, &dag, &schedule, &cm, &SimConfig::default());
-        let d = dtfm::plan_with(&spec, &setup, &fleet.devices, 1e13, false).map(|p| p.per_batch_s);
-        let a = alpa::plan_with(&spec, &setup, &fleet.devices, false).map(|p| p.per_batch_s);
-        if base.is_none() {
-            base = Some((r.batch_time, d, a));
-        }
-        let (b_c, b_d, b_a) = base.unwrap();
-        rows.push([
-            format!("{:.0}%", frac * 100.0),
-            format!("{:.2}x", r.batch_time / b_c),
-            d.map(|x| format!("{:.2}x", x / b_d.unwrap())).unwrap_or("-".into()),
-            a.map(|x| format!("{:.2}x", x / b_a.unwrap())).unwrap_or("-".into()),
-        ]);
-    }
-    println!("normalized per-batch runtime vs no-straggler case ({} @ {n} devices)", spec.name);
+    let mut cleave = CleavePlanner::cached();
+    let mut dtfm = DtfmPlanner::runtime_only().with_solver_mem_limit(1e13);
+    let mut alpa = AlpaPlanner::runtime_only();
+    let mut planners: Vec<&mut dyn Planner> = vec![&mut cleave, &mut dtfm, &mut alpa];
+    let points = scenario.run_sweep(
+        Axis::Stragglers,
+        &[0.0, 0.05, 0.10, 0.15, 0.20],
+        &mut planners,
+    )?;
+
+    println!(
+        "normalized per-batch runtime vs no-straggler case ({} @ {n} devices)",
+        spec.name
+    );
+    let base: Vec<Option<f64>> = points[0].reports.iter().map(|r| r.per_batch()).collect();
     let mut t = Table::new(&["stragglers", "CLEAVE", "DTFM", "Alpa"]);
-    for r in &rows {
-        t.row(r);
+    for p in &points {
+        let norm = |i: usize| -> String {
+            match (p.reports[i].per_batch(), base[i]) {
+                (Some(x), Some(b)) => format!("{:.2}x", x / b),
+                _ => "-".into(),
+            }
+        };
+        t.row(&[
+            format!("{:.0}%", p.value * 100.0),
+            norm(0),
+            norm(1),
+            norm(2),
+        ]);
     }
     t.print();
     println!("\n(stragglers are 10x slower in compute AND links; CLEAVE's cost\n model reassigns their shards, the baselines wait for them)");

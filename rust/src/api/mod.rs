@@ -1,0 +1,38 @@
+//! The experiment facade: [`Scenario`] × [`Planner`] — one API over the
+//! solve → select → simulate → session pipeline.
+//!
+//! The paper's evaluation is a matrix of (model, fleet, churn profile,
+//! policy, planner) combinations. Before this module every bench, example
+//! and CLI subcommand re-assembled that pipeline by hand; now a scenario is
+//! a builder expression and every system under comparison — CLEAVE's §4.1
+//! solver and the DTFM/Alpa/ideal/cloud baselines — is a [`Planner`]
+//! behind one interface, so planners are interchangeable everywhere a
+//! scenario runs, including long-horizon churn sessions (previously only
+//! CLEAVE could run inside [`crate::sim::session`]).
+//!
+//! ```
+//! use cleave::api::{CleavePlanner, DtfmPlanner, Scenario};
+//!
+//! // One batch of OPT-1.3B on 12 sampled edge devices, CLEAVE vs DTFM.
+//! let scenario = Scenario::model("OPT-1.3B").devices(12).batch(16);
+//! let cleave = scenario.run_batch(&mut CleavePlanner::new()).unwrap();
+//! let dtfm = scenario.run_batch(&mut DtfmPlanner::runtime_only()).unwrap();
+//! assert!(cleave.per_batch().unwrap() > 0.0);
+//! assert!(cleave.per_batch().unwrap() < dtfm.per_batch().unwrap());
+//! ```
+//!
+//! Entrypoints return a typed [`Report`] (per-batch simulation metrics,
+//! solver stats, session recovery latencies, selection frontier) that
+//! serializes through [`crate::util::json`] in the `BENCH_*.json` house
+//! shape. See `README.md` § "driving experiments through `Scenario`".
+
+pub mod planner;
+pub mod scenario;
+
+pub use planner::{
+    AlpaPlanner, CleavePlanner, CloudPlanner, DtfmPlanner, IdealPlanner, Plan, PlanEstimate,
+    PlanInput, Planner,
+};
+pub use scenario::{
+    Axis, RecoveryReport, Report, ReportDetail, Scenario, SweepPoint,
+};

@@ -1,0 +1,774 @@
+//! The [`Scenario`] builder: one facade over the solve → select → simulate
+//! → session pipeline, so every experiment — quickstart, CLI subcommand,
+//! figure bench, or a configuration nobody has tried yet — is a builder
+//! expression instead of an 80-line assembly of `GemmDag::build` +
+//! `solve_dag` + `simulate_batch`.
+//!
+//! A scenario owns the full experiment configuration (model preset, train
+//! setup, fleet recipe, cost model, PS parameters, simulator and session
+//! knobs) and exposes typed entrypoints:
+//!
+//! * [`Scenario::run_batch`] — plan one batch with any [`Planner`] and
+//!   measure it (executable plans through the simulator, estimates through
+//!   their closed form);
+//! * [`Scenario::run_recovery`] — plan, fail the busiest device, and
+//!   charge §4.2 recovery (or a synchronous restart for estimate planners);
+//! * [`Scenario::run_session`] — a long-horizon churn session over a
+//!   candidate pool ([`crate::sim::session::run_session_with`]);
+//! * [`Scenario::run_sweep`] / [`Scenario::compare`] — one axis × many
+//!   planners, the shape of Figures 3–10;
+//! * [`Scenario::selection_frontier`] — the admission optimizer's probed
+//!   cost/throughput frontier for the configured pool.
+//!
+//! Every entrypoint returns a typed [`Report`] that serializes through
+//! [`crate::util::json`] in the shape the `BENCH_*.json` emitters expect.
+
+use crate::api::planner::{Plan, PlanEstimate, PlanInput, Planner};
+use crate::cluster::churn::ChurnConfig;
+use crate::cluster::fleet::{Fleet, FleetConfig};
+use crate::cluster::pool::{DevicePool, PoolConfig};
+use crate::model::config::{ModelSpec, TrainSetup};
+use crate::model::dag::GemmDag;
+use crate::sched::cost::{CostModel, GemmShape, PsEnvelope, PsParams};
+use crate::sched::fastpath::{CacheStats, SolverCache};
+use crate::sched::recovery::recover;
+use crate::sched::select::{select_devices, SelectConfig, SelectionOutcome};
+use crate::sched::solver::{SolverOptions, SolverStats};
+use crate::sim::batch::{simulate_batch, BatchResult, SimConfig};
+use crate::sim::session::{run_session_with, Policy, SessionConfig, SessionReport};
+use crate::util::json::{obj, Json};
+use crate::Result;
+
+/// How the scenario materializes its device fleet.
+#[derive(Clone, Debug)]
+enum FleetSpec {
+    /// heterogeneous sample from a [`FleetConfig`] (the paper's default)
+    Sampled(FleetConfig),
+    /// deterministic median-device fleet (the Table 8 setup)
+    Median(usize),
+}
+
+/// A sweep axis for [`Scenario::run_sweep`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Axis {
+    /// device count (Figure 8's strong scaling)
+    Devices,
+    /// global batch size (Figure 10's weak scaling)
+    BatchSize,
+    /// straggler fraction (Figure 6's sensitivity)
+    Stragglers,
+}
+
+/// One experiment configuration; see the module docs.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    model: String,
+    setup: TrainSetup,
+    fleet: FleetSpec,
+    effective_flops: bool,
+    ps: PsParams,
+    /// the caller set [`Scenario::ps`]/[`Scenario::ps_envelope`]: its
+    /// `conn_s` prices admission fan-out regardless of builder order
+    ps_explicit: bool,
+    opts: SolverOptions,
+    /// the caller set [`Scenario::solver_opts`]: it governs selection
+    /// probes too, regardless of builder order
+    opts_explicit: bool,
+    sim: SimConfig,
+    session: SessionConfig,
+    pool: Option<PoolConfig>,
+}
+
+/// The per-configuration planning context ([`GemmDag`], fleet, cost
+/// model), built once and shared across planners by
+/// [`Scenario::compare`]/[`Scenario::run_sweep`].
+struct BatchCtx {
+    dag: GemmDag,
+    fleet: Fleet,
+    cm: CostModel,
+}
+
+impl Scenario {
+    /// Start a scenario for a model preset (see [`ModelSpec::preset`]).
+    /// Defaults mirror the evaluation's standard methodology: a sampled
+    /// heterogeneous fleet, effective (utilization-scaled) FLOPS, default
+    /// PS parameters, steady-state simulator accounting.
+    pub fn model(name: &str) -> Scenario {
+        Scenario {
+            model: name.to_string(),
+            setup: TrainSetup::default(),
+            fleet: FleetSpec::Sampled(FleetConfig::default()),
+            effective_flops: true,
+            ps: PsParams::default(),
+            ps_explicit: false,
+            opts: SolverOptions::default(),
+            opts_explicit: false,
+            sim: SimConfig::default(),
+            session: SessionConfig::default(),
+            pool: None,
+        }
+    }
+
+    // -- fleet -----------------------------------------------------------
+
+    /// Set the device count (keeps the current fleet recipe).
+    pub fn devices(mut self, n: usize) -> Scenario {
+        match &mut self.fleet {
+            FleetSpec::Sampled(cfg) => cfg.n_devices = n,
+            FleetSpec::Median(m) => *m = n,
+        }
+        self
+    }
+
+    /// Replace the whole sampled-fleet configuration.
+    pub fn fleet_cfg(mut self, cfg: FleetConfig) -> Scenario {
+        self.fleet = FleetSpec::Sampled(cfg);
+        self
+    }
+
+    /// Use the deterministic median-device fleet (Table 8's setup).
+    pub fn median_fleet(mut self) -> Scenario {
+        let n = self.n_devices();
+        self.fleet = FleetSpec::Median(n);
+        self
+    }
+
+    /// Straggler fraction of the sampled fleet (Figure 6's knob).
+    pub fn stragglers(mut self, frac: f64) -> Scenario {
+        if let FleetSpec::Median(n) = self.fleet {
+            self.fleet = FleetSpec::Sampled(FleetConfig::default().with_devices(n));
+        }
+        if let FleetSpec::Sampled(cfg) = &mut self.fleet {
+            cfg.straggler_fraction = frac;
+        }
+        self
+    }
+
+    /// Fleet sampling seed.
+    pub fn fleet_seed(mut self, seed: u64) -> Scenario {
+        if let FleetSpec::Sampled(cfg) = &mut self.fleet {
+            cfg.seed = seed;
+        }
+        self
+    }
+
+    // -- model / cost model ----------------------------------------------
+
+    /// Global batch size.
+    pub fn batch(mut self, b: usize) -> Scenario {
+        self.setup.batch = b;
+        self
+    }
+
+    /// Sequence length.
+    pub fn seq(mut self, s: usize) -> Scenario {
+        self.setup.seq = s;
+        self
+    }
+
+    /// Replace the whole train setup.
+    pub fn setup(mut self, setup: TrainSetup) -> Scenario {
+        self.setup = setup;
+        self
+    }
+
+    /// Plan and measure on raw (nameplate) FLOPS instead of effective —
+    /// the Table 8 closed-form convention.
+    pub fn raw_flops(mut self) -> Scenario {
+        self.effective_flops = false;
+        self
+    }
+
+    /// PS host parameters; `ps.conn_s` also prices the admission
+    /// objective's per-connection fan-out, independent of the order this
+    /// is combined with [`Scenario::select`] (an explicit `ps` always
+    /// wins on fan-out; put a custom constant on `PsParams` itself).
+    pub fn ps(mut self, ps: PsParams) -> Scenario {
+        self.ps = ps;
+        self.ps_explicit = true;
+        self
+    }
+
+    /// PS parameters derived from a measured single-PS operating envelope
+    /// (`benches/ps_envelope.rs` → [`PsEnvelope`]).
+    pub fn ps_envelope(self, env: &PsEnvelope) -> Scenario {
+        self.ps(PsParams::from_envelope(env))
+    }
+
+    /// Solver options (bisection iterations / tolerance); govern
+    /// selection probes too, independent of builder order.
+    pub fn solver_opts(mut self, opts: SolverOptions) -> Scenario {
+        self.opts = opts;
+        self.opts_explicit = true;
+        self
+    }
+
+    /// Simulator configuration for [`Scenario::run_batch`].
+    pub fn sim(mut self, sim: SimConfig) -> Scenario {
+        self.sim = sim;
+        self
+    }
+
+    // -- session ---------------------------------------------------------
+
+    /// Churn process of session runs.
+    pub fn churn(mut self, churn: ChurnConfig) -> Scenario {
+        self.session.churn = churn;
+        self
+    }
+
+    /// Membership policy of session runs.
+    pub fn policy(mut self, policy: Policy) -> Scenario {
+        self.session.policy = policy;
+        self
+    }
+
+    /// Admission-optimizer configuration. A full override except where an
+    /// explicit [`Scenario::ps`]/[`Scenario::solver_opts`] pins the
+    /// fan-out constant / solver options (order-independent).
+    pub fn select(mut self, select: SelectConfig) -> Scenario {
+        self.session.select = select;
+        self
+    }
+
+    /// Session length in batches.
+    pub fn batches(mut self, n: usize) -> Scenario {
+        self.session.n_batches = n;
+        self
+    }
+
+    /// Membership re-selection period in batches (0 = only at start).
+    pub fn epoch_batches(mut self, n: usize) -> Scenario {
+        self.session.epoch_batches = n;
+        self
+    }
+
+    /// Session event seed.
+    pub fn session_seed(mut self, seed: u64) -> Scenario {
+        self.session.seed = seed;
+        self
+    }
+
+    /// Candidate-pool configuration for sessions/selection (defaults to
+    /// the scenario's fleet recipe with standard pool priors).
+    pub fn pool_cfg(mut self, cfg: PoolConfig) -> Scenario {
+        self.pool = Some(cfg);
+        self
+    }
+
+    // -- accessors -------------------------------------------------------
+
+    /// Resolved model spec.
+    pub fn spec(&self) -> Result<ModelSpec> {
+        ModelSpec::preset(&self.model)
+    }
+
+    /// The GEMM DAG of this scenario.
+    pub fn dag(&self) -> Result<GemmDag> {
+        Ok(GemmDag::build(&self.spec()?, &self.setup))
+    }
+
+    /// Materialize the fleet.
+    pub fn fleet(&self) -> Fleet {
+        match &self.fleet {
+            FleetSpec::Sampled(cfg) => Fleet::sample(cfg),
+            FleetSpec::Median(n) => Fleet::median(*n),
+        }
+    }
+
+    /// The §4.1 cost model of this scenario.
+    pub fn cost_model(&self) -> CostModel {
+        if self.effective_flops {
+            CostModel::default().with_effective_flops()
+        } else {
+            CostModel::default()
+        }
+    }
+
+    /// Configured device count.
+    pub fn n_devices(&self) -> usize {
+        match &self.fleet {
+            FleetSpec::Sampled(cfg) => cfg.n_devices,
+            FleetSpec::Median(n) => *n,
+        }
+    }
+
+    /// Train setup in effect.
+    pub fn train_setup(&self) -> TrainSetup {
+        self.setup
+    }
+
+    /// PS parameters in effect.
+    pub fn ps_params(&self) -> &PsParams {
+        &self.ps
+    }
+
+    /// The session configuration actually run: explicit `ps`/`solver_opts`
+    /// knobs are re-applied over any [`Scenario::select`] override so the
+    /// builder is order-independent.
+    fn effective_session(&self) -> SessionConfig {
+        let mut s = self.session.clone();
+        if self.ps_explicit {
+            s.select.ps_conn_s = self.ps.conn_s;
+        }
+        if self.opts_explicit {
+            s.select.opts = self.opts;
+        }
+        s
+    }
+
+    /// Admission-optimizer configuration in effect (resolved).
+    pub fn select_config(&self) -> SelectConfig {
+        self.effective_session().select
+    }
+
+    /// The candidate-pool configuration sessions sample from.
+    pub fn pool_config(&self) -> PoolConfig {
+        match (&self.pool, &self.fleet) {
+            (Some(cfg), _) => cfg.clone(),
+            (None, FleetSpec::Sampled(fc)) => PoolConfig {
+                fleet: fc.clone(),
+                ..PoolConfig::default()
+            },
+            (None, FleetSpec::Median(n)) => PoolConfig {
+                fleet: FleetConfig::default().with_devices(*n),
+                ..PoolConfig::default()
+            },
+        }
+    }
+
+    // -- entrypoints -----------------------------------------------------
+
+    fn batch_ctx(&self) -> Result<BatchCtx> {
+        Ok(BatchCtx {
+            dag: GemmDag::build(&self.spec()?, &self.setup),
+            fleet: self.fleet(),
+            cm: self.cost_model(),
+        })
+    }
+
+    fn run_batch_in(&self, ctx: &BatchCtx, planner: &mut dyn Planner) -> Report {
+        let input = PlanInput {
+            devices: &ctx.fleet.devices,
+            dag: &ctx.dag,
+            cm: &ctx.cm,
+            ps: &self.ps,
+            opts: self.opts,
+        };
+        let detail = match planner.plan(&input) {
+            Plan::Executable { schedule, stats } => {
+                let result =
+                    simulate_batch(&ctx.fleet.devices, &ctx.dag, &schedule, &ctx.cm, &self.sim);
+                ReportDetail::Batch { result, stats }
+            }
+            Plan::Estimate(e) => ReportDetail::Estimate(e),
+            Plan::Infeasible { reason } => ReportDetail::Infeasible { reason },
+        };
+        self.report(planner.name(), detail)
+    }
+
+    /// Plan one batch with `planner` and measure it: executable plans run
+    /// through [`simulate_batch`] on the fleet, estimates report their
+    /// closed form.
+    pub fn run_batch(&self, planner: &mut dyn Planner) -> Result<Report> {
+        Ok(self.run_batch_in(&self.batch_ctx()?, planner))
+    }
+
+    /// Run every planner at this one configuration (the per-row shape of
+    /// Figures 3/4). The DAG, fleet sample and cost model are built once
+    /// and shared across the planners.
+    pub fn compare(&self, planners: &mut [&mut dyn Planner]) -> Result<Vec<Report>> {
+        let ctx = self.batch_ctx()?;
+        Ok(planners
+            .iter_mut()
+            .map(|p| self.run_batch_in(&ctx, *p))
+            .collect())
+    }
+
+    /// Clone the scenario with one axis knob set to `value`.
+    pub fn at(&self, axis: Axis, value: f64) -> Scenario {
+        let sc = self.clone();
+        match axis {
+            Axis::Devices => sc.devices(value.round() as usize),
+            Axis::BatchSize => sc.batch(value.round() as usize),
+            Axis::Stragglers => sc.stragglers(value),
+        }
+    }
+
+    /// Sweep one axis across `points`, running every planner at each point
+    /// (cached planners stay warm across the sweep — the legacy
+    /// `SolverCache`-threaded bench loops).
+    pub fn run_sweep(
+        &self,
+        axis: Axis,
+        points: &[f64],
+        planners: &mut [&mut dyn Planner],
+    ) -> Result<Vec<SweepPoint>> {
+        points
+            .iter()
+            .map(|&v| {
+                Ok(SweepPoint {
+                    value: v,
+                    reports: self.at(axis, v).compare(planners)?,
+                })
+            })
+            .collect()
+    }
+
+    /// Plan a batch, fail the plan's first active device, and report the
+    /// recovery latency: §4.2 shard recovery for executable plans, a
+    /// synchronous batch restart for closed-form baselines.
+    pub fn run_recovery(&self, planner: &mut dyn Planner) -> Result<Report> {
+        let spec = self.spec()?;
+        let dag = GemmDag::build(&spec, &self.setup);
+        let fleet = self.fleet();
+        let cm = self.cost_model();
+        let input = PlanInput {
+            devices: &fleet.devices,
+            dag: &dag,
+            cm: &cm,
+            ps: &self.ps,
+            opts: self.opts,
+        };
+        let detail = match planner.plan(&input) {
+            Plan::Executable { schedule, .. } => {
+                let g = dag.levels[0].gemms[0];
+                let shape = GemmShape::new(g.m, g.n, g.q, g.count);
+                let a = &schedule.by_shape[&shape];
+                let victim = a.active_devices()[0];
+                let plan = recover(&fleet.devices, a, &[victim], &cm, &self.opts);
+                ReportDetail::Recovery(RecoveryReport {
+                    victim,
+                    lost_area: plan.lost_area,
+                    solve_s: plan.solve_time,
+                    recompute_s: plan.recompute_time,
+                    total_s: plan.total_latency(),
+                })
+            }
+            Plan::Estimate(e) => ReportDetail::Recovery(RecoveryReport {
+                victim: 0,
+                lost_area: 0,
+                solve_s: 0.0,
+                // no shard-level recovery: the in-flight batch restarts
+                recompute_s: e.per_batch_s,
+                total_s: e.per_batch_s,
+            }),
+            Plan::Infeasible { reason } => ReportDetail::Infeasible { reason },
+        };
+        Ok(self.report(planner.name(), detail))
+    }
+
+    /// Run a long-horizon churn session over a freshly sampled candidate
+    /// pool (see [`run_session_with`]).
+    ///
+    /// # Panics
+    /// Propagates [`run_session_with`]'s panic when the planner turns
+    /// infeasible mid-session (e.g. a full-check baseline on a fleet it
+    /// cannot fit) — size the session with a runtime-only planner variant.
+    pub fn run_session(&self, planner: &mut dyn Planner) -> Result<Report> {
+        let mut pool = DevicePool::sample(&self.pool_config());
+        self.run_session_on(&mut pool, planner)
+    }
+
+    /// [`Scenario::run_session`] over a caller-owned pool (inspect or
+    /// reuse the pool after the run).
+    pub fn run_session_on(
+        &self,
+        pool: &mut DevicePool,
+        planner: &mut dyn Planner,
+    ) -> Result<Report> {
+        let spec = self.spec()?;
+        let dag = GemmDag::build(&spec, &self.setup);
+        let cm = self.cost_model();
+        // report identity follows the pool the session actually ran, not
+        // the (possibly defaulted) fleet recipe
+        let pool_devices = pool.len();
+        let r = run_session_with(pool, &dag, &cm, &self.ps, &self.effective_session(), planner);
+        let mut report = self.report(planner.name(), ReportDetail::Session(r));
+        report.devices = pool_devices;
+        Ok(report)
+    }
+
+    /// Run the admission optimizer once over the configured pool's
+    /// planning view, returning the probed cost/throughput frontier and
+    /// the solver-cache counters of the probe loop.
+    pub fn selection_frontier(&self) -> Result<(SelectionOutcome, CacheStats)> {
+        let dag = self.dag()?;
+        let cm = self.cost_model();
+        let pool = DevicePool::sample(&self.pool_config());
+        let selectable = pool.selectable();
+        let mut cache = SolverCache::new();
+        let out = select_devices(
+            &pool.planning_devices(&selectable),
+            &dag,
+            &cm,
+            &self.ps,
+            &self.effective_session().select,
+            &mut cache,
+        );
+        Ok((out, cache.stats()))
+    }
+
+    fn report(&self, planner: &str, detail: ReportDetail) -> Report {
+        Report {
+            planner: planner.to_string(),
+            model: self.model.clone(),
+            devices: self.n_devices(),
+            batch_size: self.setup.batch,
+            detail,
+        }
+    }
+}
+
+/// One point of a [`Scenario::run_sweep`]: the axis value and one report
+/// per planner, in the order the planners were passed.
+#[derive(Clone, Debug)]
+pub struct SweepPoint {
+    pub value: f64,
+    pub reports: Vec<Report>,
+}
+
+/// Recovery latency breakdown (§4.2 / Figure 7).
+#[derive(Clone, Copy, Debug)]
+pub struct RecoveryReport {
+    pub victim: usize,
+    pub lost_area: usize,
+    pub solve_s: f64,
+    pub recompute_s: f64,
+    pub total_s: f64,
+}
+
+/// Entrypoint-specific payload of a [`Report`].
+#[derive(Clone, Debug)]
+pub enum ReportDetail {
+    /// executable plan, measured by the per-batch simulator
+    Batch {
+        result: BatchResult,
+        stats: SolverStats,
+    },
+    /// closed-form baseline estimate
+    Estimate(PlanEstimate),
+    /// no feasible plan
+    Infeasible { reason: String },
+    /// long-horizon churn session
+    Session(SessionReport),
+    /// failure-recovery probe
+    Recovery(RecoveryReport),
+}
+
+/// Typed outcome of one scenario entrypoint.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub planner: String,
+    pub model: String,
+    pub devices: usize,
+    pub batch_size: usize,
+    pub detail: ReportDetail,
+}
+
+impl Report {
+    /// Headline per-batch seconds (mean for sessions); `None` when the
+    /// planner was infeasible or the entrypoint has no per-batch notion.
+    pub fn per_batch(&self) -> Option<f64> {
+        match &self.detail {
+            ReportDetail::Batch { result, .. } => Some(result.batch_time),
+            ReportDetail::Estimate(e) => Some(e.per_batch_s),
+            ReportDetail::Session(s) => Some(s.mean_batch_s),
+            ReportDetail::Recovery(_) | ReportDetail::Infeasible { .. } => None,
+        }
+    }
+
+    pub fn feasible(&self) -> bool {
+        !matches!(self.detail, ReportDetail::Infeasible { .. })
+    }
+
+    /// The simulated batch, for executable plans.
+    pub fn batch(&self) -> Option<&BatchResult> {
+        match &self.detail {
+            ReportDetail::Batch { result, .. } => Some(result),
+            _ => None,
+        }
+    }
+
+    /// The closed-form estimate, for baseline plans.
+    pub fn estimate(&self) -> Option<&PlanEstimate> {
+        match &self.detail {
+            ReportDetail::Estimate(e) => Some(e),
+            _ => None,
+        }
+    }
+
+    /// The session report, for session runs.
+    pub fn session(&self) -> Option<&SessionReport> {
+        match &self.detail {
+            ReportDetail::Session(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The recovery breakdown, for recovery runs.
+    pub fn recovery(&self) -> Option<&RecoveryReport> {
+        match &self.detail {
+            ReportDetail::Recovery(r) => Some(r),
+            _ => None,
+        }
+    }
+
+    /// Serialize in the `BENCH_*.json` house shape: scenario identity +
+    /// headline + detail-specific keys (sessions embed
+    /// [`SessionReport::to_json`]).
+    pub fn to_json(&self) -> Json {
+        let mut fields = vec![
+            ("planner", Json::from(self.planner.as_str())),
+            ("model", Json::from(self.model.as_str())),
+            ("devices", Json::from(self.devices)),
+            ("batch", Json::from(self.batch_size)),
+            (
+                "per_batch_s",
+                self.per_batch().map(Json::from).unwrap_or(Json::Null),
+            ),
+        ];
+        match &self.detail {
+            ReportDetail::Batch { result, stats } => {
+                fields.push(("gemm_s", Json::from(result.gemm_time)));
+                fields.push(("opt_tail_s", Json::from(result.opt_tail)));
+                fields.push(("total_dl_b", Json::from(result.total_dl_bytes)));
+                fields.push(("total_ul_b", Json::from(result.total_ul_bytes)));
+                fields.push(("peak_mem_b", Json::from(result.peak_device_mem_bytes)));
+                fields.push(("solve_s", Json::from(stats.solve_time_s)));
+            }
+            ReportDetail::Estimate(e) => {
+                fields.push(("per_device_mem_b", Json::from(e.per_device_mem_bytes)));
+                fields.push(("per_device_comm_elems", Json::from(e.per_device_comm_elems)));
+            }
+            ReportDetail::Infeasible { reason } => {
+                fields.push(("infeasible", Json::from(reason.as_str())));
+            }
+            ReportDetail::Session(s) => {
+                fields.push(("session", s.to_json()));
+            }
+            ReportDetail::Recovery(r) => {
+                fields.push(("victim", Json::from(r.victim)));
+                fields.push(("lost_area", Json::from(r.lost_area)));
+                fields.push(("solve_s", Json::from(r.solve_s)));
+                fields.push(("recompute_s", Json::from(r.recompute_s)));
+                fields.push(("recovery_s", Json::from(r.total_s)));
+            }
+        }
+        obj(fields)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::planner::{AlpaPlanner, CleavePlanner, DtfmPlanner};
+
+    #[test]
+    fn run_batch_reports_simulated_cleave() {
+        let sc = Scenario::model("OPT-13B").devices(32);
+        let r = sc.run_batch(&mut CleavePlanner::new()).unwrap();
+        assert_eq!(r.planner, "CLEAVE");
+        assert_eq!(r.devices, 32);
+        assert!(r.feasible());
+        let b = r.batch().expect("executable plan");
+        assert!(b.batch_time > 0.0);
+        assert_eq!(r.per_batch().unwrap().to_bits(), b.batch_time.to_bits());
+    }
+
+    #[test]
+    fn compare_keeps_planner_order() {
+        let sc = Scenario::model("OPT-13B").devices(32);
+        let mut cleave = CleavePlanner::new();
+        let mut dtfm = DtfmPlanner::runtime_only();
+        let mut alpa = AlpaPlanner::runtime_only();
+        let mut planners: Vec<&mut dyn Planner> = vec![&mut cleave, &mut dtfm, &mut alpa];
+        let rs = sc.compare(&mut planners).unwrap();
+        assert_eq!(
+            rs.iter().map(|r| r.planner.as_str()).collect::<Vec<_>>(),
+            vec!["CLEAVE", "DTFM", "Alpa"]
+        );
+        // the heterogeneity-aware solver beats both baselines here
+        assert!(rs[0].per_batch().unwrap() < rs[1].per_batch().unwrap());
+        assert!(rs[0].per_batch().unwrap() < rs[2].per_batch().unwrap());
+    }
+
+    #[test]
+    fn sweep_axis_applies_and_cached_planner_stays_warm() {
+        let sc = Scenario::model("OPT-13B").devices(24);
+        let mut cleave = CleavePlanner::cached();
+        let mut planners: Vec<&mut dyn Planner> = vec![&mut cleave];
+        let points = sc
+            .run_sweep(Axis::Stragglers, &[0.0, 0.1], &mut planners)
+            .unwrap();
+        assert_eq!(points.len(), 2);
+        assert!(points[0].reports[0].per_batch().unwrap() > 0.0);
+        let stats = cleave.solver_cache().unwrap().stats();
+        assert!(
+            stats.warm_solves + stats.memo_hits > 0,
+            "second sweep point must reuse warm state: {stats:?}"
+        );
+    }
+
+    #[test]
+    fn recovery_report_for_executable_and_estimate() {
+        let sc = Scenario::model("OPT-13B").devices(16);
+        let r = sc.run_recovery(&mut CleavePlanner::new()).unwrap();
+        let rec = r.recovery().expect("cleave recovery");
+        assert!(rec.lost_area > 0);
+        assert!(rec.total_s >= rec.recompute_s);
+
+        let r = sc.run_recovery(&mut DtfmPlanner::runtime_only()).unwrap();
+        let rec = r.recovery().expect("baseline restart");
+        assert_eq!(rec.lost_area, 0);
+        assert!(rec.total_s > 0.0, "restart must cost a full batch");
+    }
+
+    #[test]
+    fn infeasible_planner_yields_infeasible_report() {
+        // Full-check DTFM cannot fit phone-class memory budgets.
+        let sc = Scenario::model("OPT-13B").devices(16).median_fleet();
+        let r = sc.run_batch(&mut DtfmPlanner::new()).unwrap();
+        assert!(!r.feasible());
+        assert!(r.per_batch().is_none());
+        assert!(matches!(r.detail, ReportDetail::Infeasible { .. }));
+    }
+
+    #[test]
+    fn report_json_carries_identity_and_headline() {
+        let sc = Scenario::model("OPT-13B").devices(16);
+        let r = sc.run_batch(&mut CleavePlanner::new()).unwrap();
+        let j = r.to_json();
+        assert_eq!(j.get("planner").unwrap().as_str().unwrap(), "CLEAVE");
+        assert_eq!(j.get("devices").unwrap().as_usize().unwrap(), 16);
+        assert!(j.get("per_batch_s").unwrap().as_f64().unwrap() > 0.0);
+        assert!(j.get("gemm_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn ps_envelope_reprices_admission_fanout() {
+        let env = PsEnvelope {
+            participants: 1000,
+            batch_s: 2.0,
+        };
+        let sc = Scenario::model("OPT-13B").ps_envelope(&env);
+        assert!((sc.select_config().ps_conn_s - 2e-3).abs() < 1e-15);
+        assert!((sc.ps.conn_s - 2e-3).abs() < 1e-15);
+        // order-independent: a later full select() override keeps the
+        // explicit envelope pricing
+        let sc = Scenario::model("OPT-13B")
+            .ps_envelope(&env)
+            .select(SelectConfig {
+                cvar: None,
+                ..SelectConfig::default()
+            });
+        assert!((sc.select_config().ps_conn_s - 2e-3).abs() < 1e-15);
+        assert!(sc.select_config().cvar.is_none());
+        // without an explicit ps, select() fully controls the constant
+        let sc = Scenario::model("OPT-13B").select(SelectConfig {
+            ps_conn_s: 7e-4,
+            ..SelectConfig::default()
+        });
+        assert!((sc.select_config().ps_conn_s - 7e-4).abs() < 1e-15);
+    }
+}

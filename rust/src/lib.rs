@@ -22,6 +22,7 @@
 //!
 //! | module | role |
 //! |---|---|
+//! | [`api`] | the experiment facade: `Scenario` builder × interchangeable `Planner`s |
 //! | [`util`] | offline-image substrates: PRNG, stats, JSON, CLI, threads, bench harness |
 //! | [`model`] | model specs, FLOP/memory accounting (Tables 1–4), the GEMM DAG (Table 6) |
 //! | [`cluster`] | heterogeneous device fleet, link asymmetry, Pareto tails, churn, candidate pools |
@@ -31,6 +32,7 @@
 //! | [`coordinator`] | live PS + workers: dispatch/collect, Freivalds verify, rust Adam, trainer |
 //! | [`runtime`] | PJRT bridge: HLO text -> compile -> execute; host GEMM fallback |
 
+pub mod api;
 pub mod baselines;
 pub mod cluster;
 pub mod coordinator;

@@ -6,26 +6,22 @@
 //! * `recover`   — inject a failure and report recovery latency
 //! * `info`      — print model/fleet accounting (Tables 1–4 style)
 //!
-//! Each paper experiment also has a dedicated bench (`cargo bench`) — see
-//! DESIGN.md §5 for the experiment index.
+//! The `simulate`/`recover`/`info` subcommands drive the
+//! [`cleave::api::Scenario`] facade — the same path the figure benches and
+//! examples use. Each paper experiment also has a dedicated bench
+//! (`cargo bench`) — see DESIGN.md §5 for the experiment index.
 
 use anyhow::{bail, Result};
 
-use cleave::baselines::{alpa, dtfm};
-use cleave::cluster::fleet::{Fleet, FleetConfig};
+use cleave::api::{AlpaPlanner, CleavePlanner, DtfmPlanner, Scenario};
+use cleave::cluster::fleet::Fleet;
 use cleave::coordinator::optimizer::AdamConfig;
 use cleave::coordinator::ps::{DistributedGemm, PsConfig};
 use cleave::coordinator::trainer::{DistributedBackend, Trainer, TrainerConfig};
 use cleave::coordinator::worker::Behavior;
-use cleave::model::config::{ModelSpec, TrainSetup};
-use cleave::model::dag::GemmDag;
 use cleave::model::flops;
 use cleave::model::memory::{self, ActivationPolicy};
 use cleave::runtime::executor::Artifacts;
-use cleave::sched::cost::{CostModel, GemmShape, PsParams};
-use cleave::sched::recovery::recover;
-use cleave::sched::solver::{solve_dag, solve_gemm, SolverOptions};
-use cleave::sim::batch::{simulate_batch, SimConfig};
 use cleave::util::cli::Cli;
 use cleave::util::table::Table;
 use cleave::util::{fmt_bytes, fmt_secs};
@@ -61,39 +57,44 @@ fn main() {
     }
 }
 
-fn run(cmd: &str, args: &cleave::util::cli::Args) -> Result<()> {
-    let spec = ModelSpec::preset(args.get_str("model")?)?;
-    let setup = TrainSetup::default()
-        .with_batch(args.get_usize("batch")?)
-        .with_seq(args.get_usize("seq")?);
-    let n_dev = args.get_usize("devices")?;
-    let fleet = if args.has_flag("median") {
-        Fleet::median(n_dev)
+/// Build the experiment facade from the CLI flags — the single assembly
+/// point every subcommand shares.
+fn scenario(args: &cleave::util::cli::Args) -> Result<Scenario> {
+    let mut sc = Scenario::model(args.get_str("model")?)
+        .devices(args.get_usize("devices")?)
+        .batch(args.get_usize("batch")?)
+        .seq(args.get_usize("seq")?)
+        // the launcher's historical convention: raw cost-model FLOPS
+        .raw_flops();
+    sc = if args.has_flag("median") {
+        sc.median_fleet()
     } else {
-        Fleet::sample(
-            &FleetConfig::default()
-                .with_devices(n_dev)
-                .with_stragglers(args.get_f64("stragglers")?)
-                .with_seed(args.get_u64("seed")?),
-        )
+        sc.stragglers(args.get_f64("stragglers")?)
+            .fleet_seed(args.get_u64("seed")?)
     };
+    Ok(sc)
+}
 
+fn run(cmd: &str, args: &cleave::util::cli::Args) -> Result<()> {
     match cmd {
-        "info" => info(&spec, &setup, &fleet),
-        "simulate" => simulate(&spec, &setup, &fleet),
-        "recover" => recover_cmd(&spec, &setup, &fleet),
+        "info" => info(&scenario(args)?),
+        "simulate" => simulate(&scenario(args)?),
+        "recover" => recover_cmd(&scenario(args)?),
         "train" => train(args),
         other => bail!("unknown subcommand '{other}' (info|simulate|recover|train)"),
     }
 }
 
-fn info(spec: &ModelSpec, setup: &TrainSetup, fleet: &Fleet) -> Result<()> {
+fn info(sc: &Scenario) -> Result<()> {
+    let spec = sc.spec()?;
+    let setup = sc.train_setup();
+    let fleet = sc.fleet();
     println!(
         "model: {} (h={}, H={}, L={}, heads={})",
         spec.name, spec.hidden, spec.intermediate, spec.layers, spec.heads
     );
-    let br = flops::flops(spec, setup);
-    let mem = memory::total_memory(spec, setup, ActivationPolicy::Full);
+    let br = flops::flops(&spec, &setup);
+    let mem = memory::total_memory(&spec, &setup, ActivationPolicy::Full);
     let mut t = Table::new(&["quantity", "value"]);
     t.row(&[
         "total params".into(),
@@ -118,17 +119,9 @@ fn info(spec: &ModelSpec, setup: &TrainSetup, fleet: &Fleet) -> Result<()> {
     Ok(())
 }
 
-fn simulate(spec: &ModelSpec, setup: &TrainSetup, fleet: &Fleet) -> Result<()> {
-    let dag = GemmDag::build(spec, setup);
-    let cm = CostModel::default();
-    let (schedule, stats) = solve_dag(
-        &fleet.devices,
-        &dag,
-        &cm,
-        &PsParams::default(),
-        &SolverOptions::default(),
-    );
-    let r = simulate_batch(&fleet.devices, &dag, &schedule, &cm, &SimConfig::default());
+fn simulate(sc: &Scenario) -> Result<()> {
+    let report = sc.run_batch(&mut CleavePlanner::new())?;
+    let r = report.batch().expect("CLEAVE plans are executable");
     let mut t = Table::new(&["metric", "CLEAVE"]);
     t.row(&["per-batch time".into(), fmt_secs(r.batch_time)]);
     t.row(&["GEMM time".into(), fmt_secs(r.gemm_time)]);
@@ -139,35 +132,33 @@ fn simulate(spec: &ModelSpec, setup: &TrainSetup, fleet: &Fleet) -> Result<()> {
         "peak device mem".into(),
         fmt_bytes(r.peak_device_mem_bytes),
     ]);
-    t.row(&["solver time".into(), fmt_secs(stats.solve_time_s)]);
-    t.print();
-    // Baselines for context
-    if let Some(d) = dtfm::plan(spec, setup, &fleet.devices, 1e12) {
-        println!("DTFM per-batch: {}", fmt_secs(d.per_batch_s));
-    } else {
-        println!("DTFM: infeasible at this scale");
+    if let cleave::api::ReportDetail::Batch { stats, .. } = &report.detail {
+        t.row(&["solver time".into(), fmt_secs(stats.solve_time_s)]);
     }
-    if let Some(a) = alpa::plan(spec, setup, &fleet.devices) {
-        println!("Alpa per-batch: {}", fmt_secs(a.per_batch_s));
-    } else {
-        println!("Alpa: infeasible (memory)");
+    t.print();
+    // Baselines for context (full feasibility checks: OOM is part of the
+    // answer at these scales).
+    match sc.run_batch(&mut DtfmPlanner::new())?.per_batch() {
+        Some(s) => println!("DTFM per-batch: {}", fmt_secs(s)),
+        None => println!("DTFM: infeasible at this scale"),
+    }
+    match sc.run_batch(&mut AlpaPlanner::new())?.per_batch() {
+        Some(s) => println!("Alpa per-batch: {}", fmt_secs(s)),
+        None => println!("Alpa: infeasible (memory)"),
     }
     Ok(())
 }
 
-fn recover_cmd(spec: &ModelSpec, setup: &TrainSetup, fleet: &Fleet) -> Result<()> {
-    let cm = CostModel::default();
-    let g = GemmDag::build(spec, setup).levels[0].gemms[0];
-    let shape = GemmShape::new(g.m, g.n, g.q, g.count);
-    let (a, _) = solve_gemm(&fleet.devices, shape, &cm, &SolverOptions::default());
-    let victim = a.active_devices()[0];
-    let plan = recover(&fleet.devices, &a, &[victim], &cm, &SolverOptions::default());
+fn recover_cmd(sc: &Scenario) -> Result<()> {
+    let report = sc.run_recovery(&mut CleavePlanner::new())?;
+    let plan = report.recovery().expect("CLEAVE recovery plan");
     println!(
-        "failure of device {victim}: lost {} cells, re-solve {}, recompute {}, total {}",
+        "failure of device {}: lost {} cells, re-solve {}, recompute {}, total {}",
+        plan.victim,
         plan.lost_area,
-        fmt_secs(plan.solve_time),
-        fmt_secs(plan.recompute_time),
-        fmt_secs(plan.total_latency())
+        fmt_secs(plan.solve_s),
+        fmt_secs(plan.recompute_s),
+        fmt_secs(plan.total_s)
     );
     Ok(())
 }

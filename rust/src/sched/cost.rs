@@ -273,6 +273,11 @@ pub struct PsParams {
     pub net_bw: f64,
     /// Adam host traffic per parameter (paper: 26 B/param)
     pub rho_opt: f64,
+    /// per-connection fan-out/service time per admitted device per batch
+    /// (connection handling + dispatch bookkeeping on top of the payload
+    /// service already priced at `net_bw`) — the admission objective's
+    /// PS-cost constant, measurable via [`PsEnvelope`]
+    pub conn_s: f64,
 }
 
 impl Default for PsParams {
@@ -281,6 +286,41 @@ impl Default for PsParams {
             mem_bw: 150e9,
             net_bw: 25e9,
             rho_opt: 26.0,
+            conn_s: 5e-4,
+        }
+    }
+}
+
+/// A measured single-PS operating envelope (`benches/ps_envelope.rs`): the
+/// largest participant count one PS sustains without becoming the binding
+/// constraint, and the per-batch time at that operating point. The §6
+/// envelope ("~1000–2000 concurrent participants per PS") prices each
+/// connection at its share of the batch the PS can hide it in:
+/// `conn_s = batch_s / participants`.
+#[derive(Clone, Copy, Debug)]
+pub struct PsEnvelope {
+    /// sustainable concurrent participants (PS share below the bind gate)
+    pub participants: usize,
+    /// measured per-batch seconds at that participant count
+    pub batch_s: f64,
+}
+
+impl PsEnvelope {
+    /// Per-connection fan-out service time implied by the envelope.
+    pub fn conn_s(&self) -> f64 {
+        assert!(self.participants > 0, "envelope needs participants");
+        self.batch_s / self.participants as f64
+    }
+}
+
+impl PsParams {
+    /// PS parameters with the admission fan-out constant wired to a
+    /// measured envelope instead of the default prior (consumed through
+    /// `Scenario::ps_envelope` and `SelectConfig::with_ps`).
+    pub fn from_envelope(env: &PsEnvelope) -> PsParams {
+        PsParams {
+            conn_s: env.conn_s(),
+            ..PsParams::default()
         }
     }
 }
@@ -450,5 +490,20 @@ mod tests {
         let tail = opt_tail(&cm, &ps, &shapes);
         assert!(tail < per_layer_time);
         assert!(tail > 0.0);
+    }
+
+    #[test]
+    fn envelope_prices_connections_by_batch_share() {
+        // §6: ~1000-2000 participants per PS; pricing a connection at its
+        // batch share lands near the default prior's magnitude.
+        let env = PsEnvelope {
+            participants: 2000,
+            batch_s: 1.0,
+        };
+        assert!((env.conn_s() - 5e-4).abs() < 1e-15);
+        let ps = PsParams::from_envelope(&env);
+        assert_eq!(ps.conn_s.to_bits(), env.conn_s().to_bits());
+        // everything else keeps the default host parameters
+        assert_eq!(ps.net_bw.to_bits(), PsParams::default().net_bw.to_bits());
     }
 }

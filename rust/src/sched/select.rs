@@ -39,6 +39,7 @@ use crate::sched::cost::{CostModel, GemmShape, PsParams};
 use crate::sched::cvar::risk_adjusted;
 use crate::sched::fastpath::{distinct_shapes, SolverCache};
 use crate::sched::solver::{solve_dag_cached, SolverOptions};
+use crate::util::json::{obj, Json};
 
 /// Reference horizon for the capability ordering score.
 const SCORE_HORIZON_S: f64 = 2.0;
@@ -70,7 +71,9 @@ pub struct SelectConfig {
 impl Default for SelectConfig {
     fn default() -> Self {
         SelectConfig {
-            ps_conn_s: 5e-4,
+            // the PS fan-out prior lives on PsParams so a measured envelope
+            // (PsParams::from_envelope) re-prices admission consistently
+            ps_conn_s: PsParams::default().conn_s,
             cvar: Some((2.0, 0.05)),
             churn: ChurnConfig::default(),
             recovery_frac: 0.02,
@@ -78,6 +81,16 @@ impl Default for SelectConfig {
             opts: SolverOptions::default(),
             refine_rounds: 8,
         }
+    }
+}
+
+impl SelectConfig {
+    /// Price the admission objective's PS fan-out from `ps.conn_s` (e.g. a
+    /// measured [`crate::sched::cost::PsEnvelope`] via
+    /// [`PsParams::from_envelope`]).
+    pub fn with_ps(mut self, ps: &PsParams) -> Self {
+        self.ps_conn_s = ps.conn_s;
+        self
     }
 }
 
@@ -94,6 +107,19 @@ pub struct FrontierPoint {
     pub churn_loss: f64,
     /// `t_star + ps_cost + churn_loss` — what admission minimizes
     pub objective: f64,
+}
+
+impl FrontierPoint {
+    /// The `BENCH_selection.json` frontier-row shape.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("n", Json::from(self.n)),
+            ("t_star_s", Json::from(self.t_star)),
+            ("ps_cost_s", Json::from(self.ps_cost)),
+            ("churn_loss_s", Json::from(self.churn_loss)),
+            ("objective_s", Json::from(self.objective)),
+        ])
+    }
 }
 
 /// Result of one admission optimization.
@@ -383,6 +409,22 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn ps_envelope_reprices_fanout() {
+        use crate::sched::cost::PsEnvelope;
+        let env = PsEnvelope {
+            participants: 500,
+            batch_s: 1.0,
+        };
+        let cfg = SelectConfig::default().with_ps(&PsParams::from_envelope(&env));
+        assert!((cfg.ps_conn_s - 2e-3).abs() < 1e-15);
+        // default stays tied to the PsParams prior
+        assert_eq!(
+            SelectConfig::default().ps_conn_s.to_bits(),
+            PsParams::default().conn_s.to_bits()
+        );
     }
 
     #[test]

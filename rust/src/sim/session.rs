@@ -25,7 +25,17 @@
 //! hidden-straggler blow-up — which is exactly what selection is for. The
 //! report records per-batch times, recovery latencies, selection decisions,
 //! and the solver-cache reuse counters (the admission loop must run warm).
+//!
+//! Sessions are planner-generic ([`run_session_with`]): any
+//! [`crate::api::Planner`] re-plans at membership changes, so the
+//! DTFM/Alpa baselines run under the *same* churn stream as CLEAVE.
+//! Executable plans pay the §4.2 shard recovery per failure; closed-form
+//! estimates have no shard-level recovery, so a mid-batch failure restarts
+//! the in-flight batch (the synchronous-training loss model) and the
+//! estimate is re-evaluated on the survivors' delivered capabilities.
+//! [`run_session`] is the CLEAVE-with-warm-cache special case.
 
+use crate::api::planner::{CleavePlanner, Plan, PlanInput, Planner};
 use crate::cluster::churn::{events, ChurnConfig, ChurnEvent};
 use crate::cluster::device::Device;
 use crate::cluster::pool::DevicePool;
@@ -35,9 +45,9 @@ use crate::sched::cost::{CostModel, GemmShape, PsParams};
 use crate::sched::fastpath::{CacheStats, SolverCache};
 use crate::sched::recovery::recover;
 use crate::sched::select::{select_devices, SelectConfig};
-use crate::sched::solver::solve_dag_cached;
 use crate::sim::batch::{simulate_batch, SimConfig};
 use crate::sim::engine::Engine;
+use crate::util::json::{obj, Json};
 use crate::util::rng::Rng;
 use crate::util::stats::summarize;
 
@@ -112,9 +122,12 @@ pub struct SelectionDecision {
 /// Outcome of a session run.
 #[derive(Clone, Debug)]
 pub struct SessionReport {
+    /// name of the planner that drove the session
+    pub planner: String,
     /// wall-clock per batch (includes recovery latency and PS fan-out)
     pub batch_times: Vec<f64>,
-    /// §4.2 recovery latency of each mid-batch failure
+    /// recovery latency of each mid-batch failure (§4.2 shard recovery
+    /// for executable plans, a full-batch restart for estimates)
     pub recovery_latencies: Vec<f64>,
     pub decisions: Vec<SelectionDecision>,
     pub failures: usize,
@@ -125,6 +138,38 @@ pub struct SessionReport {
     pub effective_throughput: f64,
     /// session-wide solver-cache reuse counters
     pub solver: CacheStats,
+}
+
+impl SessionReport {
+    /// The `BENCH_selection.json` per-policy row shape.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("mean_batch_s", Json::from(self.mean_batch_s)),
+            ("p95_batch_s", Json::from(self.p95_batch_s)),
+            (
+                "effective_throughput",
+                Json::from(self.effective_throughput),
+            ),
+            ("failures", Json::from(self.failures)),
+            ("joins", Json::from(self.joins)),
+            (
+                "admitted_final",
+                Json::from(self.decisions.last().map(|d| d.admitted).unwrap_or(0)),
+            ),
+            (
+                "stragglers_admitted_final",
+                Json::from(
+                    self.decisions
+                        .last()
+                        .map(|d| d.stragglers_admitted)
+                        .unwrap_or(0),
+                ),
+            ),
+            ("cold_solves", Json::from(self.solver.cold_solves)),
+            ("warm_solves", Json::from(self.solver.warm_solves)),
+            ("memo_hits", Json::from(self.solver.memo_hits)),
+        ])
+    }
 }
 
 /// Immutable per-session context threaded through the helpers.
@@ -174,26 +219,79 @@ fn choose_active(
     chosen
 }
 
-/// Solve the schedule for the active set on the policy's planning view;
-/// return it with the delivered devices the simulator executes at.
-fn solve_active(
+/// What one planning round produced: an executable schedule (simulated on
+/// delivered capabilities, recovered shard-by-shard on failure) or a
+/// closed-form estimate (restart-on-failure).
+enum PlannedBatch {
+    Sched(Schedule),
+    Flat,
+}
+
+/// Plan the active set on the policy's planning view with `planner`;
+/// return the plan, the delivered devices the batch executes at, and the
+/// clean (failure-free) per-batch time.
+fn plan_active(
     pool: &DevicePool,
     active: &[usize],
     ctx: &Ctx,
-    cache: &mut SolverCache,
-) -> (Schedule, Vec<Device>) {
+    planner: &mut dyn Planner,
+) -> (PlannedBatch, Vec<Device>, f64) {
     let plan_view = match ctx.cfg.policy {
         Policy::TakeAll => pool.advertised_devices(active),
         Policy::CostGuided => pool.planning_devices(active),
         Policy::Oracle => pool.delivered_devices(active),
     };
-    let (schedule, _) =
-        solve_dag_cached(&plan_view, ctx.dag, ctx.cm, ctx.ps, &ctx.cfg.select.opts, cache);
-    (schedule, pool.delivered_devices(active))
+    let delivered = pool.delivered_devices(active);
+    let input = PlanInput {
+        devices: &plan_view,
+        dag: ctx.dag,
+        cm: ctx.cm,
+        ps: ctx.ps,
+        opts: ctx.cfg.select.opts,
+    };
+    match planner.plan(&input) {
+        Plan::Executable { schedule, .. } => {
+            let clean = simulate_batch(&delivered, ctx.dag, &schedule, ctx.cm, &ctx.cfg.sim);
+            (PlannedBatch::Sched(schedule), delivered, clean.batch_time)
+        }
+        Plan::Estimate(_) => {
+            // Closed forms have no plan/measure split: the estimate is the
+            // measurement instrument, evaluated on delivered reality.
+            let measured = planner.plan(&PlanInput {
+                devices: &delivered,
+                dag: ctx.dag,
+                cm: ctx.cm,
+                ps: ctx.ps,
+                opts: ctx.cfg.select.opts,
+            });
+            match measured {
+                Plan::Estimate(e) => (PlannedBatch::Flat, delivered, e.per_batch_s),
+                _ => unreachable!("planner switched plan kinds between views"),
+            }
+        }
+        Plan::Infeasible { reason } => panic!(
+            "planner '{}' infeasible mid-session at {} devices: {reason}",
+            planner.name(),
+            active.len()
+        ),
+    }
 }
 
-/// Run one multi-batch session over `pool`. The pool is mutated: joins
-/// extend it, failures depart devices, membership states track decisions.
+/// The planner's own warm cache when it has one (so selection probes and
+/// re-solves share state), else the session-local fallback.
+fn session_cache<'a>(
+    planner: &'a mut dyn Planner,
+    fallback: &'a mut SolverCache,
+) -> &'a mut SolverCache {
+    match planner.solver_cache() {
+        Some(c) => c,
+        None => fallback,
+    }
+}
+
+/// Run one multi-batch session over `pool` with the CLEAVE solver behind a
+/// session-wide warm [`SolverCache`] — the historical entrypoint, now a
+/// thin wrapper over [`run_session_with`].
 pub fn run_session(
     pool: &mut DevicePool,
     dag: &GemmDag,
@@ -201,24 +299,52 @@ pub fn run_session(
     ps: &PsParams,
     cfg: &SessionConfig,
 ) -> SessionReport {
+    run_session_with(pool, dag, cm, ps, cfg, &mut CleavePlanner::cached())
+}
+
+/// Run one multi-batch session over `pool` with any churn-capable
+/// [`Planner`]. The pool is mutated: joins extend it, failures depart
+/// devices, membership states track decisions.
+///
+/// # Panics
+/// If the planner reports [`Plan::Infeasible`] for a membership set
+/// mid-session (a half-measured session has no meaningful report) — run
+/// baselines with their runtime-only variants, as the figure benches do,
+/// when feasibility at every membership size is not guaranteed.
+pub fn run_session_with(
+    pool: &mut DevicePool,
+    dag: &GemmDag,
+    cm: &CostModel,
+    ps: &PsParams,
+    cfg: &SessionConfig,
+    planner: &mut dyn Planner,
+) -> SessionReport {
     assert!(cfg.n_batches > 0, "session needs at least one batch");
+    assert!(
+        planner.supports_churn(),
+        "planner '{}' cannot run under membership churn",
+        planner.name()
+    );
     let ctx = Ctx { dag, cm, ps, cfg };
     let mut rng = Rng::new(cfg.seed);
-    let mut cache = SolverCache::new();
+    let mut fallback = SolverCache::new();
     let mut decisions: Vec<SelectionDecision> = Vec::new();
     let mut batch_times: Vec<f64> = Vec::with_capacity(cfg.n_batches);
     let mut recovery_latencies: Vec<f64> = Vec::new();
     let (mut failures, mut joins) = (0usize, 0usize);
 
-    // Initial membership + schedule + clean batch profile.
-    let mut active = choose_active(pool, &ctx, &mut cache, 0, &mut decisions);
-    let (mut schedule, mut true_devices) = solve_active(pool, &active, &ctx, &mut cache);
-    let mut clean = simulate_batch(&true_devices, dag, &schedule, cm, &cfg.sim);
+    // Initial membership + plan + clean batch profile.
+    let mut active = {
+        let cache = session_cache(planner, &mut fallback);
+        choose_active(pool, &ctx, cache, 0, &mut decisions)
+    };
+    let (mut planned, mut true_devices, mut clean_time) =
+        plan_active(pool, &active, &ctx, planner);
 
     // Churn stream over a generous horizon (rates follow the initial
     // membership; the §2.3 process is stationary per device).
     let mut eng: Engine<ChurnEvent> = Engine::new();
-    let horizon = (clean.batch_time * cfg.n_batches as f64 * 30.0).max(7200.0);
+    let horizon = (clean_time * cfg.n_batches as f64 * 30.0).max(7200.0);
     for e in events(&cfg.churn, active.len(), horizon, &mut rng) {
         eng.at(e.time(), e);
     }
@@ -228,16 +354,19 @@ pub fn run_session(
         if bi > 0 && cfg.epoch_batches > 0 && bi % cfg.epoch_batches == 0 {
             // Membership epoch: pick up joins, drop the departed, re-balance.
             let prev = active.clone();
-            active = choose_active(pool, &ctx, &mut cache, bi, &mut decisions);
+            active = {
+                let cache = session_cache(planner, &mut fallback);
+                choose_active(pool, &ctx, cache, bi, &mut decisions)
+            };
             if active != prev {
-                let solved = solve_active(pool, &active, &ctx, &mut cache);
-                schedule = solved.0;
-                true_devices = solved.1;
-                clean = simulate_batch(&true_devices, dag, &schedule, cm, &cfg.sim);
+                let replanned = plan_active(pool, &active, &ctx, planner);
+                planned = replanned.0;
+                true_devices = replanned.1;
+                clean_time = replanned.2;
             }
         }
         let fanout = active.len() as f64 * cfg.select.ps_conn_s;
-        let mut end = t + clean.batch_time + fanout;
+        let mut end = t + clean_time + fanout;
         while let Some((et, ev)) = eng.next() {
             if et >= end {
                 eng.at(et, ev); // beyond this batch: requeue
@@ -250,22 +379,30 @@ pub fn run_session(
                     }
                     let pos = device_index % active.len();
                     failures += 1;
-                    // §4.2 recovery of the dominant-shape shards, measured
-                    // at delivered capability.
-                    let g = dag.levels[0].gemms[0];
-                    let shape = GemmShape::new(g.m, g.n, g.q, g.count);
-                    let assignment = &schedule.by_shape[&shape];
-                    let plan = recover(&true_devices, assignment, &[pos], cm, &cfg.select.opts);
-                    let lat = plan.total_latency();
+                    let lat = match &planned {
+                        // §4.2 recovery of the dominant-shape shards,
+                        // measured at delivered capability.
+                        PlannedBatch::Sched(schedule) => {
+                            let g = dag.levels[0].gemms[0];
+                            let shape = GemmShape::new(g.m, g.n, g.q, g.count);
+                            let assignment = &schedule.by_shape[&shape];
+                            recover(&true_devices, assignment, &[pos], cm, &cfg.select.opts)
+                                .total_latency()
+                        }
+                        // No shard-level recovery in the closed-form
+                        // baselines: synchronous training restarts the
+                        // in-flight batch.
+                        PlannedBatch::Flat => clean_time,
+                    };
                     recovery_latencies.push(lat);
                     end += lat;
-                    // Permanent departure: shrink membership, re-solve warm.
+                    // Permanent departure: shrink membership, re-plan warm.
                     pool.depart(active[pos]);
                     active.remove(pos);
-                    let solved = solve_active(pool, &active, &ctx, &mut cache);
-                    schedule = solved.0;
-                    true_devices = solved.1;
-                    clean = simulate_batch(&true_devices, dag, &schedule, cm, &cfg.sim);
+                    let replanned = plan_active(pool, &active, &ctx, planner);
+                    planned = replanned.0;
+                    true_devices = replanned.1;
+                    clean_time = replanned.2;
                 }
                 ChurnEvent::Join { .. } => {
                     // Diurnal thinning of the inhomogeneous join process.
@@ -283,11 +420,16 @@ pub fn run_session(
     let s = summarize(&batch_times);
     let wall: f64 = batch_times.iter().sum();
     let lost: f64 = recovery_latencies.iter().sum();
+    let solver = match planner.solver_cache() {
+        Some(c) => c.stats(),
+        None => fallback.stats(),
+    };
     SessionReport {
+        planner: planner.name().to_string(),
         mean_batch_s: s.mean,
         p95_batch_s: s.p95,
         effective_throughput: if wall > 0.0 { (wall - lost) / wall } else { 1.0 },
-        solver: cache.stats(),
+        solver,
         batch_times,
         recovery_latencies,
         decisions,
@@ -424,6 +566,98 @@ mod tests {
         let last = r.decisions.last().unwrap();
         assert!(last.admitted < 32);
         assert!(pool.active().len() <= last.admitted);
+    }
+
+    #[test]
+    fn estimate_planner_restarts_batches_on_failure() {
+        use crate::api::planner::DtfmPlanner;
+        let mut pool = DevicePool::sample(&pool_cfg(24, 0.0));
+        let dag = dag();
+        let cfg = SessionConfig {
+            n_batches: 4,
+            epoch_batches: 2,
+            churn: ChurnConfig {
+                fail_rate_per_hour: 20.0,
+                join_rate_per_hour: 0.0,
+            },
+            policy: Policy::TakeAll,
+            ..SessionConfig::default()
+        };
+        let r = run_session_with(
+            &mut pool,
+            &dag,
+            &CostModel::default(),
+            &PsParams::default(),
+            &cfg,
+            &mut DtfmPlanner::runtime_only(),
+        );
+        assert_eq!(r.planner, "DTFM");
+        assert_eq!(r.batch_times.len(), 4);
+        assert!(r.failures > 0, "aggressive churn must produce failures");
+        // restart semantics: each failure costs about one clean batch, so
+        // every recovery latency is macroscopic (no ms-scale §4.2 path)
+        let min_batch = r.batch_times.iter().cloned().fold(f64::MAX, f64::min);
+        for &lat in &r.recovery_latencies {
+            assert!(lat > 0.2 * min_batch, "restart {lat} vs batch {min_batch}");
+        }
+        assert!(r.effective_throughput < 1.0);
+        // no CLEAVE solves anywhere: the estimate planner has no cache and
+        // take-all admission never probes
+        assert_eq!(r.solver.cold_solves, 0);
+    }
+
+    #[test]
+    fn cleave_recovers_cheaper_than_baseline_restart() {
+        use crate::api::planner::DtfmPlanner;
+        let dag = dag();
+        let cm = CostModel::default();
+        let ps = PsParams::default();
+        let cfg = SessionConfig {
+            n_batches: 4,
+            epoch_batches: 2,
+            churn: ChurnConfig {
+                fail_rate_per_hour: 20.0,
+                join_rate_per_hour: 0.0,
+            },
+            policy: Policy::TakeAll,
+            ..SessionConfig::default()
+        };
+        let run = |planner: &mut dyn Planner| -> SessionReport {
+            let mut pool = DevicePool::sample(&pool_cfg(24, 0.0));
+            run_session_with(&mut pool, &dag, &cm, &ps, &cfg, planner)
+        };
+        let cleave = run(&mut CleavePlanner::cached());
+        let dtfm = run(&mut DtfmPlanner::runtime_only());
+        let rel = |r: &SessionReport| -> f64 {
+            if r.recovery_latencies.is_empty() {
+                return 0.0;
+            }
+            let mean_rec =
+                r.recovery_latencies.iter().sum::<f64>() / r.recovery_latencies.len() as f64;
+            mean_rec / r.mean_batch_s
+        };
+        // §4.2 shard recovery is a small fraction of a batch; a restart is
+        // of the order of a whole batch
+        assert!(rel(&cleave) < 0.5, "cleave relative recovery {}", rel(&cleave));
+        if !dtfm.recovery_latencies.is_empty() {
+            assert!(rel(&dtfm) > rel(&cleave), "restart must cost more");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "cannot run under membership churn")]
+    fn fleetless_planner_rejected() {
+        use crate::api::planner::CloudPlanner;
+        let mut pool = DevicePool::sample(&pool_cfg(8, 0.0));
+        let dag = dag();
+        run_session_with(
+            &mut pool,
+            &dag,
+            &CostModel::default(),
+            &PsParams::default(),
+            &SessionConfig::default(),
+            &mut CloudPlanner::new(),
+        );
     }
 
     #[test]

@@ -8,8 +8,71 @@
 use std::io::Write as _;
 use std::time::{Duration, Instant};
 
+use crate::util::cli::Cli;
 use crate::util::json::{obj, Json};
 use crate::util::stats;
+
+/// The unified bench command line (`--smoke`, `--out`, `--help`), parsed
+/// through [`crate::util::cli::Cli`] so every `benches/*.rs` target accepts
+/// the same flags and documents them under `--help`:
+///
+/// ```text
+/// cargo bench --bench fig11_selection -- --smoke --out /tmp/sel.json
+/// ```
+#[derive(Clone, Debug)]
+pub struct BenchArgs {
+    /// reduced sweep for CI smoke runs
+    pub smoke: bool,
+    /// override the bench's `BENCH_*.json` artifact path
+    pub out: Option<String>,
+}
+
+fn bench_cli(name: &'static str, about: &'static str) -> Cli {
+    Cli::new(name, about)
+        .flag("smoke", "reduced sweep for CI smoke runs")
+        .opt(
+            "out",
+            None,
+            "override the BENCH_*.json artifact path (ignored by benches without one)",
+        )
+        .flag("bench", "accepted for `cargo bench` compatibility (ignored)")
+}
+
+/// Parse the unified bench flags (exits with usage on `--help` or an
+/// unknown option, like every other CLI in the crate).
+pub fn bench_args(name: &'static str, about: &'static str) -> BenchArgs {
+    let args = bench_cli(name, about).parse();
+    BenchArgs {
+        smoke: args.has_flag("smoke"),
+        out: args.get("out").map(str::to_string),
+    }
+}
+
+/// The standard bench prologue: parse the unified flags, then open the
+/// titled [`Reporter`] — one `(name, about)` pair instead of two
+/// duplicated literal sites per bench (flags are parsed first so
+/// `--help` exits before the report header prints).
+pub fn bench_setup(name: &'static str, about: &'static str) -> (BenchArgs, Reporter) {
+    let args = bench_args(name, about);
+    let rep = Reporter::new(name, about);
+    (args, rep)
+}
+
+impl BenchArgs {
+    /// The artifact path to write: `--out` override or the bench default.
+    pub fn artifact_path<'a>(&'a self, default: &'a str) -> &'a str {
+        self.out.as_deref().unwrap_or(default)
+    }
+}
+
+/// Write a `BENCH_*.json` artifact (compact), reporting success or failure
+/// on stdout/stderr — shared by every artifact-emitting bench.
+pub fn write_artifact(path: &str, json: &Json) {
+    match std::fs::write(path, json.to_string_compact()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("warning: could not write {path}: {e}"),
+    }
+}
 
 /// Timing result of one benchmark case.
 #[derive(Clone, Debug)]
@@ -126,6 +189,35 @@ mod tests {
         let (v, d) = time_once(|| 7 * 6);
         assert_eq!(v, 42);
         assert!(d.as_nanos() > 0);
+    }
+
+    #[test]
+    fn bench_cli_parses_unified_flags() {
+        let cli = bench_cli("test_bench", "unified flag check");
+        let argv = |s: &[&str]| s.iter().map(|x| x.to_string()).collect::<Vec<_>>();
+        let a = cli.parse_from(argv(&["--smoke", "--out", "X.json"])).unwrap();
+        assert!(a.has_flag("smoke"));
+        assert_eq!(a.get("out"), Some("X.json"));
+        // cargo-bench compat flag is accepted and ignorable
+        let a = cli.parse_from(argv(&["--bench"])).unwrap();
+        assert!(a.has_flag("bench") && !a.has_flag("smoke"));
+        // --help documents the unified flags
+        assert!(cli.usage().contains("--smoke"));
+        assert!(cli.usage().contains("--out"));
+    }
+
+    #[test]
+    fn artifact_path_prefers_out_override() {
+        let d = BenchArgs {
+            smoke: false,
+            out: None,
+        };
+        assert_eq!(d.artifact_path("BENCH_x.json"), "BENCH_x.json");
+        let o = BenchArgs {
+            smoke: true,
+            out: Some("/tmp/y.json".into()),
+        };
+        assert_eq!(o.artifact_path("BENCH_x.json"), "/tmp/y.json");
     }
 
     #[test]

@@ -1,0 +1,277 @@
+//! Facade parity: every `api::Planner` must reproduce its legacy
+//! entrypoint bit-for-bit, and a `Scenario`-driven experiment must match
+//! the pre-migration direct assembly (`GemmDag::build` + `solve_dag` +
+//! `simulate_batch`) exactly — the guarantee that the bench/example
+//! migration onto the facade changed call sites, not results.
+
+use cleave::api::{
+    AlpaPlanner, CleavePlanner, DtfmPlanner, Plan, PlanInput, Planner, Scenario,
+};
+use cleave::baselines::{alpa, dtfm};
+use cleave::cluster::fleet::{Fleet, FleetConfig};
+use cleave::cluster::pool::{DevicePool, PoolConfig};
+use cleave::model::config::{ModelSpec, TrainSetup};
+use cleave::model::dag::GemmDag;
+use cleave::sched::cost::{CostModel, PsParams};
+use cleave::sched::fastpath::SolverCache;
+use cleave::sched::solver::{solve_dag, solve_dag_cached, SolverOptions};
+use cleave::sim::batch::{simulate_batch, SimConfig};
+use cleave::sim::session::{run_session, Policy, SessionConfig};
+
+fn dag_for(model: &str, setup: &TrainSetup) -> GemmDag {
+    GemmDag::build(&ModelSpec::preset(model).unwrap(), setup)
+}
+
+fn input<'a>(
+    devices: &'a [cleave::cluster::device::Device],
+    dag: &'a GemmDag,
+    cm: &'a CostModel,
+    ps: &'a PsParams,
+) -> PlanInput<'a> {
+    PlanInput {
+        devices,
+        dag,
+        cm,
+        ps,
+        opts: SolverOptions::default(),
+    }
+}
+
+#[test]
+fn cleave_planner_reproduces_solve_dag_bitwise() {
+    let setup = TrainSetup::default();
+    let dag = dag_for("OPT-13B", &setup);
+    let fleet = Fleet::sample(&FleetConfig::default().with_devices(64));
+    let cm = CostModel::default().with_effective_flops();
+    let ps = PsParams::default();
+
+    let (reference, ref_stats) = solve_dag(
+        &fleet.devices,
+        &dag,
+        &cm,
+        &ps,
+        &SolverOptions::default(),
+    );
+    let plan = CleavePlanner::new().plan(&input(&fleet.devices, &dag, &cm, &ps));
+    let Plan::Executable { schedule, stats } = plan else {
+        panic!("CLEAVE must plan an executable schedule");
+    };
+
+    assert_eq!(schedule.gemm_time.to_bits(), reference.gemm_time.to_bits());
+    assert_eq!(schedule.opt_tail.to_bits(), reference.opt_tail.to_bits());
+    assert_eq!(stats.decision_vars, ref_stats.decision_vars);
+    assert_eq!(stats.devices_considered, ref_stats.devices_considered);
+    // every shape's rectangle cover is identical, cell for cell
+    assert_eq!(schedule.by_shape.len(), reference.by_shape.len());
+    for (shape, a) in &reference.by_shape {
+        let b = &schedule.by_shape[shape];
+        assert_eq!(a.rects, b.rects, "rects differ for {shape:?}");
+        assert_eq!(a.makespan.to_bits(), b.makespan.to_bits());
+    }
+}
+
+#[test]
+fn cached_planner_reproduces_solve_dag_cached_across_churn() {
+    // The warm path must match too: same cache-state evolution over a
+    // shrinking (churned) fleet.
+    let setup = TrainSetup::default();
+    let dag = dag_for("OPT-13B", &setup);
+    let cm = CostModel::default().with_effective_flops();
+    let ps = PsParams::default();
+    let fleet = Fleet::sample(&FleetConfig::default().with_devices(48));
+
+    let mut legacy_cache = SolverCache::new();
+    let mut planner = CleavePlanner::cached();
+    for survivors in [48usize, 47, 45] {
+        let devices = &fleet.devices[..survivors];
+        let (reference, _) =
+            solve_dag_cached(devices, &dag, &cm, &ps, &SolverOptions::default(), &mut legacy_cache);
+        let Plan::Executable { schedule, .. } = planner.plan(&input(devices, &dag, &cm, &ps))
+        else {
+            panic!("executable plan expected");
+        };
+        assert_eq!(
+            schedule.gemm_time.to_bits(),
+            reference.gemm_time.to_bits(),
+            "warm solve diverged at {survivors} survivors"
+        );
+    }
+    // identical cache trajectories, counter for counter
+    let l = legacy_cache.stats();
+    let p = planner.solver_cache().unwrap().stats();
+    assert_eq!(
+        (l.cold_solves, l.warm_solves, l.memo_hits),
+        (p.cold_solves, p.warm_solves, p.memo_hits)
+    );
+}
+
+#[test]
+fn dtfm_planner_reproduces_plan() {
+    let setup = TrainSetup::default();
+    let dag = dag_for("OPT-13B", &setup);
+    let cm = CostModel::default();
+    let ps = PsParams::default();
+    // laptops (10 GB budget): DTFM's DP+PP is feasible with full checks
+    let fleet = Fleet::sample(&FleetConfig {
+        n_devices: 256,
+        phone_fraction: 0.0,
+        ..FleetConfig::default()
+    });
+
+    let legacy = dtfm::plan(&dag.spec, &setup, &fleet.devices, 1e12).unwrap();
+    let Plan::Estimate(e) = DtfmPlanner::new().plan(&input(&fleet.devices, &dag, &cm, &ps))
+    else {
+        panic!("feasible DTFM estimate expected");
+    };
+    assert_eq!(e.per_batch_s.to_bits(), legacy.per_batch_s.to_bits());
+    assert_eq!(
+        e.per_device_mem_bytes.to_bits(),
+        legacy.per_device_mem_bytes.to_bits()
+    );
+    assert_eq!(
+        e.per_device_comm_elems.to_bits(),
+        legacy.per_device_comm_elems.to_bits()
+    );
+
+    // infeasibility parity on a phone-class fleet
+    let phones = Fleet::median(256);
+    assert!(dtfm::plan(&dag.spec, &setup, &phones.devices, 1e12).is_none());
+    assert!(matches!(
+        DtfmPlanner::new().plan(&input(&phones.devices, &dag, &cm, &ps)),
+        Plan::Infeasible { .. }
+    ));
+}
+
+#[test]
+fn alpa_planner_reproduces_plan() {
+    let setup = TrainSetup::default();
+    let dag = dag_for("OPT-13B", &setup);
+    let cm = CostModel::default();
+    let ps = PsParams::default();
+    let fleet = Fleet::sample(&FleetConfig {
+        n_devices: 512,
+        phone_fraction: 0.0,
+        ..FleetConfig::default()
+    });
+
+    let legacy = alpa::plan(&dag.spec, &setup, &fleet.devices).unwrap();
+    let Plan::Estimate(e) = AlpaPlanner::new().plan(&input(&fleet.devices, &dag, &cm, &ps))
+    else {
+        panic!("feasible Alpa estimate expected");
+    };
+    assert_eq!(e.per_batch_s.to_bits(), legacy.per_batch_s.to_bits());
+    assert_eq!(
+        e.per_device_mem_bytes.to_bits(),
+        legacy.per_device_mem_bytes.to_bits()
+    );
+
+    // runtime-only parity (the Figures 6/8 convention)
+    let phones = Fleet::median(64);
+    let legacy = alpa::plan_with(&dag.spec, &setup, &phones.devices, false).unwrap();
+    let Plan::Estimate(e) =
+        AlpaPlanner::runtime_only().plan(&input(&phones.devices, &dag, &cm, &ps))
+    else {
+        panic!("runtime-only Alpa estimate expected");
+    };
+    assert_eq!(e.per_batch_s.to_bits(), legacy.per_batch_s.to_bits());
+}
+
+#[test]
+fn scenario_fig6_point_matches_direct_assembly() {
+    // One fig6 sweep prefix (straggler fractions 0.0 then 0.10, one warm
+    // cache chained across the two points) — the exact pre-migration loop
+    // body of benches/fig6_stragglers.rs, vs the facade.
+    let setup = TrainSetup::default();
+    let dag = dag_for("OPT-13B", &setup);
+    let cm = CostModel::default().with_effective_flops();
+    let ps = PsParams::default();
+
+    let mut legacy_cache = SolverCache::new();
+    let mut legacy_times = Vec::new();
+    for frac in [0.0, 0.10] {
+        let fleet = Fleet::sample(
+            &FleetConfig::default()
+                .with_devices(32)
+                .with_stragglers(frac),
+        );
+        let (schedule, _) = solve_dag_cached(
+            &fleet.devices,
+            &dag,
+            &cm,
+            &ps,
+            &SolverOptions::default(),
+            &mut legacy_cache,
+        );
+        let r = simulate_batch(&fleet.devices, &dag, &schedule, &cm, &SimConfig::default());
+        legacy_times.push(r.batch_time);
+    }
+
+    let mut planner = CleavePlanner::cached();
+    let scenario = Scenario::model("OPT-13B").devices(32);
+    for (i, frac) in [0.0, 0.10].into_iter().enumerate() {
+        let report = scenario
+            .clone()
+            .stragglers(frac)
+            .run_batch(&mut planner)
+            .unwrap();
+        assert_eq!(
+            report.per_batch().unwrap().to_bits(),
+            legacy_times[i].to_bits(),
+            "facade diverged from direct assembly at straggler fraction {frac}"
+        );
+    }
+}
+
+#[test]
+fn scenario_session_matches_run_session() {
+    let setup = TrainSetup::default();
+    let dag = dag_for("OPT-13B", &setup);
+    let cm = CostModel::default().with_effective_flops();
+    let ps = PsParams::default();
+    let fleet_cfg = FleetConfig {
+        n_devices: 24,
+        straggler_fraction: 0.2,
+        ..FleetConfig::default()
+    };
+    let session_cfg = SessionConfig {
+        n_batches: 4,
+        epoch_batches: 2,
+        policy: Policy::CostGuided,
+        ..SessionConfig::default()
+    };
+
+    let mut pool = DevicePool::sample(&PoolConfig {
+        fleet: fleet_cfg.clone(),
+        ..PoolConfig::default()
+    });
+    let legacy = run_session(&mut pool, &dag, &cm, &ps, &session_cfg);
+
+    let report = Scenario::model("OPT-13B")
+        .fleet_cfg(fleet_cfg)
+        .policy(Policy::CostGuided)
+        .batches(4)
+        .epoch_batches(2)
+        .run_session(&mut CleavePlanner::cached())
+        .unwrap();
+    let facade = report.session().expect("session report");
+
+    assert_eq!(facade.mean_batch_s.to_bits(), legacy.mean_batch_s.to_bits());
+    assert_eq!(facade.p95_batch_s.to_bits(), legacy.p95_batch_s.to_bits());
+    assert_eq!(facade.batch_times.len(), legacy.batch_times.len());
+    assert_eq!(
+        (facade.failures, facade.joins),
+        (legacy.failures, legacy.joins)
+    );
+    assert_eq!(
+        (
+            facade.solver.cold_solves,
+            facade.solver.warm_solves,
+            facade.solver.memo_hits
+        ),
+        (
+            legacy.solver.cold_solves,
+            legacy.solver.warm_solves,
+            legacy.solver.memo_hits
+        )
+    );
+}
