@@ -20,17 +20,21 @@ use cleave::api::{CleavePlanner, Scenario};
 use cleave::cluster::churn::ChurnConfig;
 use cleave::cluster::fleet::FleetConfig;
 use cleave::cluster::pool::PoolConfig;
+use cleave::sched::cost::PsEnvelope;
 use cleave::sched::fastpath::distinct_shapes;
 use cleave::sim::session::{Policy, SessionReport};
-use cleave::util::bench::{bench_setup, write_artifact};
+use cleave::util::bench::{bench_setup_with, write_artifact};
 use cleave::util::fmt_secs;
 use cleave::util::json::{obj, Json};
 use cleave::util::table::Table;
 
 const STRAGGLER_FRACTION: f64 = 0.3;
+/// PS share of batch time below which the PS is "inside the envelope"
+/// (mirrors `benches/ps_envelope.rs`).
+const BIND_GATE: f64 = 0.05;
 
-fn scenario(n: usize, n_batches: usize, policy: Policy) -> Scenario {
-    Scenario::model("OPT-13B")
+fn scenario(n: usize, n_batches: usize, policy: Policy, env: Option<&PsEnvelope>) -> Scenario {
+    let sc = Scenario::model("OPT-13B")
         .pool_cfg(PoolConfig {
             fleet: FleetConfig {
                 n_devices: n,
@@ -47,15 +51,61 @@ fn scenario(n: usize, n_batches: usize, policy: Policy) -> Scenario {
         })
         .batches(n_batches)
         .epoch_batches(3)
-        .policy(policy)
+        .policy(policy);
+    match env {
+        // measured envelope pricing for the admission fan-out constant
+        Some(e) => sc.ps_envelope(e),
+        None => sc,
+    }
+}
+
+/// Measure a small single-PS operating envelope the way
+/// `benches/ps_envelope.rs` does (largest probed participant count whose
+/// PS share stays under the bind gate), at fig11-bench scale.
+fn measure_envelope(smoke: bool) -> PsEnvelope {
+    let counts: &[usize] = if smoke { &[128] } else { &[256, 512] };
+    let mut planner = CleavePlanner::cached();
+    let mut env: Option<PsEnvelope> = None;
+    for &n in counts {
+        let report = Scenario::model("OPT-13B")
+            .devices(n)
+            .run_batch(&mut planner)
+            .expect("executable CLEAVE plan");
+        let r = report.batch().expect("batch result");
+        if r.ps_bound_time / r.batch_time < BIND_GATE {
+            env = Some(PsEnvelope {
+                participants: n,
+                batch_s: r.batch_time,
+            });
+        }
+    }
+    env.expect("at least one in-envelope operating point")
 }
 
 fn main() {
-    let (args, mut rep) = bench_setup(
+    let (args, extra, mut rep) = bench_setup_with(
         "fig11_selection",
         "cost-model-guided fleet admission under churn",
+        &[(
+            "measured-ps",
+            "price admission fan-out from a measured PS envelope instead of the built-in prior",
+        )],
     );
-    let n_shapes = distinct_shapes(&scenario(48, 1, Policy::TakeAll).dag().unwrap()).len();
+    let measured_ps = extra.has_flag("measured-ps");
+    let env: Option<PsEnvelope> = if measured_ps {
+        let e = measure_envelope(args.smoke);
+        println!(
+            "measured PS envelope: {} participants at {} per batch -> conn_s {}",
+            e.participants,
+            fmt_secs(e.batch_s),
+            fmt_secs(e.conn_s()),
+        );
+        Some(e)
+    } else {
+        None
+    };
+    let n_shapes =
+        distinct_shapes(&scenario(48, 1, Policy::TakeAll, env.as_ref()).dag().unwrap()).len();
 
     let sizes: &[usize] = if args.smoke { &[48] } else { &[128, 256, 1024] };
     let n_batches = if args.smoke { 4 } else { 10 };
@@ -77,7 +127,7 @@ fn main() {
 
     for &n in sizes {
         let run = |policy: Policy| -> SessionReport {
-            scenario(n, n_batches, policy)
+            scenario(n, n_batches, policy, env.as_ref())
                 .run_session(&mut CleavePlanner::cached())
                 .unwrap()
                 .session()
@@ -92,9 +142,10 @@ fn main() {
 
         // The admission cost/throughput frontier of the initial decision
         // (standalone, so the JSON carries the probed (n, T*, costs) curve).
-        let (frontier_out, frontier_stats) = scenario(n, n_batches, Policy::CostGuided)
-            .selection_frontier()
-            .unwrap();
+        let (frontier_out, frontier_stats) =
+            scenario(n, n_batches, Policy::CostGuided, env.as_ref())
+                .selection_frontier()
+                .unwrap();
         let frontier: Vec<Json> = frontier_out.frontier.iter().map(|p| p.to_json()).collect();
 
         t.row(&[
@@ -138,12 +189,27 @@ fn main() {
          pays ~the straggler factor per level (Fig. 6 baseline behaviour)"
     );
 
+    // The fan-out constant the admission objective actually priced with —
+    // so `BENCH_selection.json` records the measured envelope's effect on
+    // the guided >= 1.5x gate (the per-row speedups above) next to the
+    // pricing that produced it.
+    let conn_s = scenario(48, 1, Policy::CostGuided, env.as_ref())
+        .select_config()
+        .ps_conn_s;
     let bench_json = obj(vec![
         ("bench", Json::from("fig11_selection")),
         ("model", Json::from("OPT-13B")),
         ("straggler_fraction", Json::from(STRAGGLER_FRACTION)),
         ("smoke", Json::from(args.smoke)),
         ("n_batches", Json::from(n_batches)),
+        ("measured_ps", Json::from(measured_ps)),
+        ("ps_conn_s", Json::from(conn_s)),
+        (
+            "ps_envelope_participants",
+            env.as_ref()
+                .map(|e| Json::from(e.participants))
+                .unwrap_or(Json::Null),
+        ),
         ("rows", Json::Arr(rows)),
     ]);
     write_artifact(args.artifact_path("BENCH_selection.json"), &bench_json);

@@ -3,10 +3,14 @@
 //! the full shape set (paper's Gurobi: ~10 min); churn re-solve touches
 //! only the orphaned shards and completes in (milli)seconds.
 //!
-//! Also measures the fleet-scale fast path (`sched::fastpath`): seed
-//! (reference) cold solve vs fast-path cold vs memo-warm `solve_dag` on an
-//! OPT-13B DAG at D = 128 / 1k / 8k, recorded to `BENCH_solver.json` so
-//! the solver perf trajectory is tracked across PRs.
+//! Also measures the fleet-scale fast path (`sched::fastpath` over the
+//! `sched::oracle` analytic core): seed (reference bisection) cold solve
+//! vs analytic cold vs memo-warm vs single-device-churn incremental
+//! `solve_dag` on an OPT-13B DAG at D = 128 / 1k / 8k, recorded to
+//! `BENCH_solver.json` so the solver perf trajectory is tracked across
+//! PRs. Gates: zero bisection iterations on the analytic paths, and
+//! `incremental_updates > 0` / `full_rebuilds == 0` across a
+//! single-device churn session (also enforced under `--smoke` in CI).
 
 use std::time::Instant;
 
@@ -80,8 +84,9 @@ fn main() {
     assert!(cold.solve_time_s < 600.0, "must beat the paper's 10 minutes");
     assert!(plan.solve_time < 5.0, "re-solve must be (sub)seconds");
 
-    // ---- fast-path sweep: seed cold vs fast cold vs memo-warm solve_dag,
-    // OPT-13B DAG, heterogeneous fleets at D = 128 / 1k / 8k.
+    // ---- fast-path sweep: seed cold vs analytic cold vs memo-warm vs
+    // single-device-churn incremental solve_dag, OPT-13B DAG,
+    // heterogeneous fleets at D = 128 / 1k / 8k.
     let spec13 = ModelSpec::preset("OPT-13B").unwrap();
     let dag13 = GemmDag::build(&spec13, &setup);
     let opts = SolverOptions::default();
@@ -90,10 +95,12 @@ fn main() {
     let mut t2 = Table::new(&[
         "D",
         "seed cold",
-        "fast cold",
+        "analytic cold",
         "fast warm",
+        "incr churn",
         "speedup (cold)",
         "speedup (warm)",
+        "speedup (incr)",
     ]);
     let mut speedup_at_8k = (0.0f64, 0.0f64);
     let sweep_d: &[usize] = if args.smoke {
@@ -105,11 +112,11 @@ fn main() {
         let fleet = Fleet::sample(&FleetConfig::default().with_devices(d));
 
         let t = Instant::now();
-        let (sched_ref, _) = solve_dag_reference(&fleet.devices, &dag13, &cm, &ps, &opts);
+        let (sched_ref, seed_stats) = solve_dag_reference(&fleet.devices, &dag13, &cm, &ps, &opts);
         let seed_cold_s = t.elapsed().as_secs_f64();
 
         let t = Instant::now();
-        let (sched_fast, _) = solve_dag(&fleet.devices, &dag13, &cm, &ps, &opts);
+        let (sched_fast, fast_stats) = solve_dag(&fleet.devices, &dag13, &cm, &ps, &opts);
         let fast_cold_s = t.elapsed().as_secs_f64();
 
         let mut cache = SolverCache::new();
@@ -117,6 +124,60 @@ fn main() {
         let t = Instant::now();
         let (sched_warm, _) = solve_dag_cached(&fleet.devices, &dag13, &cm, &ps, &opts, &mut cache);
         let fast_warm_s = t.elapsed().as_secs_f64().max(1e-9);
+
+        // Single-device churn: the cached oracles must splice the departed
+        // device out (incremental_updates), never rebuild — the table's
+        // "churn re-solve" column on the analytic+incremental path.
+        let before = cache.stats();
+        let mut churned = fleet.clone();
+        churned.remove(0);
+        let t = Instant::now();
+        let (sched_incr, incr_stats) =
+            solve_dag_cached(&churned.devices, &dag13, &cm, &ps, &opts, &mut cache);
+        let fast_incr_s = t.elapsed().as_secs_f64().max(1e-9);
+        let after = cache.stats();
+        let incr_updates = after.incremental_updates - before.incremental_updates;
+        let rebuilds = after.full_rebuilds - before.full_rebuilds;
+        assert!(
+            incr_updates > 0,
+            "single-device churn must update oracles incrementally at D={d}: {after:?}"
+        );
+        assert_eq!(
+            rebuilds, 0,
+            "single-device churn must not rebuild oracles at D={d}: {after:?}"
+        );
+        // Zero bisection anywhere on the analytic paths; the seed solver
+        // is the only one allowed to bisect.
+        assert_eq!(
+            fast_stats.bisection_iters, 0,
+            "analytic cold solve bisected at D={d}"
+        );
+        assert_eq!(
+            incr_stats.bisection_iters, 0,
+            "incremental churn solve bisected at D={d}"
+        );
+        assert!(fast_stats.analytic_roots > 0 && incr_stats.analytic_roots > 0);
+        assert!(seed_stats.bisection_iters > 0);
+        // The incremental re-solve must equal a from-scratch solve of the
+        // churned fleet bit for bit.
+        let (sched_scratch, _) = solve_dag(&churned.devices, &dag13, &cm, &ps, &opts);
+        assert_eq!(
+            sched_incr.gemm_time.to_bits(),
+            sched_scratch.gemm_time.to_bits(),
+            "incremental churn solve diverged from rebuild at D={d}"
+        );
+        // ...and a longer single-device churn session (one departure per
+        // re-solve, one chained cache) must stay rebuild-free end to end.
+        for _ in 0..3 {
+            churned.remove(churned.devices[0].id);
+            let _ = solve_dag_cached(&churned.devices, &dag13, &cm, &ps, &opts, &mut cache);
+        }
+        assert_eq!(
+            cache.stats().full_rebuilds,
+            before.full_rebuilds,
+            "single-device churn session must never rebuild at D={d}: {:?}",
+            cache.stats()
+        );
 
         let rel_diff = (sched_fast.gemm_time - sched_ref.gemm_time).abs() / sched_ref.gemm_time;
         assert!(
@@ -127,6 +188,7 @@ fn main() {
 
         let speedup_cold = seed_cold_s / fast_cold_s.max(1e-9);
         let speedup_warm = seed_cold_s / fast_warm_s;
+        let speedup_incr = seed_cold_s / fast_incr_s;
         if d == 8192 {
             speedup_at_8k = (speedup_cold, speedup_warm);
         }
@@ -135,16 +197,25 @@ fn main() {
             fmt_secs(seed_cold_s),
             fmt_secs(fast_cold_s),
             fmt_secs(fast_warm_s),
+            fmt_secs(fast_incr_s),
             format!("{speedup_cold:.1}x"),
             format!("{speedup_warm:.0}x"),
+            format!("{speedup_incr:.0}x"),
         ]);
         sweep_rows.push(obj(vec![
             ("d", Json::from(d)),
             ("seed_cold_s", Json::from(seed_cold_s)),
             ("fast_cold_s", Json::from(fast_cold_s)),
             ("fast_warm_s", Json::from(fast_warm_s)),
+            ("fast_incr_s", Json::from(fast_incr_s)),
             ("speedup_cold", Json::from(speedup_cold)),
             ("speedup_warm", Json::from(speedup_warm)),
+            ("speedup_incr", Json::from(speedup_incr)),
+            ("analytic_roots_cold", Json::from(fast_stats.analytic_roots)),
+            ("bisection_iters_cold", Json::from(fast_stats.bisection_iters)),
+            ("seed_bisection_iters", Json::from(seed_stats.bisection_iters)),
+            ("incremental_updates", Json::from(incr_updates)),
+            ("full_rebuilds", Json::from(rebuilds)),
             ("gemm_time_rel_diff", Json::from(rel_diff)),
         ]));
         rep.record(vec![
@@ -152,9 +223,14 @@ fn main() {
             ("seed_cold_s", Json::from(seed_cold_s)),
             ("fast_cold_s", Json::from(fast_cold_s)),
             ("fast_warm_s", Json::from(fast_warm_s)),
+            ("fast_incr_s", Json::from(fast_incr_s)),
         ]);
     }
-    println!("\nsolve_dag fast path (OPT-13B DAG, heterogeneous fleet):");
+    println!(
+        "\nsolve_dag analytic fast path (OPT-13B DAG, heterogeneous fleet):\n\
+         cold = closed-form segment roots (zero bisection); incr churn =\n\
+         one device removed, cached oracles spliced incrementally"
+    );
     t2.print();
 
     let bench_json = obj(vec![

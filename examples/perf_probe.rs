@@ -46,8 +46,9 @@ fn main() {
         let t0 = Instant::now();
         let (_, stats) = solve_gemm(&fleet.devices, shape, &cm, &SolverOptions::default());
         println!(
-            "  solve_gemm @ {n} devices: {:.2} ms ({} bisection iters)",
+            "  solve_gemm @ {n} devices: {:.2} ms ({} analytic roots, {} bisection iters)",
             t0.elapsed().as_secs_f64() * 1e3,
+            stats.analytic_roots,
             stats.bisection_iters
         );
     }

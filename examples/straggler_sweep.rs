@@ -1,7 +1,9 @@
 //! Straggler sweep (the Figure 6 scenario): vary the straggler fraction and
 //! watch CLEAVE's cost model route work away from 10x-slower devices while
 //! the synchronous baselines stall behind them — one
-//! [`cleave::api::Scenario::run_sweep`] call.
+//! [`cleave::api::Scenario::run_sweep_parallel`] call (the points are
+//! independent configurations; the parallel driver is bitwise identical to
+//! the serial `run_sweep`, pinned in `rust/tests/api_parity.rs`).
 //!
 //! Run: `cargo run --release --example straggler_sweep`
 
@@ -18,14 +20,16 @@ fn main() -> anyhow::Result<()> {
     let spec = scenario.spec()?;
     let n = scenario.n_devices();
 
-    let mut cleave = CleavePlanner::cached();
-    let mut dtfm = DtfmPlanner::runtime_only().with_solver_mem_limit(1e13);
-    let mut alpa = AlpaPlanner::runtime_only();
-    let mut planners: Vec<&mut dyn Planner> = vec![&mut cleave, &mut dtfm, &mut alpa];
-    let points = scenario.run_sweep(
+    let points = scenario.run_sweep_parallel(
         Axis::Stragglers,
         &[0.0, 0.05, 0.10, 0.15, 0.20],
-        &mut planners,
+        || -> Vec<Box<dyn Planner>> {
+            vec![
+                Box::new(CleavePlanner::cached()),
+                Box::new(DtfmPlanner::runtime_only().with_solver_mem_limit(1e13)),
+                Box::new(AlpaPlanner::runtime_only()),
+            ]
+        },
     )?;
 
     println!(

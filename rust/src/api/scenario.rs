@@ -37,6 +37,7 @@ use crate::sched::solver::{SolverOptions, SolverStats};
 use crate::sim::batch::{simulate_batch, BatchResult, SimConfig};
 use crate::sim::session::{run_session_with, Policy, SessionConfig, SessionReport};
 use crate::util::json::{obj, Json};
+use crate::util::threadpool::{default_threads, scoped_map};
 use crate::Result;
 
 /// How the scenario materializes its device fleet.
@@ -413,6 +414,48 @@ impl Scenario {
                 })
             })
             .collect()
+    }
+
+    /// [`Scenario::run_sweep`] parallelized across points on
+    /// [`crate::util::threadpool`] — the points are independent
+    /// configurations, so each one runs on its own worker with a fresh
+    /// planner set from `factory` (one warm memo per planner per point).
+    /// Each point's DAG solve additionally parallelizes over its distinct
+    /// shapes (a handful), so the thread count can exceed the core count
+    /// by that small factor; the OS schedules the oversubscription fine,
+    /// but treat per-point `SolverStats::solve_time_s` as wall-clock under
+    /// contention, not an isolated solve time.
+    ///
+    /// The result is **bitwise identical** to the serial driver with
+    /// equivalent planners, in any thread interleaving: since the solver's
+    /// `T*` became an analytic segment root, a solve's answer is a pure
+    /// function of (fleet, shape, cost model) — warm-start hints, memo
+    /// trajectories and oracle churn history cannot change a bit of it
+    /// (pinned by `api_parity::parallel_sweep_is_bitwise_identical`). The
+    /// one exception: a fleet whose devices fail the oracle decomposition
+    /// precondition drops to the scan + bisection fallback, whose bracket
+    /// IS hint-sensitive — sampled/median fleets never hit it, but
+    /// hand-built fleets with non-finite or zero link parameters could.
+    pub fn run_sweep_parallel<F>(
+        &self,
+        axis: Axis,
+        points: &[f64],
+        factory: F,
+    ) -> Result<Vec<SweepPoint>>
+    where
+        F: Fn() -> Vec<Box<dyn Planner>> + Sync,
+    {
+        let threads = default_threads().min(points.len()).max(1);
+        let solved = scoped_map(points, threads, |&v| -> Result<SweepPoint> {
+            let mut planners = factory();
+            let mut refs: Vec<&mut dyn Planner> =
+                planners.iter_mut().map(|p| p.as_mut()).collect();
+            Ok(SweepPoint {
+                value: v,
+                reports: self.at(axis, v).compare(&mut refs)?,
+            })
+        });
+        solved.into_iter().collect()
     }
 
     /// Plan a batch, fail the plan's first active device, and report the

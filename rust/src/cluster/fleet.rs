@@ -155,6 +155,85 @@ impl FleetView {
     pub fn is_empty(&self) -> bool {
         self.flops.is_empty()
     }
+
+    /// Per-device content signature: the bit patterns of the seven
+    /// parameters solver-oracle event emission consumes. Equal signatures
+    /// guarantee bit-identical capacity curves under any cost model, which
+    /// is what makes [`diff_fleets`] a safe incremental-update trigger.
+    pub fn device_sig(&self, k: usize) -> DeviceSig {
+        [
+            self.flops[k].to_bits(),
+            self.eff_flops[k].to_bits(),
+            self.ul_bw[k].to_bits(),
+            self.dl_bw[k].to_bits(),
+            self.ul_lat[k].to_bits(),
+            self.dl_lat[k].to_bits(),
+            self.mem[k].to_bits(),
+        ]
+    }
+
+    /// Signatures of every device, in view order.
+    pub fn device_sigs(&self) -> Vec<DeviceSig> {
+        (0..self.len()).map(|k| self.device_sig(k)).collect()
+    }
+}
+
+/// Per-device content signature (see [`FleetView::device_sig`]).
+pub type DeviceSig = [u64; 7];
+
+/// How a fleet relates to a previously seen one — the membership-delta
+/// hook the incremental solver oracles
+/// ([`crate::sched::fastpath::SolverCache`]) consume on churn.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FleetDelta {
+    /// bit-identical fleet: cached per-fleet state is reusable outright
+    Identical,
+    /// `new` = `old` minus the devices at `retired` (ascending old
+    /// positions, order of survivors kept) plus the fresh devices at
+    /// `new[appended_from..]` — the single join/leave shape sessions and
+    /// admission probes produce, updatable incrementally
+    Churn {
+        retired: Vec<usize>,
+        appended_from: usize,
+    },
+    /// nothing shared: an incremental update would re-emit every device
+    /// anyway, so callers should rebuild
+    Disjoint,
+}
+
+/// Greedy order-preserving diff of two fleets by device signature. Every
+/// pair decomposes as "retire an old subsequence, admit a new tail" (a
+/// device that moved re-enters as retire + admit, which stays exact); the
+/// decomposition is only reported as [`FleetDelta::Churn`] when at least
+/// one device survives, since otherwise a rebuild does strictly less work.
+pub fn diff_fleets(old: &[DeviceSig], new: &[DeviceSig]) -> FleetDelta {
+    if old == new {
+        return FleetDelta::Identical;
+    }
+    let mut retired: Vec<usize> = Vec::new();
+    let (mut i, mut j) = (0usize, 0usize); // i over new, j over old
+    let mut matched = 0usize;
+    while i < new.len() && j < old.len() {
+        if new[i] == old[j] {
+            i += 1;
+            j += 1;
+            matched += 1;
+        } else {
+            retired.push(j);
+            j += 1;
+        }
+    }
+    while j < old.len() {
+        retired.push(j);
+        j += 1;
+    }
+    if matched == 0 {
+        return FleetDelta::Disjoint;
+    }
+    FleetDelta::Churn {
+        retired,
+        appended_from: i,
+    }
 }
 
 /// A sampled device fleet.
@@ -382,6 +461,67 @@ mod tests {
         let sub = FleetView::build_subset(&f.devices, &idx);
         let cloned: Vec<Device> = idx.iter().map(|&i| f.devices[i].clone()).collect();
         assert_eq!(sub.version, FleetView::build(&cloned).version);
+    }
+
+    #[test]
+    fn fleet_delta_classifies_churn_shapes() {
+        let f = Fleet::sample(&FleetConfig::default().with_devices(8));
+        let sigs = f.view().device_sigs();
+        assert_eq!(diff_fleets(&sigs, &sigs), FleetDelta::Identical);
+
+        // single leave: retire one position, nothing appended
+        let mut minus3 = sigs.clone();
+        minus3.remove(3);
+        assert_eq!(
+            diff_fleets(&sigs, &minus3),
+            FleetDelta::Churn {
+                retired: vec![3],
+                appended_from: 7
+            }
+        );
+
+        // single join at the tail
+        let joiner = Fleet::sample(&FleetConfig::default().with_devices(1).with_seed(99));
+        let jsig = joiner.view().device_sig(0);
+        let mut plus1 = sigs.clone();
+        plus1.push(jsig);
+        assert_eq!(
+            diff_fleets(&sigs, &plus1),
+            FleetDelta::Churn {
+                retired: vec![],
+                appended_from: 8
+            }
+        );
+
+        // a middle insertion decomposes as retire-the-suffix + readmit
+        let mut mid = sigs.clone();
+        mid.insert(2, jsig);
+        match diff_fleets(&sigs, &mid) {
+            FleetDelta::Churn {
+                retired,
+                appended_from,
+            } => {
+                assert_eq!(retired, (2..8).collect::<Vec<_>>());
+                assert_eq!(appended_from, 2);
+            }
+            d => panic!("expected churn, got {d:?}"),
+        }
+
+        // disjoint fleets share nothing
+        let other = Fleet::sample(&FleetConfig::default().with_devices(8).with_seed(5))
+            .view()
+            .device_sigs();
+        assert_eq!(diff_fleets(&sigs, &other), FleetDelta::Disjoint);
+
+        // subset probes (admission prefixes) are pure retires
+        let prefix = sigs[..5].to_vec();
+        assert_eq!(
+            diff_fleets(&sigs, &prefix),
+            FleetDelta::Churn {
+                retired: vec![5, 6, 7],
+                appended_from: 5
+            }
+        );
     }
 
     #[test]

@@ -1,76 +1,62 @@
 //! # Solver fast path
 //!
-//! Fleet-scale acceleration of the §4.1 bisection solver. The reference
-//! solver re-scans every `Device` on every feasibility probe —
-//! O(shapes x probes x D) pointer-chasing — which makes the Fig. 8/9 and
-//! Table 7 sweeps the slowest part of the repo once fleets reach
-//! thousands of devices. This module makes each probe O(log D) and the
-//! per-DAG solve parallel over distinct shapes, while reproducing the
-//! reference solver's answers (validated bit-for-bit in the property
-//! tests for the fleets exercised there; guaranteed within fp noise
-//! everywhere else).
+//! Fleet-scale acceleration of the §4.1 solver. The reference solver
+//! bisects on the makespan with an O(D) device scan per feasibility probe;
+//! this module replaces the whole probe loop with the shared analytic
+//! allocation core ([`crate::sched::oracle`]): a per-(fleet, shape)
+//! [`ShapeOracle`] stores the exact piecewise-quadratic description of
+//! `total_area(t)`, so the continuous optimum `T*` is a **closed-form
+//! segment root** (binary-search the crossing segment, solve its stored
+//! quadratic, one Newton polish) — zero bisection iterations on the hot
+//! path. The reference bisection protocol survives in two places: as the
+//! fallback when a fleet fails the exact-decomposition precondition, and
+//! as a `debug_assertions` cross-check that the analytic root lands inside
+//! the bisection bracket's tolerance.
 //!
-//! ## The breakpoint / prefix-sum oracle
+//! ## Per-device curve assembly
 //!
-//! [`CostModel::max_area_in`] is, per device, the pointwise minimum of a
-//! small family of monotone pieces of `t`:
+//! [`CostModel::max_area_in`] is, per device, the pointwise minimum of
+//! uplink/compute linear ramps, a quadratic → linear → saturated downlink
+//! chain, and the Eq. 7 memory / grid caps — exactly the
+//! [`crate::sched::oracle::MinFamily`] shape. `gemm_family` assembles that
+//! description (with the historical comp-vs-uplink pruning) and
+//! [`ShapeOracle::build`] hands it to the generic event sweep.
 //!
-//! * uplink `su·(t − L^u)` and compute `sc·t` — linear;
-//! * downlink — a chain of three pieces with breakpoints where the
-//!   squarest-shard side saturates the grid: quadratic
-//!   `(g/2)^2·(t − L^d)^2`, then linear, then the saturated constant;
-//! * the Eq. 7 memory cap and the `M·q` grid cap — constants.
+//! ## Incremental churn updates
 //!
-//! [`ShapeOracle::build`] computes, per device, the exact piecewise-min
-//! description of that function (domain edges plus pairwise crossings,
-//! each in closed form), converts the segment transitions into *events*
-//! `(t, Δvalue, Δslope, Δcurvature)`, sorts all events once per
-//! (fleet, shape), and sweeps them accumulating a recentered quadratic
-//! state per segment. A feasibility probe is then a binary search over
-//! the event times plus an O(1) polynomial evaluation —
-//! `sum_k a_k(t)` in O(log D) instead of O(D).
-//!
-//! Two numerical details keep the oracle interchangeable with the scan:
-//! the swept state is recentered at every segment start (evaluating
-//! expanded polynomial coefficients at large `t` would cancel
-//! catastrophically), and segments where every active device sits in a
-//! constant piece report the exactly-summed constant instead of the
-//! swept value (constant pieces are terminal per device, so that sum
-//! accumulates monotonically without cancellation — this matters when
-//! the feasibility boundary lands on a capped plateau, where the curve
-//! is flat and any drift would shift `T*` macroscopically).
-//!
-//! ## When the fallback scan engages
-//!
-//! The exact oracle requires finite, positive bandwidth/compute
-//! parameters and a well-formed shape; [`ShapeOracle::build`] returns
-//! `None` otherwise and the solver falls back to a chunked flat-array
-//! scan over the [`FleetView`] (parallelized via `scoped_map` above
-//! [`PAR_SCAN_THRESHOLD`] devices). The recovery region solver and the
-//! steady-state water-filling always use the scan route: their
-//! per-device oracles (cache-discounted downlink, fractional capacity
-//! clamped at 1) do not satisfy the piecewise-decomposition
-//! precondition exploited here.
+//! [`SolverCache`] keeps the built oracle per (cost-model context, shape)
+//! together with the fleet's device signatures. On the next solve the
+//! fleet is diffed ([`crate::cluster::fleet::diff_fleets`]): identical
+//! fleets reuse the oracle outright, single join/leave (and any
+//! retire-subsequence + admit-tail shape, which covers admission prefix
+//! probes and session membership epochs) splice the event list
+//! incrementally — no survivor re-emission, no re-sort, bit-identical to a
+//! rebuild (see the oracle module docs) — and only disjoint fleets rebuild.
+//! [`CacheStats::incremental_updates`] / [`CacheStats::full_rebuilds`]
+//! make the distinction observable; `benches/table7_solver.rs` gates on
+//! `full_rebuilds == 0` across a single-device churn re-solve.
 //!
 //! ## Warm starts and memoization
 //!
-//! [`SolverCache`] carries two reuse levels across solves: an exact memo
-//! keyed by (fleet fingerprint, cost-model/options context, shape) that
-//! returns the previously solved assignment outright, and per-shape
-//! `T*` hints that warm-start the bisection bracket when the fleet has
-//! churned (`solve_dag_cached`, `sched::recovery`). Cold
-//! [`crate::sched::solver::solve_gemm`] calls keep the reference
-//! bracket protocol exactly so results stay reproducible
-//! call-by-call.
+//! [`SolverCache`] still carries the exact memo keyed by (fleet
+//! fingerprint + solver context, shape) and per-shape `T*` hints. The
+//! hints only matter on the scan fallback now — the analytic root is
+//! bracket-free — but they keep stale-hint behaviour harmless there.
+//! Since the analytic root depends only on the oracle (never on bracket
+//! history), warm and cold solves of the same fleet are bitwise identical,
+//! which is what makes the parallel sweep driver
+//! ([`crate::api::Scenario::run_sweep_parallel`]) exact.
 
 use std::collections::HashMap;
+use std::sync::Mutex;
 use std::time::Instant;
 
 use crate::cluster::device::Device;
-use crate::cluster::fleet::FleetView;
+use crate::cluster::fleet::{diff_fleets, DeviceSig, FleetDelta, FleetView};
 use crate::model::dag::GemmDag;
 use crate::sched::assignment::{GemmAssignment, Schedule};
 use crate::sched::cost::{opt_tail, CostModel, GemmShape, PsParams};
+use crate::sched::oracle::{DeviceCurve, MinFamily, Piece, QuadChain, SegmentOracle};
 use crate::sched::solver::{SolverOptions, SolverStats};
 use crate::sched::tiling;
 use crate::util::threadpool::{chunk_ranges, chunked_sum, default_threads, scoped_map};
@@ -78,84 +64,13 @@ use crate::util::threadpool::{chunk_ranges, chunked_sum, default_threads, scoped
 /// Device count above which flat-array scans are chunked across threads.
 pub const PAR_SCAN_THRESHOLD: usize = 4096;
 
-/// One monotone piece of a device's `max_area_in`, in shift-stable form.
-#[derive(Clone, Copy, PartialEq, Debug)]
-enum Piece {
-    /// `slope * (t - off)` — uplink (off = L^u), compute (off = 0), or the
-    /// saturated-side downlink phase (off = L^d + ms/g)
-    Lin { slope: f64, off: f64 },
-    /// `aq * (t - ld)^2` — square-shard downlink phase
-    Quad { aq: f64, ld: f64 },
-    /// memory/grid cap or fully saturated downlink
-    Const { c: f64 },
-}
-
-impl Piece {
-    fn value(&self, t: f64) -> f64 {
-        match *self {
-            Piece::Lin { slope, off } => slope * (t - off),
-            Piece::Quad { aq, ld } => {
-                let u = t - ld;
-                aq * u * u
-            }
-            Piece::Const { c } => c,
-        }
-    }
-
-    fn slope_at(&self, t: f64) -> f64 {
-        match *self {
-            Piece::Lin { slope, .. } => slope,
-            Piece::Quad { aq, ld } => 2.0 * aq * (t - ld),
-            Piece::Const { .. } => 0.0,
-        }
-    }
-
-    fn curvature(&self) -> f64 {
-        match *self {
-            Piece::Quad { aq, .. } => aq,
-            _ => 0.0,
-        }
-    }
-
-    fn is_const(&self) -> bool {
-        matches!(self, Piece::Const { .. })
-    }
-
-    fn const_value(&self) -> f64 {
-        match *self {
-            Piece::Const { c } => c,
-            _ => 0.0,
-        }
-    }
-
-    /// Absolute-coordinate `(slope, intercept)` of a non-quadratic piece.
-    fn as_line(&self) -> (f64, f64) {
-        match *self {
-            Piece::Lin { slope, off } => (slope, -slope * off),
-            Piece::Const { c } => (0.0, c),
-            Piece::Quad { .. } => unreachable!("quad pieces are not lines"),
-        }
-    }
-}
-
-/// A piece-transition event of one device: at `t`, the aggregate gains
-/// `dv`/`ds`/`da` in value/slope/curvature, `dc` in const-piece sum and
-/// `dnn` in the number of devices on non-constant pieces.
-#[derive(Clone, Copy)]
-struct Event {
-    t: f64,
-    dv: f64,
-    ds: f64,
-    da: f64,
-    dc: f64,
-    dnn: i64,
-}
-
-/// Emit the piecewise-min segment-transition events of one device's
-/// `max_area_in(t)` into `events`. Returns `None` when the decomposition
-/// precondition fails (caller falls back to the scan oracle).
+/// Assemble one device's `max_area_in` capacity curve as a [`MinFamily`]
+/// (see [`CostModel::max_area_in_raw`] for the scan twin): uplink and
+/// compute ramps, the downlink quad → linear → saturated chain, and the
+/// Eq. 7 memory / grid cap. `None` when the decomposition precondition
+/// fails (caller falls back to the scan oracle).
 #[allow(clippy::too_many_arguments)]
-fn emit_device_events(
+fn gemm_family(
     flops: f64,
     ul_bw: f64,
     ul_lat: f64,
@@ -164,9 +79,7 @@ fn emit_device_events(
     mem: f64,
     shape: &GemmShape,
     b: f64,
-    events: &mut Vec<Event>,
-    scratch: &mut Vec<f64>,
-) -> Option<()> {
+) -> Option<DeviceCurve> {
     let n = shape.n as f64;
     let rows = shape.rows as f64;
     let q = shape.q as f64;
@@ -193,7 +106,7 @@ fn emit_device_events(
     let sm = ((n * n * b * b + b * mem).sqrt() - n * b) / b;
     let cap = (sm * sm).max(0.0).min(oa);
     if !(cap > 0.0) {
-        return Some(()); // contributes zero area at every t
+        return Some(DeviceCurve::Zero); // contributes zero area at every t
     }
     let t0 = ul_lat.max(dl_lat);
     let tq = dl_lat + 2.0 * ms / g; // downlink: quad -> linear
@@ -202,128 +115,42 @@ fn emit_device_events(
         return None;
     }
 
-    let p_ul = Piece::Lin { slope: su, off: ul_lat };
-    let p_comp = Piece::Lin { slope: sc, off: 0.0 };
-    let aq = g * g / 4.0;
-    let p_dlq = Piece::Quad { aq, ld: dl_lat };
-    let p_dll = Piece::Lin { slope: ms * g, off: dl_lat + ms / g };
-    let p_cap = Piece::Const { c: cap };
+    let mut fam = MinFamily::new(t0);
+    fam.push_lin(su, ul_lat);
+    fam.push_const(cap);
     // COMP >= UL for every t >= L^u whenever sc >= su: prune it then.
-    let keep_comp = sc < su;
-
-    // Candidate breakpoints: domain edges + pairwise piece crossings.
-    // (The saturated-downlink constant `oa` never crosses below `cap`
-    // since cap <= oa, so it contributes no candidates of its own.)
-    fn push_cand(scratch: &mut Vec<f64>, t0: f64, t: f64) {
-        if t.is_finite() && t > t0 {
-            scratch.push(t);
-        }
+    if sc < su {
+        fam.push_lin(sc, 0.0);
     }
-    scratch.clear();
-    let lins = [p_ul, p_dll, p_cap, p_comp];
-    let nl = if keep_comp { 4 } else { 3 };
-    let lins = &lins[..nl];
-    for i in 0..lins.len() {
-        for j in (i + 1)..lins.len() {
-            let (s1, c1) = lins[i].as_line();
-            let (s2, c2) = lins[j].as_line();
-            if s1 != s2 {
-                push_cand(scratch, t0, (c2 - c1) / (s1 - s2));
-            }
-        }
-    }
-    for p in lins.iter() {
-        // aq·u^2 = sl·(u + ld) + c with u = t − ld
-        let (sl, c) = p.as_line();
-        let bq = -sl;
-        let cq = -(sl * dl_lat + c);
-        let disc = bq * bq - 4.0 * aq * cq;
-        if disc >= 0.0 && aq > 0.0 {
-            let sq = disc.sqrt();
-            push_cand(scratch, t0, dl_lat + (-bq - sq) / (2.0 * aq));
-            push_cand(scratch, t0, dl_lat + (-bq + sq) / (2.0 * aq));
-        }
-    }
-    push_cand(scratch, t0, tq);
-    push_cand(scratch, t0, tl);
-    scratch.sort_unstable_by(|a, b| a.total_cmp(b));
-    scratch.dedup();
-
-    let dl_piece = |t: f64| -> Piece {
-        if t <= tq {
-            p_dlq
-        } else if t <= tl {
-            p_dll
-        } else {
-            Piece::Const { c: oa }
-        }
-    };
-    let min_piece = |t: f64| -> Piece {
-        let mut best = p_ul;
-        let mut bv = p_ul.value(t);
-        let mut consider = |p: Piece| {
-            let v = p.value(t);
-            if v < bv {
-                bv = v;
-                best = p;
-            }
-        };
-        consider(dl_piece(t));
-        consider(p_cap);
-        if keep_comp {
-            consider(p_comp);
-        }
-        best
-    };
-
-    // Walk segments [start_i, start_{i+1}), choosing the min piece at the
-    // midpoint (no crossing lies inside a segment, so the choice holds on
-    // the whole segment); merge runs of the same piece and emit deltas.
-    // The pre-first-event state is Const(0): a_k(t) = 0 below t0.
-    let mut prev = Piece::Const { c: 0.0 };
-    let n_cand = scratch.len();
-    for i in 0..=n_cand {
-        let start = if i == 0 { t0 } else { scratch[i - 1] };
-        let mid = if i < n_cand {
-            0.5 * (start + scratch[i])
-        } else {
-            start * 2.0 + 1.0
-        };
-        let p = min_piece(mid);
-        if p == prev {
-            continue;
-        }
-        events.push(Event {
-            t: start,
-            dv: p.value(start) - prev.value(start),
-            ds: p.slope_at(start) - prev.slope_at(start),
-            da: p.curvature() - prev.curvature(),
-            dc: p.const_value() - prev.const_value(),
-            dnn: i64::from(!p.is_const()) - i64::from(!prev.is_const()),
-        });
-        prev = p;
-    }
-    // Every device must end on a constant piece (its cap); if fp noise in
-    // the candidates broke that, reject the oracle rather than risk an
-    // inexact tail.
-    if !prev.is_const() {
-        return None;
-    }
-    Some(())
+    fam.chain = Some(QuadChain {
+        aq: g * g / 4.0,
+        ld: dl_lat,
+        tq,
+        lin: Piece::Lin { slope: ms * g, off: dl_lat + ms / g },
+        tl,
+        sat: oa,
+    });
+    Some(DeviceCurve::Curve(fam))
 }
 
-/// Exact O(log D)-per-probe feasibility oracle for one (fleet, shape):
-/// `total_area(t) = sum_k max_area_in(k, t)` from sorted breakpoints and
-/// per-segment quadratic state. See the module docs.
+/// The exact per-(fleet, shape) feasibility oracle: `total_area(t)` in
+/// O(log D), the continuous optimum `T*` as a closed-form segment root,
+/// and incremental retire/admit updates under churn. A thin GEMM-specific
+/// wrapper over [`SegmentOracle`] that also remembers the fleet's device
+/// signatures for delta diffing.
 pub struct ShapeOracle {
-    ts: Vec<f64>,
-    v: Vec<f64>,
-    s: Vec<f64>,
-    a: Vec<f64>,
-    /// exact sum of const-piece values per segment
-    cs: Vec<f64>,
-    /// number of devices on non-constant pieces per segment
-    nn: Vec<i64>,
+    seg: SegmentOracle,
+    sigs: Vec<DeviceSig>,
+}
+
+/// Outcome of [`ShapeOracle::update`].
+pub enum OracleUpdate {
+    /// fleet unchanged: oracle reused outright
+    Unchanged,
+    /// membership delta applied by event splicing (bitwise = rebuild)
+    Incremental,
+    /// nothing shared (or a new device failed the precondition): rebuild
+    NeedsRebuild,
 }
 
 impl ShapeOracle {
@@ -331,121 +158,95 @@ impl ShapeOracle {
     /// the exact-decomposition precondition (the caller then uses the
     /// chunked scan fallback).
     pub fn build(view: &FleetView, cm: &CostModel, shape: &GemmShape) -> Option<ShapeOracle> {
-        let d = view.len();
-        if d == 0 {
-            return None;
-        }
-        let b = cm.elem_bytes;
-        let gen_range = |lo: usize, hi: usize| -> Option<Vec<Event>> {
-            let mut events = Vec::with_capacity((hi - lo) * 6);
-            let mut scratch: Vec<f64> = Vec::with_capacity(32);
-            for k in lo..hi {
-                emit_device_events(
-                    cm.flops_of_view(view, k),
-                    view.ul_bw[k],
-                    view.ul_lat[k],
-                    view.dl_bw[k],
-                    view.dl_lat[k],
-                    view.mem[k],
-                    shape,
-                    b,
-                    &mut events,
-                    &mut scratch,
-                )?;
-            }
-            Some(events)
-        };
-        let mut events = if d >= PAR_SCAN_THRESHOLD {
-            let threads = default_threads();
-            let ranges = chunk_ranges(d, threads);
-            let parts = scoped_map(&ranges, threads, |&(lo, hi)| gen_range(lo, hi));
-            let mut all = Vec::new();
-            for p in parts {
-                all.extend(p?);
-            }
-            all
-        } else {
-            gen_range(0, d)?
-        };
-        events.sort_unstable_by(|x, y| x.t.total_cmp(&y.t));
+        ShapeOracle::build_with_sigs(view, cm, shape, view.device_sigs())
+    }
 
-        let mut ts: Vec<f64> = Vec::with_capacity(events.len());
-        let mut vv: Vec<f64> = Vec::with_capacity(events.len());
-        let mut ss: Vec<f64> = Vec::with_capacity(events.len());
-        let mut aa: Vec<f64> = Vec::with_capacity(events.len());
-        let mut cc: Vec<f64> = Vec::with_capacity(events.len());
-        let mut nnv: Vec<i64> = Vec::with_capacity(events.len());
-        let (mut v, mut s, mut a, mut c) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
-        let mut nn: i64 = 0;
-        let mut last_t = f64::NAN;
-        for e in &events {
-            if !last_t.is_nan() && e.t > last_t {
-                let dt = e.t - last_t;
-                v = v + s * dt + a * dt * dt;
-                s += 2.0 * a * dt;
+    fn build_with_sigs(
+        view: &FleetView,
+        cm: &CostModel,
+        shape: &GemmShape,
+        sigs: Vec<DeviceSig>,
+    ) -> Option<ShapeOracle> {
+        let b = cm.elem_bytes;
+        let seg = SegmentOracle::build(view.len(), |k| {
+            gemm_family(
+                cm.flops_of_view(view, k),
+                view.ul_bw[k],
+                view.ul_lat[k],
+                view.dl_bw[k],
+                view.dl_lat[k],
+                view.mem[k],
+                shape,
+                b,
+            )
+        })?;
+        Some(ShapeOracle { seg, sigs })
+    }
+
+    /// Bring the oracle up to date with `view` (whose signatures are
+    /// `new_sigs`): reuse, splice incrementally (one merge + one resweep,
+    /// even for a mixed leave+join delta), or report that a rebuild is
+    /// needed. On `NeedsRebuild` the oracle is untouched but stale — the
+    /// caller must discard it.
+    pub fn update(
+        &mut self,
+        view: &FleetView,
+        cm: &CostModel,
+        shape: &GemmShape,
+        new_sigs: &[DeviceSig],
+    ) -> OracleUpdate {
+        match diff_fleets(&self.sigs, new_sigs) {
+            FleetDelta::Identical => OracleUpdate::Unchanged,
+            FleetDelta::Disjoint => OracleUpdate::NeedsRebuild,
+            FleetDelta::Churn {
+                retired,
+                appended_from,
+            } => {
+                let b = cm.elem_bytes;
+                let count = new_sigs.len() - appended_from;
+                let spliced = self.seg.splice(&retired, count, |i| {
+                    let k = appended_from + i;
+                    gemm_family(
+                        cm.flops_of_view(view, k),
+                        view.ul_bw[k],
+                        view.ul_lat[k],
+                        view.dl_bw[k],
+                        view.dl_lat[k],
+                        view.mem[k],
+                        shape,
+                        b,
+                    )
+                });
+                match spliced {
+                    Some(()) => {
+                        self.sigs = new_sigs.to_vec();
+                        OracleUpdate::Incremental
+                    }
+                    None => OracleUpdate::NeedsRebuild,
+                }
             }
-            v += e.dv;
-            s += e.ds;
-            a += e.da;
-            c += e.dc;
-            nn += e.dnn;
-            if !ts.is_empty() && *ts.last().unwrap() == e.t {
-                let i = ts.len() - 1;
-                vv[i] = v;
-                ss[i] = s;
-                aa[i] = a;
-                cc[i] = c;
-                nnv[i] = nn;
-            } else {
-                ts.push(e.t);
-                vv.push(v);
-                ss.push(s);
-                aa.push(a);
-                cc.push(c);
-                nnv.push(nn);
-            }
-            last_t = e.t;
         }
-        Some(ShapeOracle {
-            ts,
-            v: vv,
-            s: ss,
-            a: aa,
-            cs: cc,
-            nn: nnv,
-        })
     }
 
     /// `sum_k max_area_in(k, t)` in O(log D).
     pub fn total_area(&self, t: f64) -> f64 {
-        let idx = self.ts.partition_point(|&x| x <= t);
-        if idx == 0 {
-            return 0.0;
-        }
-        let i = idx - 1;
-        if self.nn[i] == 0 {
-            // all active devices are capped: exact flat plateau
-            return self.cs[i];
-        }
-        let dt = t - self.ts[i];
-        self.v[i] + self.s[i] * dt + self.a[i] * dt * dt
+        self.seg.total(t)
+    }
+
+    /// The continuous optimum: smallest `t` whose aggregate area covers
+    /// `area`, solved analytically. `None` when no `t` is feasible.
+    pub fn solve_area(&self, area: f64) -> Option<f64> {
+        self.seg.solve_target(area)
     }
 
     /// The terminal plateau `sum_k cap_k` — the largest coverable area.
     pub fn plateau(&self) -> f64 {
-        if let (Some(&nn), Some(&cs)) = (self.nn.last(), self.cs.last()) {
-            if nn == 0 {
-                return cs;
-            }
-        }
-        // empty fleet contributes nothing; build() guarantees every device
-        // ends on a constant piece, so nn.last() is 0 whenever it exists
-        0.0
+        self.seg.plateau()
     }
 
     /// Number of breakpoint segments (diagnostics).
     pub fn segments(&self) -> usize {
-        self.ts.len()
+        self.seg.segments()
     }
 }
 
@@ -498,7 +299,9 @@ fn areas_at(view: &FleetView, cm: &CostModel, t: f64, shape: &GemmShape) -> Vec<
 
 /// Shared bisection bracket: replicate the reference protocol exactly when
 /// cold (`hi = 1e-3` doubling), or start from a warm `hint` and re-verify.
-/// Returns `(lo, hi)` with `lo` infeasible (or 0) and `hi` feasible.
+/// Returns `(lo, hi)` with `lo` infeasible (or 0) and `hi` feasible. Used
+/// by the scan fallbacks and the debug cross-check; the analytic oracle
+/// path never brackets.
 pub(crate) fn bisection_bracket<F: Fn(f64) -> bool>(
     feasible: &F,
     hint: Option<f64>,
@@ -539,6 +342,30 @@ pub(crate) fn bisection_bracket<F: Fn(f64) -> bool>(
             (lo, hi)
         }
     }
+}
+
+/// Reference bisection loop over a feasibility probe — the parity baseline
+/// the analytic root is cross-checked against.
+pub(crate) fn bisect<F: Fn(f64) -> bool>(
+    feasible: &F,
+    mut lo: f64,
+    mut hi: f64,
+    opts: &SolverOptions,
+) -> (f64, usize) {
+    let mut iters = 0;
+    for _ in 0..opts.iters {
+        iters += 1;
+        let mid = 0.5 * (lo + hi);
+        if feasible(mid) {
+            hi = mid;
+        } else {
+            lo = mid;
+        }
+        if hi - lo <= opts.tol * hi {
+            break;
+        }
+    }
+    (hi, iters)
 }
 
 /// Assemble the [`Schedule`] from solved per-shape assignments: Eq. 1
@@ -585,21 +412,36 @@ fn integer_makespan_view(a: &GemmAssignment, view: &FleetView, cm: &CostModel) -
         .fold(0.0, f64::max)
 }
 
-/// Solve one GEMM over an SoA fleet view with the O(log D) oracle (or the
-/// scan fallback), using the reference solver's exact bracket protocol.
+/// How a solve obtained its oracle (drives the cache counters).
+enum OracleReuse {
+    /// fleet unchanged: cached oracle reused as-is
+    Cached,
+    /// churn delta spliced incrementally
+    Incremental,
+    /// built fresh with no prior oracle for this shape
+    ColdBuilt,
+    /// a prior oracle existed but shared nothing usable — discarded
+    Rebuilt,
+    /// exact-decomposition precondition failed: scan + bisection fallback
+    Scan,
+}
+
+/// Solve one GEMM over an SoA fleet view: analytic segment-root `T*` when
+/// the oracle precondition holds, reference scan + bisection otherwise.
 pub fn solve_gemm_fast(
     view: &FleetView,
     shape: GemmShape,
     cm: &CostModel,
     opts: &SolverOptions,
 ) -> (GemmAssignment, SolverStats) {
-    solve_gemm_view_impl(view, shape, cm, opts, None)
+    let (a, s, _, _) = solve_gemm_core(view, None, shape, cm, opts, None, None);
+    (a, s)
 }
 
-/// [`solve_gemm_fast`] with a warm-start bracket around `hint` (a prior
-/// `T*` for this shape on a similar fleet). The bracket is re-verified by
-/// feasibility probes, so a stale hint costs a few O(log D) probes, never
-/// correctness.
+/// [`solve_gemm_fast`] with a warm-start `hint` (a prior `T*` for this
+/// shape on a similar fleet). The analytic path is bracket-free, so the
+/// hint only seeds the bisection bracket of the scan fallback; a stale
+/// hint costs a few probes there, never correctness.
 pub fn solve_gemm_warm(
     view: &FleetView,
     shape: GemmShape,
@@ -607,49 +449,77 @@ pub fn solve_gemm_warm(
     opts: &SolverOptions,
     hint: f64,
 ) -> (GemmAssignment, SolverStats) {
-    solve_gemm_view_impl(view, shape, cm, opts, Some(hint))
+    let (a, s, _, _) = solve_gemm_core(view, None, shape, cm, opts, Some(hint), None);
+    (a, s)
 }
 
-fn solve_gemm_view_impl(
+/// The shared solve core: obtain an oracle (reuse/update/build), take the
+/// analytic root, integerize. Returns the oracle for cache writeback.
+/// `sigs` (the fleet's device signatures) is only needed on the cached
+/// path — uncached callers pass `None` and skip the signature snapshot,
+/// since their oracle is discarded after the solve.
+fn solve_gemm_core(
     view: &FleetView,
+    sigs: Option<&[DeviceSig]>,
     shape: GemmShape,
     cm: &CostModel,
     opts: &SolverOptions,
     hint: Option<f64>,
-) -> (GemmAssignment, SolverStats) {
+    prior: Option<ShapeOracle>,
+) -> (GemmAssignment, SolverStats, Option<ShapeOracle>, OracleReuse) {
     let t0c = Instant::now();
     let area = shape.out_area();
     assert!(!view.is_empty(), "no devices");
 
-    let oracle = ShapeOracle::build(view, cm, &shape);
-    let threads = default_threads();
-    let feasible = |t: f64| -> bool {
-        match &oracle {
-            Some(o) => o.total_area(t) >= area,
-            None => scan_feasible(view, cm, t, &shape, area, threads),
+    let own_sigs = || sigs.map(|s| s.to_vec()).unwrap_or_default();
+    let (oracle, reuse) = match prior {
+        Some(mut o) => {
+            let sigs = sigs.expect("cached solves carry fleet signatures");
+            match o.update(view, cm, &shape, sigs) {
+                OracleUpdate::Unchanged => (Some(o), OracleReuse::Cached),
+                OracleUpdate::Incremental => (Some(o), OracleReuse::Incremental),
+                OracleUpdate::NeedsRebuild => {
+                    match ShapeOracle::build_with_sigs(view, cm, &shape, sigs.to_vec()) {
+                        Some(o) => (Some(o), OracleReuse::Rebuilt),
+                        None => (None, OracleReuse::Scan),
+                    }
+                }
+            }
         }
+        None => match ShapeOracle::build_with_sigs(view, cm, &shape, own_sigs()) {
+            Some(o) => (Some(o), OracleReuse::ColdBuilt),
+            None => (None, OracleReuse::Scan),
+        },
     };
 
-    // Bracket: cold solves replicate the reference protocol exactly;
-    // warm solves start from the hint and re-verify.
-    let (mut lo, mut hi) =
-        bisection_bracket(&feasible, hint, &format!("shape {shape:?}"));
-
-    // Bisection (identical to the reference loop).
-    let mut iters = 0;
-    for _ in 0..opts.iters {
-        iters += 1;
-        let mid = 0.5 * (lo + hi);
-        if feasible(mid) {
-            hi = mid;
-        } else {
-            lo = mid;
+    let (t_star, iters, roots) = match &oracle {
+        Some(o) => {
+            let t = o
+                .solve_area(area)
+                .unwrap_or_else(|| panic!("no feasible makespan: shape {shape:?}"));
+            #[cfg(debug_assertions)]
+            {
+                // Cross-check: the analytic root must land inside the
+                // reference bisection's tolerance band.
+                let feasible = |x: f64| o.total_area(x) >= area;
+                let (lo, hi) = bisection_bracket(&feasible, None, &format!("shape {shape:?}"));
+                let (t_bi, _) = bisect(&feasible, lo, hi, opts);
+                let tol = (10.0 * opts.tol).max(1e-6);
+                debug_assert!(
+                    (t - t_bi).abs() <= tol * t_bi.max(1e-12),
+                    "analytic root {t} diverged from bisection {t_bi} for shape {shape:?}"
+                );
+            }
+            (t, 0usize, 1usize)
         }
-        if hi - lo <= opts.tol * hi {
-            break;
+        None => {
+            let threads = default_threads();
+            let feasible = |t: f64| scan_feasible(view, cm, t, &shape, area, threads);
+            let (lo, hi) = bisection_bracket(&feasible, hint, &format!("shape {shape:?}"));
+            let (t, iters) = bisect(&feasible, lo, hi, opts);
+            (t, iters, 0usize)
         }
-    }
-    let t_star = hi;
+    };
 
     // Target areas at T*, scaled to cover the grid exactly.
     let mut areas = areas_at(view, cm, t_star, &shape);
@@ -674,17 +544,20 @@ fn solve_gemm_view_impl(
         devices_considered: view.len(),
         decision_vars: 2 * view.len(),
         bisection_iters: iters,
+        analytic_roots: roots,
         solve_time_s: t0c.elapsed().as_secs_f64(),
         continuous_makespan: t_star,
         integer_makespan: assignment.makespan,
     };
-    (assignment, stats)
+    (assignment, stats, oracle, reuse)
 }
 
 /// Reuse counters of a [`SolverCache`] — how each per-shape solve was
-/// served. The admission loop ([`crate::sched::select`]) and
-/// `benches/fig11_selection.rs` assert on these: after the first cold
-/// solve per shape, every selection probe must run memo- or hint-warm.
+/// served, and how its feasibility oracle was maintained. The admission
+/// loop ([`crate::sched::select`]), `benches/fig11_selection.rs` and
+/// `benches/table7_solver.rs` assert on these: after the first cold solve
+/// per shape every probe runs memo- or hint-warm, and single join/leave
+/// re-solves must splice (`incremental_updates`), never rebuild.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct CacheStats {
     /// exact (fleet fingerprint + context, shape) memo returns
@@ -693,16 +566,24 @@ pub struct CacheStats {
     pub warm_solves: usize,
     /// solves with neither memo nor hint (cold bracket protocol)
     pub cold_solves: usize,
+    /// oracle updated by incremental retire/admit event splicing
+    pub incremental_updates: usize,
+    /// a cached oracle shared nothing with the new fleet and was rebuilt
+    pub full_rebuilds: usize,
 }
 
-/// Warm-start and memoization state shared across solves (benches, churn
-/// sweeps, the recovery path). See the module docs.
+/// Warm-start, memoization and incremental-oracle state shared across
+/// solves (benches, churn sweeps, selection probes, sessions). See the
+/// module docs.
 #[derive(Default)]
 pub struct SolverCache {
-    /// last `T*` per shape (any fleet) — warm-start bracket hints
+    /// last `T*` per shape (any fleet) — scan-fallback bracket hints
     hints: HashMap<GemmShape, f64>,
     /// exact reuse keyed by (fleet fingerprint + solver context, shape)
     memo: HashMap<(u64, GemmShape), (GemmAssignment, SolverStats)>,
+    /// built oracles keyed by (cost-model context, shape), delta-updated
+    /// across membership churn
+    oracles: HashMap<(u64, GemmShape), ShapeOracle>,
     stats: CacheStats,
 }
 
@@ -714,6 +595,7 @@ impl SolverCache {
     pub fn clear(&mut self) {
         self.hints.clear();
         self.memo.clear();
+        self.oracles.clear();
         self.stats = CacheStats::default();
     }
 
@@ -744,6 +626,17 @@ fn cache_ctx(view: &FleetView, cm: &CostModel, opts: &SolverOptions) -> u64 {
     h
 }
 
+/// Oracle key: cost-model flags only — the oracle's events are a pure
+/// function of (device parameters, cost model, shape), independent of the
+/// fleet version (that's what the delta update exploits) and of the
+/// bisection options (the analytic root has none).
+fn oracle_ctx(cm: &CostModel) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    h = fnv1a(h, cm.elem_bytes.to_bits());
+    h = fnv1a(h, u64::from(cm.use_effective_flops));
+    h
+}
+
 /// Distinct GEMM scheduling shapes of a DAG in first-seen order — the
 /// per-shape solve unit shared by the DAG solvers, the admission optimizer
 /// ([`crate::sched::select`]), and the bench warm-path gates.
@@ -761,9 +654,9 @@ pub fn distinct_shapes(dag: &GemmDag) -> Vec<GemmShape> {
 }
 
 /// Solve the full DAG: one assignment per distinct shape, solved in
-/// parallel across the thread pool, with optional warm-start/memo reuse.
-/// This is the engine behind [`crate::sched::solver::solve_dag`] and
-/// [`crate::sched::solver::solve_dag_cached`].
+/// parallel across the thread pool, with optional warm-start/memo/oracle
+/// reuse. This is the engine behind [`crate::sched::solver::solve_dag`]
+/// and [`crate::sched::solver::solve_dag_cached`].
 pub fn solve_dag_fast(
     devices: &[Device],
     dag: &GemmDag,
@@ -775,58 +668,93 @@ pub fn solve_dag_fast(
     let t0 = Instant::now();
     let view = FleetView::build(devices);
     let ctx = cache_ctx(&view, cm, opts);
+    let octx = oracle_ctx(cm);
+    // Signatures drive oracle reuse/delta detection — only cached solves
+    // need the snapshot.
+    let sigs: Option<Vec<DeviceSig>> = cache.is_some().then(|| view.device_sigs());
     let shapes = distinct_shapes(dag);
 
-    // Snapshot reuse state, then solve the remaining shapes in parallel.
-    type Job = (GemmShape, Option<f64>, Option<(GemmAssignment, SolverStats)>);
+    // Snapshot reuse state (memo/hints by value, the incremental oracle
+    // moved into a per-job slot), then solve the remaining shapes in
+    // parallel.
+    struct Job {
+        shape: GemmShape,
+        hint: Option<f64>,
+        memo: Option<(GemmAssignment, SolverStats)>,
+        oracle: Mutex<Option<ShapeOracle>>,
+    }
     let jobs: Vec<Job> = shapes
         .iter()
-        .map(|shape| match cache.as_deref() {
-            Some(c) => (
-                *shape,
-                c.hints.get(shape).copied(),
-                c.memo.get(&(ctx, *shape)).cloned(),
-            ),
-            None => (*shape, None, None),
+        .map(|shape| match cache.as_deref_mut() {
+            Some(c) => Job {
+                shape: *shape,
+                hint: c.hints.get(shape).copied(),
+                memo: c.memo.get(&(ctx, *shape)).cloned(),
+                oracle: Mutex::new(c.oracles.remove(&(octx, *shape))),
+            },
+            None => Job {
+                shape: *shape,
+                hint: None,
+                memo: None,
+                oracle: Mutex::new(None),
+            },
         })
         .collect();
     let threads = default_threads().min(jobs.len()).max(1);
-    let solved: Vec<(GemmAssignment, SolverStats)> =
-        scoped_map(&jobs, threads, |(shape, hint, memo)| {
-            if let Some((a, s)) = memo {
-                let mut s = *s;
-                s.solve_time_s = 0.0; // reused, not re-solved
-                return (a.clone(), s);
-            }
-            match hint {
-                Some(h) => solve_gemm_warm(&view, *shape, cm, opts, *h),
-                None => solve_gemm_fast(&view, *shape, cm, opts),
-            }
-        });
+    type Solved = (GemmAssignment, SolverStats, Option<ShapeOracle>, Option<OracleReuse>);
+    let solved: Vec<Solved> = scoped_map(&jobs, threads, |job| {
+        if let Some((a, s)) = &job.memo {
+            let mut s = *s;
+            s.solve_time_s = 0.0; // reused, not re-solved
+            return (a.clone(), s, None, None);
+        }
+        let prior = job.oracle.lock().unwrap().take();
+        let (a, s, oracle, reuse) =
+            solve_gemm_core(&view, sigs.as_deref(), job.shape, cm, opts, job.hint, prior);
+        (a, s, oracle, Some(reuse))
+    });
 
     let mut by_shape: HashMap<GemmShape, GemmAssignment> = HashMap::new();
     let mut agg = SolverStats {
         devices_considered: devices.len(),
         ..SolverStats::default()
     };
-    for ((shape, hint, memo), (a, s)) in jobs.iter().zip(&solved) {
+    for (job, (a, s, oracle, reuse)) in jobs.iter().zip(solved.into_iter()) {
         agg.decision_vars += s.decision_vars;
         agg.bisection_iters += s.bisection_iters;
+        agg.analytic_roots += s.analytic_roots;
         if let Some(c) = cache.as_deref_mut() {
-            if memo.is_some() {
+            if job.memo.is_some() {
                 c.stats.memo_hits += 1;
-            } else if hint.is_some() {
+            } else if job.hint.is_some() {
                 c.stats.warm_solves += 1;
             } else {
                 c.stats.cold_solves += 1;
             }
-            c.hints.insert(*shape, s.continuous_makespan);
+            match reuse {
+                Some(OracleReuse::Incremental) => c.stats.incremental_updates += 1,
+                Some(OracleReuse::Rebuilt) => c.stats.full_rebuilds += 1,
+                _ => {}
+            }
+            c.hints.insert(job.shape, s.continuous_makespan);
             if c.memo.len() > 8192 {
                 c.memo.clear(); // churn sweeps never need more; bound memory
             }
-            c.memo.insert((ctx, *shape), (a.clone(), *s));
+            c.memo.insert((ctx, job.shape), (a.clone(), s));
+            // Writeback: the solve's (possibly updated) oracle, or — on a
+            // memo hit — the cached oracle the job left untouched. Bounded
+            // like the memo: each oracle holds O(D) events + sigs, and
+            // shape-changing sweeps (batch-size axes) would otherwise
+            // accumulate one forever per (cost-model ctx, shape).
+            let back = oracle.or_else(|| job.oracle.lock().unwrap().take());
+            if let Some(o) = back {
+                if c.oracles.len() > 64 {
+                    c.oracles.clear();
+                }
+                c.oracles.insert((octx, job.shape), o);
+            }
         }
-        by_shape.insert(*shape, a.clone());
+        by_shape.insert(job.shape, a);
     }
 
     let schedule = assemble_schedule(dag, cm, ps, by_shape);
@@ -898,7 +826,35 @@ mod tests {
     }
 
     #[test]
-    fn warm_solve_matches_cold_within_tolerance() {
+    fn analytic_root_inverts_the_oracle() {
+        let fleet = Fleet::sample(&FleetConfig::default().with_devices(96));
+        let view = fleet.view();
+        let shape = GemmShape::new(1024, 4096, 4096, 8);
+        let oracle = ShapeOracle::build(&view, &cm(), &shape).unwrap();
+        let area = shape.out_area();
+        let t = oracle.solve_area(area).expect("feasible");
+        let v = oracle.total_area(t);
+        assert!((v - area).abs() <= 1e-9 * area, "total({t}) = {v} vs {area}");
+        // smallest such t
+        assert!(oracle.total_area(t * (1.0 - 1e-9)) < area * (1.0 + 1e-9));
+        // beyond the plateau there is no feasible makespan
+        assert!(oracle.solve_area(oracle.plateau() * 1.001).is_none());
+    }
+
+    #[test]
+    fn hot_path_reports_zero_bisection_iterations() {
+        let fleet = Fleet::sample(&FleetConfig::default().with_devices(64));
+        let view = fleet.view();
+        let shape = GemmShape::new(1024, 4096, 4096, 8);
+        let (_, stats) = solve_gemm_fast(&view, shape, &cm(), &SolverOptions::default());
+        assert_eq!(stats.bisection_iters, 0, "steady-state path must not bisect");
+        assert_eq!(stats.analytic_roots, 1);
+    }
+
+    #[test]
+    fn warm_solve_is_bitwise_identical_to_cold() {
+        // The analytic root has no bracket history, so hints cannot change
+        // the answer at all.
         let fleet = Fleet::sample(&FleetConfig::default().with_devices(96));
         let view = fleet.view();
         let shape = GemmShape::new(1024, 4096, 4096, 8);
@@ -912,11 +868,13 @@ mod tests {
                 &opts,
                 cs.continuous_makespan * hint_scale,
             );
-            let rel = (ws.continuous_makespan - cs.continuous_makespan).abs()
-                / cs.continuous_makespan;
-            assert!(rel <= 1e-6, "hint x{hint_scale}: rel={rel}");
-            let mrel = (wa.makespan - ca.makespan).abs() / ca.makespan;
-            assert!(mrel <= 1e-6, "hint x{hint_scale}: makespan rel={mrel}");
+            assert_eq!(
+                ws.continuous_makespan.to_bits(),
+                cs.continuous_makespan.to_bits(),
+                "hint x{hint_scale}"
+            );
+            assert_eq!(wa.makespan.to_bits(), ca.makespan.to_bits());
+            assert_eq!(wa.rects, ca.rects);
         }
     }
 
@@ -932,21 +890,52 @@ mod tests {
         let s1 = cache.stats();
         assert!(s1.cold_solves > 0);
         assert_eq!((s1.memo_hits, s1.warm_solves), (0, 0));
+        assert_eq!((s1.incremental_updates, s1.full_rebuilds), (0, 0));
         // identical fleet: every shape is an exact memo hit
         let _ = solve_dag_fast(&fleet.devices, &dag, &cm(), &ps, &opts, Some(&mut cache));
         let s2 = cache.stats();
         assert_eq!(s2.memo_hits, s1.cold_solves);
         assert_eq!(s2.cold_solves, s1.cold_solves);
-        // churned fleet: misses the memo but every shape has a warm hint —
-        // nothing ever solves cold again
+        assert_eq!(s2.full_rebuilds, 0);
+        // churned fleet: misses the memo but every shape has a warm hint
+        // and an incrementally spliced oracle — nothing solves cold or
+        // rebuilds
         let mut churned = fleet.clone();
         churned.remove(0);
         let _ = solve_dag_fast(&churned.devices, &dag, &cm(), &ps, &opts, Some(&mut cache));
         let s3 = cache.stats();
         assert_eq!(s3.cold_solves, s1.cold_solves);
         assert_eq!(s3.warm_solves, s1.cold_solves);
+        assert_eq!(s3.incremental_updates, s1.cold_solves);
+        assert_eq!(s3.full_rebuilds, 0);
         cache.clear();
         assert_eq!(cache.stats(), CacheStats::default());
+    }
+
+    #[test]
+    fn incremental_churn_solve_is_bitwise_identical_to_fresh() {
+        let spec = ModelSpec::preset("OPT-13B").unwrap();
+        let dag = GemmDag::build(&spec, &TrainSetup::default());
+        let fleet = Fleet::sample(&FleetConfig::default().with_devices(48));
+        let opts = SolverOptions::default();
+        let ps = PsParams::default();
+        let mut cache = SolverCache::new();
+        let _ = solve_dag_fast(&fleet.devices, &dag, &cm(), &ps, &opts, Some(&mut cache));
+        // retire one device: the cached oracles splice, a fresh solver
+        // rebuilds — results must agree bit for bit
+        let mut churned = fleet.clone();
+        churned.remove(3);
+        let (inc, _) =
+            solve_dag_fast(&churned.devices, &dag, &cm(), &ps, &opts, Some(&mut cache));
+        let (fresh, fs) = solve_dag_fast(&churned.devices, &dag, &cm(), &ps, &opts, None);
+        assert_eq!(inc.gemm_time.to_bits(), fresh.gemm_time.to_bits());
+        assert_eq!(inc.opt_tail.to_bits(), fresh.opt_tail.to_bits());
+        for (shape, a) in &inc.by_shape {
+            assert_eq!(a.rects, fresh.by_shape[shape].rects);
+        }
+        assert_eq!(fs.bisection_iters, 0);
+        assert!(cache.stats().incremental_updates > 0);
+        assert_eq!(cache.stats().full_rebuilds, 0);
     }
 
     #[test]
@@ -977,7 +966,7 @@ mod tests {
         assert_eq!(s1.gemm_time, s2.gemm_time);
         assert_eq!(s1.opt_tail, s2.opt_tail);
         assert_eq!(st1.decision_vars, st2.decision_vars);
-        // a churned fleet misses the memo but reuses warm hints
+        // a churned fleet misses the memo but reuses warm state
         let mut churned = fleet.clone();
         churned.remove(0);
         let (s3, _) = solve_dag_fast(

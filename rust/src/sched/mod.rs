@@ -4,15 +4,20 @@
 //! Appendix-C tail-aware (CVaR) objective.
 //!
 //! The paper solves the assignment MILP with Gurobi; we replace it with an
-//! exact continuous solver (bisection on the makespan, per-device max-area
-//! feasibility in closed form) followed by guillotine integerization of the
-//! output grid — see DESIGN.md §2 for why this preserves the paper's
-//! behaviour, and `benches/table7_solver.rs` for the measured solve-time
-//! regimes (cold-start vs churn re-solve vs fast path).
+//! exact continuous solver (per-device max-area feasibility in closed form,
+//! the makespan inverted analytically) followed by guillotine
+//! integerization of the output grid — see DESIGN.md §2 for why this
+//! preserves the paper's behaviour, and `benches/table7_solver.rs` for the
+//! measured solve-time regimes (cold-start vs churn re-solve vs fast path).
 //!
-//! Fleet-scale solves route through [`fastpath`]: SoA fleet views, an
-//! O(log D) breakpoint/prefix-sum feasibility oracle, parallel
-//! distinct-shape solves, and warm-start/memo reuse across churn sweeps.
+//! Fleet-scale solves route through [`fastpath`], which sits on the shared
+//! analytic allocation core [`oracle`]: SoA fleet views, an O(log D)
+//! breakpoint/prefix-sum oracle whose root is a closed-form segment solve
+//! (zero hot-path bisection), incremental retire/admit updates under
+//! membership churn, parallel distinct-shape solves, and warm-start/memo
+//! reuse across churn sweeps. The seed bisection solvers are preserved as
+//! the parity baseline ([`solver::solve_gemm_reference`],
+//! [`solver::solve_region_reference_view`]).
 //!
 //! Device selection ([`select`]) closes the paper's third pillar: a
 //! marginal-utility admission optimizer that probes solved `T*` (warm, via
@@ -23,6 +28,7 @@ pub mod assignment;
 pub mod cost;
 pub mod cvar;
 pub mod fastpath;
+pub mod oracle;
 pub mod recovery;
 pub mod select;
 pub mod solver;
@@ -31,6 +37,7 @@ pub mod tiling;
 pub use assignment::{GemmAssignment, Rect, Schedule};
 pub use cost::{CostModel, GemmShape};
 pub use fastpath::{CacheStats, ShapeOracle, SolverCache};
+pub use oracle::SegmentOracle;
 pub use select::{select_devices, FrontierPoint, SelectConfig, SelectionOutcome};
 pub use solver::{
     solve_dag, solve_dag_cached, solve_dag_reference, solve_gemm, solve_gemm_reference,

@@ -1,0 +1,910 @@
+//! # The analytic allocation core: a generic piecewise-quadratic oracle
+//!
+//! Every hot allocation loop in this repo is the same water-filling
+//! structure (cf. Yuan et al., *Decentralized Training of Foundation Models
+//! in Heterogeneous Environments*): each device contributes a monotone
+//! non-decreasing capacity curve of the makespan `t` — the pointwise
+//! minimum of a few linear ramps, at most one quadratic downlink chain, and
+//! terminal constant caps — and the solver wants the smallest `t` whose
+//! aggregate capacity covers a target. Historically each consumer bisected
+//! on `t` with O(D) feasibility scans (or, since PR 1, O(log D) oracle
+//! probes for the steady-state GEMM solve only). This module is the one
+//! shared engine behind all of them:
+//!
+//! * [`MinFamily`] describes one device's curve declaratively (domain floor
+//!   `t0`, linear/constant pieces, optional [`QuadChain`]);
+//! * [`SegmentOracle::build`] converts a fleet of families into sorted
+//!   breakpoint *events* and sweeps them into per-segment recentered
+//!   quadratic state — `total(t)` is then O(log D);
+//! * [`SegmentOracle::solve_target`] inverts the curve **analytically**:
+//!   binary-search the crossing segment by its start value, solve that
+//!   segment's stored quadratic in closed form, then apply one guarded
+//!   Newton polish. No bisection iterations anywhere.
+//! * [`SegmentOracle::retire_many`] / [`SegmentOracle::admit_tail`] /
+//!   [`SegmentOracle::splice`] update the oracle **incrementally** under
+//!   churn: drop a retired device's ~6 events, ordered-merge an admitted
+//!   device's freshly emitted ones, then one linear coefficient resweep.
+//!   What a delta avoids is the per-device closed-form re-emission for
+//!   every survivor and the O(E log E) global re-sort — the splice itself
+//!   is Θ(E) (see the bitwise-reproducibility note below for why it is
+//!   not sublinear).
+//!
+//! ## Consumers
+//!
+//! | consumer | curve | target |
+//! |---|---|---|
+//! | [`crate::sched::fastpath`] steady-state GEMM solve | Eq. 2–4 + Eq. 7 max-area pieces | output area `M·q` |
+//! | [`crate::sched::solver::solve_region_with_cache_view`] (§4.2 recovery) | cache-discounted max-area pieces | lost-region area |
+//! | [`crate::sim::batch`] stage water-filling | fractional-capacity ramps clamped at 1 | 1.0 (one stage) |
+//! | [`crate::sched::select`] / [`crate::sim::session`] churn re-solves | via `fastpath`'s cached oracles | retire/admit deltas |
+//!
+//! ## Bitwise-reproducible incrementality
+//!
+//! Updating floating-point prefix sums in true O(log D) (e.g. a Fenwick
+//! tree over event deltas) cannot reproduce a from-scratch rebuild bit for
+//! bit — fp addition is not associative. The repo's churn-parity contract
+//! (retire/admit-then-solve must equal rebuild-then-solve *bitwise*, see
+//! `rust/tests/sched_properties.rs`) is the stronger property, so the delta
+//! API keeps the event list in one **canonical order** — `(t, slot, seq)`,
+//! where `slot` is a monotonically increasing per-device id and `seq` the
+//! per-device emission index — and re-runs only the linear sweep after a
+//! splice. Survivor slots keep their relative order and admitted devices
+//! always receive larger slots than every current one, so the spliced list
+//! is exactly the list a canonical rebuild over the new fleet would sort,
+//! and the resweep reproduces the rebuild's accumulations operation for
+//! operation. What a delta saves is the expensive part of a rebuild: the
+//! per-device piecewise-min decomposition (closed-form crossings, `sqrt`s)
+//! for every survivor, and the global event sort.
+//!
+//! ## Numerical notes
+//!
+//! The swept state is recentered at every segment start and all-constant
+//! segments report the exactly-summed constant (see the sweep below) —
+//! both inherited from the PR 1 oracle. New here: a chain whose quadratic
+//! (or whole) window is fp-negligible relative to its latency floor is
+//! collapsed before emission, so extreme curvatures (e.g. a recovery
+//! survivor with a fully cached dimension) never enter the swept state.
+
+use crate::util::threadpool::{chunk_ranges, default_threads, scoped_map};
+
+/// Device count above which event emission chunks across threads.
+const PAR_EMIT_THRESHOLD: usize = 4096;
+
+/// Maximum linear/constant pieces per family (uplink, compute, caps...).
+pub const MAX_LINS: usize = 6;
+
+/// One monotone piece of a device capacity curve, in shift-stable form.
+#[derive(Clone, Copy, PartialEq, Debug)]
+pub enum Piece {
+    /// `slope * (t - off)`
+    Lin { slope: f64, off: f64 },
+    /// `aq * (t - ld)^2`
+    Quad { aq: f64, ld: f64 },
+    /// a saturated cap
+    Const { c: f64 },
+}
+
+impl Piece {
+    fn value(&self, t: f64) -> f64 {
+        match *self {
+            Piece::Lin { slope, off } => slope * (t - off),
+            Piece::Quad { aq, ld } => {
+                let u = t - ld;
+                aq * u * u
+            }
+            Piece::Const { c } => c,
+        }
+    }
+
+    fn slope_at(&self, t: f64) -> f64 {
+        match *self {
+            Piece::Lin { slope, .. } => slope,
+            Piece::Quad { aq, ld } => 2.0 * aq * (t - ld),
+            Piece::Const { .. } => 0.0,
+        }
+    }
+
+    fn curvature(&self) -> f64 {
+        match *self {
+            Piece::Quad { aq, .. } => aq,
+            _ => 0.0,
+        }
+    }
+
+    fn is_const(&self) -> bool {
+        matches!(self, Piece::Const { .. })
+    }
+
+    fn const_value(&self) -> f64 {
+        match *self {
+            Piece::Const { c } => c,
+            _ => 0.0,
+        }
+    }
+
+    /// Absolute-coordinate `(slope, intercept)` of a non-quadratic piece.
+    fn as_line(&self) -> (f64, f64) {
+        match *self {
+            Piece::Lin { slope, off } => (slope, -slope * off),
+            Piece::Const { c } => (0.0, c),
+            Piece::Quad { .. } => unreachable!("quad pieces are not lines"),
+        }
+    }
+}
+
+/// The quadratic → linear → saturated chain of a downlink-style term:
+/// `aq·(t−ld)²` on `(ld, tq]`, then `lin` on `(tq, tl]`, then `Const(sat)`.
+/// Set `tq == ld` to skip the quadratic phase.
+#[derive(Clone, Copy, Debug)]
+pub struct QuadChain {
+    pub aq: f64,
+    pub ld: f64,
+    pub tq: f64,
+    /// must be [`Piece::Lin`]
+    pub lin: Piece,
+    pub tl: f64,
+    pub sat: f64,
+}
+
+/// One device's capacity curve: the pointwise minimum of `lins` (linear or
+/// constant pieces) and the optional `chain`, with the whole curve pinned
+/// to 0 below the domain floor `t0`. The minimum must eventually be
+/// constant (every consumer has a cap piece), or emission rejects the
+/// family and the caller falls back to its scan route.
+#[derive(Clone, Copy, Debug)]
+pub struct MinFamily {
+    pub t0: f64,
+    lins: [Piece; MAX_LINS],
+    n_lins: usize,
+    pub chain: Option<QuadChain>,
+}
+
+impl MinFamily {
+    pub fn new(t0: f64) -> MinFamily {
+        MinFamily {
+            t0,
+            lins: [Piece::Const { c: 0.0 }; MAX_LINS],
+            n_lins: 0,
+            chain: None,
+        }
+    }
+
+    pub fn push_lin(&mut self, slope: f64, off: f64) {
+        assert!(self.n_lins < MAX_LINS, "family lin overflow");
+        self.lins[self.n_lins] = Piece::Lin { slope, off };
+        self.n_lins += 1;
+    }
+
+    pub fn push_const(&mut self, c: f64) {
+        assert!(self.n_lins < MAX_LINS, "family lin overflow");
+        self.lins[self.n_lins] = Piece::Const { c };
+        self.n_lins += 1;
+    }
+
+    fn lins(&self) -> &[Piece] {
+        &self.lins[..self.n_lins]
+    }
+}
+
+/// What one device contributes to the aggregate capacity curve.
+pub enum DeviceCurve {
+    /// contributes zero at every `t` (e.g. a zero memory cap)
+    Zero,
+    Curve(MinFamily),
+}
+
+/// A piece-transition event: at `t`, the aggregate gains `dv`/`ds`/`da` in
+/// value/slope/curvature, `dc` in const-piece sum and `dnn` in the number
+/// of devices on non-constant pieces. `(slot, seq)` is the canonical
+/// tie-break (see the module docs).
+#[derive(Clone, Copy)]
+struct Event {
+    t: f64,
+    dv: f64,
+    ds: f64,
+    da: f64,
+    dc: f64,
+    dnn: i64,
+    slot: u64,
+    seq: u32,
+}
+
+fn event_cmp(x: &Event, y: &Event) -> std::cmp::Ordering {
+    x.t.total_cmp(&y.t)
+        .then(x.slot.cmp(&y.slot))
+        .then(x.seq.cmp(&y.seq))
+}
+
+/// Emit the piecewise-min transition events of one family into `events`.
+/// Returns `None` when the decomposition fails (non-finite candidate times
+/// or a non-constant tail), in which case the caller must not use the
+/// oracle for this fleet.
+fn emit_family_events(
+    family: &MinFamily,
+    slot: u64,
+    events: &mut Vec<Event>,
+    scratch: &mut Vec<f64>,
+) -> Option<()> {
+    let t0 = family.t0;
+    if !t0.is_finite() {
+        return None;
+    }
+    // Collapse fp-negligible chain phases (see the module docs): a quad (or
+    // whole) window below ~1e-9 relative to the floor contributes values
+    // only on a sub-resolution interval but would inject huge slope and
+    // curvature deltas into the swept state.
+    let mut extra_const: Option<f64> = None;
+    let chain = match family.chain {
+        Some(ch) => {
+            let scale = t0.max(ch.ld).max(f64::MIN_POSITIVE);
+            if !(ch.ld.is_finite() && ch.tq.is_finite() && ch.tl.is_finite()) {
+                return None;
+            }
+            if ch.tl - ch.ld <= 1e-9 * ch.tl.max(scale) {
+                extra_const = Some(ch.sat);
+                None
+            } else if ch.tq - ch.ld <= 1e-9 * ch.tq.max(scale) {
+                Some(QuadChain { tq: ch.ld, ..ch })
+            } else {
+                Some(ch)
+            }
+        }
+        None => None,
+    };
+
+    // Candidate breakpoints: domain edges + pairwise crossings among every
+    // non-quadratic piece (the lins, the chain's linear phase and its
+    // saturated constant) + quad-vs-line crossings + the chain transitions.
+    fn push_cand(scratch: &mut Vec<f64>, t0: f64, t: f64) {
+        if t.is_finite() && t > t0 {
+            scratch.push(t);
+        }
+    }
+    scratch.clear();
+    // `mins` are the pieces competing in the pointwise minimum (the chain
+    // competes through its phase-correct piece, not its parts); `lines`
+    // additionally carries the chain's linear phase and saturated constant
+    // for crossing-candidate generation only — the chain's quad and lin are
+    // tangent in the consumers' geometry, so treating them as independent
+    // min candidates would shadow the wrong phase.
+    let mut mins: [Piece; MAX_LINS + 1] = [Piece::Const { c: 0.0 }; MAX_LINS + 1];
+    let mut nm = 0usize;
+    for &p in family.lins() {
+        mins[nm] = p;
+        nm += 1;
+    }
+    if let Some(c) = extra_const {
+        mins[nm] = Piece::Const { c };
+        nm += 1;
+    }
+    if nm == 0 {
+        return None; // a family needs at least one capped competitor
+    }
+    let mut lines: [Piece; MAX_LINS + 3] = [Piece::Const { c: 0.0 }; MAX_LINS + 3];
+    let mut nl = 0usize;
+    for &p in &mins[..nm] {
+        lines[nl] = p;
+        nl += 1;
+    }
+    if let Some(ch) = &chain {
+        lines[nl] = ch.lin;
+        nl += 1;
+        lines[nl] = Piece::Const { c: ch.sat };
+        nl += 1;
+    }
+    let mins = &mins[..nm];
+    let lines = &lines[..nl];
+    for i in 0..lines.len() {
+        for j in (i + 1)..lines.len() {
+            let (s1, c1) = lines[i].as_line();
+            let (s2, c2) = lines[j].as_line();
+            if s1 != s2 {
+                push_cand(scratch, t0, (c2 - c1) / (s1 - s2));
+            }
+        }
+    }
+    if let Some(ch) = &chain {
+        if ch.tq > ch.ld {
+            // aq·u² = sl·(u + ld) + c with u = t − ld
+            for p in lines.iter() {
+                let (sl, c) = p.as_line();
+                let bq = -sl;
+                let cq = -(sl * ch.ld + c);
+                let disc = bq * bq - 4.0 * ch.aq * cq;
+                if disc >= 0.0 && ch.aq > 0.0 {
+                    let sq = disc.sqrt();
+                    push_cand(scratch, t0, ch.ld + (-bq - sq) / (2.0 * ch.aq));
+                    push_cand(scratch, t0, ch.ld + (-bq + sq) / (2.0 * ch.aq));
+                }
+            }
+            push_cand(scratch, t0, ch.tq);
+        }
+        push_cand(scratch, t0, ch.tl);
+    }
+    scratch.sort_unstable_by(|a, b| a.total_cmp(b));
+    scratch.dedup();
+
+    let chain_piece = |t: f64| -> Piece {
+        let ch = chain.as_ref().unwrap();
+        if t <= ch.tq {
+            Piece::Quad { aq: ch.aq, ld: ch.ld }
+        } else if t <= ch.tl {
+            ch.lin
+        } else {
+            Piece::Const { c: ch.sat }
+        }
+    };
+    let min_piece = |t: f64| -> Piece {
+        let mut best = mins[0];
+        let mut bv = best.value(t);
+        for &p in &mins[1..] {
+            let v = p.value(t);
+            if v < bv {
+                bv = v;
+                best = p;
+            }
+        }
+        if chain.is_some() {
+            let p = chain_piece(t);
+            if p.value(t) < bv {
+                best = p;
+            }
+        }
+        best
+    };
+
+    // Walk segments [start_i, start_{i+1}), choosing the min piece at the
+    // midpoint (no crossing lies inside a segment, so the choice holds on
+    // the whole segment); merge runs of the same piece and emit deltas.
+    // The pre-first-event state is Const(0): curves are 0 below t0.
+    let mut prev = Piece::Const { c: 0.0 };
+    let n_cand = scratch.len();
+    let mut seq: u32 = 0;
+    for i in 0..=n_cand {
+        let start = if i == 0 { t0 } else { scratch[i - 1] };
+        let mid = if i < n_cand {
+            0.5 * (start + scratch[i])
+        } else {
+            start * 2.0 + 1.0
+        };
+        let p = min_piece(mid);
+        if p == prev {
+            continue;
+        }
+        events.push(Event {
+            t: start,
+            dv: p.value(start) - prev.value(start),
+            ds: p.slope_at(start) - prev.slope_at(start),
+            da: p.curvature() - prev.curvature(),
+            dc: p.const_value() - prev.const_value(),
+            dnn: i64::from(!p.is_const()) - i64::from(!prev.is_const()),
+            slot,
+            seq,
+        });
+        seq += 1;
+        prev = p;
+    }
+    // Every family must end on a constant piece; if fp noise in the
+    // candidates broke that, reject the oracle rather than risk an inexact
+    // tail.
+    if !prev.is_const() {
+        return None;
+    }
+    Some(())
+}
+
+/// The swept aggregate: sorted canonical events plus per-segment recentered
+/// quadratic state. See the module docs for build, query, analytic root and
+/// the incremental delta API.
+pub struct SegmentOracle {
+    events: Vec<Event>,
+    /// slot id per current device position (monotone relative order)
+    slots: Vec<u64>,
+    next_slot: u64,
+    ts: Vec<f64>,
+    v: Vec<f64>,
+    s: Vec<f64>,
+    a: Vec<f64>,
+    /// exact sum of const-piece values per segment
+    cs: Vec<f64>,
+    /// number of devices on non-constant pieces per segment
+    nn: Vec<i64>,
+}
+
+impl SegmentOracle {
+    /// Build the oracle over `d` devices, or `None` when any family fails
+    /// the decomposition precondition (the caller then uses its scan
+    /// fallback). Emission chunks across threads for large fleets.
+    pub fn build<F>(d: usize, family_of: F) -> Option<SegmentOracle>
+    where
+        F: Fn(usize) -> Option<DeviceCurve> + Sync,
+    {
+        if d == 0 {
+            return None;
+        }
+        let gen_range = |lo: usize, hi: usize| -> Option<Vec<Event>> {
+            let mut evs: Vec<Event> = Vec::with_capacity((hi - lo) * 6);
+            let mut scratch: Vec<f64> = Vec::with_capacity(32);
+            for k in lo..hi {
+                match family_of(k)? {
+                    DeviceCurve::Zero => {}
+                    DeviceCurve::Curve(f) => {
+                        emit_family_events(&f, k as u64, &mut evs, &mut scratch)?
+                    }
+                }
+            }
+            Some(evs)
+        };
+        let mut events = if d >= PAR_EMIT_THRESHOLD {
+            let threads = default_threads();
+            let ranges = chunk_ranges(d, threads);
+            let parts = scoped_map(&ranges, threads, |&(lo, hi)| gen_range(lo, hi));
+            let mut all = Vec::new();
+            for p in parts {
+                all.extend(p?);
+            }
+            all
+        } else {
+            gen_range(0, d)?
+        };
+        events.sort_unstable_by(event_cmp);
+        let mut oracle = SegmentOracle {
+            events,
+            slots: (0..d as u64).collect(),
+            next_slot: d as u64,
+            ts: Vec::new(),
+            v: Vec::new(),
+            s: Vec::new(),
+            a: Vec::new(),
+            cs: Vec::new(),
+            nn: Vec::new(),
+        };
+        oracle.sweep();
+        Some(oracle)
+    }
+
+    /// Re-accumulate the per-segment state from the (already canonical)
+    /// event list. Linear in the event count; bit-identical to the sweep a
+    /// fresh canonical build would run over the same fleet.
+    fn sweep(&mut self) {
+        let events = std::mem::take(&mut self.events);
+        let n = events.len();
+        self.ts.clear();
+        self.v.clear();
+        self.s.clear();
+        self.a.clear();
+        self.cs.clear();
+        self.nn.clear();
+        self.ts.reserve(n);
+        self.v.reserve(n);
+        self.s.reserve(n);
+        self.a.reserve(n);
+        self.cs.reserve(n);
+        self.nn.reserve(n);
+        let (mut v, mut s, mut a, mut c) = (0.0f64, 0.0f64, 0.0f64, 0.0f64);
+        let mut nn: i64 = 0;
+        let mut last_t = f64::NAN;
+        for e in &events {
+            if !last_t.is_nan() && e.t > last_t {
+                let dt = e.t - last_t;
+                v = v + s * dt + a * dt * dt;
+                s += 2.0 * a * dt;
+            }
+            v += e.dv;
+            s += e.ds;
+            a += e.da;
+            c += e.dc;
+            nn += e.dnn;
+            if !self.ts.is_empty() && *self.ts.last().unwrap() == e.t {
+                let i = self.ts.len() - 1;
+                self.v[i] = v;
+                self.s[i] = s;
+                self.a[i] = a;
+                self.cs[i] = c;
+                self.nn[i] = nn;
+            } else {
+                self.ts.push(e.t);
+                self.v.push(v);
+                self.s.push(s);
+                self.a.push(a);
+                self.cs.push(c);
+                self.nn.push(nn);
+            }
+            last_t = e.t;
+        }
+        self.events = events;
+    }
+
+    /// Aggregate capacity at `t` in O(log D).
+    pub fn total(&self, t: f64) -> f64 {
+        let idx = self.ts.partition_point(|&x| x <= t);
+        if idx == 0 {
+            return 0.0;
+        }
+        let i = idx - 1;
+        if self.nn[i] == 0 {
+            // all active devices are capped: exact flat plateau
+            return self.cs[i];
+        }
+        let dt = t - self.ts[i];
+        self.v[i] + self.s[i] * dt + self.a[i] * dt * dt
+    }
+
+    fn seg_start_val(&self, i: usize) -> f64 {
+        if self.nn[i] == 0 {
+            self.cs[i]
+        } else {
+            self.v[i]
+        }
+    }
+
+    /// The terminal plateau — the largest coverable target.
+    pub fn plateau(&self) -> f64 {
+        if let (Some(&nn), Some(&cs)) = (self.nn.last(), self.cs.last()) {
+            if nn == 0 {
+                return cs;
+            }
+        }
+        // empty fleet contributes nothing; emission guarantees every family
+        // ends on a constant piece, so nn.last() is 0 whenever it exists
+        0.0
+    }
+
+    /// Number of breakpoint segments (diagnostics).
+    pub fn segments(&self) -> usize {
+        self.ts.len()
+    }
+
+    /// Current device count.
+    pub fn devices(&self) -> usize {
+        self.slots.len()
+    }
+
+    /// The smallest `t` with `total(t) >= target`, solved **analytically**:
+    /// binary-search the crossing segment by start value, closed-form root
+    /// of its stored quadratic, one guarded Newton polish. `None` when the
+    /// target exceeds the plateau (no feasible `t` exists).
+    pub fn solve_target(&self, target: f64) -> Option<f64> {
+        if target <= 0.0 {
+            return Some(0.0);
+        }
+        let nseg = self.ts.len();
+        if nseg == 0 || target > self.plateau() {
+            return None;
+        }
+        // First segment whose start value reaches the target; the crossing
+        // lies inside the previous one (or exactly at a jump boundary).
+        let (mut lo, mut hi) = (0usize, nseg);
+        while lo < hi {
+            let mid = (lo + hi) / 2;
+            if self.seg_start_val(mid) < target {
+                lo = mid + 1;
+            } else {
+                hi = mid;
+            }
+        }
+        let idx = lo;
+        if idx == 0 {
+            return Some(self.ts[0]);
+        }
+        let j = idx - 1;
+        if self.nn[j] == 0 {
+            // flat below the target: the crossing is the value jump at the
+            // next event time (fp-discontinuity of the exact const sum)
+            return if idx < nseg { Some(self.ts[idx]) } else { None };
+        }
+        let seg_end = if idx < nseg { self.ts[idx] } else { f64::INFINITY };
+        let (vj, sj, aj) = (self.v[j], self.s[j], self.a[j]);
+        let need = target - vj;
+        let mut dt = if aj > 0.0 {
+            let disc = sj * sj + 4.0 * aj * need;
+            if disc >= 0.0 {
+                (-sj + disc.sqrt()) / (2.0 * aj)
+            } else {
+                0.0
+            }
+        } else if sj > 0.0 {
+            need / sj
+        } else {
+            0.0
+        };
+        if !(dt >= 0.0) {
+            dt = 0.0; // NaN/negative guard: clamp to the segment start
+        }
+        let mut t = self.ts[j] + dt;
+        if t > seg_end {
+            t = seg_end;
+        }
+        // One Newton polish on the segment polynomial (guarded to stay in
+        // the segment; rejects automatically when the closed form already
+        // sits on the boundary).
+        let dtp = t - self.ts[j];
+        let val = vj + sj * dtp + aj * dtp * dtp;
+        let slope = sj + 2.0 * aj * dtp;
+        if slope > 0.0 {
+            let t2 = t - (val - target) / slope;
+            if (self.ts[j]..=seg_end).contains(&t2) {
+                t = t2;
+            }
+        }
+        Some(t)
+    }
+
+    /// Retire the devices at the given current positions (ascending):
+    /// drop their events from the canonical list and resweep. Survivor
+    /// slots keep their relative order, so the result is bit-identical to
+    /// a canonical rebuild over the survivors.
+    pub fn retire_many(&mut self, positions: &[usize]) {
+        // infallible: unwrap is safe (no admissions to fail)
+        self.splice(positions, 0, |_| Some(DeviceCurve::Zero)).unwrap();
+    }
+
+    /// Admit `count` devices at the tail of the fleet (positions
+    /// `devices()..devices()+count`). On `None` (a family failed the
+    /// precondition) the oracle is left untouched.
+    pub fn admit_tail<F>(&mut self, count: usize, family_of: F) -> Option<()>
+    where
+        F: FnMut(usize) -> Option<DeviceCurve>,
+    {
+        self.splice(&[], count, family_of)
+    }
+
+    /// Apply one membership delta — retire the (ascending) current
+    /// `positions` AND admit `count` fresh tail devices — with a single
+    /// merge and a single resweep. Fresh events are emitted *before* any
+    /// mutation, so on `None` (an admitted family failed the
+    /// decomposition precondition) the oracle is left fully untouched.
+    /// Admitted slots exceed every current slot and survivors keep their
+    /// relative order, so the spliced list stays canonical and the
+    /// resweep is bit-identical to a rebuild over the new fleet.
+    pub fn splice<F>(&mut self, positions: &[usize], count: usize, mut family_of: F) -> Option<()>
+    where
+        F: FnMut(usize) -> Option<DeviceCurve>,
+    {
+        if positions.is_empty() && count == 0 {
+            return Some(());
+        }
+        // Emit the admitted devices' events first (the only fallible step).
+        let mut fresh: Vec<Event> = Vec::with_capacity(count * 6);
+        let mut scratch: Vec<f64> = Vec::with_capacity(32);
+        let mut new_slots: Vec<u64> = Vec::with_capacity(count);
+        for i in 0..count {
+            let slot = self.next_slot + i as u64;
+            new_slots.push(slot);
+            match family_of(i)? {
+                DeviceCurve::Zero => {}
+                DeviceCurve::Curve(f) => emit_family_events(&f, slot, &mut fresh, &mut scratch)?,
+            }
+        }
+        fresh.sort_unstable_by(event_cmp);
+        // Drop the retired devices' events and slots.
+        if !positions.is_empty() {
+            let mut removed: Vec<u64> = positions.iter().map(|&p| self.slots[p]).collect();
+            removed.sort_unstable();
+            self.events.retain(|e| removed.binary_search(&e.slot).is_err());
+            let mut keep: Vec<u64> = Vec::with_capacity(self.slots.len() - removed.len());
+            for (p, &slot) in self.slots.iter().enumerate() {
+                if positions.binary_search(&p).is_err() {
+                    keep.push(slot);
+                }
+            }
+            self.slots = keep;
+        }
+        // Ordered merge: on equal keys the old event wins (its slot is
+        // strictly smaller), matching the canonical global sort.
+        if !fresh.is_empty() {
+            let mut merged: Vec<Event> = Vec::with_capacity(self.events.len() + fresh.len());
+            let (mut i, mut j) = (0usize, 0usize);
+            while i < self.events.len() && j < fresh.len() {
+                if event_cmp(&self.events[i], &fresh[j]) != std::cmp::Ordering::Greater {
+                    merged.push(self.events[i]);
+                    i += 1;
+                } else {
+                    merged.push(fresh[j]);
+                    j += 1;
+                }
+            }
+            merged.extend_from_slice(&self.events[i..]);
+            merged.extend_from_slice(&fresh[j..]);
+            self.events = merged;
+        }
+        self.slots.extend_from_slice(&new_slots);
+        self.next_slot += count as u64;
+        self.sweep();
+        Some(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A toy fleet: device k ramps at slope `k+1` from `t = 0.1·k` and caps
+    /// at `10·(k+1)`.
+    fn toy_family(k: usize) -> Option<DeviceCurve> {
+        let slope = (k + 1) as f64;
+        let off = 0.1 * k as f64;
+        let mut f = MinFamily::new(off);
+        f.push_lin(slope, off);
+        f.push_const(10.0 * slope);
+        Some(DeviceCurve::Curve(f))
+    }
+
+    fn toy_scan(d: usize, t: f64) -> f64 {
+        (0..d)
+            .map(|k| {
+                let slope = (k + 1) as f64;
+                let off = 0.1 * k as f64;
+                (slope * (t - off)).max(0.0).min(10.0 * slope)
+            })
+            .sum()
+    }
+
+    #[test]
+    fn total_matches_scan_on_linear_cap_families() {
+        let d = 9;
+        let o = SegmentOracle::build(d, toy_family).unwrap();
+        for i in 0..200 {
+            let t = 0.07 * i as f64;
+            let scan = toy_scan(d, t);
+            let fast = o.total(t);
+            assert!(
+                (scan - fast).abs() <= 1e-9 * scan.abs().max(1e-9),
+                "t={t}: scan={scan} fast={fast}"
+            );
+        }
+        assert_eq!(o.plateau(), (1..=d).map(|k| 10.0 * k as f64).sum::<f64>());
+        assert!(o.segments() > 0);
+        assert_eq!(o.devices(), d);
+    }
+
+    #[test]
+    fn solve_target_inverts_total() {
+        let o = SegmentOracle::build(7, toy_family).unwrap();
+        for frac in [1e-6, 0.01, 0.3, 0.7, 0.999] {
+            let target = o.plateau() * frac;
+            let t = o.solve_target(target).unwrap();
+            let v = o.total(t);
+            assert!(
+                (v - target).abs() <= 1e-9 * target,
+                "target {target}: total({t}) = {v}"
+            );
+            // smallest such t: a hair earlier must be short of the target
+            let eps = (t * 1e-9).max(1e-15);
+            assert!(o.total(t - eps) < target + 1e-9 * target);
+        }
+        assert_eq!(o.solve_target(0.0), Some(0.0));
+        assert!(o.solve_target(o.plateau() * 1.001).is_none());
+    }
+
+    #[test]
+    fn solve_target_lands_on_plateau_jumps() {
+        // One device, pure constant from t=1: curve jumps 0 -> 5 at t=1.
+        let fam = |_k: usize| -> Option<DeviceCurve> {
+            let mut f = MinFamily::new(1.0);
+            f.push_const(5.0);
+            Some(DeviceCurve::Curve(f))
+        };
+        let o = SegmentOracle::build(1, fam).unwrap();
+        assert_eq!(o.total(0.5), 0.0);
+        assert_eq!(o.total(1.5), 5.0);
+        assert_eq!(o.solve_target(5.0), Some(1.0));
+        assert!(o.solve_target(5.1).is_none());
+    }
+
+    #[test]
+    fn quad_chain_families_sweep_exactly() {
+        // quad aq=1 from 0, linear slope 4 at tq=2 (value 4 continuous),
+        // saturated at 12 from tl=4.
+        let fam = |_k: usize| -> Option<DeviceCurve> {
+            let mut f = MinFamily::new(0.0);
+            f.push_const(100.0);
+            f.chain = Some(QuadChain {
+                aq: 1.0,
+                ld: 0.0,
+                tq: 2.0,
+                lin: Piece::Lin { slope: 4.0, off: 1.0 },
+                tl: 4.0,
+                sat: 12.0,
+            });
+            Some(DeviceCurve::Curve(f))
+        };
+        let o = SegmentOracle::build(3, fam).unwrap();
+        let one = |t: f64| -> f64 {
+            if t <= 0.0 {
+                0.0
+            } else if t <= 2.0 {
+                t * t
+            } else if t <= 4.0 {
+                4.0 * (t - 1.0)
+            } else {
+                12.0
+            }
+        };
+        for i in 0..100 {
+            let t = 0.06 * i as f64;
+            let scan = 3.0 * one(t);
+            assert!((o.total(t) - scan).abs() <= 1e-12 * scan.max(1.0), "t={t}");
+        }
+        let t = o.solve_target(3.0 * 3.0).unwrap(); // in the quad phase
+        assert!((t - 3.0f64.sqrt()).abs() < 1e-12);
+        let t = o.solve_target(3.0 * 8.0).unwrap(); // in the linear phase
+        assert!((t - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn retire_and_admit_are_bitwise_rebuilds() {
+        let d = 12;
+        let mut o = SegmentOracle::build(d, toy_family).unwrap();
+        // retire positions 2 and 7 (of the original indexing)
+        o.retire_many(&[2, 7]);
+        let survivors: Vec<usize> = (0..d).filter(|&k| k != 2 && k != 7).collect();
+        let rebuilt = SegmentOracle::build(survivors.len(), |i| toy_family(survivors[i])).unwrap();
+        assert_eq!(o.segments(), rebuilt.segments());
+        for i in 0..o.segments() {
+            assert_eq!(o.ts[i].to_bits(), rebuilt.ts[i].to_bits());
+            assert_eq!(o.v[i].to_bits(), rebuilt.v[i].to_bits());
+            assert_eq!(o.s[i].to_bits(), rebuilt.s[i].to_bits());
+            assert_eq!(o.a[i].to_bits(), rebuilt.a[i].to_bits());
+            assert_eq!(o.cs[i].to_bits(), rebuilt.cs[i].to_bits());
+            assert_eq!(o.nn[i], rebuilt.nn[i]);
+        }
+        // admit two fresh devices at the tail
+        let extra = [20usize, 21];
+        o.admit_tail(2, |i| toy_family(extra[i])).unwrap();
+        let full: Vec<usize> = survivors.iter().copied().chain(extra).collect();
+        let rebuilt = SegmentOracle::build(full.len(), |i| toy_family(full[i])).unwrap();
+        assert_eq!(o.devices(), rebuilt.devices());
+        for t in [0.0, 0.3, 1.7, 5.0, 100.0] {
+            assert_eq!(o.total(t).to_bits(), rebuilt.total(t).to_bits());
+        }
+        let target = 0.5 * o.plateau();
+        assert_eq!(
+            o.solve_target(target).unwrap().to_bits(),
+            rebuilt.solve_target(target).unwrap().to_bits()
+        );
+    }
+
+    #[test]
+    fn failed_admit_leaves_oracle_untouched() {
+        let mut o = SegmentOracle::build(4, toy_family).unwrap();
+        let before = o.total(1.0);
+        let nd = o.devices();
+        // a family with a non-finite floor must be rejected
+        let bad = |_i: usize| -> Option<DeviceCurve> { None };
+        assert!(o.admit_tail(1, bad).is_none());
+        assert_eq!(o.devices(), nd);
+        assert_eq!(o.total(1.0).to_bits(), before.to_bits());
+    }
+
+    #[test]
+    fn negligible_chain_windows_collapse() {
+        // A chain whose whole window is ~1e-12 of its floor collapses to
+        // its saturated constant instead of injecting ~1e24 curvature.
+        let fam = |_k: usize| -> Option<DeviceCurve> {
+            let mut f = MinFamily::new(0.05);
+            f.push_lin(1000.0, 0.01);
+            f.push_const(500.0);
+            f.chain = Some(QuadChain {
+                aq: 1e24,
+                ld: 0.05,
+                tq: 0.05 + 1e-14,
+                lin: Piece::Lin { slope: 1e12, off: 0.05 },
+                tl: 0.05 + 2e-14,
+                sat: 100.0,
+            });
+            Some(DeviceCurve::Curve(f))
+        };
+        let o = SegmentOracle::build(5, fam).unwrap();
+        // far from the window: min(lin ramp, 500, sat 100) per device
+        for t in [0.06, 0.1, 0.2, 1.0] {
+            let one = (1000.0 * (t - 0.01)).min(500.0).min(100.0);
+            let scan = 5.0 * one;
+            assert!(
+                (o.total(t) - scan).abs() <= 1e-9 * scan,
+                "t={t}: {} vs {scan}",
+                o.total(t)
+            );
+        }
+    }
+}

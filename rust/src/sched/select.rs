@@ -12,11 +12,13 @@
 //!   ([`CostModel::max_area_in`] at a reference horizon, so compute, both
 //!   link directions, latency floors and memory all enter);
 //! * prefix sets of that order are probed by *solving* them — each probe is
-//!   a [`solve_dag_cached`] call whose feasibility oracle is the O(log D)
-//!   breakpoint/prefix-sum [`crate::sched::fastpath::ShapeOracle`] and
-//!   whose bisection bracket is warm-started from the previous probe's
-//!   per-shape `T*` hints, so the admission loop never re-runs the cold
-//!   bracket protocol (asserted via [`crate::sched::fastpath::CacheStats`]);
+//!   a [`solve_dag_cached`] call whose `T*` is an analytic segment root of
+//!   the breakpoint/prefix-sum [`crate::sched::fastpath::ShapeOracle`] (no
+//!   bisection anywhere in the loop), and consecutive probes differ only
+//!   by a prefix extension / shrink of the capability order, so the cached
+//!   oracles update **incrementally** (retire/admit event splicing) instead
+//!   of rebuilding — both asserted via
+//!   [`crate::sched::fastpath::CacheStats`];
 //! * the probed `(n, T*, costs)` points form the reported
 //!   **cost/throughput frontier**; a geometric sweep plus local refinement
 //!   finds the objective minimum, and a final eviction pass drops admitted
@@ -153,9 +155,9 @@ fn objective_point(k: usize, batch_s: f64, cfg: &SelectConfig) -> FrontierPoint 
 }
 
 /// Smallest prefix of `order` whose aggregate memory-capped areas cover
-/// every distinct DAG shape (probing below this would make the bisection
-/// bracket search diverge), with headroom against sitting exactly on the
-/// cap boundary where `T*` explodes.
+/// every distinct DAG shape (below this no feasible makespan exists and
+/// the solve panics), with headroom against sitting exactly on the cap
+/// boundary where `T*` explodes.
 fn min_feasible_prefix(
     planning: &[Device],
     order: &[usize],
@@ -494,6 +496,35 @@ mod tests {
             (out.probes - 1) * stats.cold_solves,
             "every solve after the first per shape must be warm: probes={} {stats:?}",
             out.probes
+        );
+    }
+
+    #[test]
+    fn probes_update_oracles_incrementally() {
+        // Consecutive admission probes are prefix extensions/shrinks of one
+        // capability order, so after the first (cold-built) probe every
+        // non-memo probe must splice the cached oracles — never rebuild.
+        let (devices, dag) = setting(96);
+        let cm = CostModel::default();
+        let mut cache = SolverCache::new();
+        let out = select_devices(
+            &devices,
+            &dag,
+            &cm,
+            &PsParams::default(),
+            &SelectConfig::default(),
+            &mut cache,
+        );
+        let stats = cache.stats();
+        assert!(out.probes > 1);
+        assert!(
+            stats.incremental_updates > 0,
+            "prefix probes must be incremental: {stats:?}"
+        );
+        assert_eq!(stats.full_rebuilds, 0, "{stats:?}");
+        assert_eq!(
+            stats.incremental_updates, stats.warm_solves,
+            "every hint-warm probe re-solves a churned prefix: {stats:?}"
         );
     }
 }

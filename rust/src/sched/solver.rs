@@ -25,17 +25,27 @@
 //! ## Solver fast path
 //!
 //! Since the fleet-scale rework, [`solve_gemm`] and [`solve_dag`] are thin
-//! wrappers over [`crate::sched::fastpath`]: feasibility probes run against
-//! a breakpoint/prefix-sum [`crate::sched::fastpath::ShapeOracle`] in
-//! O(log D) instead of an O(D) device scan, distinct shapes solve in
-//! parallel, and [`solve_dag_cached`] adds warm-start brackets plus a
-//! (fleet fingerprint, shape) memo for churn/straggler sweeps. The
-//! historical scan-based solver is preserved verbatim as
-//! [`solve_gemm_reference`] / [`solve_dag_reference`] — it is the oracle
-//! the property tests compare against and the baseline
-//! `benches/table7_solver.rs` measures speedups from. The fast path falls
-//! back to a chunked SoA scan whenever the exact-oracle precondition does
-//! not hold (see the `fastpath` module docs).
+//! wrappers over [`crate::sched::fastpath`], which sits on the analytic
+//! allocation core [`crate::sched::oracle`]: the continuous optimum `T*`
+//! comes from a closed-form segment root of the breakpoint/prefix-sum
+//! [`crate::sched::fastpath::ShapeOracle`] — zero bisection iterations on
+//! the hot path (`SolverStats::analytic_roots` counts the closed-form
+//! solves; `bisection_iters` stays 0 unless the scan fallback engaged).
+//! Distinct shapes solve in parallel, and [`solve_dag_cached`] adds the
+//! (fleet fingerprint, shape) memo plus incremental oracle retire/admit
+//! under membership churn. The historical bisection solvers are preserved
+//! verbatim as [`solve_gemm_reference`] / [`solve_dag_reference`] /
+//! [`solve_region_reference_view`] — the parity baselines the property
+//! tests compare against and `benches/table7_solver.rs` measures speedups
+//! from. The fast path falls back to a chunked SoA scan + bisection
+//! whenever the exact-oracle precondition does not hold (see the
+//! `fastpath` module docs).
+//!
+//! The §4.2 recovery region solver shares the same core: its
+//! cache-discounted max-area curve is piecewise quadratic too (the
+//! discount weights scale the downlink chain; a fully cached dimension
+//! drops its clamp phase exactly), so
+//! [`solve_region_with_cache_view`] also takes the analytic route.
 
 use std::collections::HashMap;
 use std::time::Instant;
@@ -46,6 +56,7 @@ use crate::model::dag::GemmDag;
 use crate::sched::assignment::{GemmAssignment, Rect, Schedule};
 use crate::sched::cost::{CostModel, GemmShape, PsParams};
 use crate::sched::fastpath::{self, SolverCache, PAR_SCAN_THRESHOLD};
+use crate::sched::oracle::{DeviceCurve, MinFamily, Piece, QuadChain, SegmentOracle};
 use crate::sched::tiling;
 use crate::util::threadpool::{chunked_sum, default_threads};
 
@@ -72,7 +83,11 @@ impl Default for SolverOptions {
 pub struct SolverStats {
     pub devices_considered: usize,
     pub decision_vars: usize,
+    /// bisection iterations spent (0 on the analytic hot path; > 0 only
+    /// when the scan fallback engaged or a reference solver ran)
     pub bisection_iters: usize,
+    /// closed-form segment-root solves (the analytic hot path)
+    pub analytic_roots: usize,
     pub solve_time_s: f64,
     /// continuous-relaxation optimum
     pub continuous_makespan: f64,
@@ -181,6 +196,7 @@ pub fn solve_gemm_reference(
         devices_considered: devices.len(),
         decision_vars: 2 * devices.len(),
         bisection_iters: iters,
+        analytic_roots: 0,
         solve_time_s: t0.elapsed().as_secs_f64(),
         continuous_makespan: t_star,
         integer_makespan: assignment.makespan,
@@ -204,11 +220,112 @@ pub fn solve_region_with_cache(
     solve_region_with_cache_view(&view, rows, cols, n, discounts, cm, opts, None)
 }
 
-/// [`solve_region_with_cache`] over an SoA [`FleetView`], with an optional
-/// warm-start `hint` (a prior region `T*`) seeding the bisection bracket.
-/// The cache-discounted oracle does not satisfy the exact breakpoint
-/// decomposition, so feasibility uses the flat-array scan (chunk-parallel
-/// above the fast-path threshold).
+/// One survivor's cache-discounted max-area curve as a [`MinFamily`]: the
+/// uplink/compute ramps, the `Const(area)` cap, and the weighted downlink
+/// chain — quadratic `g²/(4·wr·wc)·(t−L^d)²` until the cheaper dimension
+/// clamps, then linear, then saturated at the region area. A weight at the
+/// scan's floor means that dimension is fully cached, so its clamp phase
+/// is dropped exactly (the scan differs only inside a sub-resolution
+/// window above `L^d`). `None` routes the solve to the reference scan.
+#[allow(clippy::too_many_arguments)]
+fn region_family(
+    flops: f64,
+    ul_bw: f64,
+    ul_lat: f64,
+    dl_bw: f64,
+    dl_lat: f64,
+    wr: f64,
+    wc: f64,
+    rows: f64,
+    cols: f64,
+    nb: f64,
+    b: f64,
+    n: f64,
+) -> Option<DeviceCurve> {
+    const FLOOR: f64 = 1e-9; // the scan's weight floor
+    let finite = flops.is_finite()
+        && ul_bw.is_finite()
+        && dl_bw.is_finite()
+        && ul_lat.is_finite()
+        && dl_lat.is_finite();
+    if !finite
+        || !(flops > 0.0 && ul_bw > 0.0 && dl_bw > 0.0)
+        || !(ul_lat >= 0.0 && dl_lat >= 0.0)
+        || !(rows > 0.0 && cols > 0.0 && n > 0.0 && b > 0.0)
+    {
+        return None;
+    }
+    let area = rows * cols;
+    let g = dl_bw / nb;
+    let t0 = ul_lat.max(dl_lat);
+    let mut fam = MinFamily::new(t0);
+    fam.push_lin(ul_bw / b, ul_lat);
+    fam.push_lin(flops / (2.0 * n), 0.0);
+    fam.push_const(area);
+    let r_full = wr <= FLOOR;
+    let c_full = wc <= FLOOR;
+    if r_full && c_full {
+        // both dimensions fully cached: the downlink term is the saturated
+        // area from L^d on, already covered by the Const(area) cap
+        return Some(DeviceCurve::Curve(fam));
+    }
+    let chain = if r_full {
+        let tl = dl_lat + 2.0 * wc * cols / g;
+        QuadChain {
+            aq: 0.0,
+            ld: dl_lat,
+            tq: dl_lat, // no quad phase: alpha = rows from the start
+            lin: Piece::Lin { slope: rows * g / (2.0 * wc), off: dl_lat },
+            tl,
+            sat: area,
+        }
+    } else if c_full {
+        let tl = dl_lat + 2.0 * wr * rows / g;
+        QuadChain {
+            aq: 0.0,
+            ld: dl_lat,
+            tq: dl_lat,
+            lin: Piece::Lin { slope: cols * g / (2.0 * wr), off: dl_lat },
+            tl,
+            sat: area,
+        }
+    } else {
+        let t_a = dl_lat + 2.0 * wr * rows / g; // alpha clamps at `rows`
+        let t_b = dl_lat + 2.0 * wc * cols / g; // beta clamps at `cols`
+        let aq = g * g / (4.0 * wr * wc);
+        if t_a <= t_b {
+            QuadChain {
+                aq,
+                ld: dl_lat,
+                tq: t_a,
+                lin: Piece::Lin { slope: rows * g / (2.0 * wc), off: dl_lat },
+                tl: t_b,
+                sat: area,
+            }
+        } else {
+            QuadChain {
+                aq,
+                ld: dl_lat,
+                tq: t_b,
+                lin: Piece::Lin { slope: cols * g / (2.0 * wr), off: dl_lat },
+                tl: t_a,
+                sat: area,
+            }
+        }
+    };
+    if !(chain.tq.is_finite() && chain.tl.is_finite()) {
+        return None;
+    }
+    fam.chain = Some(chain);
+    Some(DeviceCurve::Curve(fam))
+}
+
+/// [`solve_region_with_cache`] over an SoA [`FleetView`]: the §4.2
+/// recovery hot path. `T*` is an analytic segment root of the
+/// cache-discounted breakpoint oracle (zero bisection iterations,
+/// `analytic_roots` counted); the reference scan + bisection engages only
+/// when a device fails the decomposition precondition. `hint` seeds the
+/// fallback's bisection bracket (the analytic route is bracket-free).
 #[allow(clippy::too_many_arguments)]
 pub fn solve_region_with_cache_view(
     view: &FleetView,
@@ -219,6 +336,38 @@ pub fn solve_region_with_cache_view(
     cm: &CostModel,
     opts: &SolverOptions,
     hint: Option<f64>,
+) -> (Vec<Rect>, SolverStats) {
+    solve_region_impl(view, rows, cols, n, discounts, cm, opts, hint, false)
+}
+
+/// The pre-analytic region solver (scan feasibility + bisection), kept
+/// verbatim as the parity baseline for the property tests — the region
+/// twin of [`solve_gemm_reference`].
+#[allow(clippy::too_many_arguments)]
+pub fn solve_region_reference_view(
+    view: &FleetView,
+    rows: usize,
+    cols: usize,
+    n: usize,
+    discounts: &[(f64, f64)],
+    cm: &CostModel,
+    opts: &SolverOptions,
+    hint: Option<f64>,
+) -> (Vec<Rect>, SolverStats) {
+    solve_region_impl(view, rows, cols, n, discounts, cm, opts, hint, true)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn solve_region_impl(
+    view: &FleetView,
+    rows: usize,
+    cols: usize,
+    n: usize,
+    discounts: &[(f64, f64)],
+    cm: &CostModel,
+    opts: &SolverOptions,
+    hint: Option<f64>,
+    force_reference: bool,
 ) -> (Vec<Rect>, SolverStats) {
     let t0 = Instant::now();
     let area = rows as f64 * cols as f64;
@@ -252,42 +401,73 @@ pub fn solve_region_with_cache_view(
         a_comp.min(a_ul).min(a_dl).min(area).max(0.0)
     };
 
-    let threads = default_threads();
-    let feasible = |t: f64| -> bool {
-        if d >= PAR_SCAN_THRESHOLD {
-            chunked_sum(d, threads, |lo, hi| {
-                (lo..hi).map(|k| max_area(k, t)).sum()
-            }) >= area
-        } else {
-            let mut s = 0.0;
-            for k in 0..d {
-                s += max_area(k, t);
-                if s >= area {
-                    return true;
-                }
-            }
-            false
-        }
+    // The analytic route: exact breakpoint oracle over the discounted
+    // curves, `T*` as a closed-form segment root.
+    let oracle = if force_reference {
+        None
+    } else {
+        SegmentOracle::build(d, |k| {
+            region_family(
+                cm.flops_of_view(view, k),
+                view.ul_bw[k],
+                view.ul_lat[k],
+                view.dl_bw[k],
+                view.dl_lat[k],
+                wr[k],
+                wc[k],
+                rows as f64,
+                cols as f64,
+                nb,
+                cm.elem_bytes,
+                n as f64,
+            )
+        })
+        .and_then(|o| o.solve_target(area).map(|t| (o, t)))
     };
 
-    // Bracket (warm-started when a hint from a neighboring region solve is
-    // available; always re-verified by probes).
-    let (mut lo, mut hi) =
-        fastpath::bisection_bracket(&feasible, hint, "recovery region infeasible");
-    let mut iters = 0;
-    for _ in 0..opts.iters {
-        iters += 1;
-        let mid = 0.5 * (lo + hi);
-        if feasible(mid) {
-            hi = mid;
-        } else {
-            lo = mid;
+    let (t_star, iters, roots) = match &oracle {
+        Some((o, t)) => {
+            #[cfg(debug_assertions)]
+            {
+                let feasible = |x: f64| o.total(x) >= area;
+                let (lo, hi) =
+                    fastpath::bisection_bracket(&feasible, None, "recovery region infeasible");
+                let (t_bi, _) = fastpath::bisect(&feasible, lo, hi, opts);
+                let tol = (10.0 * opts.tol).max(1e-6);
+                debug_assert!(
+                    (t - t_bi).abs() <= tol * t_bi.max(1e-12),
+                    "region analytic root {t} diverged from bisection {t_bi}"
+                );
+            }
+            let _ = o;
+            (*t, 0usize, 1usize)
         }
-        if hi - lo <= opts.tol * hi {
-            break;
+        None => {
+            let threads = default_threads();
+            let feasible = |t: f64| -> bool {
+                if d >= PAR_SCAN_THRESHOLD {
+                    chunked_sum(d, threads, |lo, hi| {
+                        (lo..hi).map(|k| max_area(k, t)).sum()
+                    }) >= area
+                } else {
+                    let mut s = 0.0;
+                    for k in 0..d {
+                        s += max_area(k, t);
+                        if s >= area {
+                            return true;
+                        }
+                    }
+                    false
+                }
+            };
+            // Bracket (warm-started when a hint from a neighboring region
+            // solve is available; always re-verified by probes).
+            let (lo, hi) =
+                fastpath::bisection_bracket(&feasible, hint, "recovery region infeasible");
+            let (t, iters) = fastpath::bisect(&feasible, lo, hi, opts);
+            (t, iters, 0usize)
         }
-    }
-    let t_star = hi;
+    };
     let mut areas: Vec<f64> = (0..d).map(|k| max_area(k, t_star)).collect();
     let total: f64 = areas.iter().sum();
     if total > 0.0 {
@@ -324,6 +504,7 @@ pub fn solve_region_with_cache_view(
         devices_considered: d,
         decision_vars: 2 * d,
         bisection_iters: iters,
+        analytic_roots: roots,
         solve_time_s: t0.elapsed().as_secs_f64(),
         continuous_makespan: t_star,
         integer_makespan: makespan,
@@ -578,6 +759,54 @@ mod tests {
         );
         assert_eq!(s1.gemm_time, s2.gemm_time);
         assert!(st2.solve_time_s >= 0.0);
+    }
+
+    #[test]
+    fn region_analytic_root_matches_reference_bisection() {
+        use crate::cluster::fleet::FleetView;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(0x4E610);
+        for case in 0..40u64 {
+            let d = [1usize, 4, 16, 48][(case % 4) as usize];
+            let fleet = Fleet::sample(
+                &FleetConfig::default()
+                    .with_devices(d)
+                    .with_seed(1000 + case),
+            );
+            let view = FleetView::build(&fleet.devices);
+            let rows = 1 + rng.below(4000) as usize;
+            let cols = 1 + rng.below(4000) as usize;
+            let n = 1usize << (5 + rng.below(8));
+            // rational discounts, as recovery computes them (row_hit/rows)
+            let discounts: Vec<(f64, f64)> = (0..d)
+                .map(|_| {
+                    let rh = rng.below(rows as u64 + 1) as f64;
+                    let ch = rng.below(cols as u64 + 1) as f64;
+                    (rh / rows as f64, ch / cols as f64)
+                })
+                .collect();
+            let opts = SolverOptions::default();
+            let (fa, fs) =
+                solve_region_with_cache_view(&view, rows, cols, n, &discounts, &cm(), &opts, None);
+            let (ra, rs) =
+                solve_region_reference_view(&view, rows, cols, n, &discounts, &cm(), &opts, None);
+            let rel = (fs.continuous_makespan - rs.continuous_makespan).abs()
+                / rs.continuous_makespan.max(1e-12);
+            assert!(
+                rel <= 1e-6,
+                "case {case} (d={d} {rows}x{cols} n={n}): analytic {} vs bisection {}",
+                fs.continuous_makespan,
+                rs.continuous_makespan
+            );
+            // the recovery hot path must not bisect
+            assert_eq!(fs.bisection_iters, 0, "case {case}");
+            assert_eq!(fs.analytic_roots, 1, "case {case}");
+            assert!(rs.bisection_iters > 0);
+            let covered: usize = fa.iter().map(|r| r.area()).sum();
+            let ref_covered: usize = ra.iter().map(|r| r.area()).sum();
+            assert_eq!(covered, rows * cols);
+            assert_eq!(covered, ref_covered);
+        }
     }
 
     #[test]

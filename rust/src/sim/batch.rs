@@ -11,6 +11,7 @@ use crate::cluster::device::Device;
 use crate::cluster::fleet::FleetView;
 use crate::cluster::network::LatencyModel;
 use crate::sched::fastpath::PAR_SCAN_THRESHOLD;
+use crate::sched::oracle::{DeviceCurve, MinFamily, SegmentOracle};
 use crate::util::threadpool::{chunked_sum, default_threads};
 use crate::model::dag::GemmDag;
 use crate::sched::assignment::Schedule;
@@ -87,6 +88,13 @@ pub struct BatchResult {
     pub level_times: Vec<f64>,
     /// time the PS spent as the binding constraint (envelope check)
     pub ps_bound_time: f64,
+    /// closed-form stage-makespan roots taken by the steady-state
+    /// water-filling (0 in cold-start accounting, which has no stages)
+    pub waterfill_analytic_roots: usize,
+    /// bisection iterations the water-filling fell back to (0 on the
+    /// oracle hot path; > 0 only when a stage failed the decomposition
+    /// precondition)
+    pub waterfill_bisection_iters: usize,
 }
 
 /// Simulate one batch of a solved schedule.
@@ -107,7 +115,9 @@ pub fn simulate_batch(
 /// and phase the network carries the boundary intermediate once each way,
 /// plus the gradient upload in backward; compute is the layer's full GEMM
 /// FLOPs. Work is split across devices by a per-layer heterogeneity-aware
-/// water-filling (same bisection idea as the §4.1 solver, over fractions).
+/// water-filling (the same structure as the §4.1 solver, over fractional
+/// capacities), solved analytically through the shared
+/// [`crate::sched::oracle`] prefix oracle.
 fn simulate_batch_steady(
     devices: &[Device],
     dag: &GemmDag,
@@ -132,46 +142,111 @@ fn simulate_batch_steady(
         }
     }
 
-    // Per-stage cost of one "unit" (the whole stage) on device k:
-    // dl, ul bytes and flops; find the stage makespan by bisection over the
-    // fraction capacities. The capacity scan runs over the SoA fleet view
-    // (flat arrays; chunk-parallel above the fast-path threshold) — this
-    // water-filling is the same bisection idea as the §4.1 solver but its
-    // per-device oracle (fractions clamped at 1) does not satisfy the
-    // breakpoint-oracle precondition, so it uses the scan route.
+    // Per-stage cost of one "unit" (the whole stage) on device k: dl, ul
+    // bytes and flops; the stage makespan is the smallest `t` whose
+    // fractional capacities sum to 1. Each device's capacity — saturating
+    // ramps `min((t−L)·W/bytes, 1)` per link direction plus the compute
+    // ramp — is a [`MinFamily`], so the stage makespan is an analytic
+    // segment root of the shared prefix oracle (no bisection). The
+    // reference bisection over the flat-array scan survives as the
+    // fallback for stages that fail the decomposition precondition.
     let view = FleetView::build(devices);
     let nd = view.len();
     let threads = default_threads();
-    let stage_time = |dl_bytes: f64, ul_bytes: f64, flops: f64| -> f64 {
-        let cap = |k: usize, t: f64| -> f64 {
-            let f_dl = if dl_bytes == 0.0 {
-                1.0
-            } else {
-                ((t - view.dl_lat[k]).max(0.0) * view.dl_bw[k] / dl_bytes).min(1.0)
-            };
-            let f_ul = if ul_bytes == 0.0 {
-                1.0
-            } else {
-                ((t - view.ul_lat[k]).max(0.0) * view.ul_bw[k] / ul_bytes).min(1.0)
-            };
-            let f_c = if flops == 0.0 {
-                1.0
-            } else {
-                let eff = if cm.use_effective_flops {
-                    view.eff_flops[k]
-                } else {
-                    view.flops[k]
-                };
-                (t * eff / flops).min(1.0)
-            };
-            f_dl.min(f_ul).min(f_c)
+    let mut analytic_roots = 0usize;
+    let mut bisection_iters = 0usize;
+    let cap_of = |k: usize, t: f64, dl_bytes: f64, ul_bytes: f64, flops: f64| -> f64 {
+        let f_dl = if dl_bytes == 0.0 {
+            1.0
+        } else {
+            ((t - view.dl_lat[k]).max(0.0) * view.dl_bw[k] / dl_bytes).min(1.0)
         };
+        let f_ul = if ul_bytes == 0.0 {
+            1.0
+        } else {
+            ((t - view.ul_lat[k]).max(0.0) * view.ul_bw[k] / ul_bytes).min(1.0)
+        };
+        let f_c = if flops == 0.0 {
+            1.0
+        } else {
+            let eff = if cm.use_effective_flops {
+                view.eff_flops[k]
+            } else {
+                view.flops[k]
+            };
+            (t * eff / flops).min(1.0)
+        };
+        f_dl.min(f_ul).min(f_c)
+    };
+    let stage_family = |k: usize, dl_bytes: f64, ul_bytes: f64, flops: f64| -> Option<DeviceCurve> {
+        let mut t0 = 0.0f64;
+        let mut fam = MinFamily::new(0.0);
+        if dl_bytes > 0.0 {
+            if !(view.dl_bw[k] > 0.0 && view.dl_bw[k].is_finite() && view.dl_lat[k] >= 0.0) {
+                return None;
+            }
+            fam.push_lin(view.dl_bw[k] / dl_bytes, view.dl_lat[k]);
+            t0 = t0.max(view.dl_lat[k]);
+        }
+        if ul_bytes > 0.0 {
+            if !(view.ul_bw[k] > 0.0 && view.ul_bw[k].is_finite() && view.ul_lat[k] >= 0.0) {
+                return None;
+            }
+            fam.push_lin(view.ul_bw[k] / ul_bytes, view.ul_lat[k]);
+            t0 = t0.max(view.ul_lat[k]);
+        }
+        if flops > 0.0 {
+            let eff = if cm.use_effective_flops {
+                view.eff_flops[k]
+            } else {
+                view.flops[k]
+            };
+            if !(eff > 0.0 && eff.is_finite()) {
+                return None;
+            }
+            fam.push_lin(eff / flops, 0.0);
+        }
+        fam.push_const(1.0);
+        fam.t0 = t0;
+        Some(DeviceCurve::Curve(fam))
+    };
+    // Uniform-layer models repeat the same (dl, ul, flops) triple across
+    // all forward stages (and another across all backward ones): memoize
+    // solved stages so the oracle is built once per distinct triple, not
+    // once per layer. Counters still tick per stage (a memo hit reuses an
+    // analytic root).
+    let mut memo: Vec<((u64, u64, u64), f64, bool)> = Vec::new();
+    let mut stage_time = |dl_bytes: f64, ul_bytes: f64, flops: f64| -> f64 {
+        if !(dl_bytes >= 0.0 && ul_bytes >= 0.0 && flops >= 0.0)
+            || !(dl_bytes.is_finite() && ul_bytes.is_finite() && flops.is_finite())
+        {
+            return f64::INFINITY;
+        }
+        let key = (dl_bytes.to_bits(), ul_bytes.to_bits(), flops.to_bits());
+        if let Some(&(_, t, analytic)) = memo.iter().find(|(k, _, _)| *k == key) {
+            if analytic {
+                analytic_roots += 1;
+            }
+            return t;
+        }
+        let solved = SegmentOracle::build(nd, |k| stage_family(k, dl_bytes, ul_bytes, flops))
+            .and_then(|o| o.solve_target(1.0));
+        if let Some(t) = solved {
+            analytic_roots += 1;
+            memo.push((key, t, true));
+            return t;
+        }
+        // Reference fallback: bisection over the flat-array capacity scan.
         let feasible = |t: f64| -> bool {
             if nd >= PAR_SCAN_THRESHOLD {
-                chunked_sum(nd, threads, |lo, hi| (lo..hi).map(|k| cap(k, t)).sum())
-                    >= 1.0
+                chunked_sum(nd, threads, |lo, hi| {
+                    (lo..hi).map(|k| cap_of(k, t, dl_bytes, ul_bytes, flops)).sum()
+                }) >= 1.0
             } else {
-                (0..nd).map(|k| cap(k, t)).sum::<f64>() >= 1.0
+                (0..nd)
+                    .map(|k| cap_of(k, t, dl_bytes, ul_bytes, flops))
+                    .sum::<f64>()
+                    >= 1.0
             }
         };
         let mut hi = 1e-3;
@@ -180,11 +255,13 @@ fn simulate_batch_steady(
             hi *= 2.0;
             guard += 1;
             if guard > 80 {
+                memo.push((key, f64::INFINITY, false));
                 return f64::INFINITY;
             }
         }
         let mut lo = if guard == 0 { 0.0 } else { hi / 2.0 };
         for _ in 0..50 {
+            bisection_iters += 1;
             let mid = 0.5 * (lo + hi);
             if feasible(mid) {
                 hi = mid;
@@ -192,6 +269,7 @@ fn simulate_batch_steady(
                 lo = mid;
             }
         }
+        memo.push((key, hi, false));
         hi
     };
 
@@ -265,6 +343,8 @@ fn simulate_batch_steady(
         peak_device_mem_bytes: peak_mem,
         level_times,
         ps_bound_time: ps_bound,
+        waterfill_analytic_roots: analytic_roots,
+        waterfill_bisection_iters: bisection_iters,
     }
 }
 
@@ -352,6 +432,8 @@ fn simulate_batch_cold(
         peak_device_mem_bytes: peak_mem,
         level_times,
         ps_bound_time: ps_bound,
+        waterfill_analytic_roots: 0,
+        waterfill_bisection_iters: 0,
     }
 }
 
@@ -413,6 +495,99 @@ mod tests {
         );
         assert!((r.batch_time - r.gemm_time - r.opt_tail).abs() < 1e-9);
         assert_eq!(r.level_times.len(), dag.n_levels());
+    }
+
+    #[test]
+    fn steady_waterfill_is_analytic_and_matches_reference_bisection() {
+        // The water-fill hot path must take zero bisection iterations, and
+        // its analytic stage roots must agree with a locally re-coded
+        // reference bisection (the pre-oracle driver) per stage.
+        let (devices, dag, schedule) = setting(96);
+        let cm = CostModel::default();
+        let r = simulate_batch(&devices, &dag, &schedule, &cm, &SimConfig::default());
+        assert_eq!(
+            r.waterfill_bisection_iters, 0,
+            "water-fill hot path must not bisect"
+        );
+        assert_eq!(r.waterfill_analytic_roots, r.level_times.len());
+
+        // Reference stage times by bisection over the capacity scan.
+        let view = FleetView::build(&devices);
+        let nd = view.len();
+        let cap = |k: usize, t: f64, dlb: f64, ulb: f64, fl: f64| -> f64 {
+            let f_dl = if dlb == 0.0 {
+                1.0
+            } else {
+                ((t - view.dl_lat[k]).max(0.0) * view.dl_bw[k] / dlb).min(1.0)
+            };
+            let f_ul = if ulb == 0.0 {
+                1.0
+            } else {
+                ((t - view.ul_lat[k]).max(0.0) * view.ul_bw[k] / ulb).min(1.0)
+            };
+            let f_c = if fl == 0.0 {
+                1.0
+            } else {
+                (t * view.flops[k] / fl).min(1.0)
+            };
+            f_dl.min(f_ul).min(f_c)
+        };
+        let stage_ref = |dlb: f64, ulb: f64, fl: f64| -> f64 {
+            let feasible =
+                |t: f64| (0..nd).map(|k| cap(k, t, dlb, ulb, fl)).sum::<f64>() >= 1.0;
+            let mut hi = 1e-3;
+            let mut guard = 0;
+            while !feasible(hi) {
+                hi *= 2.0;
+                guard += 1;
+                assert!(guard <= 80);
+            }
+            let mut lo = if guard == 0 { 0.0 } else { hi / 2.0 };
+            for _ in 0..50 {
+                let mid = 0.5 * (lo + hi);
+                if feasible(mid) {
+                    hi = mid;
+                } else {
+                    lo = mid;
+                }
+            }
+            hi
+        };
+        use crate::model::dag::Phase;
+        let spec = &dag.spec;
+        let setup = &dag.setup;
+        let bsh = (setup.batch * setup.seq * spec.hidden) as f64;
+        let layer_params = spec.layer_gemm_params() as f64;
+        let b = cm.elem_bytes;
+        let mut fwd = vec![0.0f64; spec.layers];
+        let mut bwd = vec![0.0f64; spec.layers];
+        for level in &dag.levels {
+            match level.phase {
+                Phase::Forward => fwd[level.layer] += level.flops(),
+                Phase::Backward => bwd[level.layer] += level.flops(),
+            }
+        }
+        // level_times may include PS-bound stages (t = service, not the
+        // water-fill root); compare only stages where the device side binds
+        let mut idx = 0usize;
+        let mut check = |dlb: f64, ulb: f64, fl: f64| {
+            let t_ref = stage_ref(dlb, ulb, fl);
+            let service = (dlb + ulb) / PsParams::default().net_bw;
+            let got = r.level_times[idx];
+            // compare only stages where the device side clearly binds (a
+            // PS-bound stage reports the service time, not the root)
+            if service <= t_ref * (1.0 - 1e-6) {
+                let rel = (got - t_ref).abs() / t_ref.max(1e-300);
+                assert!(rel <= 1e-9, "stage {idx}: analytic {got} vs bisect {t_ref}");
+            }
+            idx += 1;
+        };
+        for li in 0..spec.layers {
+            check(bsh * b, bsh * b, fwd[li]);
+        }
+        for li in (0..spec.layers).rev() {
+            check(bsh * b, (bsh + layer_params) * b, bwd[li]);
+        }
     }
 
     #[test]

@@ -50,6 +50,8 @@ mod tests {
             peak_device_mem_bytes: 5.0,
             level_times: vec![],
             ps_bound_time: 0.0,
+            waterfill_analytic_roots: 0,
+            waterfill_bisection_iters: 0,
         }
     }
 

@@ -10,7 +10,11 @@
 //!   latency ([`recover`] over the delivered capabilities), departs the
 //!   device permanently, and re-solves the schedule over the survivors —
 //!   warm, through the session-wide [`SolverCache`] chained across every
-//!   re-solve.
+//!   re-solve. A single leave is an *incremental* oracle update (the
+//!   cached breakpoint oracles splice the departed device's events out
+//!   instead of rebuilding; `CacheStats::incremental_updates` counts them
+//!   and `full_rebuilds` stays 0 across a single-device churn session —
+//!   gated in `benches/table7_solver.rs`).
 //! * **Join** registers a fresh candidate (thinned by the pool's diurnal
 //!   availability profile); it becomes admissible at the next membership
 //!   epoch.
@@ -168,6 +172,11 @@ impl SessionReport {
             ("cold_solves", Json::from(self.solver.cold_solves)),
             ("warm_solves", Json::from(self.solver.warm_solves)),
             ("memo_hits", Json::from(self.solver.memo_hits)),
+            (
+                "incremental_updates",
+                Json::from(self.solver.incremental_updates),
+            ),
+            ("full_rebuilds", Json::from(self.solver.full_rebuilds)),
         ])
     }
 }
@@ -566,6 +575,46 @@ mod tests {
         let last = r.decisions.last().unwrap();
         assert!(last.admitted < 32);
         assert!(pool.active().len() <= last.admitted);
+        // every post-failure re-solve must splice the departed device out
+        // of the cached oracles, never rebuild them
+        assert!(
+            r.solver.incremental_updates > 0,
+            "single-leave re-solves must be incremental: {:?}",
+            r.solver
+        );
+        assert_eq!(r.solver.full_rebuilds, 0, "{:?}", r.solver);
+    }
+
+    #[test]
+    fn joins_resolve_incrementally_at_epochs() {
+        // Joins extend the planning view at the next membership epoch; the
+        // cached oracles must admit the tail devices incrementally.
+        let mut pool = DevicePool::sample(&pool_cfg(16, 0.0));
+        let dag = dag();
+        let cfg = SessionConfig {
+            n_batches: 6,
+            epoch_batches: 2,
+            churn: ChurnConfig {
+                fail_rate_per_hour: 0.0,
+                join_rate_per_hour: 3600.0,
+            },
+            policy: Policy::TakeAll,
+            ..SessionConfig::default()
+        };
+        let r = run_session(
+            &mut pool,
+            &dag,
+            &CostModel::default(),
+            &PsParams::default(),
+            &cfg,
+        );
+        assert!(r.joins > 0);
+        assert!(
+            r.solver.incremental_updates > 0,
+            "join epochs must admit incrementally: {:?}",
+            r.solver
+        );
+        assert_eq!(r.solver.full_rebuilds, 0, "{:?}", r.solver);
     }
 
     #[test]

@@ -38,14 +38,18 @@ fn bench_cli(name: &'static str, about: &'static str) -> Cli {
         .flag("bench", "accepted for `cargo bench` compatibility (ignored)")
 }
 
+/// The unified-flag extraction shared by every bench entrypoint.
+fn unified_args(parsed: &crate::util::cli::Args) -> BenchArgs {
+    BenchArgs {
+        smoke: parsed.has_flag("smoke"),
+        out: parsed.get("out").map(str::to_string),
+    }
+}
+
 /// Parse the unified bench flags (exits with usage on `--help` or an
 /// unknown option, like every other CLI in the crate).
 pub fn bench_args(name: &'static str, about: &'static str) -> BenchArgs {
-    let args = bench_cli(name, about).parse();
-    BenchArgs {
-        smoke: args.has_flag("smoke"),
-        out: args.get("out").map(str::to_string),
-    }
+    unified_args(&bench_cli(name, about).parse())
 }
 
 /// The standard bench prologue: parse the unified flags, then open the
@@ -53,9 +57,27 @@ pub fn bench_args(name: &'static str, about: &'static str) -> BenchArgs {
 /// duplicated literal sites per bench (flags are parsed first so
 /// `--help` exits before the report header prints).
 pub fn bench_setup(name: &'static str, about: &'static str) -> (BenchArgs, Reporter) {
-    let args = bench_args(name, about);
-    let rep = Reporter::new(name, about);
+    let (args, _, rep) = bench_setup_with(name, about, &[]);
     (args, rep)
+}
+
+/// [`bench_setup`] plus bench-specific boolean flags (`(name, help)`
+/// pairs, documented under `--help` alongside the unified ones). Returns
+/// the raw parsed [`crate::util::cli::Args`] so the caller can query its
+/// extra flags — e.g. fig11's `--measured-ps`.
+pub fn bench_setup_with(
+    name: &'static str,
+    about: &'static str,
+    extra_flags: &[(&'static str, &'static str)],
+) -> (BenchArgs, crate::util::cli::Args, Reporter) {
+    let mut cli = bench_cli(name, about);
+    for &(flag, help) in extra_flags {
+        cli = cli.flag(flag, help);
+    }
+    let parsed = cli.parse();
+    let args = unified_args(&parsed);
+    let rep = Reporter::new(name, about);
+    (args, parsed, rep)
 }
 
 impl BenchArgs {
@@ -204,6 +226,16 @@ mod tests {
         // --help documents the unified flags
         assert!(cli.usage().contains("--smoke"));
         assert!(cli.usage().contains("--out"));
+    }
+
+    #[test]
+    fn bench_cli_supports_extra_flags() {
+        let cli = bench_cli("test_bench", "extra flag check").flag("measured-ps", "envelope pricing");
+        let a = cli
+            .parse_from(vec!["--smoke".to_string(), "--measured-ps".to_string()])
+            .unwrap();
+        assert!(a.has_flag("smoke") && a.has_flag("measured-ps"));
+        assert!(cli.usage().contains("--measured-ps"));
     }
 
     #[test]

@@ -275,3 +275,55 @@ fn scenario_session_matches_run_session() {
         )
     );
 }
+
+#[test]
+fn parallel_sweep_is_bitwise_identical() {
+    // The parallel point driver must reproduce the serial chained-memo
+    // driver bit for bit: since T* became an analytic segment root, a
+    // solve's answer is a pure function of (fleet, shape, cost model) —
+    // memo/hint/oracle history cannot change it, so per-point fresh
+    // planners and a sweep-long warm planner agree exactly.
+    use cleave::api::Axis;
+    let sc = Scenario::model("OPT-13B").devices(24);
+    let points = [0.0, 0.08, 0.15, 0.3];
+
+    let mut cleave = CleavePlanner::cached();
+    let mut dtfm = DtfmPlanner::runtime_only();
+    let mut alpa = AlpaPlanner::runtime_only();
+    let mut planners: Vec<&mut dyn Planner> = vec![&mut cleave, &mut dtfm, &mut alpa];
+    let serial = sc
+        .run_sweep(Axis::Stragglers, &points, &mut planners)
+        .unwrap();
+
+    let parallel = sc
+        .run_sweep_parallel(Axis::Stragglers, &points, || {
+            vec![
+                Box::new(CleavePlanner::cached()) as Box<dyn Planner>,
+                Box::new(DtfmPlanner::runtime_only()),
+                Box::new(AlpaPlanner::runtime_only()),
+            ]
+        })
+        .unwrap();
+
+    assert_eq!(serial.len(), parallel.len());
+    for (s, p) in serial.iter().zip(&parallel) {
+        assert_eq!(s.value.to_bits(), p.value.to_bits());
+        assert_eq!(s.reports.len(), p.reports.len());
+        for (rs, rp) in s.reports.iter().zip(&p.reports) {
+            assert_eq!(rs.planner, rp.planner);
+            assert_eq!(rs.feasible(), rp.feasible());
+            assert_eq!(
+                rs.per_batch().map(f64::to_bits),
+                rp.per_batch().map(f64::to_bits),
+                "point {} planner {} diverged",
+                s.value,
+                rs.planner
+            );
+            if let (Some(bs), Some(bp)) = (rs.batch(), rp.batch()) {
+                assert_eq!(bs.gemm_time.to_bits(), bp.gemm_time.to_bits());
+                assert_eq!(bs.opt_tail.to_bits(), bp.opt_tail.to_bits());
+                assert_eq!(bs.total_dl_bytes.to_bits(), bp.total_dl_bytes.to_bits());
+            }
+        }
+    }
+}

@@ -156,12 +156,12 @@ fn prop_makespan_never_worse_with_more_devices() {
 }
 
 #[test]
-fn prop_fastpath_matches_reference_solver() {
-    // The O(log D) breakpoint-oracle fast path and the O(D)-scan reference
-    // solver must agree on the solved makespans within 1e-6 across random
-    // heterogeneous fleets (D in {1, 7, 64, 1000}), including straggler
-    // exclusion. (In practice they agree bit-for-bit: the fast path
-    // replays the reference bracket protocol against an exact oracle.)
+fn prop_analytic_root_matches_reference_bisection() {
+    // The analytic segment-root fast path and the O(D)-scan reference
+    // bisection solver must agree on the solved makespans within 1e-6
+    // across random heterogeneous fleets (D in {1, 7, 64, 1000}),
+    // including straggler exclusion — and the fast path must spend ZERO
+    // bisection iterations doing it (one closed-form root per solve).
     check(
         Config {
             cases: 24,
@@ -192,7 +192,86 @@ fn prop_fastpath_matches_reference_solver() {
             close(fs.continuous_makespan, rs.continuous_makespan)
                 && close(fs.integer_makespan, rs.integer_makespan)
                 && close(fa.makespan, ra.makespan)
+                && fs.bisection_iters == 0
+                && fs.analytic_roots == 1
+                && rs.bisection_iters > 0
+                && rs.analytic_roots == 0
                 && fa.validate(fleet, &cm).is_ok()
+        },
+    );
+}
+
+#[test]
+fn prop_churn_incremental_solve_is_bitwise_rebuild() {
+    // Retire/admit-then-solve must equal rebuild-then-solve bit for bit
+    // under random churn sequences: the cached oracles splice the event
+    // list (canonical order preserved), a fresh solver rebuilds from
+    // scratch — same sweeps, same analytic roots, same rectangles.
+    use cleave::sched::solver::solve_dag_cached;
+    let spec = ModelSpec::preset("OPT-13B").unwrap();
+    let dag = GemmDag::build(&spec, &TrainSetup::default());
+    check(
+        Config {
+            cases: 8,
+            seed: 0xC4E2_0002,
+            max_size: 40,
+        },
+        |rng, size| {
+            let d = 16 + (size % 33);
+            let cfg = FleetConfig {
+                n_devices: d,
+                phone_fraction: rng.uniform(),
+                straggler_fraction: 0.0,
+                straggler_factor: 10.0,
+                utilization: 1.0,
+                seed: rng.next_u64(),
+            };
+            (Fleet::sample(&cfg), rng.next_u64())
+        },
+        |(fleet, churn_seed)| {
+            let cm = CostModel::default();
+            let ps = PsParams::default();
+            let opts = SolverOptions::default();
+            let mut cache = SolverCache::new();
+            let mut devices = fleet.devices.clone();
+            let _ = solve_dag_cached(&devices, &dag, &cm, &ps, &opts, &mut cache);
+            let mut rng = Rng::new(*churn_seed);
+            let join_cfg = FleetConfig {
+                utilization: 1.0,
+                ..FleetConfig::default()
+            };
+            for step in 0..4u64 {
+                if rng.bernoulli(0.5) && devices.len() > 12 {
+                    // single leave at a random position
+                    let pos = rng.below(devices.len() as u64) as usize;
+                    devices.remove(pos);
+                } else {
+                    // single join at the tail
+                    devices.push(cleave::cluster::fleet::sample_device(
+                        &mut rng,
+                        &join_cfg,
+                        10_000 + step as usize,
+                    ));
+                }
+                let (inc, is) =
+                    solve_dag_cached(&devices, &dag, &cm, &ps, &opts, &mut cache);
+                let (fresh, fs) = solve_dag(&devices, &dag, &cm, &ps, &opts);
+                if inc.gemm_time.to_bits() != fresh.gemm_time.to_bits()
+                    || inc.opt_tail.to_bits() != fresh.opt_tail.to_bits()
+                {
+                    return false;
+                }
+                for (shape, a) in &inc.by_shape {
+                    if a.rects != fresh.by_shape[shape].rects {
+                        return false;
+                    }
+                }
+                if is.bisection_iters != 0 || fs.bisection_iters != 0 {
+                    return false;
+                }
+            }
+            let stats = cache.stats();
+            stats.incremental_updates > 0 && stats.full_rebuilds == 0
         },
     );
 }
