@@ -121,9 +121,11 @@ fn main() {
         "probes",
     ]);
     let mut rows: Vec<Json> = Vec::new();
-    // (pool, speedup, session cold solves, frontier cold solves) — gated
+    // (pool, speedup, session cold solves, frontier cold solves, guided
+    // decisions, selection warm starts, selection cold sweeps) — gated
     // after BENCH_selection.json is written so the artifact always lands.
-    let mut gates: Vec<(usize, f64, usize, usize)> = Vec::new();
+    #[allow(clippy::type_complexity)]
+    let mut gates: Vec<(usize, f64, usize, usize, usize, usize, usize)> = Vec::new();
 
     for &n in sizes {
         let run = |policy: Policy| -> SessionReport {
@@ -180,6 +182,9 @@ fn main() {
             speedup,
             guided.solver.cold_solves,
             frontier_stats.cold_solves,
+            guided.decisions.len(),
+            guided.solver.selection_warm_starts,
+            guided.solver.selection_cold_sweeps,
         ));
     }
     t.print();
@@ -217,7 +222,7 @@ fn main() {
 
     // Gates (after the artifact is written, so a failure still leaves the
     // recorded numbers behind for diagnosis).
-    for (n, speedup, session_cold, frontier_cold) in gates {
+    for (n, speedup, session_cold, frontier_cold, decisions, sel_warm, sel_cold) in gates {
         // Gate 1: selection must beat take-all admission >= 1.5x on
         // per-batch time for the straggler-laden pool.
         assert!(
@@ -235,6 +240,14 @@ fn main() {
         assert!(
             frontier_cold <= n_shapes,
             "frontier probes went cold at pool {n}"
+        );
+        // Gate 3: every membership decision routed through the
+        // incremental entrypoint — each is counted as either a warm start
+        // or a cold geometric sweep, nothing falls outside the two.
+        assert_eq!(
+            sel_warm + sel_cold,
+            decisions,
+            "selection routing counters must cover every decision at pool {n}"
         );
     }
 }

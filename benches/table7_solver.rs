@@ -11,25 +11,43 @@
 //! PRs. Gates: zero bisection iterations on the analytic paths, and
 //! `incremental_updates > 0` / `full_rebuilds == 0` across a
 //! single-device churn session (also enforced under `--smoke` in CI).
+//!
+//! The fleet-scale section (always in the full run; under `--smoke` only
+//! with `--fleet-scale`, at a smoke-safe size) measures per-event oracle
+//! update cost under churn at D = 100k / 1M — exact linear resweep vs the
+//! `OracleMode::Indexed` Fenwick layer — and gates indexed >= 10x at
+//! D >= 100k, indexed-vs-exact divergence <= the 1e-9 tolerance contract,
+//! and `selection_warm_starts > 0` / `full_rebuilds == 0` across a
+//! single-leave admission epoch (`sched::select::select_devices_incremental`).
 
 use std::time::Instant;
 
 use cleave::cluster::fleet::{Fleet, FleetConfig};
+use cleave::cluster::pool::{DevicePool, PoolConfig};
 use cleave::model::config::{ModelSpec, TrainSetup};
 use cleave::model::dag::GemmDag;
 use cleave::sched::cost::{CostModel, GemmShape, PsParams};
-use cleave::sched::fastpath::SolverCache;
+use cleave::sched::fastpath::{measure_churn_updates, SolverCache};
+use cleave::sched::oracle::OracleMode;
 use cleave::sched::recovery::recover;
+use cleave::sched::select::{select_devices_incremental, SelectConfig, SelectionState};
 use cleave::sched::solver::{
     solve_dag, solve_dag_cached, solve_dag_reference, solve_gemm, SolverOptions,
 };
-use cleave::util::bench::{bench_setup, write_artifact};
+use cleave::util::bench::{bench_setup_with, write_artifact};
 use cleave::util::fmt_secs;
 use cleave::util::json::{obj, Json};
 use cleave::util::table::Table;
 
 fn main() {
-    let (args, mut rep) = bench_setup("table7_solver", "solver regimes (Table 7)");
+    let (args, extra, mut rep) = bench_setup_with(
+        "table7_solver",
+        "solver regimes (Table 7)",
+        &[(
+            "fleet-scale",
+            "run the 100k-1M-device churn section under --smoke too (at a smoke-safe size)",
+        )],
+    );
     let spec = ModelSpec::preset("Llama2-70B").unwrap();
     let setup = TrainSetup::default();
     let fleet = Fleet::median(1024);
@@ -233,6 +251,145 @@ fn main() {
     );
     t2.print();
 
+    // ---- fleet-scale churn: per-event oracle-update cost, exact (linear
+    // resweep) vs indexed (Fenwick tombstone/overlay) at D = 100k / 1M,
+    // plus the warm-started admission gates. Runs in the full bench
+    // always; under --smoke only with --fleet-scale, at a smoke-safe size.
+    let fleet_scale = !args.smoke || extra.has_flag("fleet-scale");
+    let mut fs_rows: Vec<Json> = Vec::new();
+    // (d, indexed speedup, divergence) gated after the artifact lands
+    let mut fs_gates: Vec<(usize, f64, f64)> = Vec::new();
+    let mut warm_gate: Option<(usize, usize, usize)> = None;
+    if fleet_scale {
+        let g = dag13.levels[0].gemms[0];
+        let shape = GemmShape::new(g.m, g.n, g.q, g.count);
+        let sizes: &[usize] = if args.smoke {
+            &[10_000]
+        } else {
+            &[100_000, 1_000_000]
+        };
+        let mut t3 = Table::new(&[
+            "D",
+            "exact build",
+            "indexed build",
+            "exact/event",
+            "indexed/event",
+            "speedup",
+            "divergence",
+        ]);
+        for &d in sizes {
+            let fleet = Fleet::sample(&FleetConfig::default().with_devices(d).with_seed(17));
+            // a standby pool the admit events draw fresh devices from
+            let standby = Fleet::sample(&FleetConfig::default().with_devices(64).with_seed(91));
+            let n_events = if d >= 1_000_000 { 12 } else { 40 };
+            let probe =
+                measure_churn_updates(&fleet.view(), &standby.view(), &cm, &shape, n_events);
+            let speedup = probe.speedup();
+
+            t3.row(&[
+                d.to_string(),
+                fmt_secs(probe.exact_build_s),
+                fmt_secs(probe.indexed_build_s),
+                fmt_secs(probe.exact_event_s),
+                fmt_secs(probe.indexed_event_s),
+                format!("{speedup:.0}x"),
+                format!("{:.2e}", probe.divergence),
+            ]);
+            fs_rows.push(obj(vec![
+                ("d", Json::from(d)),
+                ("events", Json::from(probe.events)),
+                ("exact_build_s", Json::from(probe.exact_build_s)),
+                ("indexed_build_s", Json::from(probe.indexed_build_s)),
+                ("exact_event_s", Json::from(probe.exact_event_s)),
+                ("indexed_event_s", Json::from(probe.indexed_event_s)),
+                ("indexed_speedup", Json::from(speedup)),
+                ("divergence", Json::from(probe.divergence)),
+            ]));
+            rep.record(vec![
+                ("fleet_d", Json::from(d)),
+                ("exact_event_s", Json::from(probe.exact_event_s)),
+                ("indexed_event_s", Json::from(probe.indexed_event_s)),
+                ("indexed_speedup", Json::from(speedup)),
+            ]);
+            fs_gates.push((d, speedup, probe.divergence));
+        }
+        println!(
+            "\nfleet-scale churn (OPT-13B dominant shape): per-event oracle\n\
+             update, exact linear resweep vs indexed Fenwick tombstone/overlay"
+        );
+        t3.print();
+
+        // Warm-started admission at pool scale: the second epoch differs
+        // by one leave, so it must route warm (local re-probe around the
+        // previous best prefix) with zero oracle rebuilds — a departure is
+        // a pure retire delta on every probed prefix, so the rebuild-free
+        // gate is airtight (a join that outranked every incumbent would
+        // legitimately rebuild: a front insertion is outside diff_fleets'
+        // retire-subsequence + admit-tail shape). Exercised on an
+        // indexed-mode cache, cross-checked against exact mode.
+        let pool_n = if args.smoke { 384 } else { 1536 };
+        let sel_run = |mode: OracleMode| -> (Vec<usize>, f64, SolverCache) {
+            let mut pool = DevicePool::sample(&PoolConfig {
+                fleet: FleetConfig {
+                    n_devices: pool_n,
+                    straggler_fraction: 0.2,
+                    seed: 23,
+                    ..FleetConfig::default()
+                },
+                ..PoolConfig::default()
+            });
+            let mut cache = SolverCache::with_mode(mode);
+            let mut state = SelectionState::new();
+            let scfg = SelectConfig::default();
+            let all = pool.selectable();
+            let _ = select_devices_incremental(
+                &pool.planning_devices(&all),
+                &dag13,
+                &cm,
+                &ps,
+                &scfg,
+                &mut cache,
+                &mut state,
+            );
+            pool.depart(all[pool_n / 2]); // single leave: the next epoch warm starts
+            let all = pool.selectable();
+            let out = select_devices_incremental(
+                &pool.planning_devices(&all),
+                &dag13,
+                &cm,
+                &ps,
+                &scfg,
+                &mut cache,
+                &mut state,
+            );
+            (out.admitted, out.objective, cache)
+        };
+        let (admitted_ix, obj_ix, cache_ix) = sel_run(OracleMode::indexed());
+        let (admitted_ex, obj_ex, _) = sel_run(OracleMode::Exact);
+        // The two modes normally pick the same set; a sub-tolerance T*
+        // shift may flip a near-tied prefix comparison, in which case the
+        // objectives must still agree to well within the noise the tie
+        // implies.
+        assert!(
+            admitted_ix == admitted_ex || (obj_ix - obj_ex).abs() <= 1e-6 * obj_ex.abs(),
+            "indexed-mode admission diverged from exact mode beyond a tie: \
+             ix {obj_ix} vs ex {obj_ex}"
+        );
+        let ws = cache_ix.stats();
+        warm_gate = Some((pool_n, ws.selection_warm_starts, ws.full_rebuilds));
+        println!(
+            "\nwarm admission at pool {pool_n}: warm starts {} cold sweeps {} \
+             rebuilds {}",
+            ws.selection_warm_starts, ws.selection_cold_sweeps, ws.full_rebuilds
+        );
+        fs_rows.push(obj(vec![
+            ("pool", Json::from(pool_n)),
+            ("selection_warm_starts", Json::from(ws.selection_warm_starts)),
+            ("selection_cold_sweeps", Json::from(ws.selection_cold_sweeps)),
+            ("full_rebuilds", Json::from(ws.full_rebuilds)),
+        ]));
+    }
+
     let bench_json = obj(vec![
         ("bench", Json::from("table7_solver")),
         ("model", Json::from("OPT-13B")),
@@ -240,8 +397,38 @@ fn main() {
         ("llama70b_resolve_s", Json::from(plan.solve_time)),
         ("smoke", Json::from(args.smoke)),
         ("sweep", Json::Arr(sweep_rows)),
+        ("fleet_scale", Json::Arr(fs_rows)),
     ]);
     write_artifact(args.artifact_path("BENCH_solver.json"), &bench_json);
+
+    // Fleet-scale gates (after the artifact is written so a failure still
+    // leaves the recorded numbers behind): indexed churn must be sublinear
+    // in practice — >= 10x the linear resweep at D >= 100k (>= 2x at the
+    // smoke size, whose events are small enough for constant factors to
+    // matter) — and stay inside the tolerance contract; the single-leave
+    // epoch must warm start without oracle rebuilds.
+    for (d, speedup, divergence) in fs_gates {
+        let floor = if d >= 100_000 { 10.0 } else { 2.0 };
+        assert!(
+            speedup >= floor,
+            "indexed churn update must be >= {floor}x the linear resweep \
+             at D={d} (got {speedup:.1}x)"
+        );
+        assert!(
+            divergence <= 1e-9,
+            "indexed-vs-exact divergence {divergence:.2e} exceeds the 1e-9 contract at D={d}"
+        );
+    }
+    if let Some((pool_n, warm_starts, rebuilds)) = warm_gate {
+        assert!(
+            warm_starts > 0,
+            "single-leave epoch must warm-start admission at pool {pool_n}"
+        );
+        assert_eq!(
+            rebuilds, 0,
+            "leave-delta admission probes must never rebuild oracles"
+        );
+    }
 
     // Two-part perf gate at D=8192 (skipped under --smoke, which stops at
     // 1024): the warm (memo) path carries the >=5x claim for

@@ -2,20 +2,54 @@
 //! paths — host GEMM throughput, solver latency across fleet sizes, the
 //! per-batch simulator, and the live dispatch loop — so optimizations can
 //! be recorded before/after.
+//!
+//! `--churn` switches to the churn-latency probe: per-event oracle update
+//! cost (single retire / single admit) in exact vs indexed mode at
+//! D ∈ {1k, 100k}, so a regression in either churn path is visible
+//! without running the full `table7_solver` bench harness.
 
 use std::time::{Duration, Instant};
 
-use cleave::cluster::fleet::Fleet;
+use cleave::cluster::fleet::{Fleet, FleetConfig};
 use cleave::model::config::{ModelSpec, TrainSetup};
 use cleave::model::dag::GemmDag;
 use cleave::runtime::hostgemm;
 use cleave::sched::cost::{CostModel, GemmShape, PsParams};
+use cleave::sched::fastpath::measure_churn_updates;
 use cleave::sched::solver::{solve_dag, solve_gemm, SolverOptions};
 use cleave::sim::batch::{simulate_batch, SimConfig};
 use cleave::util::bench::time_fn;
 use cleave::util::rng::Rng;
 
+/// Per-event churn-update latency, exact (linear resweep) vs indexed
+/// (Fenwick tombstone/overlay), on the 13B-class dominant shape — the
+/// same shared measurement `benches/table7_solver.rs` records and gates,
+/// at probe-friendly sizes.
+fn churn_probe() {
+    println!("== perf probe: churn updates (exact vs indexed) ==");
+    let shape = GemmShape::new(1024, 5120, 5120, 8);
+    let cm = CostModel::default();
+    for d in [1_000usize, 100_000] {
+        let fleet = Fleet::sample(&FleetConfig::default().with_devices(d).with_seed(17));
+        let standby = Fleet::sample(&FleetConfig::default().with_devices(64).with_seed(91));
+        let n_events = if d >= 100_000 { 40 } else { 200 };
+        let probe = measure_churn_updates(&fleet.view(), &standby.view(), &cm, &shape, n_events);
+        println!(
+            "  D={d}: exact {:.3} ms/event, indexed {:.4} ms/event ({:.0}x), \
+             post-churn divergence {:.2e}",
+            probe.exact_event_s * 1e3,
+            probe.indexed_event_s * 1e3,
+            probe.speedup(),
+            probe.divergence
+        );
+    }
+}
+
 fn main() {
+    if std::env::args().any(|a| a == "--churn") {
+        churn_probe();
+        return;
+    }
     println!("== perf probe ==");
 
     // L3a: host GEMM throughput (the live worker hot path)

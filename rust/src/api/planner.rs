@@ -117,6 +117,16 @@ impl CleavePlanner {
             cache: Some(SolverCache::new()),
         }
     }
+
+    /// [`CleavePlanner::cached`] with an explicit oracle maintenance mode —
+    /// [`OracleMode::indexed`](crate::sched::oracle::OracleMode::indexed)
+    /// buys sublinear churn updates at fleet scale under the indexed
+    /// tolerance contract (see [`crate::sched::oracle`]).
+    pub fn cached_with_mode(mode: crate::sched::oracle::OracleMode) -> CleavePlanner {
+        CleavePlanner {
+            cache: Some(SolverCache::with_mode(mode)),
+        }
+    }
 }
 
 impl Default for CleavePlanner {

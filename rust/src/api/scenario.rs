@@ -31,6 +31,7 @@ use crate::model::config::{ModelSpec, TrainSetup};
 use crate::model::dag::GemmDag;
 use crate::sched::cost::{CostModel, GemmShape, PsEnvelope, PsParams};
 use crate::sched::fastpath::{CacheStats, SolverCache};
+use crate::sched::oracle::OracleMode;
 use crate::sched::recovery::recover;
 use crate::sched::select::{select_devices, SelectConfig, SelectionOutcome};
 use crate::sched::solver::{SolverOptions, SolverStats};
@@ -78,6 +79,10 @@ pub struct Scenario {
     sim: SimConfig,
     session: SessionConfig,
     pool: Option<PoolConfig>,
+    /// oracle maintenance mode for caches this scenario itself creates
+    /// (e.g. [`Scenario::selection_frontier`]); planner-owned caches keep
+    /// their own mode
+    oracle: OracleMode,
 }
 
 /// The per-configuration planning context ([`GemmDag`], fleet, cost
@@ -107,6 +112,7 @@ impl Scenario {
             sim: SimConfig::default(),
             session: SessionConfig::default(),
             pool: None,
+            oracle: OracleMode::Exact,
         }
     }
 
@@ -207,6 +213,18 @@ impl Scenario {
     /// Simulator configuration for [`Scenario::run_batch`].
     pub fn sim(mut self, sim: SimConfig) -> Scenario {
         self.sim = sim;
+        self
+    }
+
+    /// Oracle maintenance mode for the solver caches this scenario itself
+    /// creates ([`Scenario::selection_frontier`]):
+    /// [`OracleMode::indexed`] turns churn/probe updates sublinear under
+    /// the indexed tolerance contract (see [`crate::sched::oracle`]).
+    /// Sessions driven by a caller-supplied planner follow that planner's
+    /// cache instead
+    /// ([`crate::api::CleavePlanner::cached_with_mode`]).
+    pub fn oracle_mode(mut self, mode: OracleMode) -> Scenario {
+        self.oracle = mode;
         self
     }
 
@@ -540,7 +558,7 @@ impl Scenario {
         let cm = self.cost_model();
         let pool = DevicePool::sample(&self.pool_config());
         let selectable = pool.selectable();
-        let mut cache = SolverCache::new();
+        let mut cache = SolverCache::with_mode(self.oracle);
         let out = select_devices(
             &pool.planning_devices(&selectable),
             &dag,

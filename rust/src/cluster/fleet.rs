@@ -5,6 +5,7 @@
 //! closed-form cross-checks (Table 8).
 
 use crate::cluster::device::{Device, DeviceClass, DeviceId};
+use crate::util::fnv1a;
 use crate::util::rng::Rng;
 
 /// Usable memory budgets (§2.1).
@@ -80,10 +81,6 @@ pub struct FleetView {
     pub version: u64,
 }
 
-fn fnv1a(h: u64, x: u64) -> u64 {
-    (h ^ x).wrapping_mul(0x100_0000_01b3)
-}
-
 impl FleetView {
     /// Build the SoA view of a device slice.
     pub fn build(devices: &[Device]) -> FleetView {
@@ -130,7 +127,7 @@ impl FleetView {
     }
 
     fn fingerprint(&self) -> u64 {
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        let mut h: u64 = crate::util::FNV1A_SEED;
         h = fnv1a(h, self.flops.len() as u64);
         for arr in [
             &self.flops,
@@ -206,6 +203,12 @@ pub enum FleetDelta {
 /// device that moved re-enters as retire + admit, which stays exact); the
 /// decomposition is only reported as [`FleetDelta::Churn`] when at least
 /// one device survives, since otherwise a rebuild does strictly less work.
+///
+/// The diff itself is O(D) signature compares — cheap next to an exact-
+/// mode Θ(E) oracle resweep, but the dominant per-event cost once the
+/// consumer runs `OracleMode::Indexed` sublinear splices at 100k+
+/// devices (a delta-aware entry that skips the diff when the caller
+/// already knows the join/leave positions is an open ROADMAP item).
 pub fn diff_fleets(old: &[DeviceSig], new: &[DeviceSig]) -> FleetDelta {
     if old == new {
         return FleetDelta::Identical;

@@ -15,14 +15,19 @@
 //! breakpoint/prefix-sum oracle whose root is a closed-form segment solve
 //! (zero hot-path bisection), incremental retire/admit updates under
 //! membership churn, parallel distinct-shape solves, and warm-start/memo
-//! reuse across churn sweeps. The seed bisection solvers are preserved as
-//! the parity baseline ([`solver::solve_gemm_reference`],
+//! reuse across churn sweeps. Churn updates follow the cache's
+//! [`oracle::OracleMode`]: bitwise-exact Θ(E) resweeps by default, or
+//! sublinear Fenwick-indexed deltas (O(√E) amortized per event) for
+//! 100k–1M-device fleets under an explicit tolerance contract. The seed bisection solvers are preserved
+//! as the parity baseline ([`solver::solve_gemm_reference`],
 //! [`solver::solve_region_reference_view`]).
 //!
 //! Device selection ([`select`]) closes the paper's third pillar: a
 //! marginal-utility admission optimizer that probes solved `T*` (warm, via
 //! the fast path) against PS fan-out, CVaR tail risk, and expected churn
-//! loss, reporting the cost/throughput frontier.
+//! loss, reporting the cost/throughput frontier; epoch re-selection
+//! warm-starts from the previous epoch's best prefix
+//! ([`select::select_devices_incremental`]).
 
 pub mod assignment;
 pub mod cost;
@@ -37,8 +42,11 @@ pub mod tiling;
 pub use assignment::{GemmAssignment, Rect, Schedule};
 pub use cost::{CostModel, GemmShape};
 pub use fastpath::{CacheStats, ShapeOracle, SolverCache};
-pub use oracle::SegmentOracle;
-pub use select::{select_devices, FrontierPoint, SelectConfig, SelectionOutcome};
+pub use oracle::{OracleMode, SegmentOracle};
+pub use select::{
+    select_devices, select_devices_incremental, FrontierPoint, SelectConfig, SelectionOutcome,
+    SelectionState,
+};
 pub use solver::{
     solve_dag, solve_dag_cached, solve_dag_reference, solve_gemm, solve_gemm_reference,
     SolverOptions, SolverStats,

@@ -22,12 +22,13 @@
 //!   Newton polish. No bisection iterations anywhere.
 //! * [`SegmentOracle::retire_many`] / [`SegmentOracle::admit_tail`] /
 //!   [`SegmentOracle::splice`] update the oracle **incrementally** under
-//!   churn: drop a retired device's ~6 events, ordered-merge an admitted
-//!   device's freshly emitted ones, then one linear coefficient resweep.
-//!   What a delta avoids is the per-device closed-form re-emission for
-//!   every survivor and the O(E log E) global re-sort — the splice itself
-//!   is Θ(E) (see the bitwise-reproducibility note below for why it is
-//!   not sublinear).
+//!   churn. The update cost depends on the [`OracleMode`]: exact mode
+//!   re-runs one linear coefficient resweep after the splice (Θ(E), but
+//!   bitwise-identical to a rebuild — see below); indexed mode maintains a
+//!   compensated Fenwick layer over the canonical event list and updates
+//!   **sublinearly** — O(√E) amortized per churn event, O(log E) for
+//!   retires of base-resident devices — behind an explicit tolerance
+//!   contract.
 //!
 //! ## Consumers
 //!
@@ -38,23 +39,66 @@
 //! | [`crate::sim::batch`] stage water-filling | fractional-capacity ramps clamped at 1 | 1.0 (one stage) |
 //! | [`crate::sched::select`] / [`crate::sim::session`] churn re-solves | via `fastpath`'s cached oracles | retire/admit deltas |
 //!
-//! ## Bitwise-reproducible incrementality
+//! ## Two incrementality contracts: `OracleMode::{Exact, Indexed}`
 //!
-//! Updating floating-point prefix sums in true O(log D) (e.g. a Fenwick
-//! tree over event deltas) cannot reproduce a from-scratch rebuild bit for
-//! bit — fp addition is not associative. The repo's churn-parity contract
-//! (retire/admit-then-solve must equal rebuild-then-solve *bitwise*, see
-//! `rust/tests/sched_properties.rs`) is the stronger property, so the delta
-//! API keeps the event list in one **canonical order** — `(t, slot, seq)`,
-//! where `slot` is a monotonically increasing per-device id and `seq` the
-//! per-device emission index — and re-runs only the linear sweep after a
-//! splice. Survivor slots keep their relative order and admitted devices
-//! always receive larger slots than every current one, so the spliced list
-//! is exactly the list a canonical rebuild over the new fleet would sort,
-//! and the resweep reproduces the rebuild's accumulations operation for
-//! operation. What a delta saves is the expensive part of a rebuild: the
-//! per-device piecewise-min decomposition (closed-form crossings, `sqrt`s)
-//! for every survivor, and the global event sort.
+//! Updating floating-point prefix sums in true O(log D) (a Fenwick tree
+//! over event deltas) cannot reproduce a from-scratch rebuild bit for bit
+//! — fp addition is not associative. The two modes pick the two useful
+//! points on that trade-off:
+//!
+//! **[`OracleMode::Exact`]** (the default) keeps the repo's churn-parity
+//! contract: retire/admit-then-solve equals rebuild-then-solve *bitwise*
+//! (see `rust/tests/sched_properties.rs`). The delta API keeps the event
+//! list in one **canonical order** — `(t, slot, seq)`, where `slot` is a
+//! monotonically increasing per-device id and `seq` the per-device
+//! emission index — and re-runs only the linear sweep after a splice.
+//! Survivor slots keep their relative order and admitted devices always
+//! receive larger slots than every current one, so the spliced list is
+//! exactly the list a canonical rebuild over the new fleet would sort, and
+//! the resweep reproduces the rebuild's accumulations operation for
+//! operation. What a delta saves is the per-device piecewise-min
+//! decomposition (closed-form crossings, `sqrt`s) for every survivor and
+//! the O(E log E) global re-sort; the resweep itself is Θ(E).
+//!
+//! **[`OracleMode::Indexed`]** trades the bitwise contract for sublinear
+//! updates — the fleet-scale (100k–1M device) churn path. Events carry
+//! absolute-coordinate quadratic coefficients recentered at the build's
+//! first event time, accumulated in a **compensated (two-float) Fenwick
+//! tree**; a retire tombstones the device's ~6 events with point
+//! subtractions (O(log E) each), an admit ordered-merges into a small
+//! sorted overlay, and the structure compacts (one canonical rebuild) when
+//! tombstones outnumber live events or the overlay outgrows ~√E — so a
+//! base-resident retire costs O(log E) and an admit O(√E) amortized (the
+//! overlay merge + compensated prefix rebuild; retiring a not-yet-
+//! compacted admit goes through the overlay too and costs the same),
+//! both far below the exact mode's Θ(E) resweep.
+//!
+//! ### The tolerance contract
+//!
+//! Indexed queries agree with exact mode within `rel_tol` (default 1e-9,
+//! gated by `prop_indexed_within_tol`) for targets up to ~90% of the
+//! aggregate plateau — the whole operating range of the solver consumers,
+//! whose feasibility headroom keeps `T*` well below the knee. As the
+//! target approaches the plateau the aggregate slope vanishes and *both*
+//! representations' fp value noise is amplified into the root
+//! (divergence ~ noise/slope); prototype measurements against
+//! high-precision ground truth show the compensated indexed representation
+//! is the *more* accurate side there (~1e-13 vs ~1e-9 for the exact
+//! sweep's sequential accumulation), so the divergence near the knee is
+//! bounded by the exact sweep's own noise, not the index's. Callers that
+//! must solve at the plateau edge — or that need bitwise rebuild parity —
+//! use exact mode; everything else may opt in per
+//! [`crate::sched::fastpath::SolverCache::with_mode`].
+//!
+//! One degenerate case sits outside both modes' conditioning: when the
+//! aggregate pauses exactly **flat at the target** (tiny shapes whose
+//! devices saturate before other devices' latency floors, with the target
+//! bitwise-equal to the flat value), the root is ambiguous — every point
+//! of the stretch covers the target — and a 1-ulp evaluation difference
+//! decides which end of the stretch either mode reports. The GEMM
+//! consumers never operate there (their areas take far longer to saturate
+//! than the 10–50 ms floor spread), and the property tests skip
+//! flat-at-target crossings explicitly.
 //!
 //! ## Numerical notes
 //!
@@ -213,6 +257,239 @@ fn event_cmp(x: &Event, y: &Event) -> std::cmp::Ordering {
     x.t.total_cmp(&y.t)
         .then(x.slot.cmp(&y.slot))
         .then(x.seq.cmp(&y.seq))
+}
+
+/// How the oracle maintains its aggregate state under churn — see the
+/// module docs for the two contracts.
+#[derive(Clone, Copy, Debug, PartialEq, Default)]
+pub enum OracleMode {
+    /// canonical event order + full linear resweep per splice; delta
+    /// updates are bitwise-identical to a rebuild (the default)
+    #[default]
+    Exact,
+    /// compensated Fenwick layer over the event list; sublinear delta
+    /// updates (O(√E) amortized; O(log E) base-resident retires) within
+    /// `rel_tol` of exact mode (the fleet-scale path)
+    Indexed {
+        /// relative tolerance of the contract (see the module docs);
+        /// [`OracleMode::INDEXED_DEFAULT_TOL`] unless the caller knows
+        /// better
+        rel_tol: f64,
+    },
+}
+
+impl OracleMode {
+    /// The default indexed-mode tolerance, validated by
+    /// `prop_indexed_within_tol` (worst observed divergence under churn on
+    /// realistic fleets/shapes is below 1e-9 for targets ≤ 0.9·plateau).
+    pub const INDEXED_DEFAULT_TOL: f64 = 1e-9;
+
+    /// Indexed mode at the default tolerance.
+    pub fn indexed() -> OracleMode {
+        OracleMode::Indexed {
+            rel_tol: OracleMode::INDEXED_DEFAULT_TOL,
+        }
+    }
+}
+
+/// Branch-free two-sum: `a + b` as a rounded sum plus its exact residue.
+#[inline]
+fn two_sum(a: f64, b: f64) -> (f64, f64) {
+    let s = a + b;
+    let bb = s - a;
+    (s, (a - (s - bb)) + (b - bb))
+}
+
+/// Aggregate prefix state of the indexed layer: the absolute-coordinate
+/// quadratic `a·u² + b·u + c` (with `u = t − tref`), the exact const-piece
+/// sum `cs`, and the integer count of devices on non-constant pieces.
+#[derive(Clone, Copy, Default)]
+struct Agg {
+    a: f64,
+    b: f64,
+    c: f64,
+    cs: f64,
+    nn: i64,
+}
+
+impl Agg {
+    fn combine(&self, o: &Agg) -> Agg {
+        Agg {
+            a: self.a + o.a,
+            b: self.b + o.b,
+            c: self.c + o.c,
+            cs: self.cs + o.cs,
+            nn: self.nn + o.nn,
+        }
+    }
+}
+
+/// One event's absolute-coordinate coefficients about `tref`:
+/// `dv + ds·(u − ue) + da·(u − ue)²` expanded in `u`.
+fn abs_coeffs(e: &Event, tref: f64) -> Agg {
+    let ue = e.t - tref;
+    Agg {
+        a: e.da,
+        b: e.ds - 2.0 * e.da * ue,
+        c: e.dv - e.ds * ue + e.da * ue * ue,
+        cs: e.dc,
+        nn: e.dnn,
+    }
+}
+
+/// Fenwick (binary indexed) tree over event coefficient deltas. The four
+/// fp components are accumulated in compensated (hi + lo) form: event
+/// coefficients cancel in huge +/− pairs as devices transition between
+/// pieces (a saturation event negates its ramp-on event), and plain f64
+/// partial sums would leave O(eps·Σ|coeff|) residues that the vanishing
+/// aggregate slope near the plateau amplifies into the solved root. The
+/// non-const device count is an exact integer.
+struct CoeffFenwick {
+    hi: Vec<[f64; 4]>,
+    lo: Vec<[f64; 4]>,
+    nn: Vec<i64>,
+}
+
+impl CoeffFenwick {
+    fn new(n: usize) -> CoeffFenwick {
+        CoeffFenwick {
+            hi: vec![[0.0; 4]; n + 1],
+            lo: vec![[0.0; 4]; n + 1],
+            nn: vec![0; n + 1],
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.hi.len() - 1
+    }
+
+    /// Add `g` at event position `i` (0-based) in O(log E).
+    fn add(&mut self, i: usize, g: &Agg) {
+        let vals = [g.a, g.b, g.c, g.cs];
+        let mut i = i + 1;
+        while i < self.hi.len() {
+            for k in 0..4 {
+                let (s, e) = two_sum(self.hi[i][k], vals[k]);
+                self.hi[i][k] = s;
+                self.lo[i][k] += e;
+            }
+            self.nn[i] += g.nn;
+            i += i & i.wrapping_neg();
+        }
+    }
+
+    /// Compensated sum over event positions `[0, i)` in O(log E).
+    fn prefix(&self, mut i: usize) -> Agg {
+        let mut hi = [0.0f64; 4];
+        let mut lo = [0.0f64; 4];
+        let mut nn = 0i64;
+        while i > 0 {
+            for k in 0..4 {
+                let (s, e) = two_sum(hi[k], self.hi[i][k]);
+                hi[k] = s;
+                lo[k] += e + self.lo[i][k];
+            }
+            nn += self.nn[i];
+            i -= i & i.wrapping_neg();
+        }
+        Agg {
+            a: hi[0] + lo[0],
+            b: hi[1] + lo[1],
+            c: hi[2] + lo[2],
+            cs: hi[3] + lo[3],
+            nn,
+        }
+    }
+}
+
+/// The indexed layer of [`OracleMode::Indexed`]: a compensated Fenwick
+/// over the (tombstoned) base event list plus a small sorted overlay of
+/// admitted events, compacted when either outgrows its bound.
+struct IndexState {
+    /// recentering reference of the absolute coefficients (the base
+    /// build's first event time; reset at every compaction)
+    tref: f64,
+    /// base event times, sorted; tombstoned events keep their entry
+    times: Vec<f64>,
+    live: Vec<bool>,
+    dead: usize,
+    fen: CoeffFenwick,
+    /// base event positions per live base slot (admitted slots live in
+    /// the overlay until the next compaction)
+    slot_events: std::collections::HashMap<u64, Vec<u32>>,
+    /// admitted events in canonical order, not yet compacted into the base
+    overlay: Vec<Event>,
+    /// compensated prefix aggregates over the overlay (len = overlay + 1)
+    ovp: Vec<Agg>,
+}
+
+impl IndexState {
+    /// Build the index over an already-canonically-sorted event list.
+    fn build(events: &[Event]) -> IndexState {
+        let tref = events.first().map(|e| e.t).unwrap_or(0.0);
+        let mut fen = CoeffFenwick::new(events.len());
+        let mut slot_events: std::collections::HashMap<u64, Vec<u32>> =
+            std::collections::HashMap::new();
+        for (i, e) in events.iter().enumerate() {
+            fen.add(i, &abs_coeffs(e, tref));
+            slot_events.entry(e.slot).or_default().push(i as u32);
+        }
+        IndexState {
+            tref,
+            times: events.iter().map(|e| e.t).collect(),
+            live: vec![true; events.len()],
+            dead: 0,
+            fen,
+            slot_events,
+            overlay: Vec::new(),
+            ovp: vec![Agg::default()],
+        }
+    }
+
+    /// Recompute the compensated overlay prefix aggregates.
+    fn rebuild_overlay_prefix(&mut self) {
+        let mut hi = [0.0f64; 4];
+        let mut lo = [0.0f64; 4];
+        let mut nn = 0i64;
+        self.ovp.clear();
+        self.ovp.reserve(self.overlay.len() + 1);
+        self.ovp.push(Agg::default());
+        for e in &self.overlay {
+            let g = abs_coeffs(e, self.tref);
+            for (k, v) in [g.a, g.b, g.c, g.cs].into_iter().enumerate() {
+                let (s, err) = two_sum(hi[k], v);
+                hi[k] = s;
+                lo[k] += err;
+            }
+            nn += g.nn;
+            self.ovp.push(Agg {
+                a: hi[0] + lo[0],
+                b: hi[1] + lo[1],
+                c: hi[2] + lo[2],
+                cs: hi[3] + lo[3],
+                nn,
+            });
+        }
+    }
+
+    /// Aggregate coefficients of every event with time <= `t`.
+    fn agg_at(&self, t: f64) -> Agg {
+        let i = self.times.partition_point(|&x| x <= t);
+        let base = self.fen.prefix(i);
+        let j = self.overlay.partition_point(|e| e.t <= t);
+        base.combine(&self.ovp[j])
+    }
+
+    /// Full aggregate (every event).
+    fn agg_all(&self) -> Agg {
+        self.fen
+            .prefix(self.fen.len())
+            .combine(self.ovp.last().unwrap())
+    }
+
+    fn live_events(&self) -> usize {
+        self.times.len() - self.dead + self.overlay.len()
+    }
 }
 
 /// Emit the piecewise-min transition events of one family into `events`.
@@ -409,13 +686,27 @@ pub struct SegmentOracle {
     cs: Vec<f64>,
     /// number of devices on non-constant pieces per segment
     nn: Vec<i64>,
+    mode: OracleMode,
+    /// the Fenwick layer; `Some` exactly when `mode` is `Indexed` (in
+    /// indexed mode `events` is the tombstoned base list and the swept
+    /// per-segment arrays stay empty)
+    index: Option<IndexState>,
 }
 
 impl SegmentOracle {
-    /// Build the oracle over `d` devices, or `None` when any family fails
-    /// the decomposition precondition (the caller then uses its scan
-    /// fallback). Emission chunks across threads for large fleets.
+    /// Build the oracle over `d` devices in [`OracleMode::Exact`], or
+    /// `None` when any family fails the decomposition precondition (the
+    /// caller then uses its scan fallback). Emission chunks across threads
+    /// for large fleets.
     pub fn build<F>(d: usize, family_of: F) -> Option<SegmentOracle>
+    where
+        F: Fn(usize) -> Option<DeviceCurve> + Sync,
+    {
+        SegmentOracle::build_with_mode(d, family_of, OracleMode::Exact)
+    }
+
+    /// [`SegmentOracle::build`] with an explicit [`OracleMode`].
+    pub fn build_with_mode<F>(d: usize, family_of: F, mode: OracleMode) -> Option<SegmentOracle>
     where
         F: Fn(usize) -> Option<DeviceCurve> + Sync,
     {
@@ -448,6 +739,10 @@ impl SegmentOracle {
             gen_range(0, d)?
         };
         events.sort_unstable_by(event_cmp);
+        let index = match mode {
+            OracleMode::Exact => None,
+            OracleMode::Indexed { .. } => Some(IndexState::build(&events)),
+        };
         let mut oracle = SegmentOracle {
             events,
             slots: (0..d as u64).collect(),
@@ -458,9 +753,18 @@ impl SegmentOracle {
             a: Vec::new(),
             cs: Vec::new(),
             nn: Vec::new(),
+            mode,
+            index,
         };
-        oracle.sweep();
+        if oracle.index.is_none() {
+            oracle.sweep();
+        }
         Some(oracle)
+    }
+
+    /// The maintenance mode this oracle was built with.
+    pub fn mode(&self) -> OracleMode {
+        self.mode
     }
 
     /// Re-accumulate the per-segment state from the (already canonical)
@@ -517,6 +821,15 @@ impl SegmentOracle {
 
     /// Aggregate capacity at `t` in O(log D).
     pub fn total(&self, t: f64) -> f64 {
+        if let Some(idx) = &self.index {
+            let g = idx.agg_at(t);
+            if g.nn == 0 {
+                // all active devices are capped: the exactly-summed consts
+                return g.cs;
+            }
+            let u = t - idx.tref;
+            return g.a * u * u + g.b * u + g.c;
+        }
         let idx = self.ts.partition_point(|&x| x <= t);
         if idx == 0 {
             return 0.0;
@@ -540,6 +853,12 @@ impl SegmentOracle {
 
     /// The terminal plateau — the largest coverable target.
     pub fn plateau(&self) -> f64 {
+        if let Some(idx) = &self.index {
+            let g = idx.agg_all();
+            // emission guarantees every family ends on a constant piece,
+            // so the full aggregate has nn == 0 whenever events exist
+            return if g.nn == 0 { g.cs } else { 0.0 };
+        }
         if let (Some(&nn), Some(&cs)) = (self.nn.last(), self.cs.last()) {
             if nn == 0 {
                 return cs;
@@ -550,8 +869,12 @@ impl SegmentOracle {
         0.0
     }
 
-    /// Number of breakpoint segments (diagnostics).
+    /// Number of breakpoint segments (diagnostics; in indexed mode, the
+    /// live event count).
     pub fn segments(&self) -> usize {
+        if let Some(idx) = &self.index {
+            return idx.live_events();
+        }
         self.ts.len()
     }
 
@@ -567,6 +890,9 @@ impl SegmentOracle {
     pub fn solve_target(&self, target: f64) -> Option<f64> {
         if target <= 0.0 {
             return Some(0.0);
+        }
+        if self.index.is_some() {
+            return self.solve_target_indexed(target);
         }
         let nseg = self.ts.len();
         if nseg == 0 || target > self.plateau() {
@@ -630,10 +956,102 @@ impl SegmentOracle {
         Some(t)
     }
 
-    /// Retire the devices at the given current positions (ascending):
-    /// drop their events from the canonical list and resweep. Survivor
-    /// slots keep their relative order, so the result is bit-identical to
-    /// a canonical rebuild over the survivors.
+    /// The indexed-mode root: locate the crossing inter-event segment by
+    /// binary-searching the base and overlay boundary lists with O(log E)
+    /// aggregate probes, then take the numerically stable closed form
+    /// `dt = 2·need / (s + sqrt(s² + 4·a·need))` — immune to the
+    /// cancellation the textbook `(−s + sqrt(…))/2a` suffers when the
+    /// residual aggregate curvature is fp noise — plus one guarded Newton
+    /// polish.
+    fn solve_target_indexed(&self, target: f64) -> Option<f64> {
+        let idx = self.index.as_ref().unwrap();
+        if target > self.plateau() {
+            return None;
+        }
+        // First boundary (per list) whose inclusive aggregate reaches the
+        // target; total() is monotone, so the predicate is monotone in the
+        // sorted index.
+        let first_at_least = |times: &dyn Fn(usize) -> f64, len: usize| -> Option<f64> {
+            let (mut lo, mut hi) = (0usize, len);
+            while lo < hi {
+                let mid = (lo + hi) / 2;
+                if self.total(times(mid)) < target {
+                    lo = mid + 1;
+                } else {
+                    hi = mid;
+                }
+            }
+            (lo < len).then(|| times(lo))
+        };
+        let tb = first_at_least(&|i| idx.times[i], idx.times.len());
+        let to = first_at_least(&|i| idx.overlay[i].t, idx.overlay.len());
+        let t_hi = match (tb, to) {
+            (Some(a), Some(b)) => a.min(b),
+            (Some(a), None) => a,
+            (None, Some(b)) => b,
+            (None, None) => return None, // no events at all
+        };
+        // Largest boundary strictly below the crossing boundary.
+        let mut t_lo = f64::NEG_INFINITY;
+        let i = idx.times.partition_point(|&x| x < t_hi);
+        if i > 0 {
+            t_lo = t_lo.max(idx.times[i - 1]);
+        }
+        let j = idx.overlay.partition_point(|e| e.t < t_hi);
+        if j > 0 {
+            t_lo = t_lo.max(idx.overlay[j - 1].t);
+        }
+        if !t_lo.is_finite() {
+            return Some(t_hi); // the very first event carries the jump
+        }
+        let g = idx.agg_at(t_lo);
+        if g.nn == 0 {
+            // flat below the target: the crossing is the value jump at the
+            // next boundary
+            return Some(t_hi);
+        }
+        let u_lo = t_lo - idx.tref;
+        let vj = g.a * u_lo * u_lo + g.b * u_lo + g.c;
+        let sj = 2.0 * g.a * u_lo + g.b;
+        let aj = g.a;
+        let need = target - vj;
+        let mut dt = 0.0;
+        if need > 0.0 {
+            let disc = sj * sj + 4.0 * aj * need;
+            if disc >= 0.0 {
+                let den = sj + disc.sqrt();
+                if den > 0.0 {
+                    dt = 2.0 * need / den;
+                }
+            } else if sj > 0.0 {
+                dt = need / sj;
+            }
+        }
+        if !(dt >= 0.0) {
+            dt = 0.0; // NaN guard: clamp to the segment start
+        }
+        let mut t = t_lo + dt;
+        if t > t_hi {
+            t = t_hi;
+        }
+        // One Newton polish on the segment polynomial (guarded to stay in
+        // the segment).
+        let dtp = t - t_lo;
+        let val = vj + sj * dtp + aj * dtp * dtp;
+        let slope = sj + 2.0 * aj * dtp;
+        if slope > 0.0 {
+            let t2 = t - (val - target) / slope;
+            if (t_lo..=t_hi).contains(&t2) {
+                t = t2;
+            }
+        }
+        Some(t)
+    }
+
+    /// Retire the devices at the given current positions (ascending).
+    /// Survivor slots keep their relative order; in exact mode the result
+    /// is bit-identical to a canonical rebuild over the survivors, in
+    /// indexed mode the retired events are tombstoned in O(log E) each.
     pub fn retire_many(&mut self, positions: &[usize]) {
         // infallible: unwrap is safe (no admissions to fail)
         self.splice(positions, 0, |_| Some(DeviceCurve::Zero)).unwrap();
@@ -650,13 +1068,19 @@ impl SegmentOracle {
     }
 
     /// Apply one membership delta — retire the (ascending) current
-    /// `positions` AND admit `count` fresh tail devices — with a single
-    /// merge and a single resweep. Fresh events are emitted *before* any
-    /// mutation, so on `None` (an admitted family failed the
-    /// decomposition precondition) the oracle is left fully untouched.
-    /// Admitted slots exceed every current slot and survivors keep their
-    /// relative order, so the spliced list stays canonical and the
-    /// resweep is bit-identical to a rebuild over the new fleet.
+    /// `positions` AND admit `count` fresh tail devices. Fresh events are
+    /// emitted *before* any mutation, so on `None` (an admitted family
+    /// failed the decomposition precondition) the oracle is left fully
+    /// untouched.
+    ///
+    /// In [`OracleMode::Exact`] this is a single merge plus a single
+    /// linear resweep: admitted slots exceed every current slot and
+    /// survivors keep their relative order, so the spliced list stays
+    /// canonical and the resweep is bit-identical to a rebuild over the
+    /// new fleet. In [`OracleMode::Indexed`] base-resident retires are
+    /// O(log E) point subtractions, while admits — and retires of
+    /// not-yet-compacted admits — go through the sorted overlay (O(√E)
+    /// amortized each), within the mode's tolerance contract.
     pub fn splice<F>(&mut self, positions: &[usize], count: usize, mut family_of: F) -> Option<()>
     where
         F: FnMut(usize) -> Option<DeviceCurve>,
@@ -677,11 +1101,10 @@ impl SegmentOracle {
             }
         }
         fresh.sort_unstable_by(event_cmp);
-        // Drop the retired devices' events and slots.
+        // Retired slots (ascending slot ids), and the surviving slot list.
+        let mut removed: Vec<u64> = positions.iter().map(|&p| self.slots[p]).collect();
+        removed.sort_unstable();
         if !positions.is_empty() {
-            let mut removed: Vec<u64> = positions.iter().map(|&p| self.slots[p]).collect();
-            removed.sort_unstable();
-            self.events.retain(|e| removed.binary_search(&e.slot).is_err());
             let mut keep: Vec<u64> = Vec::with_capacity(self.slots.len() - removed.len());
             for (p, &slot) in self.slots.iter().enumerate() {
                 if positions.binary_search(&p).is_err() {
@@ -690,8 +1113,20 @@ impl SegmentOracle {
             }
             self.slots = keep;
         }
-        // Ordered merge: on equal keys the old event wins (its slot is
-        // strictly smaller), matching the canonical global sort.
+        self.slots.extend_from_slice(&new_slots);
+        self.next_slot += count as u64;
+
+        if self.index.is_some() {
+            self.apply_indexed(&removed, fresh);
+            return Some(());
+        }
+
+        // Exact mode: drop retired events, ordered-merge the fresh ones
+        // (on equal keys the old event wins — its slot is strictly
+        // smaller, matching the canonical global sort), one resweep.
+        if !removed.is_empty() {
+            self.events.retain(|e| removed.binary_search(&e.slot).is_err());
+        }
         if !fresh.is_empty() {
             let mut merged: Vec<Event> = Vec::with_capacity(self.events.len() + fresh.len());
             let (mut i, mut j) = (0usize, 0usize);
@@ -708,10 +1143,91 @@ impl SegmentOracle {
             merged.extend_from_slice(&fresh[j..]);
             self.events = merged;
         }
-        self.slots.extend_from_slice(&new_slots);
-        self.next_slot += count as u64;
         self.sweep();
         Some(())
+    }
+
+    /// Indexed-mode delta application: tombstone the retired slots' base
+    /// events with Fenwick point subtractions (overlay slots are retained
+    /// out of the overlay directly), merge the fresh events into the
+    /// overlay, then compact if either structure outgrew its bound.
+    fn apply_indexed(&mut self, removed: &[u64], fresh: Vec<Event>) {
+        let idx = self.index.as_mut().unwrap();
+        let mut overlay_dirty = false;
+        for &slot in removed {
+            if let Some(positions) = idx.slot_events.remove(&slot) {
+                for p in positions {
+                    let p = p as usize;
+                    let e = &self.events[p];
+                    let g = abs_coeffs(e, idx.tref);
+                    let neg = Agg {
+                        a: -g.a,
+                        b: -g.b,
+                        c: -g.c,
+                        cs: -g.cs,
+                        nn: -g.nn,
+                    };
+                    idx.fen.add(p, &neg);
+                    idx.live[p] = false;
+                    idx.dead += 1;
+                }
+            } else {
+                // an admitted-then-retired device: its events live in the
+                // overlay (a slot is entirely base or entirely overlay)
+                let before = idx.overlay.len();
+                idx.overlay.retain(|e| e.slot != slot);
+                overlay_dirty |= idx.overlay.len() != before;
+            }
+        }
+        if !fresh.is_empty() {
+            let mut merged: Vec<Event> = Vec::with_capacity(idx.overlay.len() + fresh.len());
+            let (mut i, mut j) = (0usize, 0usize);
+            while i < idx.overlay.len() && j < fresh.len() {
+                if event_cmp(&idx.overlay[i], &fresh[j]) != std::cmp::Ordering::Greater {
+                    merged.push(idx.overlay[i]);
+                    i += 1;
+                } else {
+                    merged.push(fresh[j]);
+                    j += 1;
+                }
+            }
+            merged.extend_from_slice(&idx.overlay[i..]);
+            merged.extend_from_slice(&fresh[j..]);
+            idx.overlay = merged;
+            overlay_dirty = true;
+        }
+        if overlay_dirty {
+            idx.rebuild_overlay_prefix();
+        }
+        // Amortized compaction: one canonical rebuild per >= E/2 retires
+        // or ~sqrt(E) admits, so steady churn streams pay O(log E) per
+        // retire and O(sqrt E) per admit (the overlay merge above), plus
+        // an O(1)-amortized share of the rebuild.
+        let live_base = idx.times.len() - idx.dead;
+        let overlay_cap = 64.max(((live_base + idx.overlay.len()) as f64).sqrt() as usize);
+        if idx.dead > live_base || idx.overlay.len() > overlay_cap {
+            let mut compacted: Vec<Event> = Vec::with_capacity(live_base + idx.overlay.len());
+            let (mut i, mut j) = (0usize, 0usize);
+            while i < self.events.len() || j < idx.overlay.len() {
+                if i < self.events.len() && !idx.live[i] {
+                    i += 1;
+                    continue;
+                }
+                if i < self.events.len()
+                    && (j >= idx.overlay.len()
+                        || event_cmp(&self.events[i], &idx.overlay[j])
+                            != std::cmp::Ordering::Greater)
+                {
+                    compacted.push(self.events[i]);
+                    i += 1;
+                } else {
+                    compacted.push(idx.overlay[j]);
+                    j += 1;
+                }
+            }
+            self.events = compacted;
+            self.index = Some(IndexState::build(&self.events));
+        }
     }
 }
 
@@ -871,6 +1387,143 @@ mod tests {
         let before = o.total(1.0);
         let nd = o.devices();
         // a family with a non-finite floor must be rejected
+        let bad = |_i: usize| -> Option<DeviceCurve> { None };
+        assert!(o.admit_tail(1, bad).is_none());
+        assert_eq!(o.devices(), nd);
+        assert_eq!(o.total(1.0).to_bits(), before.to_bits());
+    }
+
+    fn rel(a: f64, b: f64) -> f64 {
+        (a - b).abs() / a.abs().max(b.abs()).max(1e-12)
+    }
+
+    /// Compare an indexed oracle against an exact one over a time grid and
+    /// a spread of plateau-fraction targets inside the tolerance contract.
+    fn assert_indexed_tracks_exact(ex: &SegmentOracle, ix: &SegmentOracle, tol: f64, what: &str) {
+        let plat = ex.plateau();
+        assert!(rel(plat, ix.plateau()) <= tol, "{what}: plateau");
+        for i in 0..120 {
+            let t = 0.05 * i as f64;
+            let (a, b) = (ex.total(t), ix.total(t));
+            assert!(
+                (a - b).abs() <= tol * a.abs().max(b.abs()).max(plat * 1e-9),
+                "{what}: total({t}) exact {a} vs indexed {b}"
+            );
+        }
+        for frac in [0.01, 0.05, 0.3, 0.6, 0.8, 0.9] {
+            let target = plat * frac;
+            let (a, b) = (
+                ex.solve_target(target).unwrap(),
+                ix.solve_target(target).unwrap(),
+            );
+            assert!(
+                rel(a, b) <= tol,
+                "{what}: solve({frac}·plateau) exact {a} vs indexed {b}"
+            );
+        }
+        assert!(ix.solve_target(plat * 1.001).is_none(), "{what}: beyond plateau");
+    }
+
+    #[test]
+    fn indexed_build_matches_exact_queries() {
+        let d = 24;
+        let ex = SegmentOracle::build(d, toy_family).unwrap();
+        let ix = SegmentOracle::build_with_mode(d, toy_family, OracleMode::indexed()).unwrap();
+        assert_eq!(ix.mode(), OracleMode::indexed());
+        assert_eq!(ex.mode(), OracleMode::Exact);
+        assert_eq!(ix.devices(), d);
+        assert!(ix.segments() > 0);
+        assert_indexed_tracks_exact(&ex, &ix, 1e-9, "build");
+        assert_eq!(ix.solve_target(0.0), Some(0.0));
+    }
+
+    #[test]
+    fn indexed_quad_chain_matches_exact() {
+        let fam = |_k: usize| -> Option<DeviceCurve> {
+            let mut f = MinFamily::new(0.0);
+            f.push_const(100.0);
+            f.chain = Some(QuadChain {
+                aq: 1.0,
+                ld: 0.0,
+                tq: 2.0,
+                lin: Piece::Lin { slope: 4.0, off: 1.0 },
+                tl: 4.0,
+                sat: 12.0,
+            });
+            Some(DeviceCurve::Curve(f))
+        };
+        let ex = SegmentOracle::build(5, fam).unwrap();
+        let ix = SegmentOracle::build_with_mode(5, fam, OracleMode::indexed()).unwrap();
+        assert_indexed_tracks_exact(&ex, &ix, 1e-9, "quad chain");
+    }
+
+    #[test]
+    fn indexed_splice_tracks_exact_through_compaction() {
+        // A churn stream long enough to force both compaction triggers:
+        // > sqrt(E) admits (overlay overflow) and > E/2 retires
+        // (tombstone overflow). The exact oracle splices alongside as the
+        // reference at every step.
+        let d = 40;
+        let mut ex = SegmentOracle::build(d, toy_family).unwrap();
+        let mut ix = SegmentOracle::build_with_mode(d, toy_family, OracleMode::indexed()).unwrap();
+        let mut next_extra = 100usize;
+        for step in 0..110usize {
+            if step % 3 == 0 && ex.devices() > 8 {
+                // retire a varying position
+                let pos = step % ex.devices();
+                ex.retire_many(&[pos]);
+                ix.retire_many(&[pos]);
+            } else {
+                // admit one fresh device at the tail
+                let k = next_extra;
+                next_extra += 1;
+                ex.admit_tail(1, |_| toy_family(k)).unwrap();
+                ix.admit_tail(1, |_| toy_family(k)).unwrap();
+            }
+            assert_eq!(ex.devices(), ix.devices(), "step {step}");
+            if step % 7 == 0 || step == 109 {
+                assert_indexed_tracks_exact(&ex, &ix, 1e-9, &format!("churn step {step}"));
+            }
+        }
+        // retire-heavy tail: push the tombstone trigger
+        while ex.devices() > 6 {
+            ex.retire_many(&[0]);
+            ix.retire_many(&[0]);
+        }
+        assert_indexed_tracks_exact(&ex, &ix, 1e-9, "after mass retirement");
+    }
+
+    #[test]
+    fn indexed_mixed_splice_matches_exact() {
+        // One mixed leave+join delta through splice() itself.
+        let d = 16;
+        let mut ex = SegmentOracle::build(d, toy_family).unwrap();
+        let mut ix = SegmentOracle::build_with_mode(d, toy_family, OracleMode::indexed()).unwrap();
+        let extra = [50usize, 51, 52];
+        ex.splice(&[1, 7, 11], 3, |i| toy_family(extra[i])).unwrap();
+        ix.splice(&[1, 7, 11], 3, |i| toy_family(extra[i])).unwrap();
+        assert_indexed_tracks_exact(&ex, &ix, 1e-9, "mixed splice");
+    }
+
+    #[test]
+    fn indexed_plateau_jumps_land_on_boundaries() {
+        let fam = |_k: usize| -> Option<DeviceCurve> {
+            let mut f = MinFamily::new(1.0);
+            f.push_const(5.0);
+            Some(DeviceCurve::Curve(f))
+        };
+        let o = SegmentOracle::build_with_mode(1, fam, OracleMode::indexed()).unwrap();
+        assert_eq!(o.total(0.5), 0.0);
+        assert_eq!(o.total(1.5), 5.0);
+        assert_eq!(o.solve_target(5.0), Some(1.0));
+        assert!(o.solve_target(5.1).is_none());
+    }
+
+    #[test]
+    fn indexed_failed_admit_leaves_oracle_untouched() {
+        let mut o = SegmentOracle::build_with_mode(4, toy_family, OracleMode::indexed()).unwrap();
+        let before = o.total(1.0);
+        let nd = o.devices();
         let bad = |_i: usize| -> Option<DeviceCurve> { None };
         assert!(o.admit_tail(1, bad).is_none());
         assert_eq!(o.devices(), nd);

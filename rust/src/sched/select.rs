@@ -23,7 +23,15 @@
 //!   **cost/throughput frontier**; a geometric sweep plus local refinement
 //!   finds the objective minimum, and a final eviction pass drops admitted
 //!   devices the solver left idle (the Eq. 6 idle branch made their
-//!   admission pure cost).
+//!   admission pure cost);
+//! * epoch re-selection is **warm-started**
+//!   ([`select_devices_incremental`]): when the membership delta since the
+//!   previous sweep is at most a single join/leave, the search is seeded
+//!   from that sweep's best prefix and probes only the perturbed O(log D)
+//!   neighborhood — the full geometric sweep (which probes up to the pool
+//!   size) runs only on the first epoch or after a multi-device delta.
+//!   [`crate::sched::fastpath::CacheStats::selection_warm_starts`] /
+//!   `selection_cold_sweeps` make the routing observable.
 //!
 //! Straggler risk enters through the Appendix-C CVaR adjustment
 //! ([`crate::sched::cvar::risk_adjusted`]): planning latencies are replaced
@@ -42,6 +50,7 @@ use crate::sched::cvar::risk_adjusted;
 use crate::sched::fastpath::{distinct_shapes, SolverCache};
 use crate::sched::solver::{solve_dag_cached, SolverOptions};
 use crate::util::json::{obj, Json};
+use crate::util::{fnv1a, FNV1A_SEED};
 
 /// Reference horizon for the capability ordering score.
 const SCORE_HORIZON_S: f64 = 2.0;
@@ -133,6 +142,9 @@ pub struct SelectionOutcome {
     pub t_star: f64,
     /// planned per-batch objective of the admitted set
     pub objective: f64,
+    /// prefix size the sweep converged to (pre-eviction) — the seed the
+    /// next epoch's warm start resumes from
+    pub best_prefix: usize,
     /// probed `(n, T*, costs)` points, ascending in `n` (the eviction-pass
     /// point, if adopted, is appended last and may repeat an `n`)
     pub frontier: Vec<FrontierPoint>,
@@ -236,27 +248,91 @@ impl Prober<'_> {
     }
 }
 
-/// Optimize admission over `candidates` (the caller's planning view — e.g.
-/// [`crate::cluster::pool::DevicePool::planning_devices`]): minimize the
-/// per-batch objective `T* + PS fan-out + expected churn loss`, with `T*`
-/// solved under the CVaR latency adjustment. Probes share `cache`, so
-/// chaining the same cache across membership epochs keeps every probe on
-/// the warm fast path.
-pub fn select_devices(
+/// Cross-epoch warm-start state for the admission optimizer: the previous
+/// sweep's capability order (as per-device parameter hashes) and the
+/// prefix size it converged to. Carried by the caller across membership
+/// epochs ([`crate::sim::session`] keeps one per session) and consumed by
+/// [`select_devices_incremental`].
+#[derive(Clone, Debug, Default)]
+pub struct SelectionState {
+    /// per-device parameter hashes of the last sweep's candidates, in
+    /// capability order
+    order_sigs: Vec<u64>,
+    /// prefix size the last sweep converged to (pre-eviction)
+    best_n: usize,
+}
+
+impl SelectionState {
+    pub fn new() -> SelectionState {
+        SelectionState::default()
+    }
+
+    /// Whether the state carries a usable previous-epoch seed.
+    pub fn is_seeded(&self) -> bool {
+        self.best_n > 0
+    }
+}
+
+/// Content hash of the parameters the capability order and the solves
+/// depend on — equal hashes mean the device contributes identically to
+/// every probe.
+fn device_param_sig(d: &Device) -> u64 {
+    let mut h: u64 = FNV1A_SEED;
+    for x in [
+        d.flops, d.utilization, d.ul_bw, d.dl_bw, d.ul_lat, d.dl_lat, d.mem,
+    ] {
+        h = fnv1a(h, x.to_bits());
+    }
+    h
+}
+
+/// `new` equals `old` up to at most one single-element insertion or
+/// deletion (the single join/leave membership delta warm starts accept).
+fn single_edit(old: &[u64], new: &[u64]) -> bool {
+    if old == new {
+        return true;
+    }
+    let (short, long) = if new.len() + 1 == old.len() {
+        (new, old)
+    } else if old.len() + 1 == new.len() {
+        (old, new)
+    } else {
+        return false;
+    };
+    let mut i = 0usize;
+    let mut skipped = false;
+    for &x in long {
+        if i < short.len() && short[i] == x {
+            i += 1;
+        } else if !skipped {
+            skipped = true;
+        } else {
+            return false;
+        }
+    }
+    i == short.len()
+}
+
+/// How the prefix search is driven: the full geometric sweep, or a local
+/// search seeded at the previous epoch's best prefix.
+enum SweepSeed {
+    Cold,
+    Warm { seed_n: usize },
+}
+
+/// Risk-adjust the candidates and order them by capability score.
+fn capability_order(
     candidates: &[Device],
     dag: &GemmDag,
     cm: &CostModel,
-    ps: &PsParams,
     cfg: &SelectConfig,
-    cache: &mut SolverCache,
-) -> SelectionOutcome {
+) -> (Vec<Device>, Vec<usize>) {
     assert!(!candidates.is_empty(), "empty candidate pool");
     let planning: Vec<Device> = match cfg.cvar {
         Some((alpha, beta)) => risk_adjusted(candidates, alpha, beta),
         None => candidates.to_vec(),
     };
     let n = planning.len();
-
     // Capability ordering at a reference horizon; ties broken by raw FLOPS.
     let g0 = dag.levels[0].gemms[0];
     let ref_shape = GemmShape::new(g0.m, g0.n, g0.q, g0.count);
@@ -270,11 +346,28 @@ pub fn select_devices(
             .total_cmp(&scores[a])
             .then(planning[b].flops.total_cmp(&planning[a].flops))
     });
+    (planning, order)
+}
 
-    let k_min = min_feasible_prefix(&planning, &order, dag, cm);
+/// The shared admission optimization over an already-ordered planning
+/// view: probe prefix sizes per `seed`, refine locally, evict solver-idle
+/// devices, and report the frontier.
+#[allow(clippy::too_many_arguments)]
+fn run_admission(
+    planning: &[Device],
+    order: &[usize],
+    dag: &GemmDag,
+    cm: &CostModel,
+    ps: &PsParams,
+    cfg: &SelectConfig,
+    cache: &mut SolverCache,
+    seed: SweepSeed,
+) -> SelectionOutcome {
+    let n = order.len();
+    let k_min = min_feasible_prefix(planning, order, dag, cm);
     let mut prober = Prober {
-        planning: &planning,
-        order: &order,
+        planning,
+        order,
         dag,
         cm,
         ps,
@@ -284,48 +377,90 @@ pub fn select_devices(
         probes: 0,
     };
 
-    // Geometric sweep of prefix sizes (always including the take-all point,
-    // so selection can never report worse than admitting everyone).
-    let mut ks: Vec<usize> = Vec::new();
-    let mut k = k_min;
-    while k < n {
-        ks.push(k);
-        k = (k * 2).min(n);
-    }
-    ks.push(n);
-
-    let mut best = prober.prefix(ks[0]);
-    for &k in &ks[1..] {
-        let p = prober.prefix(k);
-        if p.objective < best.objective {
-            best = p;
-        }
-    }
-
-    // Local refinement around the sweep minimum (J is near-unimodal in the
-    // prefix size: T* falls with diminishing returns, costs rise linearly).
-    let mut step = (best.n / 8).max(1);
-    for _ in 0..cfg.refine_rounds {
-        let lo = best.n.saturating_sub(step).max(k_min);
-        let hi = (best.n + step).min(n);
-        let mut improved = false;
-        for cand in [lo, hi] {
-            if cand == best.n {
-                continue;
+    let mut best = match seed {
+        SweepSeed::Cold => {
+            // Geometric sweep of prefix sizes (always including the
+            // take-all point, so a cold sweep can never report worse than
+            // admitting everyone).
+            let mut ks: Vec<usize> = Vec::new();
+            let mut k = k_min;
+            while k < n {
+                ks.push(k);
+                k = (k * 2).min(n);
             }
-            let p = prober.prefix(cand);
-            if p.objective < best.objective {
-                best = p;
-                improved = true;
+            ks.push(n);
+            let mut best = prober.prefix(ks[0]);
+            for &k in &ks[1..] {
+                let p = prober.prefix(k);
+                if p.objective < best.objective {
+                    best = p;
+                }
             }
-        }
-        if !improved {
-            if step == 1 {
-                break;
+            // Local refinement around the sweep minimum (J is
+            // near-unimodal in the prefix size: T* falls with diminishing
+            // returns, costs rise linearly).
+            let mut step = (best.n / 8).max(1);
+            for _ in 0..cfg.refine_rounds {
+                let lo = best.n.saturating_sub(step).max(k_min);
+                let hi = (best.n + step).min(n);
+                let mut improved = false;
+                for cand in [lo, hi] {
+                    if cand == best.n {
+                        continue;
+                    }
+                    let p = prober.prefix(cand);
+                    if p.objective < best.objective {
+                        best = p;
+                        improved = true;
+                    }
+                }
+                if !improved {
+                    if step == 1 {
+                        break;
+                    }
+                    step = (step / 2).max(1);
+                }
             }
-            step = (step / 2).max(1);
+            best
         }
-    }
+        SweepSeed::Warm { seed_n } => {
+            // A single join/leave moves the near-unimodal objective's
+            // minimum by at most a few positions, so an expanding-then-
+            // contracting local search seeded at the previous best probes
+            // only the O(log D) perturbed neighborhood — no geometric
+            // sweep from k_min and no forced take-all probe.
+            let b0 = seed_n.clamp(k_min, n);
+            let mut best = prober.prefix(b0);
+            let mut step = 1usize;
+            let mut expanding = true;
+            loop {
+                let lo = best.n.saturating_sub(step).max(k_min);
+                let hi = (best.n + step).min(n);
+                let mut improved = false;
+                for cand in [lo, hi] {
+                    if cand == best.n {
+                        continue;
+                    }
+                    let p = prober.prefix(cand);
+                    if p.objective < best.objective {
+                        best = p;
+                        improved = true;
+                    }
+                }
+                if improved {
+                    if expanding {
+                        step = step.saturating_mul(2).min(n.max(1));
+                    }
+                } else if step > 1 {
+                    expanding = false;
+                    step /= 2;
+                } else {
+                    break;
+                }
+            }
+            best
+        }
+    };
 
     // Eviction pass: devices the solver left idle (Eq. 6) buy nothing and
     // still cost fan-out + churn exposure — drop them and re-verify.
@@ -359,9 +494,74 @@ pub fn select_devices(
         admitted,
         t_star: final_point.t_star,
         objective: final_point.objective,
+        best_prefix: best.n,
         frontier,
         probes: prober.probes,
     }
+}
+
+/// Optimize admission over `candidates` (the caller's planning view — e.g.
+/// [`crate::cluster::pool::DevicePool::planning_devices`]): minimize the
+/// per-batch objective `T* + PS fan-out + expected churn loss`, with `T*`
+/// solved under the CVaR latency adjustment. Probes share `cache`, so
+/// chaining the same cache across membership epochs keeps every probe on
+/// the warm fast path. Always runs the full (cold) geometric sweep; epoch
+/// re-selection should prefer [`select_devices_incremental`], which seeds
+/// the search from the previous epoch's outcome.
+pub fn select_devices(
+    candidates: &[Device],
+    dag: &GemmDag,
+    cm: &CostModel,
+    ps: &PsParams,
+    cfg: &SelectConfig,
+    cache: &mut SolverCache,
+) -> SelectionOutcome {
+    let (planning, order) = capability_order(candidates, dag, cm, cfg);
+    cache.note_selection(false);
+    run_admission(&planning, &order, dag, cm, ps, cfg, cache, SweepSeed::Cold)
+}
+
+/// [`select_devices`] with cross-epoch warm starting: when `state` carries
+/// a previous sweep whose capability order differs from the current one by
+/// at most a single join or leave, the prefix search is seeded from that
+/// sweep's best prefix and only re-probes the perturbed O(log D)
+/// neighborhood; any larger membership delta (or an unseeded state) falls
+/// back to the cold geometric sweep. Either way `state` is refreshed for
+/// the next epoch, and the route taken is counted in
+/// [`crate::sched::fastpath::CacheStats::selection_warm_starts`] /
+/// [`CacheStats::selection_cold_sweeps`](crate::sched::fastpath::CacheStats::selection_cold_sweeps).
+///
+/// On a near-unimodal objective (the typical landscape: `T*` falls with
+/// diminishing returns, costs rise linearly) the warm search converges to
+/// the same selected set as the cold sweep; when integerization noise
+/// carves the objective into adjacent local basins the two searches may
+/// settle one basin apart, within the noise envelope of each other's
+/// objective (property-gated at 2% by
+/// `prop_warm_selection_tracks_cold_on_single_deltas`).
+pub fn select_devices_incremental(
+    candidates: &[Device],
+    dag: &GemmDag,
+    cm: &CostModel,
+    ps: &PsParams,
+    cfg: &SelectConfig,
+    cache: &mut SolverCache,
+    state: &mut SelectionState,
+) -> SelectionOutcome {
+    let (planning, order) = capability_order(candidates, dag, cm, cfg);
+    let sigs: Vec<u64> = order.iter().map(|&i| device_param_sig(&planning[i])).collect();
+    let warm = state.is_seeded() && single_edit(&state.order_sigs, &sigs);
+    cache.note_selection(warm);
+    let seed = if warm {
+        SweepSeed::Warm {
+            seed_n: state.best_n,
+        }
+    } else {
+        SweepSeed::Cold
+    };
+    let out = run_admission(&planning, &order, dag, cm, ps, cfg, cache, seed);
+    state.order_sigs = sigs;
+    state.best_n = out.best_prefix;
+    out
 }
 
 #[cfg(test)]
@@ -463,8 +663,11 @@ mod tests {
             &SelectConfig::default(),
             &mut cache,
         );
-        // the sweep always probes n = pool size, so the reported objective
-        // can never exceed take-all admission
+        // the COLD sweep always probes n = pool size, so its reported
+        // objective can never exceed take-all admission (warm-started
+        // epoch re-selection probes only the perturbed neighborhood of
+        // the previous best prefix and need not visit n — see
+        // select_devices_incremental)
         let take_all = out
             .frontier
             .iter()
@@ -497,6 +700,92 @@ mod tests {
             "every solve after the first per shape must be warm: probes={} {stats:?}",
             out.probes
         );
+    }
+
+    #[test]
+    fn single_edit_classifies_deltas() {
+        let base = [1u64, 2, 3, 4, 5];
+        assert!(single_edit(&base, &base));
+        assert!(single_edit(&base, &[1, 2, 4, 5])); // one deletion
+        assert!(single_edit(&base, &[1, 2, 9, 3, 4, 5])); // one insertion
+        assert!(single_edit(&base, &[1, 2, 3, 4])); // tail deletion
+        assert!(single_edit(&base, &[1, 2, 3, 4, 5, 6])); // tail insertion
+        assert!(!single_edit(&base, &[1, 9, 3, 4, 8])); // replacement x2
+        assert!(!single_edit(&base, &[1, 2, 3])); // two deletions
+        assert!(!single_edit(&base, &[9, 1, 2, 3, 4, 5, 6])); // two insertions
+        assert!(!single_edit(&base, &[1, 9, 2, 3, 5])); // insert + delete
+    }
+
+    #[test]
+    fn warm_start_matches_cold_sweep_on_single_deltas() {
+        // The satellite property: on a single join/leave delta the
+        // warm-started search must land on the same admitted set as a
+        // from-scratch cold sweep (the objective is near-unimodal, so the
+        // seeded local search and the geometric sweep converge to the
+        // same minimum).
+        let (devices, dag) = setting(72);
+        let cm = CostModel::default();
+        let ps = PsParams::default();
+        let cfg = SelectConfig::default();
+
+        let mut state = SelectionState::new();
+        let mut warm_cache = SolverCache::new();
+        let first = select_devices_incremental(
+            &devices, &dag, &cm, &ps, &cfg, &mut warm_cache, &mut state,
+        );
+        assert!(state.is_seeded());
+        // unseeded first call must have routed cold
+        assert_eq!(warm_cache.stats().selection_cold_sweeps, 1);
+        assert_eq!(warm_cache.stats().selection_warm_starts, 0);
+        assert_eq!(first.best_prefix, state.best_n);
+
+        // single leave
+        let mut smaller = devices.clone();
+        smaller.remove(10);
+        let warm = select_devices_incremental(
+            &smaller, &dag, &cm, &ps, &cfg, &mut warm_cache, &mut state,
+        );
+        assert_eq!(warm_cache.stats().selection_warm_starts, 1);
+        let mut cold_cache = SolverCache::new();
+        let cold = select_devices(&smaller, &dag, &cm, &ps, &cfg, &mut cold_cache);
+        assert_eq!(warm.admitted, cold.admitted, "single-leave warm != cold");
+        assert_eq!(warm.objective.to_bits(), cold.objective.to_bits());
+
+        // single join (back to the original pool): another warm route
+        let warm2 = select_devices_incremental(
+            &devices, &dag, &cm, &ps, &cfg, &mut warm_cache, &mut state,
+        );
+        assert_eq!(warm_cache.stats().selection_warm_starts, 2);
+        assert_eq!(warm2.admitted, first.admitted, "single-join warm != cold");
+    }
+
+    #[test]
+    fn multi_device_delta_falls_back_to_cold_sweep() {
+        let (devices, dag) = setting(64);
+        let cm = CostModel::default();
+        let ps = PsParams::default();
+        let cfg = SelectConfig::default();
+        let mut state = SelectionState::new();
+        let mut cache = SolverCache::new();
+        let _ = select_devices_incremental(
+            &devices, &dag, &cm, &ps, &cfg, &mut cache, &mut state,
+        );
+        // drop three devices at once: the delta invalidates the seed
+        let mut shrunk = devices.clone();
+        shrunk.drain(5..8);
+        let out = select_devices_incremental(
+            &shrunk, &dag, &cm, &ps, &cfg, &mut cache, &mut state,
+        );
+        let stats = cache.stats();
+        assert_eq!(stats.selection_cold_sweeps, 2, "{stats:?}");
+        assert_eq!(stats.selection_warm_starts, 0, "{stats:?}");
+        // the cold fallback still reports the full frontier incl. take-all
+        assert!(out.frontier.iter().any(|p| p.n == shrunk.len()));
+        // identical pool re-selection warm-starts trivially (zero delta)
+        let _ = select_devices_incremental(
+            &shrunk, &dag, &cm, &ps, &cfg, &mut cache, &mut state,
+        );
+        assert_eq!(cache.stats().selection_warm_starts, 1);
     }
 
     #[test]

@@ -33,7 +33,11 @@
 //! solves; `bisection_iters` stays 0 unless the scan fallback engaged).
 //! Distinct shapes solve in parallel, and [`solve_dag_cached`] adds the
 //! (fleet fingerprint, shape) memo plus incremental oracle retire/admit
-//! under membership churn. The historical bisection solvers are preserved
+//! under membership churn — Θ(E) bitwise-exact resweeps by default, or
+//! sublinear Fenwick-indexed deltas (O(√E) amortized per event) for
+//! fleet-scale caches built with
+//! [`SolverCache::with_mode`] (see the [`crate::sched::oracle`] tolerance
+//! contract). The historical bisection solvers are preserved
 //! verbatim as [`solve_gemm_reference`] / [`solve_dag_reference`] /
 //! [`solve_region_reference_view`] — the parity baselines the property
 //! tests compare against and `benches/table7_solver.rs` measures speedups

@@ -22,7 +22,14 @@
 //!   [`Policy`]: admit everything on its advertised capability (`TakeAll`),
 //!   run the cost-model-guided optimizer on the reliability-discounted
 //!   planning view (`CostGuided`), or run it on the true delivered
-//!   capabilities (`Oracle` — perfect knowledge, the upper bound).
+//!   capabilities (`Oracle` — perfect knowledge, the upper bound). Epoch
+//!   re-selection routes through
+//!   [`crate::sched::select::select_devices_incremental`] with one
+//!   [`SelectionState`] chained across the session, so a quiet epoch or a
+//!   single join/leave warm-starts the admission search from the previous
+//!   best prefix instead of re-running the full geometric sweep
+//!   (`CacheStats::selection_warm_starts` / `selection_cold_sweeps` in the
+//!   report's solver counters).
 //!
 //! Batches are *measured* by [`simulate_batch`] on delivered capabilities,
 //! so a schedule solved on optimistic advertised reports pays the Fig. 6
@@ -48,7 +55,7 @@ use crate::sched::assignment::Schedule;
 use crate::sched::cost::{CostModel, GemmShape, PsParams};
 use crate::sched::fastpath::{CacheStats, SolverCache};
 use crate::sched::recovery::recover;
-use crate::sched::select::{select_devices, SelectConfig};
+use crate::sched::select::{select_devices_incremental, SelectConfig, SelectionState};
 use crate::sim::batch::{simulate_batch, SimConfig};
 use crate::sim::engine::Engine;
 use crate::util::json::{obj, Json};
@@ -177,6 +184,14 @@ impl SessionReport {
                 Json::from(self.solver.incremental_updates),
             ),
             ("full_rebuilds", Json::from(self.solver.full_rebuilds)),
+            (
+                "selection_warm_starts",
+                Json::from(self.solver.selection_warm_starts),
+            ),
+            (
+                "selection_cold_sweeps",
+                Json::from(self.solver.selection_cold_sweeps),
+            ),
         ])
     }
 }
@@ -193,6 +208,7 @@ fn choose_active(
     pool: &mut DevicePool,
     ctx: &Ctx,
     cache: &mut SolverCache,
+    sel_state: &mut SelectionState,
     batch_index: usize,
     decisions: &mut Vec<SelectionDecision>,
 ) -> Vec<usize> {
@@ -208,7 +224,12 @@ fn choose_active(
             } else {
                 pool.delivered_devices(&selectable)
             };
-            let out = select_devices(&view, ctx.dag, ctx.cm, ctx.ps, &cfg.select, cache);
+            // Warm-started epoch re-selection: a quiet epoch (or a single
+            // join/leave since the last decision) probes only the
+            // neighborhood of the previous best prefix.
+            let out = select_devices_incremental(
+                &view, ctx.dag, ctx.cm, ctx.ps, &cfg.select, cache, sel_state,
+            );
             let chosen: Vec<usize> = out.admitted.iter().map(|&j| selectable[j]).collect();
             (chosen, out.t_star, out.objective, out.probes)
         }
@@ -342,10 +363,12 @@ pub fn run_session_with(
     let mut recovery_latencies: Vec<f64> = Vec::new();
     let (mut failures, mut joins) = (0usize, 0usize);
 
-    // Initial membership + plan + clean batch profile.
+    // Initial membership + plan + clean batch profile. The selection
+    // state chains across every epoch so re-selections warm start.
+    let mut sel_state = SelectionState::new();
     let mut active = {
         let cache = session_cache(planner, &mut fallback);
-        choose_active(pool, &ctx, cache, 0, &mut decisions)
+        choose_active(pool, &ctx, cache, &mut sel_state, 0, &mut decisions)
     };
     let (mut planned, mut true_devices, mut clean_time) =
         plan_active(pool, &active, &ctx, planner);
@@ -365,7 +388,7 @@ pub fn run_session_with(
             let prev = active.clone();
             active = {
                 let cache = session_cache(planner, &mut fallback);
-                choose_active(pool, &ctx, cache, bi, &mut decisions)
+                choose_active(pool, &ctx, cache, &mut sel_state, bi, &mut decisions)
             };
             if active != prev {
                 let replanned = plan_active(pool, &active, &ctx, planner);
@@ -540,6 +563,41 @@ mod tests {
             guided <= oracle * 1.8,
             "guided {guided} vs oracle {oracle}"
         );
+    }
+
+    #[test]
+    fn epoch_reselection_warm_starts_the_admission_search() {
+        // Quiet epochs (no churn) re-select over an identical pool: only
+        // the first decision may run the full geometric sweep; every later
+        // epoch warm-starts from the previous best prefix.
+        let mut pool = DevicePool::sample(&pool_cfg(48, 0.3));
+        let dag = dag();
+        let cfg = SessionConfig {
+            n_batches: 8,
+            epoch_batches: 2,
+            churn: no_churn(),
+            policy: Policy::CostGuided,
+            ..SessionConfig::default()
+        };
+        let r = run_session(
+            &mut pool,
+            &dag,
+            &CostModel::default(),
+            &PsParams::default(),
+            &cfg,
+        );
+        assert_eq!(r.decisions.len(), 4); // batch 0 + epochs 2, 4, 6
+        assert_eq!(r.solver.selection_cold_sweeps, 1, "{:?}", r.solver);
+        assert_eq!(r.solver.selection_warm_starts, 3, "{:?}", r.solver);
+        // warm-started epochs must agree with the initial decision on a
+        // static pool
+        let first = &r.decisions[0];
+        for d in &r.decisions[1..] {
+            assert_eq!(d.admitted, first.admitted);
+            assert_eq!(d.t_star_planned.to_bits(), first.t_star_planned.to_bits());
+            // ...while probing strictly fewer sizes than the cold sweep
+            assert!(d.probes <= first.probes, "{d:?} vs cold {first:?}");
+        }
     }
 
     #[test]

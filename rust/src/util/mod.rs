@@ -12,6 +12,17 @@ pub mod stats;
 pub mod table;
 pub mod threadpool;
 
+/// One FNV-1a mixing step — the crate's fingerprint/memo-key hash
+/// (fleet content versions, device signatures, cache context keys).
+/// One definition so the prime can never drift between call sites.
+#[inline]
+pub fn fnv1a(h: u64, x: u64) -> u64 {
+    (h ^ x).wrapping_mul(0x100_0000_01b3)
+}
+
+/// The FNV-1a offset basis (the seed every fingerprint chain starts from).
+pub const FNV1A_SEED: u64 = 0xcbf2_9ce4_8422_2325;
+
 /// Human-friendly byte formatting (e.g. `1.5 GB`), used in reports.
 pub fn fmt_bytes(b: f64) -> String {
     const UNITS: [&str; 6] = ["B", "KB", "MB", "GB", "TB", "PB"];
