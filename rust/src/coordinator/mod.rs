@@ -9,15 +9,25 @@
 //! outputs, and runs Adam host-side — training end to end with losses that
 //! match the AOT JAX artifacts bit-for-bit in f32 (pinned by tests against
 //! `artifacts/oracle.json`).
+//!
+//! Fault tolerance (ISSUE 6): a typed [`run_state::RunStateMachine`]
+//! drives Warmup → Train ⇄ Recover → Cooldown with membership epochs; the
+//! PS detects hung/straggling workers by per-task deadlines, evicts them
+//! through the [`registry::Registry`] (its single liveness source), and
+//! re-tiles orphaned rects via the §4.2 solver. Deterministic fault
+//! injection lives in [`worker::FaultPlan`].
 
 pub mod optimizer;
 pub mod protocol;
 pub mod ps;
 pub mod registry;
+pub mod run_state;
 pub mod tensor;
 pub mod trainer;
 pub mod verify;
 pub mod worker;
 
-pub use ps::{DistributedGemm, PsConfig};
+pub use ps::{DistributedGemm, LiveRecovery, PsConfig};
+pub use run_state::{RunState, RunStateMachine};
 pub use trainer::{GemmBackend, LocalBackend, Trainer, TrainerConfig};
+pub use worker::{Behavior, FaultPlan};

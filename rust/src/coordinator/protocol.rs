@@ -58,6 +58,11 @@ pub enum ToPs {
     Leaving {
         worker: usize,
     },
+    /// a previously departed worker asks to re-enter the fleet; the PS
+    /// admits it through `Registry::register` once probation has passed
+    Rejoin {
+        worker: usize,
+    },
 }
 
 /// Handle the PS holds for each registered worker.

@@ -1,23 +1,42 @@
 //! The parameter server's distributed-GEMM engine: solve the §4.1
 //! assignment, dispatch row/column shards to workers, collect and verify
-//! partial outputs, and recover from mid-GEMM departures via §4.2.
+//! partial outputs, and recover from mid-GEMM failures via the real §4.2
+//! solver.
+//!
+//! Fault path (ISSUE 6): a [`RunStateMachine`] tracks Warmup → Train ⇄
+//! Recover → Cooldown plus membership epochs; the collect loop runs on
+//! `recv_timeout` with per-task deadlines derived from the [`CostModel`]
+//! estimate × a configurable slack, so hung and straggling workers are
+//! detected (ping → grace window → evict), their rects re-tiled across
+//! survivors through [`crate::sched::recovery::recover`], and re-dispatched
+//! with bounded exponential backoff. The [`Registry`] is the single
+//! liveness source — there is no ad-hoc `alive` vector — and evicted
+//! devices are blacklisted until probation passes, after which a `Rejoin`
+//! message re-admits them through `Registry::register`. Every recovery
+//! records its live latency in [`LiveRecovery`] so benches can compare it
+//! against the `sim/failure.rs` prediction ([`LiveParity`]).
 //!
 //! This is the live counterpart of the simulator: the numbers that come
-//! back are real f32 blocks, and the assembled product is bit-compatible
-//! with a local GEMM (tested).
+//! back are real f32 blocks, and the assembled product is bit-identical
+//! to a local GEMM (tested).
 
-use std::collections::HashMap;
-use std::sync::mpsc::{channel, Receiver};
+use std::collections::{HashMap, HashSet};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, ensure, Result};
 
 use crate::cluster::device::Device;
 use crate::coordinator::protocol::{SubGemmTask, ToPs, ToWorker, WorkerHandle};
+use crate::coordinator::registry::{Liveness, Registry};
+use crate::coordinator::run_state::{RunState, RunStateMachine};
 use crate::coordinator::verify::{freivalds_check, DEFAULT_TOL};
-use crate::coordinator::worker::{self, Behavior, WorkerConfig};
-use crate::sched::assignment::Rect;
+use crate::coordinator::worker::{self, Behavior, FaultPlan, WorkerConfig};
+use crate::sched::assignment::{GemmAssignment, Rect};
 use crate::sched::cost::{CostModel, GemmShape};
+use crate::sched::recovery::recover;
 use crate::sched::solver::{solve_gemm, SolverOptions};
+use crate::sim::failure::LiveParity;
 use crate::util::rng::Rng;
 
 /// PS configuration for the live path.
@@ -31,6 +50,23 @@ pub struct PsConfig {
     /// max re-dispatch attempts per rect (corruption / churn)
     pub max_retries: usize,
     pub seed: u64,
+    /// per-task deadline = `deadline_slack × delay_scale × modeled cost`,
+    /// floored at `min_deadline_s` (so zero-delay test fleets still get a
+    /// real deadline) and multiplied by the device's queue depth
+    pub deadline_slack: f64,
+    pub min_deadline_s: f64,
+    /// after a deadline expires the PS pings and waits this long for any
+    /// liveness proof before declaring the worker gone
+    pub ping_grace_s: f64,
+    /// how many times a worker that still answers pings may have its task
+    /// deadline extended before it is evicted as a straggler
+    pub max_deadline_extensions: u32,
+    /// rounds an evicted device stays blacklisted before a `Rejoin` can
+    /// re-admit it via `Registry::register`
+    pub probation_rounds: u64,
+    /// base of the bounded exponential backoff between recovery dispatch
+    /// attempts (doubles per attempt, capped at 100ms)
+    pub backoff_base_s: f64,
 }
 
 impl Default for PsConfig {
@@ -41,7 +77,68 @@ impl Default for PsConfig {
             delay_scale: 0.0,
             max_retries: 8,
             seed: 1234,
+            deadline_slack: 4.0,
+            min_deadline_s: 0.25,
+            ping_grace_s: 0.2,
+            max_deadline_extensions: 1,
+            probation_rounds: 1,
+            backoff_base_s: 1e-3,
         }
+    }
+}
+
+/// PS-side record of one in-flight task.
+#[derive(Clone, Copy)]
+struct Pending {
+    rect: Rect,
+    deadline: Instant,
+    /// base per-task estimate the deadline was derived from (re-used when
+    /// granting a straggler extension)
+    est: Duration,
+    /// when a liveness probe was sent after the first deadline expiry
+    pinged_at: Option<Instant>,
+    extensions: u32,
+    dispatched: Instant,
+    /// index into `live_recoveries` when this is recovery work
+    recovery: Option<usize>,
+}
+
+/// One live recovery event: what was orphaned, how long each phase took,
+/// and the wall-clock until the re-dispatched work all landed. The paired
+/// simulator prediction comes from [`LiveRecovery::parity`].
+#[derive(Clone, Debug)]
+pub struct LiveRecovery {
+    /// why the rects were orphaned (a code-site literal)
+    pub cause: &'static str,
+    pub orphaned_rects: usize,
+    /// failure-to-detection latency (deadline + grace actually elapsed)
+    pub detection_s: f64,
+    /// §4.2 re-solve wall-clock
+    pub solve_s: f64,
+    /// solver-predicted recompute makespan (unscaled model seconds)
+    pub predicted_recompute_s: f64,
+    pub redispatched_tasks: u64,
+    /// wall-clock from re-solve start until the last re-dispatched block
+    /// was accepted (None while still outstanding)
+    pub completed_s: Option<f64>,
+    started: Instant,
+    outstanding: usize,
+}
+
+impl LiveRecovery {
+    /// The simulator-side prediction for this event, for live-vs-sim
+    /// parity checks (`delay_scale` converts model seconds to wall-clock).
+    pub fn parity(&self, delay_scale: f64) -> LiveParity {
+        LiveParity::new(
+            self.detection_s,
+            self.solve_s,
+            delay_scale * self.predicted_recompute_s,
+        )
+    }
+
+    /// Observed live recovery latency: detection plus re-solve-to-landed.
+    pub fn live_latency_s(&self) -> Option<f64> {
+        self.completed_s.map(|c| self.detection_s + c)
     }
 }
 
@@ -50,31 +147,67 @@ pub struct DistributedGemm {
     cfg: PsConfig,
     devices: Vec<Device>,
     handles: Vec<WorkerHandle>,
-    alive: Vec<bool>,
+    /// single liveness source: keepalives, departures, rejoins
+    registry: Registry,
+    state: RunStateMachine,
     from_workers: Receiver<ToPs>,
+    /// kept so the PS channel never disconnects while evicted workers
+    /// linger, and so tests can inject wire messages
+    #[allow(dead_code)]
+    to_ps: Sender<ToPs>,
     assignment_cache: HashMap<GemmShape, Vec<Rect>>,
     cm: CostModel,
     rng: Rng,
     next_task: u64,
+    round: u64,
+    /// evicted device idx → first round a rejoin may be admitted
+    blacklist: HashMap<usize, u64>,
+    /// blacklisted devices that have proven liveness since eviction
+    rejoin_ready: HashSet<usize>,
     /// statistics
     pub tasks_dispatched: u64,
     pub blocks_rejected: u64,
     pub recoveries: u64,
+    pub evictions: u64,
+    pub deadline_evictions: u64,
+    pub rejoins: u64,
+    pub redispatched_tasks: u64,
+    /// results for tasks no longer pending (already re-dispatched)
+    pub stale_results: u64,
+    /// messages from device ids the fleet has never seen (dropped)
+    pub unknown_messages: u64,
+    /// every recovery event this engine has performed, in order
+    pub live_recoveries: Vec<LiveRecovery>,
 }
 
 impl DistributedGemm {
-    /// Spawn one worker thread per device. `behaviors[i]` configures fault
-    /// injection for device `i` (default honest).
+    /// Spawn one worker thread per device with a static behaviour each
+    /// (compatibility shim over [`Self::spawn_with_plans`]).
     pub fn spawn(devices: Vec<Device>, behaviors: Vec<Behavior>, cfg: PsConfig) -> Self {
-        assert_eq!(devices.len(), behaviors.len());
+        let plans = behaviors.into_iter().map(FaultPlan::always).collect();
+        Self::spawn_with_plans(devices, plans, cfg)
+    }
+
+    /// Spawn one worker thread per device; `plans[i]` is device `i`'s
+    /// deterministic fault schedule.
+    pub fn spawn_with_plans(devices: Vec<Device>, plans: Vec<FaultPlan>, cfg: PsConfig) -> Self {
+        assert_eq!(devices.len(), plans.len());
         let (to_ps, from_workers) = channel::<ToPs>();
         let mut handles = Vec::with_capacity(devices.len());
+        let mut registry = Registry::new();
+        // Deadlines (not keepalive staleness) are the failure detector:
+        // an idle-but-healthy worker must never age into Dead between
+        // rounds, so only explicit departure / eviction kills a device.
+        registry.dead_after = Duration::from_secs(3600);
+        registry.suspect_after = Duration::from_secs_f64(cfg.min_deadline_s.max(0.25));
         for (i, dev) in devices.iter().enumerate() {
+            registry.register(dev.clone());
             let (tx, rx) = channel::<ToWorker>();
             let wcfg = WorkerConfig {
                 device: dev.clone(),
-                behavior: behaviors[i],
+                plan: plans[i].clone(),
                 delay_scale: cfg.delay_scale,
+                seed: cfg.seed ^ 0xC1EA_5EED,
             };
             let tx_ps = to_ps.clone();
             let join = std::thread::Builder::new()
@@ -90,10 +223,12 @@ impl DistributedGemm {
         let seed = cfg.seed;
         DistributedGemm {
             cfg,
-            alive: vec![true; devices.len()],
             devices,
             handles,
+            registry,
+            state: RunStateMachine::new(),
             from_workers,
+            to_ps,
             assignment_cache: HashMap::new(),
             cm: CostModel {
                 elem_bytes: 4.0, // live path computes in f32
@@ -101,30 +236,77 @@ impl DistributedGemm {
             },
             rng: Rng::new(seed),
             next_task: 0,
+            round: 0,
+            blacklist: HashMap::new(),
+            rejoin_ready: HashSet::new(),
             tasks_dispatched: 0,
             blocks_rejected: 0,
             recoveries: 0,
+            evictions: 0,
+            deadline_evictions: 0,
+            rejoins: 0,
+            redispatched_tasks: 0,
+            stale_results: 0,
+            unknown_messages: 0,
+            live_recoveries: Vec::new(),
         }
+    }
+
+    /// Is device `idx` schedulable (per the registry)?
+    pub fn is_alive(&self, idx: usize) -> bool {
+        matches!(
+            self.registry.liveness(self.devices[idx].id),
+            Some(Liveness::Alive | Liveness::Suspect)
+        )
     }
 
     pub fn n_alive(&self) -> usize {
-        self.alive.iter().filter(|&&a| a).count()
+        self.alive_indices().len()
+    }
+
+    pub fn run_state(&self) -> RunState {
+        self.state.state()
+    }
+
+    /// Current membership epoch (bumps on every evict / rejoin).
+    pub fn membership_epoch(&self) -> u64 {
+        self.state.epoch()
+    }
+
+    pub fn state_machine(&self) -> &RunStateMachine {
+        &self.state
+    }
+
+    pub fn registry(&self) -> &Registry {
+        &self.registry
+    }
+
+    pub fn config(&self) -> &PsConfig {
+        &self.cfg
     }
 
     fn alive_indices(&self) -> Vec<usize> {
-        (0..self.devices.len()).filter(|&i| self.alive[i]).collect()
+        (0..self.devices.len()).filter(|&i| self.is_alive(i)).collect()
+    }
+
+    /// Map a wire device id to a fleet index. `None` for unknown ids — a
+    /// stale or foreign message must be dropped (counted), never crash the
+    /// PS.
+    fn device_index(&self, device_id: usize) -> Option<usize> {
+        self.devices.iter().position(|d| d.id == device_id)
     }
 
     /// Solve (or fetch) the rect assignment for a shape over the alive set.
-    fn assignment_for(&mut self, m: usize, n: usize, q: usize) -> Vec<Rect> {
+    fn assignment_for(&mut self, m: usize, n: usize, q: usize) -> Result<Vec<Rect>> {
         let shape = GemmShape { rows: m, n, q };
         if let Some(r) = self.assignment_cache.get(&shape) {
             // Cache valid only if every assigned device is still alive.
-            if r.iter().all(|rect| self.alive[rect.device]) {
-                return r.clone();
+            if r.iter().all(|rect| self.is_alive(rect.device)) {
+                return Ok(r.clone());
             }
         }
         let alive_idx = self.alive_indices();
+        ensure!(!alive_idx.is_empty(), "no alive devices to assign work to");
         let alive_devices: Vec<Device> =
             alive_idx.iter().map(|&i| self.devices[i].clone()).collect();
         let (a, _) = solve_gemm(&alive_devices, shape, &self.cm, &SolverOptions::default());
@@ -138,7 +320,7 @@ impl DistributedGemm {
             })
             .collect();
         self.assignment_cache.insert(shape, rects.clone());
-        rects
+        Ok(rects)
     }
 
     fn make_task(&mut self, a: &[f32], b: &[f32], n: usize, q: usize, rect: &Rect) -> SubGemmTask {
@@ -161,42 +343,444 @@ impl DistributedGemm {
         }
     }
 
-    /// Distributed `a (m x n) · b (n x q)` with verification and churn
-    /// recovery. Exact cover of the output is guaranteed by the scheduler;
-    /// rejected or orphaned rects are re-dispatched to the next-best alive
-    /// device (the §4.2 path, re-solved at rect granularity).
-    pub fn matmul(&mut self, a: &[f32], b: &[f32], m: usize, n: usize, q: usize) -> Result<Vec<f32>> {
-        assert_eq!(a.len(), m * n);
-        assert_eq!(b.len(), n * q);
-        let rects = self.assignment_for(m, n, q);
-        let mut c = vec![0.0f32; m * q];
-        let mut pending: HashMap<u64, Rect> = HashMap::new();
+    /// Base per-task deadline for `rect` on device `idx`: modeled cost ×
+    /// slack × delay emulation, floored so zero-delay fleets still detect
+    /// hangs.
+    fn task_deadline(&self, idx: usize, rect: &Rect, n: usize) -> Duration {
+        let modeled = self.cm.gemm_cost(
+            &self.devices[idx],
+            rect.rows as f64,
+            rect.cols as f64,
+            n as f64,
+        );
+        let secs = (self.cfg.deadline_slack * self.cfg.delay_scale * modeled)
+            .max(self.cfg.min_deadline_s);
+        Duration::from_secs_f64(secs)
+    }
 
-        for rect in &rects {
-            let task = self.make_task(a, b, n, q, rect);
-            pending.insert(task.task_id, *rect);
-            self.tasks_dispatched += 1;
-            if self.handles[rect.device].tx.send(ToWorker::Task(task)).is_err() {
-                // Worker already gone: treat as immediate churn.
-                self.alive[rect.device] = false;
+    /// Dispatch `rect` to its device, recording the deadline. Returns false
+    /// (after evicting the device) when the channel is already closed.
+    #[allow(clippy::too_many_arguments)]
+    fn try_dispatch(
+        &mut self,
+        a: &[f32],
+        b: &[f32],
+        n: usize,
+        q: usize,
+        rect: Rect,
+        pending: &mut HashMap<u64, Pending>,
+        recovery: Option<usize>,
+    ) -> bool {
+        let idx = rect.device;
+        let queued = pending.values().filter(|p| p.rect.device == idx).count();
+        let est = self.task_deadline(idx, &rect, n);
+        let task = self.make_task(a, b, n, q, &rect);
+        let task_id = task.task_id;
+        if self.handles[idx].tx.send(ToWorker::Task(task)).is_err() {
+            self.evict(idx, "channel closed at dispatch");
+            return false;
+        }
+        self.tasks_dispatched += 1;
+        if let Some(ri) = recovery {
+            self.redispatched_tasks += 1;
+            let rec = &mut self.live_recoveries[ri];
+            rec.redispatched_tasks += 1;
+            if rec.outstanding == 0 {
+                // re-opened (an earlier attempt briefly drained)
+                rec.completed_s = None;
+            }
+            rec.outstanding += 1;
+        }
+        let now = Instant::now();
+        pending.insert(
+            task_id,
+            Pending {
+                rect,
+                // tasks queue FIFO at the worker: scale by queue depth
+                deadline: now + est.mul_f64((queued + 1) as f64),
+                est,
+                pinged_at: None,
+                extensions: 0,
+                dispatched: now,
+                recovery,
+            },
+        );
+        true
+    }
+
+    /// Book-keeping when a pending task leaves the table (accepted,
+    /// rejected, or orphaned): close out its recovery record if it was the
+    /// last outstanding re-dispatched task.
+    fn note_removed(&mut self, p: &Pending) {
+        if let Some(ri) = p.recovery {
+            let rec = &mut self.live_recoveries[ri];
+            rec.outstanding = rec.outstanding.saturating_sub(1);
+            if rec.outstanding == 0 && rec.completed_s.is_none() {
+                rec.completed_s = Some(rec.started.elapsed().as_secs_f64());
             }
         }
-        // Re-dispatch anything whose device died before receiving it.
-        let orphans: Vec<(u64, Rect)> = pending
+    }
+
+    /// Remove every in-flight task of device `idx`, returning the orphaned
+    /// rects and the worst-case detection latency (time since dispatch).
+    fn orphan_device(
+        &mut self,
+        pending: &mut HashMap<u64, Pending>,
+        idx: usize,
+    ) -> (Vec<Rect>, f64) {
+        let ids: Vec<u64> = pending
             .iter()
-            .filter(|(_, r)| !self.alive[r.device])
-            .map(|(&id, &r)| (id, r))
+            .filter(|(_, p)| p.rect.device == idx)
+            .map(|(&id, _)| id)
             .collect();
-        for (id, r) in orphans {
-            pending.remove(&id);
-            self.redispatch(a, b, n, q, r, &mut pending)?;
+        let mut rects = Vec::with_capacity(ids.len());
+        let mut detection = 0.0f64;
+        for id in ids {
+            let p = pending.remove(&id).expect("id just listed");
+            self.note_removed(&p);
+            detection = detection.max(p.dispatched.elapsed().as_secs_f64());
+            rects.push(p.rect);
+        }
+        (rects, detection)
+    }
+
+    /// Evict device `idx`: depart it in the registry, blacklist it until
+    /// probation passes, and bump the membership epoch.
+    fn evict(&mut self, idx: usize, reason: &'static str) {
+        let id = self.devices[idx].id;
+        if self.registry.liveness(id) == Some(Liveness::Dead) && self.blacklist.contains_key(&idx)
+        {
+            return; // already out
+        }
+        self.registry.depart(id);
+        self.blacklist
+            .insert(idx, self.round + self.cfg.probation_rounds);
+        self.rejoin_ready.remove(&idx);
+        self.evictions += 1;
+        let epoch = self.state.bump_epoch(reason);
+        crate::log_warn!("evicted device {id} (idx {idx}) at epoch {epoch}: {reason}");
+    }
+
+    /// Admit blacklisted devices that have both served probation and
+    /// proven liveness since eviction (ran at every round start).
+    fn admit_rejoins(&mut self) {
+        let mut ready: Vec<usize> = self
+            .rejoin_ready
+            .iter()
+            .copied()
+            .filter(|idx| self.blacklist.get(idx).is_none_or(|&e| self.round >= e))
+            .collect();
+        ready.sort_unstable();
+        for idx in ready {
+            self.rejoin_ready.remove(&idx);
+            self.blacklist.remove(&idx);
+            self.registry.register(self.devices[idx].clone());
+            self.rejoins += 1;
+            let epoch = self.state.bump_epoch("probation served, device rejoined");
+            crate::log_info!(
+                "device {} (idx {idx}) rejoined at epoch {epoch}",
+                self.devices[idx].id
+            );
+        }
+    }
+
+    /// Drain messages that arrived between rounds (keepalives, rejoin
+    /// requests, departures, and results that landed after their round).
+    fn drain_control_messages(&mut self) {
+        while let Ok(msg) = self.from_workers.try_recv() {
+            match msg {
+                ToPs::KeepAlive { worker } | ToPs::Rejoin { worker } => {
+                    self.registry.keepalive(worker);
+                    match self.device_index(worker) {
+                        Some(idx) if self.blacklist.contains_key(&idx) => {
+                            self.rejoin_ready.insert(idx);
+                        }
+                        Some(_) => {}
+                        None => self.unknown_messages += 1,
+                    }
+                }
+                ToPs::Leaving { worker } => match self.device_index(worker) {
+                    // No in-flight work at a round boundary: nothing to
+                    // recover, just update membership.
+                    Some(idx) => self.evict(idx, "departure between rounds"),
+                    None => self.unknown_messages += 1,
+                },
+                ToPs::Result { .. } => self.stale_results += 1,
+            }
+        }
+    }
+
+    /// Freivalds-verify a returned block against the dispatched strips.
+    fn verify_block(
+        &mut self,
+        a: &[f32],
+        b: &[f32],
+        n: usize,
+        q: usize,
+        rect: &Rect,
+        block: &[f32],
+    ) -> bool {
+        if !self.cfg.verify {
+            return true;
+        }
+        let a_strip = &a[rect.row0 * n..(rect.row0 + rect.rows) * n];
+        let mut b_strip = vec![0.0f32; n * rect.cols];
+        for k in 0..n {
+            b_strip[k * rect.cols..(k + 1) * rect.cols]
+                .copy_from_slice(&b[k * q + rect.col0..k * q + rect.col0 + rect.cols]);
+        }
+        freivalds_check(
+            a_strip,
+            &b_strip,
+            block,
+            rect.rows,
+            n,
+            rect.cols,
+            self.cfg.verify_iters,
+            &mut self.rng,
+            DEFAULT_TOL,
+        )
+    }
+
+    /// Route orphaned rects through the §4.2 recovery solver and dispatch
+    /// the replacement tiling, with bounded exponential backoff when
+    /// dispatch itself keeps failing. Records a [`LiveRecovery`].
+    #[allow(clippy::too_many_arguments)]
+    fn recover_and_redispatch(
+        &mut self,
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        n: usize,
+        q: usize,
+        mut lost: Vec<Rect>,
+        pending: &mut HashMap<u64, Pending>,
+        done: &[Rect],
+        cause: &'static str,
+        detection_s: f64,
+    ) -> Result<()> {
+        self.state.advance(RunState::Recover, cause)?;
+        self.recoveries += 1;
+        let rec_idx = self.live_recoveries.len();
+        self.live_recoveries.push(LiveRecovery {
+            cause,
+            orphaned_rects: lost.len(),
+            detection_s,
+            solve_s: 0.0,
+            predicted_recompute_s: 0.0,
+            redispatched_tasks: 0,
+            completed_s: None,
+            started: Instant::now(),
+            outstanding: 0,
+        });
+        let mut attempt = 0usize;
+        while !lost.is_empty() {
+            ensure!(
+                attempt <= self.cfg.max_retries,
+                "recovery exceeded {} dispatch attempts ({cause})",
+                self.cfg.max_retries
+            );
+            if attempt > 0 {
+                let backoff = (self.cfg.backoff_base_s
+                    * (1u64 << (attempt - 1).min(10)) as f64)
+                    .min(0.1);
+                std::thread::sleep(Duration::from_secs_f64(backoff));
+            }
+            attempt += 1;
+            // §4.2 snapshot: survivors keep their done + in-flight rects
+            // (cache discounts); everything owned by a dead device is lost.
+            let failed: Vec<usize> =
+                (0..self.devices.len()).filter(|&i| !self.is_alive(i)).collect();
+            ensure!(
+                failed.len() < self.devices.len(),
+                "no alive devices left for recovery"
+            );
+            let mut rects: Vec<Rect> = done
+                .iter()
+                .filter(|r| self.is_alive(r.device))
+                .cloned()
+                .collect();
+            rects.extend(
+                pending
+                    .values()
+                    .filter(|p| self.is_alive(p.rect.device))
+                    .map(|p| p.rect),
+            );
+            rects.extend(lost.iter().cloned());
+            let snapshot = GemmAssignment {
+                shape: GemmShape { rows: m, n, q },
+                rects,
+                makespan: 0.0,
+            };
+            let plan = recover(
+                &self.devices,
+                &snapshot,
+                &failed,
+                &self.cm,
+                &SolverOptions::default(),
+            );
+            {
+                let rec = &mut self.live_recoveries[rec_idx];
+                rec.solve_s += plan.solve_time;
+                rec.predicted_recompute_s = rec.predicted_recompute_s.max(plan.recompute_time);
+            }
+            let mut still_lost: Vec<Rect> = Vec::new();
+            for r in plan.new_rects {
+                if !self.try_dispatch(a, b, n, q, r, pending, Some(rec_idx)) {
+                    // device died at dispatch: its rect and any other
+                    // in-flight work of it go back into the lost set
+                    still_lost.push(r);
+                    let (orphans, det) = self.orphan_device(pending, r.device);
+                    still_lost.extend(orphans);
+                    let rec = &mut self.live_recoveries[rec_idx];
+                    rec.detection_s = rec.detection_s.max(det);
+                }
+            }
+            lost = still_lost;
+        }
+        self.state.advance(RunState::Train, "recovery dispatched")?;
+        Ok(())
+    }
+
+    /// Deadline sweep: first expiry pings the worker and grants a grace
+    /// window; on the second, a worker that answered the ping gets one
+    /// bounded extension (straggler), anything else is evicted and its
+    /// rects recovered.
+    #[allow(clippy::too_many_arguments)]
+    fn enforce_deadlines(
+        &mut self,
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        n: usize,
+        q: usize,
+        pending: &mut HashMap<u64, Pending>,
+        done: &[Rect],
+    ) -> Result<()> {
+        let now = Instant::now();
+        let grace = Duration::from_secs_f64(self.cfg.ping_grace_s);
+        let mut to_ping: Vec<usize> = Vec::new();
+        let mut to_evict: Vec<(usize, &'static str)> = Vec::new();
+        for p in pending.values_mut() {
+            if now < p.deadline {
+                continue;
+            }
+            let idx = p.rect.device;
+            if to_evict.iter().any(|&(i, _)| i == idx) {
+                continue;
+            }
+            match p.pinged_at {
+                None => {
+                    p.pinged_at = Some(now);
+                    p.deadline = now + grace;
+                    if !to_ping.contains(&idx) {
+                        to_ping.push(idx);
+                    }
+                }
+                Some(pinged) => {
+                    let responded = self
+                        .registry
+                        .last_keepalive(self.devices[idx].id)
+                        .is_some_and(|t| t > pinged);
+                    if responded && p.extensions < self.cfg.max_deadline_extensions {
+                        // alive but slow: one more full estimate
+                        p.extensions += 1;
+                        p.pinged_at = None;
+                        p.deadline = now + p.est.max(grace);
+                    } else if responded {
+                        to_evict.push((idx, "straggler exhausted deadline extensions"));
+                    } else {
+                        to_evict.push((idx, "no response to liveness probe"));
+                    }
+                }
+            }
+        }
+        for idx in to_ping {
+            if self.handles[idx].tx.send(ToWorker::Ping).is_err()
+                && !to_evict.iter().any(|&(i, _)| i == idx)
+            {
+                to_evict.push((idx, "channel closed at liveness probe"));
+            }
+        }
+        let mut lost: Vec<Rect> = Vec::new();
+        let mut detection = 0.0f64;
+        let mut cause = "deadline expired";
+        for (idx, reason) in to_evict {
+            self.deadline_evictions += 1;
+            self.evict(idx, reason);
+            let (rects, det) = self.orphan_device(pending, idx);
+            lost.extend(rects);
+            detection = detection.max(det);
+            cause = reason;
+        }
+        if !lost.is_empty() {
+            self.recover_and_redispatch(a, b, m, n, q, lost, pending, done, cause, detection)?;
+        }
+        Ok(())
+    }
+
+    /// Distributed `a (m x n) · b (n x q)` with verification, deadline-based
+    /// failure detection, and §4.2 churn recovery. Exact cover of the
+    /// output is guaranteed by the scheduler; rejected or orphaned rects
+    /// are re-tiled across survivors by the recovery solver.
+    pub fn matmul(
+        &mut self,
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        n: usize,
+        q: usize,
+    ) -> Result<Vec<f32>> {
+        assert_eq!(a.len(), m * n);
+        assert_eq!(b.len(), n * q);
+        ensure!(!self.state.is_terminal(), "coordinator is in Cooldown");
+        self.round += 1;
+        self.drain_control_messages();
+        self.admit_rejoins();
+        let rects = self.assignment_for(m, n, q)?;
+        self.state.advance(RunState::Train, "GEMM round start")?;
+
+        let mut c = vec![0.0f32; m * q];
+        let mut pending: HashMap<u64, Pending> = HashMap::new();
+        let mut done: Vec<Rect> = Vec::new();
+        let mut lost: Vec<Rect> = Vec::new();
+        for rect in rects {
+            if !self.try_dispatch(a, b, n, q, rect, &mut pending, None) {
+                lost.push(rect);
+                let (orphans, _) = self.orphan_device(&mut pending, rect.device);
+                lost.extend(orphans);
+            }
+        }
+        if !lost.is_empty() {
+            self.recover_and_redispatch(
+                a,
+                b,
+                m,
+                n,
+                q,
+                lost,
+                &mut pending,
+                &done,
+                "channel closed at dispatch",
+                0.0,
+            )?;
         }
 
-        let mut retries: HashMap<(usize, usize), usize> = HashMap::new();
+        let mut verify_retries: HashMap<(usize, usize), usize> = HashMap::new();
         while !pending.is_empty() {
-            let msg = match self.from_workers.recv() {
+            let next_deadline = pending
+                .values()
+                .map(|p| p.deadline)
+                .min()
+                .expect("pending non-empty");
+            let wait = next_deadline.saturating_duration_since(Instant::now());
+            let msg = match self.from_workers.recv_timeout(wait) {
                 Ok(m) => m,
-                Err(_) => bail!("all workers disconnected"),
+                Err(RecvTimeoutError::Timeout) => {
+                    self.enforce_deadlines(a, b, m, n, q, &mut pending, &done)?;
+                    continue;
+                }
+                Err(RecvTimeoutError::Disconnected) => bail!("all workers disconnected"),
             };
             match msg {
                 ToPs::Result {
@@ -204,119 +788,105 @@ impl DistributedGemm {
                     task_id,
                     block,
                 } => {
-                    let Some(rect) = pending.get(&task_id).copied() else {
-                        continue; // stale (already re-dispatched)
+                    let Some(idx) = self.device_index(worker) else {
+                        self.unknown_messages += 1;
+                        crate::log_warn!("dropping result from unknown device id {worker}");
+                        continue;
                     };
-                    let ok = if self.cfg.verify {
-                        let a_strip = &a[rect.row0 * n..(rect.row0 + rect.rows) * n];
-                        let mut b_strip = vec![0.0f32; n * rect.cols];
-                        for k in 0..n {
-                            b_strip[k * rect.cols..(k + 1) * rect.cols].copy_from_slice(
-                                &b[k * q + rect.col0..k * q + rect.col0 + rect.cols],
-                            );
-                        }
-                        freivalds_check(
-                            a_strip,
-                            &b_strip,
-                            &block,
-                            rect.rows,
-                            n,
-                            rect.cols,
-                            self.cfg.verify_iters,
-                            &mut self.rng,
-                            DEFAULT_TOL,
-                        )
-                    } else {
-                        true
+                    self.registry.keepalive(worker);
+                    if self.blacklist.contains_key(&idx) {
+                        // liveness proof from a blacklisted worker
+                        self.rejoin_ready.insert(idx);
+                    }
+                    let Some(p) = pending.get(&task_id).copied() else {
+                        self.stale_results += 1; // already re-dispatched
+                        continue;
                     };
-                    if !ok {
+                    if p.rect.device != idx || block.len() != p.rect.rows * p.rect.cols {
+                        // late answer from the original owner of a
+                        // re-dispatched task, or a malformed block
+                        self.stale_results += 1;
+                        continue;
+                    }
+                    if !self.verify_block(a, b, n, q, &p.rect, &block) {
                         self.blocks_rejected += 1;
-                        let key = (rect.row0, rect.col0);
-                        let tries = retries.entry(key).or_insert(0);
+                        let key = (p.rect.row0, p.rect.col0);
+                        let tries = verify_retries.entry(key).or_insert(0);
                         *tries += 1;
-                        if *tries > self.cfg.max_retries {
-                            bail!("rect at {key:?} failed verification {tries} times");
-                        }
-                        // Blacklist the offender and re-dispatch elsewhere.
-                        let offender = self.device_index(worker);
-                        self.alive[offender] = false;
+                        ensure!(
+                            *tries <= self.cfg.max_retries,
+                            "rect at {key:?} failed verification {tries} times"
+                        );
                         pending.remove(&task_id);
-                        self.redispatch(a, b, n, q, rect, &mut pending)?;
+                        self.note_removed(&p);
+                        self.evict(idx, "Freivalds verification failed");
+                        let (mut rects, det) = self.orphan_device(&mut pending, idx);
+                        rects.push(p.rect);
+                        let det = det.max(p.dispatched.elapsed().as_secs_f64());
+                        self.recover_and_redispatch(
+                            a,
+                            b,
+                            m,
+                            n,
+                            q,
+                            rects,
+                            &mut pending,
+                            &done,
+                            "poisoned block rejected",
+                            det,
+                        )?;
                         continue;
                     }
                     // Accept: write the block into the output grid.
-                    for i in 0..rect.rows {
-                        let dst = (rect.row0 + i) * q + rect.col0;
-                        c[dst..dst + rect.cols]
-                            .copy_from_slice(&block[i * rect.cols..(i + 1) * rect.cols]);
+                    for i in 0..p.rect.rows {
+                        let dst = (p.rect.row0 + i) * q + p.rect.col0;
+                        c[dst..dst + p.rect.cols]
+                            .copy_from_slice(&block[i * p.rect.cols..(i + 1) * p.rect.cols]);
                     }
                     pending.remove(&task_id);
+                    self.note_removed(&p);
+                    done.push(p.rect);
                 }
-                ToPs::Leaving { worker } => {
-                    // Disconnect-based failure detection: orphan its rects.
-                    let idx = self.device_index(worker);
-                    self.alive[idx] = false;
-                    self.recoveries += 1;
-                    let orphans: Vec<(u64, Rect)> = pending
-                        .iter()
-                        .filter(|(_, r)| r.device == idx)
-                        .map(|(&id, &r)| (id, r))
-                        .collect();
-                    for (id, r) in orphans {
-                        pending.remove(&id);
-                        self.redispatch(a, b, n, q, r, &mut pending)?;
+                ToPs::KeepAlive { worker } | ToPs::Rejoin { worker } => {
+                    self.registry.keepalive(worker);
+                    match self.device_index(worker) {
+                        Some(idx) if self.blacklist.contains_key(&idx) => {
+                            self.rejoin_ready.insert(idx);
+                        }
+                        Some(_) => {}
+                        None => self.unknown_messages += 1,
                     }
                 }
-                ToPs::KeepAlive { .. } => {}
+                ToPs::Leaving { worker } => {
+                    let Some(idx) = self.device_index(worker) else {
+                        self.unknown_messages += 1;
+                        continue;
+                    };
+                    self.evict(idx, "graceful departure");
+                    let (rects, det) = self.orphan_device(&mut pending, idx);
+                    if !rects.is_empty() {
+                        self.recover_and_redispatch(
+                            a,
+                            b,
+                            m,
+                            n,
+                            q,
+                            rects,
+                            &mut pending,
+                            &done,
+                            "graceful departure",
+                            det,
+                        )?;
+                    }
+                }
             }
         }
         Ok(c)
     }
 
-    fn device_index(&self, device_id: usize) -> usize {
-        self.devices
-            .iter()
-            .position(|d| d.id == device_id)
-            .expect("unknown device id")
-    }
-
-    /// Re-dispatch a rect to the fastest alive device (§4.2 fine-grained
-    /// recovery — the rect is already small, so a direct re-assign is the
-    /// degenerate one-shard case of the recovery solver).
-    fn redispatch(
-        &mut self,
-        a: &[f32],
-        b: &[f32],
-        n: usize,
-        q: usize,
-        mut rect: Rect,
-        pending: &mut HashMap<u64, Rect>,
-    ) -> Result<()> {
-        let Some(best) = self
-            .alive_indices()
-            .into_iter()
-            .max_by(|&x, &y| {
-                self.devices[x]
-                    .flops
-                    .partial_cmp(&self.devices[y].flops)
-                    .unwrap()
-            })
-        else {
-            bail!("no alive devices left for recovery");
-        };
-        rect.device = best;
-        let task = self.make_task(a, b, n, q, &rect);
-        pending.insert(task.task_id, rect);
-        self.tasks_dispatched += 1;
-        if self.handles[best].tx.send(ToWorker::Task(task)).is_err() {
-            self.alive[best] = false;
-            return self.redispatch(a, b, n, q, rect, pending);
-        }
-        Ok(())
-    }
-
-    /// Shut the fleet down, joining all threads.
+    /// Shut the fleet down (Cooldown), joining all threads.
     pub fn shutdown(&mut self) {
+        let _ = self.state.advance(RunState::Cooldown, "shutdown");
         for h in &self.handles {
             let _ = h.tx.send(ToWorker::Shutdown);
         }
@@ -325,6 +895,12 @@ impl DistributedGemm {
                 let _ = j.join();
             }
         }
+    }
+
+    /// Test hook: put a raw wire message on the PS inbox.
+    #[cfg(test)]
+    fn inject(&self, msg: ToPs) {
+        self.to_ps.send(msg).expect("PS inbox open");
     }
 }
 
@@ -351,22 +927,38 @@ mod tests {
         (f.devices, b)
     }
 
+    /// Worker strips keep the full contraction dimension, so the assembled
+    /// product must match a local GEMM bit for bit — not just within tol.
+    fn assert_bits_eq(c: &[f32], want: &[f32]) {
+        assert_eq!(c.len(), want.len());
+        for (i, (x, y)) in c.iter().zip(want).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "elem {i}: {x} vs {y}");
+        }
+    }
+
+    fn local(a: &[f32], b: &[f32], m: usize, n: usize, q: usize) -> Vec<f32> {
+        let mut want = vec![0.0; m * q];
+        hostgemm::matmul(a, b, &mut want, m, n, q);
+        want
+    }
+
     #[test]
-    fn distributed_matches_local() {
+    fn distributed_matches_local_bitwise() {
         let mut rng = Rng::new(1);
         let (m, n, q) = (96, 64, 80);
         let a = rand_mat(&mut rng, m * n);
         let b = rand_mat(&mut rng, n * q);
         let (devices, behaviors) = fleet_behaviors(8, Behavior::Honest);
         let mut ps = DistributedGemm::spawn(devices, behaviors, PsConfig::default());
+        assert_eq!(ps.run_state(), RunState::Warmup);
         let c = ps.matmul(&a, &b, m, n, q).unwrap();
-        let mut want = vec![0.0; m * q];
-        hostgemm::matmul(&a, &b, &mut want, m, n, q);
-        for (x, y) in c.iter().zip(&want) {
-            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
-        }
+        assert_bits_eq(&c, &local(&a, &b, m, n, q));
         assert!(ps.tasks_dispatched >= 1);
         assert_eq!(ps.blocks_rejected, 0);
+        assert_eq!(ps.run_state(), RunState::Train);
+        ps.shutdown();
+        assert_eq!(ps.run_state(), RunState::Cooldown);
+        assert!(ps.matmul(&a, &b, m, n, q).is_err(), "Cooldown is terminal");
     }
 
     #[test]
@@ -379,14 +971,18 @@ mod tests {
         behaviors[2] = Behavior::Corrupt;
         let mut ps = DistributedGemm::spawn(devices, behaviors, PsConfig::default());
         let c = ps.matmul(&a, &b, m, n, q).unwrap();
-        let mut want = vec![0.0; m * q];
-        hostgemm::matmul(&a, &b, &mut want, m, n, q);
-        for (x, y) in c.iter().zip(&want) {
-            assert!((x - y).abs() < 1e-4);
-        }
-        // the poisoned block was rejected and the offender blacklisted
+        assert_bits_eq(&c, &local(&a, &b, m, n, q));
+        // the poisoned block was rejected, the offender evicted, and the
+        // orphaned rect recovered through the §4.2 solver
         assert!(ps.blocks_rejected >= 1);
-        assert!(!ps.alive[2]);
+        assert!(!ps.is_alive(2));
+        assert!(ps.evictions >= 1);
+        assert!(ps.recoveries >= 1);
+        assert!(ps.membership_epoch() >= 1);
+        assert_eq!(
+            ps.live_recoveries[0].cause, "poisoned block rejected",
+            "recovery event recorded"
+        );
     }
 
     #[test]
@@ -401,13 +997,58 @@ mod tests {
         // first call may complete; run several so the death lands mid-round
         for round in 0..3 {
             let c = ps.matmul(&a, &b, m, n, q).unwrap();
-            let mut want = vec![0.0; m * q];
-            hostgemm::matmul(&a, &b, &mut want, m, n, q);
+            let want = local(&a, &b, m, n, q);
             for (x, y) in c.iter().zip(&want) {
-                assert!((x - y).abs() < 1e-4, "round {round}");
+                assert_eq!(x.to_bits(), y.to_bits(), "round {round}");
             }
         }
         assert!(ps.n_alive() >= 5);
+        assert!(!ps.is_alive(0));
+    }
+
+    #[test]
+    fn hung_worker_is_evicted_not_deadlocked() {
+        let mut rng = Rng::new(5);
+        let (m, n, q) = (64, 48, 64);
+        let a = rand_mat(&mut rng, m * n);
+        let b = rand_mat(&mut rng, n * q);
+        let (devices, mut behaviors) = fleet_behaviors(5, Behavior::Honest);
+        behaviors[1] = Behavior::Hang;
+        let mut ps = DistributedGemm::spawn(devices, behaviors, PsConfig::default());
+        // seed-era code blocked forever here; the deadline detector must
+        // evict the hung worker and finish the product exactly
+        let c = ps.matmul(&a, &b, m, n, q).unwrap();
+        assert_bits_eq(&c, &local(&a, &b, m, n, q));
+        assert!(!ps.is_alive(1));
+        assert!(ps.deadline_evictions >= 1);
+        assert!(ps.recoveries >= 1);
+        let rec = &ps.live_recoveries[0];
+        assert_eq!(rec.cause, "no response to liveness probe");
+        assert!(rec.detection_s > 0.0);
+        assert!(rec.completed_s.is_some(), "recovery work all landed");
+    }
+
+    #[test]
+    fn unknown_sender_is_dropped_not_fatal() {
+        let mut rng = Rng::new(6);
+        let (m, n, q) = (32, 32, 32);
+        let a = rand_mat(&mut rng, m * n);
+        let b = rand_mat(&mut rng, n * q);
+        let (devices, behaviors) = fleet_behaviors(2, Behavior::Honest);
+        let mut ps = DistributedGemm::spawn(devices, behaviors, PsConfig::default());
+        // a stale/foreign worker id used to panic the PS (satellite fix)
+        ps.inject(ToPs::KeepAlive { worker: 999 });
+        ps.inject(ToPs::Leaving { worker: 999 });
+        ps.inject(ToPs::Result {
+            worker: 999,
+            task_id: 12345,
+            block: vec![1.0; 4],
+        });
+        let c = ps.matmul(&a, &b, m, n, q).unwrap();
+        assert_bits_eq(&c, &local(&a, &b, m, n, q));
+        assert!(ps.unknown_messages >= 2);
+        assert!(ps.stale_results >= 1);
+        assert_eq!(ps.n_alive(), 2);
     }
 
     #[test]
@@ -419,10 +1060,6 @@ mod tests {
         let (devices, behaviors) = fleet_behaviors(1, Behavior::Honest);
         let mut ps = DistributedGemm::spawn(devices, behaviors, PsConfig::default());
         let c = ps.matmul(&a, &b, m, n, q).unwrap();
-        let mut want = vec![0.0; m * q];
-        hostgemm::matmul(&a, &b, &mut want, m, n, q);
-        for (x, y) in c.iter().zip(&want) {
-            assert!((x - y).abs() < 1e-4);
-        }
+        assert_bits_eq(&c, &local(&a, &b, m, n, q));
     }
 }

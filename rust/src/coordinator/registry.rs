@@ -72,6 +72,18 @@ impl Registry {
         }
     }
 
+    /// The raw registration record (capability report + liveness fields).
+    pub fn registration(&self, id: usize) -> Option<&Registration> {
+        self.entries.get(&id)
+    }
+
+    /// When `id` last proved liveness (any message counts). The PS deadline
+    /// detector compares this against its ping send time, which is robust
+    /// to absolute `suspect_after` tuning.
+    pub fn last_keepalive(&self, id: usize) -> Option<Instant> {
+        self.entries.get(&id).map(|e| e.last_keepalive)
+    }
+
     pub fn liveness(&self, id: usize) -> Option<Liveness> {
         let e = self.entries.get(&id)?;
         if e.departed {
@@ -153,6 +165,70 @@ mod tests {
         assert_eq!(r.alive_devices().len(), 0);
         r.register(Device::median_edge(0));
         assert_eq!(r.alive_devices().len(), 1);
+    }
+
+    #[test]
+    fn keepalive_recovers_a_suspect() {
+        let mut r = Registry::new();
+        r.suspect_after = Duration::from_millis(1);
+        r.dead_after = Duration::from_secs(60);
+        r.register(Device::median_edge(0));
+        std::thread::sleep(Duration::from_millis(5));
+        assert_eq!(r.liveness(0), Some(Liveness::Suspect));
+        // a fresh keepalive restores Alive without re-registering
+        assert!(r.keepalive(0));
+        assert_eq!(r.liveness(0), Some(Liveness::Alive));
+    }
+
+    #[test]
+    fn keepalive_from_departed_refreshes_but_reports_dead() {
+        // The PS uses this to spot rejoin candidates: the message timestamp
+        // updates (liveness proof) while scheduling still excludes them.
+        let mut r = Registry::new();
+        r.register(Device::median_edge(0));
+        r.depart(0);
+        let before = r.last_keepalive(0).unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(!r.keepalive(0), "departed keepalive returns false");
+        assert!(r.last_keepalive(0).unwrap() > before);
+        assert_eq!(r.liveness(0), Some(Liveness::Dead));
+    }
+
+    #[test]
+    fn last_keepalive_is_monotonic_across_messages() {
+        let mut r = Registry::new();
+        r.register(Device::median_edge(3));
+        let t0 = r.last_keepalive(3).unwrap();
+        std::thread::sleep(Duration::from_millis(2));
+        r.keepalive(3);
+        let t1 = r.last_keepalive(3).unwrap();
+        assert!(t1 > t0);
+        assert!(r.last_keepalive(99).is_none());
+    }
+
+    #[test]
+    fn registration_exposes_capability_report() {
+        let mut r = Registry::new();
+        let dev = Device::median_edge(7);
+        let flops = dev.flops;
+        r.register(dev);
+        let reg = r.registration(7).unwrap();
+        assert_eq!(reg.device.id, 7);
+        assert_eq!(reg.device.flops, flops);
+        assert!(!reg.departed);
+        assert!(r.registration(8).is_none());
+    }
+
+    #[test]
+    fn reregister_clears_departed_flag() {
+        let mut r = Registry::new();
+        r.register(Device::median_edge(0));
+        r.depart(0);
+        assert!(r.registration(0).unwrap().departed);
+        r.register(Device::median_edge(0));
+        assert!(!r.registration(0).unwrap().departed);
+        assert_eq!(r.liveness(0), Some(Liveness::Alive));
+        assert_eq!(r.len(), 1, "re-register reuses the slot");
     }
 
     #[test]

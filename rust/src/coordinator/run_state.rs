@@ -1,0 +1,255 @@
+//! Typed run-state machine for the live coordinator (ROADMAP item 1,
+//! Psyche-style `shared/coordinator` state types).
+//!
+//! The PS drives one [`RunStateMachine`] per fleet:
+//!
+//! ```text
+//!            +--------------------------------------+
+//!            v                                      |
+//! Warmup -> Train <-------------------------> Recover
+//!    |        |                                     |
+//!    +--------+------------> Cooldown <-------------+
+//! ```
+//!
+//! `Warmup` covers registration and the first assignment solve; `Train` is
+//! the steady GEMM-serving state; `Recover` is entered whenever orphaned
+//! rects are being re-tiled through the §4.2 solver; `Cooldown` is the
+//! terminal drain state entered by `shutdown`. Membership changes (evict,
+//! rejoin) bump a monotonically increasing *membership epoch* without
+//! leaving the current state — the epoch tags which fleet composition a
+//! dispatched task belongs to. Every transition and epoch bump is logged
+//! (`CLEAVE_LOG=debug`) and counted, so tests and benches can assert the
+//! exact fault path taken.
+
+use anyhow::{bail, Result};
+
+/// Coordinator run state (Warmup → Train ⇄ Recover → Cooldown).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RunState {
+    /// fleet registered, first assignment not yet served
+    Warmup,
+    /// steady state: dispatch, collect, verify
+    Train,
+    /// orphaned rects being re-tiled via the §4.2 recovery solver
+    Recover,
+    /// terminal: fleet draining / shut down
+    Cooldown,
+}
+
+impl RunState {
+    fn index(self) -> usize {
+        match self {
+            RunState::Warmup => 0,
+            RunState::Train => 1,
+            RunState::Recover => 2,
+            RunState::Cooldown => 3,
+        }
+    }
+
+    /// Legal successors (`Cooldown` is terminal).
+    pub fn can_advance_to(self, to: RunState) -> bool {
+        matches!(
+            (self, to),
+            (RunState::Warmup, RunState::Train)
+                | (RunState::Train, RunState::Recover)
+                | (RunState::Recover, RunState::Train)
+                | (RunState::Warmup, RunState::Cooldown)
+                | (RunState::Train, RunState::Cooldown)
+                | (RunState::Recover, RunState::Cooldown)
+        )
+    }
+}
+
+/// One recorded state transition (or same-state membership-epoch bump).
+#[derive(Clone, Copy, Debug)]
+pub struct Transition {
+    pub from: RunState,
+    pub to: RunState,
+    /// membership epoch *after* the transition
+    pub epoch: u64,
+    /// why the transition happened (a code-site literal)
+    pub reason: &'static str,
+}
+
+/// Bound on the retained transition log; counters keep the full totals.
+const MAX_RETAINED: usize = 128;
+
+/// The logged-and-counted state machine the PS drives.
+pub struct RunStateMachine {
+    state: RunState,
+    epoch: u64,
+    /// times each state was entered (Warmup counts its initial entry)
+    entries: [u64; 4],
+    total_transitions: u64,
+    membership_events: u64,
+    rejected_transitions: u64,
+    recent: Vec<Transition>,
+}
+
+impl RunStateMachine {
+    pub fn new() -> Self {
+        RunStateMachine {
+            state: RunState::Warmup,
+            epoch: 0,
+            entries: [1, 0, 0, 0],
+            total_transitions: 0,
+            membership_events: 0,
+            rejected_transitions: 0,
+            recent: Vec::new(),
+        }
+    }
+
+    pub fn state(&self) -> RunState {
+        self.state
+    }
+
+    /// Current membership epoch (bumped on every evict / rejoin).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        self.state == RunState::Cooldown
+    }
+
+    /// How many times `s` has been entered.
+    pub fn entries(&self, s: RunState) -> u64 {
+        self.entries[s.index()]
+    }
+
+    pub fn total_transitions(&self) -> u64 {
+        self.total_transitions
+    }
+
+    /// Evicts + rejoins (same-state epoch bumps).
+    pub fn membership_events(&self) -> u64 {
+        self.membership_events
+    }
+
+    /// Illegal `advance` attempts that were refused.
+    pub fn rejected_transitions(&self) -> u64 {
+        self.rejected_transitions
+    }
+
+    /// The retained tail of the transition log (bounded; totals in counters).
+    pub fn transitions(&self) -> &[Transition] {
+        &self.recent
+    }
+
+    fn record(&mut self, t: Transition) {
+        if self.recent.len() == MAX_RETAINED {
+            self.recent.remove(0);
+        }
+        self.recent.push(t);
+    }
+
+    /// Advance to `to`. Same-state advances are no-ops; illegal ones are
+    /// refused (counted) so a buggy caller cannot corrupt the run.
+    pub fn advance(&mut self, to: RunState, reason: &'static str) -> Result<()> {
+        if self.state == to {
+            return Ok(());
+        }
+        if !self.state.can_advance_to(to) {
+            self.rejected_transitions += 1;
+            bail!("illegal run-state transition {:?} -> {to:?} ({reason})", self.state);
+        }
+        let from = self.state;
+        self.state = to;
+        self.entries[to.index()] += 1;
+        self.total_transitions += 1;
+        crate::log_debug!("run-state {from:?} -> {to:?} (epoch {}): {reason}", self.epoch);
+        self.record(Transition {
+            from,
+            to,
+            epoch: self.epoch,
+            reason,
+        });
+        Ok(())
+    }
+
+    /// Membership change (evict / rejoin): bump the epoch in place and
+    /// return the new epoch.
+    pub fn bump_epoch(&mut self, reason: &'static str) -> u64 {
+        self.epoch += 1;
+        self.membership_events += 1;
+        crate::log_debug!("membership epoch -> {} in {:?}: {reason}", self.epoch, self.state);
+        self.record(Transition {
+            from: self.state,
+            to: self.state,
+            epoch: self.epoch,
+            reason,
+        });
+        self.epoch
+    }
+}
+
+impl Default for RunStateMachine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn legal_lifecycle_is_logged_and_counted() {
+        let mut sm = RunStateMachine::new();
+        assert_eq!(sm.state(), RunState::Warmup);
+        sm.advance(RunState::Train, "first round").unwrap();
+        sm.advance(RunState::Recover, "eviction").unwrap();
+        sm.advance(RunState::Train, "recovered").unwrap();
+        sm.advance(RunState::Cooldown, "shutdown").unwrap();
+        assert!(sm.is_terminal());
+        assert_eq!(sm.entries(RunState::Train), 2);
+        assert_eq!(sm.entries(RunState::Recover), 1);
+        assert_eq!(sm.entries(RunState::Cooldown), 1);
+        assert_eq!(sm.total_transitions(), 4);
+        assert_eq!(sm.transitions().len(), 4);
+        assert_eq!(sm.transitions()[0].reason, "first round");
+    }
+
+    #[test]
+    fn illegal_transitions_are_refused_not_applied() {
+        let mut sm = RunStateMachine::new();
+        // Warmup cannot jump straight into Recover.
+        assert!(sm.advance(RunState::Recover, "bad").is_err());
+        assert_eq!(sm.state(), RunState::Warmup);
+        assert_eq!(sm.rejected_transitions(), 1);
+        // Cooldown is terminal.
+        sm.advance(RunState::Cooldown, "abort").unwrap();
+        assert!(sm.advance(RunState::Train, "resurrect").is_err());
+        assert_eq!(sm.rejected_transitions(), 2);
+        // ...but a same-state advance stays a no-op.
+        sm.advance(RunState::Cooldown, "idempotent").unwrap();
+        assert_eq!(sm.entries(RunState::Cooldown), 1);
+    }
+
+    #[test]
+    fn membership_epochs_bump_in_place() {
+        let mut sm = RunStateMachine::new();
+        sm.advance(RunState::Train, "start").unwrap();
+        assert_eq!(sm.epoch(), 0);
+        assert_eq!(sm.bump_epoch("evicted worker 3"), 1);
+        assert_eq!(sm.bump_epoch("worker 3 rejoined"), 2);
+        assert_eq!(sm.state(), RunState::Train, "epoch bumps keep the state");
+        assert_eq!(sm.membership_events(), 2);
+        // epoch bumps appear in the transition log as same-state entries
+        let last = sm.transitions().last().unwrap();
+        assert_eq!(last.from, last.to);
+        assert_eq!(last.epoch, 2);
+    }
+
+    #[test]
+    fn transition_log_is_bounded() {
+        let mut sm = RunStateMachine::new();
+        sm.advance(RunState::Train, "start").unwrap();
+        for _ in 0..(MAX_RETAINED as u64 + 50) {
+            sm.bump_epoch("churn");
+        }
+        assert_eq!(sm.transitions().len(), MAX_RETAINED);
+        assert_eq!(sm.membership_events(), MAX_RETAINED as u64 + 50);
+        assert_eq!(sm.epoch(), MAX_RETAINED as u64 + 50);
+    }
+}

@@ -101,6 +101,10 @@ pub struct DistributedBackend {
     /// route tiny attention GEMMs locally when false (PS-side), like the
     /// paper's non-GEMM placement; projection/MLP GEMMs always distribute.
     pub min_distributed_elems: usize,
+    /// GEMMs computed PS-locally because the fleet could not serve them
+    /// (e.g. every worker evicted mid-run) — training survives total fleet
+    /// loss instead of panicking, at PS-local speed
+    pub local_fallbacks: u64,
 }
 
 impl DistributedBackend {
@@ -109,7 +113,19 @@ impl DistributedBackend {
             ps,
             calls: 0,
             min_distributed_elems: 0,
+            local_fallbacks: 0,
         }
+    }
+
+    /// The coordinator's current run state (Warmup → Train ⇄ Recover →
+    /// Cooldown).
+    pub fn run_state(&self) -> crate::coordinator::run_state::RunState {
+        self.ps.run_state()
+    }
+
+    /// The fleet's membership epoch (bumps on every evict / rejoin).
+    pub fn membership_epoch(&self) -> u64 {
+        self.ps.membership_epoch()
     }
 }
 
@@ -121,9 +137,20 @@ impl GemmBackend for DistributedBackend {
             hostgemm::matmul(a, b, &mut c, m, n, q);
             return c;
         }
-        self.ps
-            .matmul(a, b, m, n, q)
-            .expect("distributed GEMM failed")
+        match self.ps.matmul(a, b, m, n, q) {
+            Ok(c) => c,
+            Err(e) => {
+                // Fleet unusable (all workers evicted / shut down): the PS
+                // computes locally so the training step still completes.
+                // The worker path is bit-identical to the host GEMM, so
+                // the losses are unaffected — only throughput is.
+                self.local_fallbacks += 1;
+                crate::log_warn!("distributed GEMM failed ({e}); computing PS-locally");
+                let mut c = vec![0.0f32; m * q];
+                hostgemm::matmul(a, b, &mut c, m, n, q);
+                c
+            }
+        }
     }
 
     fn gemm_calls(&self) -> u64 {
@@ -635,5 +662,32 @@ mod tests {
         let c = be.matmul(&a, &b, 2, 2, 2);
         assert_eq!(c, vec![2.0, 2.0, 2.0, 2.0]);
         assert_eq!(be.gemm_calls(), 1);
+    }
+
+    #[test]
+    fn distributed_backend_falls_back_locally_when_fleet_dies() {
+        use crate::cluster::fleet::Fleet;
+        use crate::coordinator::ps::PsConfig;
+        use crate::coordinator::worker::Behavior;
+        // a 1-worker fleet that dies on its first task leaves nobody to
+        // recover onto; the backend must compute locally, not panic
+        let fleet = Fleet::median(1);
+        let ps = DistributedGemm::spawn(
+            fleet.devices,
+            vec![Behavior::DieAfter(0)],
+            PsConfig::default(),
+        );
+        let mut be = DistributedBackend::new(ps);
+        let a = vec![1.0f32; 4];
+        let b = vec![1.0f32; 4];
+        let c = be.matmul(&a, &b, 2, 2, 2);
+        assert_eq!(c, vec![2.0, 2.0, 2.0, 2.0]);
+        assert!(be.local_fallbacks >= 1);
+        assert_eq!(be.gemm_calls(), 1);
+        // subsequent calls keep working (assignment over an empty fleet
+        // errors cleanly and falls back again)
+        let c2 = be.matmul(&a, &b, 2, 2, 2);
+        assert_eq!(c2, vec![2.0, 2.0, 2.0, 2.0]);
+        assert!(be.local_fallbacks >= 2);
     }
 }

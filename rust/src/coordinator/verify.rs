@@ -115,6 +115,39 @@ mod tests {
     }
 
     #[test]
+    fn detection_improves_with_iteration_count() {
+        // An adversarial corruption two entries of the same row can hide
+        // from a single ±1 probe whenever the probe weights them equally
+        // (their errors cancel w.p. 1/2 per round) — exactly the 2^-iters
+        // false-negative bound. With 10 rounds the escape probability is
+        // ~1e-3; with 1 round it is ~1/2. Seeded, so the margins are safe.
+        let trials = 60;
+        let mut caught_1 = 0;
+        let mut caught_10 = 0;
+        for seed in 0..trials {
+            let (a, b, mut c) = setting(6, 32, 8, 500 + seed);
+            // equal-magnitude, opposite-sign corruption in one row
+            c[0] += 0.5;
+            c[1] -= 0.5;
+            let mut r1 = Rng::new(9000 + seed);
+            if !freivalds_check(&a, &b, &c, 6, 32, 8, 1, &mut r1, DEFAULT_TOL) {
+                caught_1 += 1;
+            }
+            let mut r10 = Rng::new(9000 + seed);
+            if !freivalds_check(&a, &b, &c, 6, 32, 8, 10, &mut r10, DEFAULT_TOL) {
+                caught_10 += 1;
+            }
+        }
+        // 10 rounds is near-perfect; 1 round misses a meaningful fraction
+        assert!(caught_10 >= trials - 3, "10-iter caught {caught_10}/{trials}");
+        assert!(caught_10 >= caught_1, "{caught_10} vs {caught_1}");
+        assert!(
+            caught_1 <= trials - 5,
+            "1-iter should miss cancelling corruptions sometimes: {caught_1}/{trials}"
+        );
+    }
+
+    #[test]
     fn rejects_zero_block_unless_inputs_zero() {
         let (a, b, c) = setting(4, 16, 4, 9);
         let zeros = vec![0.0f32; c.len()];

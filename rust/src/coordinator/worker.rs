@@ -1,67 +1,231 @@
 //! Worker device: executes assigned sub-GEMM shards, models its link
-//! delays, and (optionally) misbehaves for the poisoning tests.
+//! delays, and (optionally) misbehaves for the fault-injection tests.
 //!
 //! Each worker is a thread holding only its dispatched shards — the memory
 //! model of Eq. 7. Compute uses the blocked host GEMM (the PJRT canonical-
 //! artifact path is exercised separately via [`crate::runtime::GemmExecutor`];
 //! both produce the same numerics, tested in `rust/tests/`).
+//!
+//! Fault injection is deterministic: a seeded [`FaultPlan`] schedules
+//! behaviour changes at task-completion counts, so a chaos run with a fixed
+//! seed replays the exact same fault sequence. A `Hang` worker swallows
+//! tasks *and* pings (the PS must detect it by deadline, never by
+//! disconnect) but still honours `Shutdown`, so fleets tear down cleanly.
 
-use std::sync::mpsc::{Receiver, Sender};
-use std::time::Duration;
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::time::{Duration, Instant};
 
 use crate::cluster::device::Device;
 use crate::coordinator::protocol::{SubGemmTask, ToPs, ToWorker};
 use crate::runtime::hostgemm;
+use crate::util::rng::Rng;
 
 /// Worker behaviour for fault-injection tests.
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub enum Behavior {
     Honest,
     /// returns a corrupted block (poisoning adversary, §6)
     Corrupt,
     /// dies after completing `n` tasks (churn)
     DieAfter(usize),
+    /// stops responding entirely — swallows tasks and pings without a
+    /// disconnect, the pathological case for deadline detection
+    Hang,
+    /// computes honestly but loses each result send with probability
+    /// `drop_prob` (still answers pings — a lossy uplink, not a dead host)
+    Flaky { drop_prob: f64 },
+    /// response time doubles with every completed task until it blows any
+    /// reasonable deadline (the in-batch straggler of §3.2)
+    SlowRamp,
+    /// announces a graceful departure, ignores traffic for a dwell, then
+    /// asks to rejoin (probation path through `Registry::register`)
+    DepartRejoin,
+}
+
+/// How long a `DepartRejoin` worker stays away before asking back in.
+const REJOIN_DWELL: Duration = Duration::from_millis(300);
+/// Poll interval while departed (lets the dwell expire without traffic).
+const DEPARTED_POLL: Duration = Duration::from_millis(20);
+
+/// A deterministic per-device fault schedule: `(after_n_completed_tasks,
+/// behavior)` steps, applied in order. The active behaviour at any moment
+/// is the last step whose threshold has been reached.
+#[derive(Clone, Debug)]
+pub struct FaultPlan {
+    steps: Vec<(usize, Behavior)>,
+}
+
+impl FaultPlan {
+    pub fn honest() -> FaultPlan {
+        Self::always(Behavior::Honest)
+    }
+
+    /// The same behaviour from the first task on.
+    pub fn always(b: Behavior) -> FaultPlan {
+        FaultPlan { steps: vec![(0, b)] }
+    }
+
+    /// Honest for the first `n` completed tasks, then `b`.
+    pub fn after(n: usize, b: Behavior) -> FaultPlan {
+        if n == 0 {
+            return Self::always(b);
+        }
+        FaultPlan {
+            steps: vec![(0, Behavior::Honest), (n, b)],
+        }
+    }
+
+    /// An explicit multi-step schedule (sorted by threshold; implicitly
+    /// honest before the first step).
+    pub fn staged(mut steps: Vec<(usize, Behavior)>) -> FaultPlan {
+        steps.sort_by_key(|&(n, _)| n);
+        if steps.first().is_none_or(|&(n, _)| n != 0) {
+            steps.insert(0, (0, Behavior::Honest));
+        }
+        FaultPlan { steps }
+    }
+
+    /// The behaviour in force after `completed` finished tasks.
+    pub fn behavior_at(&self, completed: usize) -> Behavior {
+        let mut b = Behavior::Honest;
+        for &(n, s) in &self.steps {
+            if completed >= n {
+                b = s;
+            } else {
+                break;
+            }
+        }
+        b
+    }
+
+    /// Seeded random plan: honest with probability `1 - fault_prob`,
+    /// otherwise one fault drawn uniformly with a small random onset. Same
+    /// `rng` stream → same plan, so chaos runs replay exactly.
+    pub fn random(rng: &mut Rng, fault_prob: f64) -> FaultPlan {
+        if !rng.bernoulli(fault_prob) {
+            return Self::honest();
+        }
+        let onset = rng.below(3) as usize + 1;
+        let b = match rng.below(6) {
+            0 => Behavior::Hang,
+            1 => Behavior::Flaky {
+                drop_prob: rng.uniform_in(0.3, 0.7),
+            },
+            2 => Behavior::SlowRamp,
+            3 => Behavior::DepartRejoin,
+            4 => Behavior::Corrupt,
+            _ => Behavior::DieAfter(onset + 1),
+        };
+        Self::after(onset, b)
+    }
 }
 
 /// Worker configuration.
 #[derive(Clone, Debug)]
 pub struct WorkerConfig {
     pub device: Device,
-    pub behavior: Behavior,
+    /// deterministic fault schedule (use [`FaultPlan::honest`] for none)
+    pub plan: FaultPlan,
     /// scale factor applied to modeled link delays (0 disables sleeping —
     /// tests; 1.0 = real-time emulation of the device's bandwidth)
     pub delay_scale: f64,
+    /// seed for the worker's fault stream (Flaky drops)
+    pub seed: u64,
+}
+
+/// SlowRamp delay: doubles per completed task, capped below the shutdown
+/// join budget but well above any sane per-task deadline.
+fn ramp_delay(completed: usize) -> Duration {
+    let secs = (0.02 * (1u64 << completed.min(6)) as f64).min(0.64);
+    Duration::from_secs_f64(secs)
 }
 
 /// Run the worker loop (call from a spawned thread).
 pub fn run(cfg: WorkerConfig, rx: Receiver<ToWorker>, tx: Sender<ToPs>) {
     let id = cfg.device.id;
+    let mut rng = Rng::new(cfg.seed ^ (id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15));
     let mut completed = 0usize;
-    while let Ok(msg) = rx.recv() {
+    let mut hung = false;
+    let mut departed_at: Option<Instant> = None;
+    let mut rejoined = false;
+    loop {
+        // Departed workers poll so the rejoin dwell can expire without any
+        // inbound traffic; everyone else blocks on the channel.
+        let msg = if departed_at.is_some() {
+            match rx.recv_timeout(DEPARTED_POLL) {
+                Ok(m) => Some(m),
+                Err(RecvTimeoutError::Timeout) => None,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        } else {
+            match rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => break,
+            }
+        };
+        if let Some(t0) = departed_at {
+            if t0.elapsed() >= REJOIN_DWELL {
+                departed_at = None;
+                rejoined = true;
+                if tx.send(ToPs::Rejoin { worker: id }).is_err() {
+                    break;
+                }
+            }
+        }
+        let Some(msg) = msg else { continue };
         match msg {
+            ToWorker::Shutdown => break,
             ToWorker::Ping => {
+                if hung || departed_at.is_some() {
+                    continue; // silent: the PS must detect us by deadline
+                }
                 if tx.send(ToPs::KeepAlive { worker: id }).is_err() {
                     break;
                 }
             }
-            ToWorker::Shutdown => break,
             ToWorker::Task(task) => {
-                if let Behavior::DieAfter(n) = cfg.behavior {
-                    if completed >= n {
+                if hung || departed_at.is_some() {
+                    continue; // swallowed; the PS re-dispatches on deadline
+                }
+                let mut behavior = cfg.plan.behavior_at(completed);
+                if rejoined && behavior == Behavior::DepartRejoin {
+                    // one depart/rejoin cycle per plan; serve honestly after
+                    behavior = Behavior::Honest;
+                }
+                match behavior {
+                    Behavior::Hang => {
+                        hung = true;
+                        continue;
+                    }
+                    Behavior::DepartRejoin => {
+                        let _ = tx.send(ToPs::Leaving { worker: id });
+                        departed_at = Some(Instant::now());
+                        continue;
+                    }
+                    Behavior::DieAfter(n) if completed >= n => {
                         // Disappear without a trace: disconnect-based
                         // failure detection at the PS (§3.2).
                         let _ = tx.send(ToPs::Leaving { worker: id });
-                        break;
+                        return;
                     }
+                    _ => {}
+                }
+                if behavior == Behavior::SlowRamp {
+                    std::thread::sleep(ramp_delay(completed));
                 }
                 simulate_link(&cfg, task.dl_bytes(), cfg.device.dl_bw, cfg.device.dl_lat);
                 let mut block = execute(&task);
-                if cfg.behavior == Behavior::Corrupt && !block.is_empty() {
+                if behavior == Behavior::Corrupt && !block.is_empty() {
                     let idx = (task.task_id as usize * 7919) % block.len();
                     block[idx] += 1.0;
                 }
                 simulate_link(&cfg, task.ul_bytes(), cfg.device.ul_bw, cfg.device.ul_lat);
                 completed += 1;
+                if let Behavior::Flaky { drop_prob } = behavior {
+                    if rng.bernoulli(drop_prob) {
+                        continue; // computed, then the uplink ate the result
+                    }
+                }
                 if tx
                     .send(ToPs::Result {
                         worker: id,
@@ -117,11 +281,12 @@ mod tests {
         }
     }
 
-    fn cfg(behavior: Behavior) -> WorkerConfig {
+    fn cfg(plan: FaultPlan) -> WorkerConfig {
         WorkerConfig {
             device: crate::cluster::device::Device::median_edge(5),
-            behavior,
+            plan,
             delay_scale: 0.0,
+            seed: 42,
         }
     }
 
@@ -129,7 +294,7 @@ mod tests {
     fn honest_worker_computes_correctly() {
         let (to_w, rx) = channel();
         let (tx, from_w) = channel();
-        let h = std::thread::spawn(move || run(cfg(Behavior::Honest), rx, tx));
+        let h = std::thread::spawn(move || run(cfg(FaultPlan::honest()), rx, tx));
         to_w.send(ToWorker::Task(task())).unwrap();
         match from_w.recv().unwrap() {
             ToPs::Result {
@@ -153,7 +318,7 @@ mod tests {
         let honest = execute(&task());
         let (to_w, rx) = channel();
         let (tx, from_w) = channel();
-        let h = std::thread::spawn(move || run(cfg(Behavior::Corrupt), rx, tx));
+        let h = std::thread::spawn(move || run(cfg(FaultPlan::always(Behavior::Corrupt)), rx, tx));
         to_w.send(ToWorker::Task(task())).unwrap();
         if let ToPs::Result { block, .. } = from_w.recv().unwrap() {
             assert_ne!(block, honest);
@@ -168,7 +333,8 @@ mod tests {
     fn dying_worker_announces_and_stops() {
         let (to_w, rx) = channel();
         let (tx, from_w) = channel();
-        let h = std::thread::spawn(move || run(cfg(Behavior::DieAfter(1)), rx, tx));
+        let plan = FaultPlan::always(Behavior::DieAfter(1));
+        let h = std::thread::spawn(move || run(cfg(plan), rx, tx));
         to_w.send(ToWorker::Task(task())).unwrap();
         assert!(matches!(from_w.recv().unwrap(), ToPs::Result { .. }));
         to_w.send(ToWorker::Task(task())).unwrap();
@@ -182,10 +348,113 @@ mod tests {
     fn ping_pong_keepalive() {
         let (to_w, rx) = channel();
         let (tx, from_w) = channel();
-        let h = std::thread::spawn(move || run(cfg(Behavior::Honest), rx, tx));
+        let h = std::thread::spawn(move || run(cfg(FaultPlan::honest()), rx, tx));
         to_w.send(ToWorker::Ping).unwrap();
         assert!(matches!(from_w.recv().unwrap(), ToPs::KeepAlive { worker: 5 }));
         to_w.send(ToWorker::Shutdown).unwrap();
         h.join().unwrap();
+    }
+
+    #[test]
+    fn hung_worker_swallows_traffic_but_still_joins() {
+        let (to_w, rx) = channel();
+        let (tx, from_w) = channel();
+        let h = std::thread::spawn(move || run(cfg(FaultPlan::always(Behavior::Hang)), rx, tx));
+        to_w.send(ToWorker::Task(task())).unwrap();
+        to_w.send(ToWorker::Ping).unwrap();
+        // no result, no keepalive, no disconnect — silence
+        assert!(from_w.recv_timeout(Duration::from_millis(150)).is_err());
+        // ...but Shutdown still tears it down (Drop never deadlocks)
+        to_w.send(ToWorker::Shutdown).unwrap();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn flaky_worker_drops_results_but_answers_pings() {
+        let (to_w, rx) = channel();
+        let (tx, from_w) = channel();
+        let plan = FaultPlan::always(Behavior::Flaky { drop_prob: 1.0 });
+        let h = std::thread::spawn(move || run(cfg(plan), rx, tx));
+        to_w.send(ToWorker::Task(task())).unwrap();
+        to_w.send(ToWorker::Ping).unwrap();
+        // the result is always dropped, so the first message is the pong
+        assert!(matches!(from_w.recv().unwrap(), ToPs::KeepAlive { worker: 5 }));
+        to_w.send(ToWorker::Shutdown).unwrap();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn slow_ramp_still_computes_correctly() {
+        let (to_w, rx) = channel();
+        let (tx, from_w) = channel();
+        let h = std::thread::spawn(move || run(cfg(FaultPlan::always(Behavior::SlowRamp)), rx, tx));
+        let t0 = Instant::now();
+        to_w.send(ToWorker::Task(task())).unwrap();
+        match from_w.recv().unwrap() {
+            ToPs::Result { block, .. } => {
+                assert!(block.iter().all(|&x| (x - 8.0).abs() < 1e-6));
+            }
+            _ => panic!("expected result"),
+        }
+        assert!(t0.elapsed() >= Duration::from_millis(20), "ramp slept");
+        to_w.send(ToWorker::Shutdown).unwrap();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn depart_rejoin_roundtrip() {
+        let (to_w, rx) = channel();
+        let (tx, from_w) = channel();
+        let plan = FaultPlan::always(Behavior::DepartRejoin);
+        let h = std::thread::spawn(move || run(cfg(plan), rx, tx));
+        to_w.send(ToWorker::Task(task())).unwrap();
+        assert!(matches!(from_w.recv().unwrap(), ToPs::Leaving { worker: 5 }));
+        // after the dwell the worker asks to rejoin...
+        match from_w.recv_timeout(Duration::from_secs(5)).unwrap() {
+            ToPs::Rejoin { worker } => assert_eq!(worker, 5),
+            _ => panic!("expected rejoin"),
+        }
+        // ...and serves honestly afterwards
+        to_w.send(ToWorker::Task(task())).unwrap();
+        match from_w.recv().unwrap() {
+            ToPs::Result { block, .. } => {
+                assert!(block.iter().all(|&x| (x - 8.0).abs() < 1e-6));
+            }
+            _ => panic!("expected result"),
+        }
+        to_w.send(ToWorker::Shutdown).unwrap();
+        h.join().unwrap();
+    }
+
+    #[test]
+    fn fault_plan_staging() {
+        let p = FaultPlan::after(2, Behavior::Hang);
+        assert_eq!(p.behavior_at(0), Behavior::Honest);
+        assert_eq!(p.behavior_at(1), Behavior::Honest);
+        assert_eq!(p.behavior_at(2), Behavior::Hang);
+        assert_eq!(p.behavior_at(9), Behavior::Hang);
+        let s = FaultPlan::staged(vec![(3, Behavior::Corrupt), (1, Behavior::SlowRamp)]);
+        assert_eq!(s.behavior_at(0), Behavior::Honest);
+        assert_eq!(s.behavior_at(1), Behavior::SlowRamp);
+        assert_eq!(s.behavior_at(3), Behavior::Corrupt);
+    }
+
+    #[test]
+    fn random_plans_are_seed_deterministic() {
+        let mut a = Rng::new(77);
+        let mut b = Rng::new(77);
+        for _ in 0..32 {
+            let pa = FaultPlan::random(&mut a, 0.5);
+            let pb = FaultPlan::random(&mut b, 0.5);
+            assert_eq!(format!("{pa:?}"), format!("{pb:?}"));
+        }
+        // fault_prob 0 is always honest
+        let mut c = Rng::new(1);
+        for _ in 0..16 {
+            assert_eq!(
+                FaultPlan::random(&mut c, 0.0).behavior_at(5),
+                Behavior::Honest
+            );
+        }
     }
 }

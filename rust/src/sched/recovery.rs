@@ -14,6 +14,13 @@
 //! so the recovery hot path spends **zero bisection iterations** —
 //! `RecoveryPlan::stats` reports `analytic_roots` per lost rectangle and
 //! the §4.1 100x-faster-recovery claim no longer depends on probe counts.
+//!
+//! Callers: the simulator (`sim/failure.rs`, `sim/session.rs`) and, since
+//! ISSUE 6, the *live* PS (`coordinator/ps.rs:recover_and_redispatch`),
+//! which snapshots its done + in-flight rects as the `assignment`, passes
+//! every non-alive device as `failed`, and dispatches `new_rects` to real
+//! workers — recording the live latency for parity against
+//! [`crate::sim::failure::LiveParity`].
 
 use crate::cluster::device::Device;
 use crate::cluster::fleet::FleetView;
