@@ -140,11 +140,11 @@ fn run(sc: &Scenario) -> Outcome {
         name: sc.name,
         fault_rate: sc.faults.len() as f64 / N_DEV as f64,
         rounds: sc.rounds,
-        evictions: ps.evictions,
-        deadline_evictions: ps.deadline_evictions,
-        rejoins: ps.rejoins,
-        redispatched_tasks: ps.redispatched_tasks,
-        recoveries: ps.recoveries,
+        evictions: ps.evictions(),
+        deadline_evictions: ps.deadline_evictions(),
+        rejoins: ps.rejoins(),
+        redispatched_tasks: ps.redispatched_tasks(),
+        recoveries: ps.recoveries(),
         events,
     };
     ps.shutdown();

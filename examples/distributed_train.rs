@@ -76,9 +76,9 @@ fn main() -> anyhow::Result<()> {
     println!(
         "\nPS stats: {} sub-GEMM tasks dispatched, {} poisoned blocks rejected, \
          {} churn recoveries, {} workers alive",
-        trainer.backend.ps.tasks_dispatched,
-        trainer.backend.ps.blocks_rejected,
-        trainer.backend.ps.recoveries,
+        trainer.backend.ps.tasks_dispatched(),
+        trainer.backend.ps.blocks_rejected(),
+        trainer.backend.ps.recoveries(),
         trainer.backend.ps.n_alive()
     );
     println!("distributed == centralized numerics: OK");

@@ -127,6 +127,18 @@ impl CleavePlanner {
             cache: Some(SolverCache::with_mode(mode)),
         }
     }
+
+    /// [`CleavePlanner::cached`] with its solver counters bound to `reg`
+    /// (ISSUE 7), so `solver.*` metrics from every plan land in the shared
+    /// registry instead of a private one.
+    pub fn cached_observed(reg: &crate::obs::metrics::MetricsRegistry) -> CleavePlanner {
+        CleavePlanner {
+            cache: Some(SolverCache::with_registry(
+                crate::sched::oracle::OracleMode::default(),
+                reg,
+            )),
+        }
+    }
 }
 
 impl Default for CleavePlanner {

@@ -29,6 +29,7 @@ use crate::cluster::fleet::{Fleet, FleetConfig};
 use crate::cluster::pool::{DevicePool, PoolConfig};
 use crate::model::config::{ModelSpec, TrainSetup};
 use crate::model::dag::GemmDag;
+use crate::obs::Recorder;
 use crate::sched::cost::{CostModel, GemmShape, PsEnvelope, PsParams};
 use crate::sched::fastpath::{CacheStats, SolverCache};
 use crate::sched::oracle::OracleMode;
@@ -36,7 +37,7 @@ use crate::sched::recovery::recover;
 use crate::sched::select::{select_devices, SelectConfig, SelectionOutcome};
 use crate::sched::solver::{SolverOptions, SolverStats};
 use crate::sim::batch::{simulate_batch, BatchResult, SimConfig};
-use crate::sim::session::{run_session_with, Policy, SessionConfig, SessionReport};
+use crate::sim::session::{run_session_observed, Policy, SessionConfig, SessionReport};
 use crate::util::json::{obj, Json};
 use crate::util::threadpool::{default_threads, scoped_map};
 use crate::Result;
@@ -83,6 +84,10 @@ pub struct Scenario {
     /// (e.g. [`Scenario::selection_frontier`]); planner-owned caches keep
     /// their own mode
     oracle: OracleMode,
+    /// flight recorder attached by [`Scenario::observe`] (ISSUE 7); when
+    /// set, sessions log timeline events and scenario-created caches bind
+    /// their counters to the recorder's registry
+    obs: Option<Recorder>,
 }
 
 /// The per-configuration planning context ([`GemmDag`], fleet, cost
@@ -113,6 +118,7 @@ impl Scenario {
             session: SessionConfig::default(),
             pool: None,
             oracle: OracleMode::Exact,
+            obs: None,
         }
     }
 
@@ -225,6 +231,16 @@ impl Scenario {
     /// ([`crate::api::CleavePlanner::cached_with_mode`]).
     pub fn oracle_mode(mut self, mode: OracleMode) -> Scenario {
         self.oracle = mode;
+        self
+    }
+
+    /// Attach a flight recorder (ISSUE 7): session runs append
+    /// [`crate::obs::timeline::SessionEvent`]s to `rec`'s timeline and the
+    /// caches this scenario creates bind their `solver.*`/`session.*`
+    /// counters to `rec`'s registry. Clone the recorder before attaching to
+    /// keep a handle for [`Recorder::snapshot`] afterwards.
+    pub fn observe(mut self, rec: &Recorder) -> Scenario {
+        self.obs = Some(rec.clone());
         self
     }
 
@@ -520,10 +536,10 @@ impl Scenario {
     }
 
     /// Run a long-horizon churn session over a freshly sampled candidate
-    /// pool (see [`run_session_with`]).
+    /// pool (see [`crate::sim::session::run_session_with`]).
     ///
     /// # Panics
-    /// Propagates [`run_session_with`]'s panic when the planner turns
+    /// Propagates [`crate::sim::session::run_session_with`]'s panic when the planner turns
     /// infeasible mid-session (e.g. a full-check baseline on a fleet it
     /// cannot fit) — size the session with a runtime-only planner variant.
     pub fn run_session(&self, planner: &mut dyn Planner) -> Result<Report> {
@@ -544,7 +560,15 @@ impl Scenario {
         // report identity follows the pool the session actually ran, not
         // the (possibly defaulted) fleet recipe
         let pool_devices = pool.len();
-        let r = run_session_with(pool, &dag, &cm, &self.ps, &self.effective_session(), planner);
+        let r = run_session_observed(
+            pool,
+            &dag,
+            &cm,
+            &self.ps,
+            &self.effective_session(),
+            planner,
+            self.obs.as_ref(),
+        );
         let mut report = self.report(planner.name(), ReportDetail::Session(r));
         report.devices = pool_devices;
         Ok(report)
@@ -558,7 +582,10 @@ impl Scenario {
         let cm = self.cost_model();
         let pool = DevicePool::sample(&self.pool_config());
         let selectable = pool.selectable();
-        let mut cache = SolverCache::with_mode(self.oracle);
+        let mut cache = match &self.obs {
+            Some(rec) => SolverCache::with_registry(self.oracle, rec.registry()),
+            None => SolverCache::with_mode(self.oracle),
+        };
         let out = select_devices(
             &pool.planning_devices(&selectable),
             &dag,

@@ -32,6 +32,9 @@ use crate::coordinator::registry::{Liveness, Registry};
 use crate::coordinator::run_state::{RunState, RunStateMachine};
 use crate::coordinator::verify::{freivalds_check, DEFAULT_TOL};
 use crate::coordinator::worker::{self, Behavior, FaultPlan, WorkerConfig};
+use crate::obs::metrics::{Counter, Gauge, Histogram, MetricsRegistry};
+use crate::obs::timeline::SessionEvent;
+use crate::obs::Recorder;
 use crate::sched::assignment::{GemmAssignment, Rect};
 use crate::sched::cost::{CostModel, GemmShape};
 use crate::sched::recovery::recover;
@@ -142,6 +145,52 @@ impl LiveRecovery {
     }
 }
 
+/// Registry-backed liveness/dispatch tallies of the PS (ISSUE 7). The
+/// seed-era `pub u64` fields became accessor methods reading these cells:
+/// a PS spawned with [`DistributedGemm::spawn_observed`] shares its
+/// registry with the rest of the stack, so `ps.*` (and the solver stats of
+/// its assignment solves) land in the unified snapshot, while a default
+/// spawn keeps a private registry and exact per-instance counts.
+#[derive(Clone, Debug)]
+struct PsCounters {
+    tasks_dispatched: Counter,
+    blocks_rejected: Counter,
+    recoveries: Counter,
+    evictions: Counter,
+    deadline_evictions: Counter,
+    rejoins: Counter,
+    redispatched_tasks: Counter,
+    stale_results: Counter,
+    unknown_messages: Counter,
+    /// solver stats captured from `assignment_for`'s [`solve_gemm`]
+    analytic_roots: Counter,
+    bisection_iters: Counter,
+    /// schedulable devices right now (set on spawn, evict, rejoin)
+    alive: Gauge,
+    /// dispatch-to-accept wall-clock of every accepted block
+    task_latency_s: Histogram,
+}
+
+impl PsCounters {
+    fn bind(reg: &MetricsRegistry) -> PsCounters {
+        PsCounters {
+            tasks_dispatched: reg.counter("ps.tasks_dispatched"),
+            blocks_rejected: reg.counter("ps.blocks_rejected"),
+            recoveries: reg.counter("ps.recoveries"),
+            evictions: reg.counter("ps.evictions"),
+            deadline_evictions: reg.counter("ps.deadline_evictions"),
+            rejoins: reg.counter("ps.rejoins"),
+            redispatched_tasks: reg.counter("ps.redispatched_tasks"),
+            stale_results: reg.counter("ps.stale_results"),
+            unknown_messages: reg.counter("ps.unknown_messages"),
+            analytic_roots: reg.counter("solver.analytic_roots"),
+            bisection_iters: reg.counter("solver.bisection_iters"),
+            alive: reg.gauge("ps.alive"),
+            task_latency_s: reg.histogram("ps.task_latency_s"),
+        }
+    }
+}
+
 /// A live distributed-GEMM engine over an in-process worker fleet.
 pub struct DistributedGemm {
     cfg: PsConfig,
@@ -164,18 +213,11 @@ pub struct DistributedGemm {
     blacklist: HashMap<usize, u64>,
     /// blacklisted devices that have proven liveness since eviction
     rejoin_ready: HashSet<usize>,
-    /// statistics
-    pub tasks_dispatched: u64,
-    pub blocks_rejected: u64,
-    pub recoveries: u64,
-    pub evictions: u64,
-    pub deadline_evictions: u64,
-    pub rejoins: u64,
-    pub redispatched_tasks: u64,
-    /// results for tasks no longer pending (already re-dispatched)
-    pub stale_results: u64,
-    /// messages from device ids the fleet has never seen (dropped)
-    pub unknown_messages: u64,
+    /// where the `ps.*` instruments live (private unless spawned observed)
+    metrics: MetricsRegistry,
+    counters: PsCounters,
+    /// optional flight recorder receiving membership timeline events
+    obs: Option<Recorder>,
     /// every recovery event this engine has performed, in order
     pub live_recoveries: Vec<LiveRecovery>,
 }
@@ -191,6 +233,27 @@ impl DistributedGemm {
     /// Spawn one worker thread per device; `plans[i]` is device `i`'s
     /// deterministic fault schedule.
     pub fn spawn_with_plans(devices: Vec<Device>, plans: Vec<FaultPlan>, cfg: PsConfig) -> Self {
+        Self::spawn_inner(devices, plans, cfg, None)
+    }
+
+    /// [`Self::spawn_with_plans`] wired to a flight recorder: `ps.*`
+    /// instruments bind into `rec`'s registry, and evictions, rejoins,
+    /// recoveries and run-state transitions are appended to its timeline.
+    pub fn spawn_observed(
+        devices: Vec<Device>,
+        plans: Vec<FaultPlan>,
+        cfg: PsConfig,
+        rec: &Recorder,
+    ) -> Self {
+        Self::spawn_inner(devices, plans, cfg, Some(rec.clone()))
+    }
+
+    fn spawn_inner(
+        devices: Vec<Device>,
+        plans: Vec<FaultPlan>,
+        cfg: PsConfig,
+        obs: Option<Recorder>,
+    ) -> Self {
         assert_eq!(devices.len(), plans.len());
         let (to_ps, from_workers) = channel::<ToPs>();
         let mut handles = Vec::with_capacity(devices.len());
@@ -221,12 +284,22 @@ impl DistributedGemm {
             });
         }
         let seed = cfg.seed;
+        let metrics = match &obs {
+            Some(rec) => rec.registry().clone(),
+            None => MetricsRegistry::new(),
+        };
+        let counters = PsCounters::bind(&metrics);
+        counters.alive.set(devices.len() as f64);
+        let mut state = RunStateMachine::new();
+        if let Some(rec) = &obs {
+            state.observe(rec);
+        }
         DistributedGemm {
             cfg,
             devices,
             handles,
             registry,
-            state: RunStateMachine::new(),
+            state,
             from_workers,
             to_ps,
             assignment_cache: HashMap::new(),
@@ -239,17 +312,54 @@ impl DistributedGemm {
             round: 0,
             blacklist: HashMap::new(),
             rejoin_ready: HashSet::new(),
-            tasks_dispatched: 0,
-            blocks_rejected: 0,
-            recoveries: 0,
-            evictions: 0,
-            deadline_evictions: 0,
-            rejoins: 0,
-            redispatched_tasks: 0,
-            stale_results: 0,
-            unknown_messages: 0,
+            metrics,
+            counters,
+            obs,
             live_recoveries: Vec::new(),
         }
+    }
+
+    /// The registry this PS's `ps.*` instruments are bound to.
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
+    }
+
+    pub fn tasks_dispatched(&self) -> u64 {
+        self.counters.tasks_dispatched.get()
+    }
+
+    pub fn blocks_rejected(&self) -> u64 {
+        self.counters.blocks_rejected.get()
+    }
+
+    pub fn recoveries(&self) -> u64 {
+        self.counters.recoveries.get()
+    }
+
+    pub fn evictions(&self) -> u64 {
+        self.counters.evictions.get()
+    }
+
+    pub fn deadline_evictions(&self) -> u64 {
+        self.counters.deadline_evictions.get()
+    }
+
+    pub fn rejoins(&self) -> u64 {
+        self.counters.rejoins.get()
+    }
+
+    pub fn redispatched_tasks(&self) -> u64 {
+        self.counters.redispatched_tasks.get()
+    }
+
+    /// Results for tasks no longer pending (already re-dispatched).
+    pub fn stale_results(&self) -> u64 {
+        self.counters.stale_results.get()
+    }
+
+    /// Messages from device ids the fleet has never seen (dropped).
+    pub fn unknown_messages(&self) -> u64 {
+        self.counters.unknown_messages.get()
     }
 
     /// Is device `idx` schedulable (per the registry)?
@@ -309,7 +419,9 @@ impl DistributedGemm {
         ensure!(!alive_idx.is_empty(), "no alive devices to assign work to");
         let alive_devices: Vec<Device> =
             alive_idx.iter().map(|&i| self.devices[i].clone()).collect();
-        let (a, _) = solve_gemm(&alive_devices, shape, &self.cm, &SolverOptions::default());
+        let (a, stats) = solve_gemm(&alive_devices, shape, &self.cm, &SolverOptions::default());
+        self.counters.analytic_roots.add(stats.analytic_roots as u64);
+        self.counters.bisection_iters.add(stats.bisection_iters as u64);
         // Remap into global indices.
         let rects: Vec<Rect> = a
             .rects
@@ -380,9 +492,9 @@ impl DistributedGemm {
             self.evict(idx, "channel closed at dispatch");
             return false;
         }
-        self.tasks_dispatched += 1;
+        self.counters.tasks_dispatched.inc();
         if let Some(ri) = recovery {
-            self.redispatched_tasks += 1;
+            self.counters.redispatched_tasks.inc();
             let rec = &mut self.live_recoveries[ri];
             rec.redispatched_tasks += 1;
             if rec.outstanding == 0 {
@@ -456,8 +568,15 @@ impl DistributedGemm {
         self.blacklist
             .insert(idx, self.round + self.cfg.probation_rounds);
         self.rejoin_ready.remove(&idx);
-        self.evictions += 1;
+        self.counters.evictions.inc();
         let epoch = self.state.bump_epoch(reason);
+        self.counters.alive.set(self.n_alive() as f64);
+        if let Some(rec) = &self.obs {
+            rec.record(SessionEvent::Eviction {
+                device: idx,
+                reason: reason.to_string(),
+            });
+        }
         crate::log_warn!("evicted device {id} (idx {idx}) at epoch {epoch}: {reason}");
     }
 
@@ -475,8 +594,12 @@ impl DistributedGemm {
             self.rejoin_ready.remove(&idx);
             self.blacklist.remove(&idx);
             self.registry.register(self.devices[idx].clone());
-            self.rejoins += 1;
+            self.counters.rejoins.inc();
             let epoch = self.state.bump_epoch("probation served, device rejoined");
+            self.counters.alive.set(self.n_alive() as f64);
+            if let Some(rec) = &self.obs {
+                rec.record(SessionEvent::Rejoin { device: idx });
+            }
             crate::log_info!(
                 "device {} (idx {idx}) rejoined at epoch {epoch}",
                 self.devices[idx].id
@@ -496,16 +619,16 @@ impl DistributedGemm {
                             self.rejoin_ready.insert(idx);
                         }
                         Some(_) => {}
-                        None => self.unknown_messages += 1,
+                        None => self.counters.unknown_messages.inc(),
                     }
                 }
                 ToPs::Leaving { worker } => match self.device_index(worker) {
                     // No in-flight work at a round boundary: nothing to
                     // recover, just update membership.
                     Some(idx) => self.evict(idx, "departure between rounds"),
-                    None => self.unknown_messages += 1,
+                    None => self.counters.unknown_messages.inc(),
                 },
-                ToPs::Result { .. } => self.stale_results += 1,
+                ToPs::Result { .. } => self.counters.stale_results.inc(),
             }
         }
     }
@@ -559,8 +682,16 @@ impl DistributedGemm {
         cause: &'static str,
         detection_s: f64,
     ) -> Result<()> {
+        let _sp = crate::span!("recover", orphaned = lost.len());
         self.state.advance(RunState::Recover, cause)?;
-        self.recoveries += 1;
+        self.counters.recoveries.inc();
+        if let Some(rec) = &self.obs {
+            rec.record(SessionEvent::Recovery {
+                cause: cause.to_string(),
+                orphaned: lost.len(),
+                detection_s,
+            });
+        }
         let rec_idx = self.live_recoveries.len();
         self.live_recoveries.push(LiveRecovery {
             cause,
@@ -657,6 +788,7 @@ impl DistributedGemm {
         pending: &mut HashMap<u64, Pending>,
         done: &[Rect],
     ) -> Result<()> {
+        let _sp = crate::span!("detect", pending = pending.len());
         let now = Instant::now();
         let grace = Duration::from_secs_f64(self.cfg.ping_grace_s);
         let mut to_ping: Vec<usize> = Vec::new();
@@ -706,7 +838,7 @@ impl DistributedGemm {
         let mut detection = 0.0f64;
         let mut cause = "deadline expired";
         for (idx, reason) in to_evict {
-            self.deadline_evictions += 1;
+            self.counters.deadline_evictions.inc();
             self.evict(idx, reason);
             let (rects, det) = self.orphan_device(pending, idx);
             lost.extend(rects);
@@ -744,11 +876,14 @@ impl DistributedGemm {
         let mut pending: HashMap<u64, Pending> = HashMap::new();
         let mut done: Vec<Rect> = Vec::new();
         let mut lost: Vec<Rect> = Vec::new();
-        for rect in rects {
-            if !self.try_dispatch(a, b, n, q, rect, &mut pending, None) {
-                lost.push(rect);
-                let (orphans, _) = self.orphan_device(&mut pending, rect.device);
-                lost.extend(orphans);
+        {
+            let _sp = crate::span!("dispatch", rects = rects.len());
+            for rect in rects {
+                if !self.try_dispatch(a, b, n, q, rect, &mut pending, None) {
+                    lost.push(rect);
+                    let (orphans, _) = self.orphan_device(&mut pending, rect.device);
+                    lost.extend(orphans);
+                }
             }
         }
         if !lost.is_empty() {
@@ -789,7 +924,7 @@ impl DistributedGemm {
                     block,
                 } => {
                     let Some(idx) = self.device_index(worker) else {
-                        self.unknown_messages += 1;
+                        self.counters.unknown_messages.inc();
                         crate::log_warn!("dropping result from unknown device id {worker}");
                         continue;
                     };
@@ -799,17 +934,17 @@ impl DistributedGemm {
                         self.rejoin_ready.insert(idx);
                     }
                     let Some(p) = pending.get(&task_id).copied() else {
-                        self.stale_results += 1; // already re-dispatched
+                        self.counters.stale_results.inc(); // already re-dispatched
                         continue;
                     };
                     if p.rect.device != idx || block.len() != p.rect.rows * p.rect.cols {
                         // late answer from the original owner of a
                         // re-dispatched task, or a malformed block
-                        self.stale_results += 1;
+                        self.counters.stale_results.inc();
                         continue;
                     }
                     if !self.verify_block(a, b, n, q, &p.rect, &block) {
-                        self.blocks_rejected += 1;
+                        self.counters.blocks_rejected.inc();
                         let key = (p.rect.row0, p.rect.col0);
                         let tries = verify_retries.entry(key).or_insert(0);
                         *tries += 1;
@@ -838,6 +973,9 @@ impl DistributedGemm {
                         continue;
                     }
                     // Accept: write the block into the output grid.
+                    self.counters
+                        .task_latency_s
+                        .observe(p.dispatched.elapsed().as_secs_f64());
                     for i in 0..p.rect.rows {
                         let dst = (p.rect.row0 + i) * q + p.rect.col0;
                         c[dst..dst + p.rect.cols]
@@ -854,12 +992,12 @@ impl DistributedGemm {
                             self.rejoin_ready.insert(idx);
                         }
                         Some(_) => {}
-                        None => self.unknown_messages += 1,
+                        None => self.counters.unknown_messages.inc(),
                     }
                 }
                 ToPs::Leaving { worker } => {
                     let Some(idx) = self.device_index(worker) else {
-                        self.unknown_messages += 1;
+                        self.counters.unknown_messages.inc();
                         continue;
                     };
                     self.evict(idx, "graceful departure");
@@ -953,8 +1091,8 @@ mod tests {
         assert_eq!(ps.run_state(), RunState::Warmup);
         let c = ps.matmul(&a, &b, m, n, q).unwrap();
         assert_bits_eq(&c, &local(&a, &b, m, n, q));
-        assert!(ps.tasks_dispatched >= 1);
-        assert_eq!(ps.blocks_rejected, 0);
+        assert!(ps.tasks_dispatched() >= 1);
+        assert_eq!(ps.blocks_rejected(), 0);
         assert_eq!(ps.run_state(), RunState::Train);
         ps.shutdown();
         assert_eq!(ps.run_state(), RunState::Cooldown);
@@ -974,10 +1112,10 @@ mod tests {
         assert_bits_eq(&c, &local(&a, &b, m, n, q));
         // the poisoned block was rejected, the offender evicted, and the
         // orphaned rect recovered through the §4.2 solver
-        assert!(ps.blocks_rejected >= 1);
+        assert!(ps.blocks_rejected() >= 1);
         assert!(!ps.is_alive(2));
-        assert!(ps.evictions >= 1);
-        assert!(ps.recoveries >= 1);
+        assert!(ps.evictions() >= 1);
+        assert!(ps.recoveries() >= 1);
         assert!(ps.membership_epoch() >= 1);
         assert_eq!(
             ps.live_recoveries[0].cause, "poisoned block rejected",
@@ -1020,8 +1158,8 @@ mod tests {
         let c = ps.matmul(&a, &b, m, n, q).unwrap();
         assert_bits_eq(&c, &local(&a, &b, m, n, q));
         assert!(!ps.is_alive(1));
-        assert!(ps.deadline_evictions >= 1);
-        assert!(ps.recoveries >= 1);
+        assert!(ps.deadline_evictions() >= 1);
+        assert!(ps.recoveries() >= 1);
         let rec = &ps.live_recoveries[0];
         assert_eq!(rec.cause, "no response to liveness probe");
         assert!(rec.detection_s > 0.0);
@@ -1046,8 +1184,8 @@ mod tests {
         });
         let c = ps.matmul(&a, &b, m, n, q).unwrap();
         assert_bits_eq(&c, &local(&a, &b, m, n, q));
-        assert!(ps.unknown_messages >= 2);
-        assert!(ps.stale_results >= 1);
+        assert!(ps.unknown_messages() >= 2);
+        assert!(ps.stale_results() >= 1);
         assert_eq!(ps.n_alive(), 2);
     }
 

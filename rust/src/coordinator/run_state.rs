@@ -23,6 +23,9 @@
 
 use anyhow::{bail, Result};
 
+use crate::obs::timeline::SessionEvent;
+use crate::obs::Recorder;
+
 /// Coordinator run state (Warmup → Train ⇄ Recover → Cooldown).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RunState {
@@ -84,6 +87,8 @@ pub struct RunStateMachine {
     membership_events: u64,
     rejected_transitions: u64,
     recent: Vec<Transition>,
+    /// flight recorder, when the owning coordinator is observed (ISSUE 7)
+    obs: Option<Recorder>,
 }
 
 impl RunStateMachine {
@@ -96,7 +101,14 @@ impl RunStateMachine {
             membership_events: 0,
             rejected_transitions: 0,
             recent: Vec::new(),
+            obs: None,
         }
+    }
+
+    /// Mirror every recorded transition (and same-state epoch bump) into
+    /// `rec`'s timeline as [`SessionEvent::StateTransition`] events.
+    pub fn observe(&mut self, rec: &Recorder) {
+        self.obs = Some(rec.clone());
     }
 
     pub fn state(&self) -> RunState {
@@ -137,6 +149,14 @@ impl RunStateMachine {
     }
 
     fn record(&mut self, t: Transition) {
+        if let Some(rec) = &self.obs {
+            rec.record(SessionEvent::StateTransition {
+                from: format!("{:?}", t.from),
+                to: format!("{:?}", t.to),
+                epoch: t.epoch,
+                reason: t.reason.to_string(),
+            });
+        }
         if self.recent.len() == MAX_RETAINED {
             self.recent.remove(0);
         }
@@ -239,6 +259,22 @@ mod tests {
         let last = sm.transitions().last().unwrap();
         assert_eq!(last.from, last.to);
         assert_eq!(last.epoch, 2);
+    }
+
+    #[test]
+    fn observed_machine_mirrors_transitions_into_the_timeline() {
+        let rec = Recorder::new();
+        let mut sm = RunStateMachine::new();
+        sm.observe(&rec);
+        sm.advance(RunState::Train, "start").unwrap();
+        sm.bump_epoch("evicted worker 3");
+        sm.advance(RunState::Recover, "eviction").unwrap();
+        let proj = crate::obs::timeline::project_coordinator(&rec.timeline());
+        assert_eq!(proj.transitions, 2, "Warmup->Train, Train->Recover");
+        assert_eq!(proj.membership_events, 1);
+        assert_eq!(proj.last_epoch, 1);
+        // the bounded `recent` log is unaffected by observation
+        assert_eq!(sm.transitions().len(), 3);
     }
 
     #[test]

@@ -104,17 +104,24 @@ pub struct DistributedBackend {
     /// GEMMs computed PS-locally because the fleet could not serve them
     /// (e.g. every worker evicted mid-run) — training survives total fleet
     /// loss instead of panicking, at PS-local speed
-    pub local_fallbacks: u64,
+    local_fallbacks: crate::obs::metrics::Counter,
 }
 
 impl DistributedBackend {
     pub fn new(ps: DistributedGemm) -> Self {
+        let local_fallbacks = ps.metrics().counter("trainer.local_fallbacks");
         DistributedBackend {
             ps,
             calls: 0,
             min_distributed_elems: 0,
-            local_fallbacks: 0,
+            local_fallbacks,
         }
+    }
+
+    /// GEMMs served PS-locally after a fleet failure (thin read off the
+    /// PS's metrics registry).
+    pub fn local_fallbacks(&self) -> u64 {
+        self.local_fallbacks.get()
     }
 
     /// The coordinator's current run state (Warmup → Train ⇄ Recover →
@@ -144,7 +151,7 @@ impl GemmBackend for DistributedBackend {
                 // computes locally so the training step still completes.
                 // The worker path is bit-identical to the host GEMM, so
                 // the losses are unaffected — only throughput is.
-                self.local_fallbacks += 1;
+                self.local_fallbacks.inc();
                 crate::log_warn!("distributed GEMM failed ({e}); computing PS-locally");
                 let mut c = vec![0.0f32; m * q];
                 hostgemm::matmul(a, b, &mut c, m, n, q);
@@ -682,12 +689,12 @@ mod tests {
         let b = vec![1.0f32; 4];
         let c = be.matmul(&a, &b, 2, 2, 2);
         assert_eq!(c, vec![2.0, 2.0, 2.0, 2.0]);
-        assert!(be.local_fallbacks >= 1);
+        assert!(be.local_fallbacks() >= 1);
         assert_eq!(be.gemm_calls(), 1);
         // subsequent calls keep working (assignment over an empty fleet
         // errors cleanly and falls back again)
         let c2 = be.matmul(&a, &b, 2, 2, 2);
         assert_eq!(c2, vec![2.0, 2.0, 2.0, 2.0]);
-        assert!(be.local_fallbacks >= 2);
+        assert!(be.local_fallbacks() >= 2);
     }
 }

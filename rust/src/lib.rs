@@ -30,6 +30,7 @@
 //! | [`baselines`] | DTFM, Alpa, cloud estimators, recovery baselines, Appendix-A volumes |
 //! | [`sim`] | discrete per-batch simulator + failure injection + selection sessions (Figures 3–10, fig11) |
 //! | [`coordinator`] | live PS + workers: dispatch/collect, Freivalds verify, rust Adam, trainer |
+//! | [`obs`] | the observability plane: metrics registry, tracing spans, replayable session timelines |
 //! | [`runtime`] | PJRT bridge: HLO text -> compile -> execute; host GEMM fallback |
 
 pub mod api;
@@ -37,6 +38,7 @@ pub mod baselines;
 pub mod cluster;
 pub mod coordinator;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod sched;
 pub mod sim;

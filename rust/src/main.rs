@@ -4,6 +4,8 @@
 //! * `simulate`  — solve + simulate one batch on a sampled fleet
 //! * `train`     — live end-to-end training of the tiny LM (PS + workers)
 //! * `recover`   — inject a failure and report recovery latency
+//! * `obs`       — run an observed churn session and dump the flight
+//!   recorder: timeline JSONL, metrics snapshot, span phase breakdown
 //! * `info`      — print model/fleet accounting (Tables 1–4 style)
 //!
 //! The `simulate`/`recover`/`info` subcommands drive the
@@ -11,7 +13,7 @@
 //! examples use. Each paper experiment also has a dedicated bench
 //! (`cargo bench`) — see DESIGN.md §5 for the experiment index.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, ensure, Result};
 
 use cleave::api::{AlpaPlanner, CleavePlanner, DtfmPlanner, Scenario};
 use cleave::cluster::fleet::Fleet;
@@ -81,7 +83,8 @@ fn run(cmd: &str, args: &cleave::util::cli::Args) -> Result<()> {
         "simulate" => simulate(&scenario(args)?),
         "recover" => recover_cmd(&scenario(args)?),
         "train" => train(args),
-        other => bail!("unknown subcommand '{other}' (info|simulate|recover|train)"),
+        "obs" => obs_cmd(args),
+        other => bail!("unknown subcommand '{other}' (info|simulate|recover|train|obs)"),
     }
 }
 
@@ -163,6 +166,65 @@ fn recover_cmd(sc: &Scenario) -> Result<()> {
     Ok(())
 }
 
+/// Run one observed churn session and dump the whole flight recorder
+/// (ISSUE 7): the timeline as JSONL, the unified metrics snapshot as JSON,
+/// and the span phase breakdown as a table. Before writing anything the
+/// timeline is parsed back and replayed through
+/// [`cleave::obs::timeline::project_session`], which must reproduce the
+/// live session report bit for bit.
+fn obs_cmd(args: &cleave::util::cli::Args) -> Result<()> {
+    use cleave::obs::{timeline, trace, Recorder};
+
+    trace::reset();
+    trace::set_enabled(true);
+    let rec = Recorder::new();
+    let sc = scenario(args)?.observe(&rec);
+    let mut planner = CleavePlanner::cached_observed(rec.registry());
+    let report = sc.run_session(&mut planner)?;
+    trace::set_enabled(false);
+    let live = report.session().expect("CLEAVE sessions are executable");
+
+    // Replayability: the JSONL log alone must regenerate the live report.
+    let jsonl = rec.timeline_jsonl();
+    let replayed = timeline::project_session(&timeline::Timeline::parse_jsonl(&jsonl)?)
+        .ok_or_else(|| anyhow!("timeline has no SessionStart event"))?;
+    ensure!(
+        replayed.same_as(live),
+        "replayed timeline diverges from the live session report"
+    );
+
+    let dir = std::path::Path::new(args.get_str("artifacts")?);
+    std::fs::create_dir_all(dir)?;
+    let tl_path = dir.join("timeline.jsonl");
+    std::fs::write(&tl_path, &jsonl)?;
+    let snap = rec.snapshot();
+    let metrics_path = dir.join("metrics.json");
+    std::fs::write(&metrics_path, snap.to_json().to_string_compact())?;
+
+    println!(
+        "session: {} batches, {} failures, {} joins, mean batch {}",
+        live.batch_times.len(),
+        live.failures,
+        live.joins,
+        fmt_secs(live.mean_batch_s)
+    );
+    println!("replayed timeline matches the live report exactly");
+    trace::breakdown_table().print();
+    println!(
+        "{} timeline events -> {}",
+        jsonl.lines().count(),
+        tl_path.display()
+    );
+    println!(
+        "{} counters, {} gauges, {} histograms -> {}",
+        snap.counters.len(),
+        snap.gauges.len(),
+        snap.histograms.len(),
+        metrics_path.display()
+    );
+    Ok(())
+}
+
 fn train(args: &cleave::util::cli::Args) -> Result<()> {
     let artifacts = Artifacts::load(args.get_str("artifacts")?)?;
     let steps = args.get_usize("steps")?;
@@ -197,9 +259,9 @@ fn train(args: &cleave::util::cli::Args) -> Result<()> {
     }
     println!(
         "dispatched {} sub-GEMM tasks, {} rejected, {} recoveries",
-        trainer.backend.ps.tasks_dispatched,
-        trainer.backend.ps.blocks_rejected,
-        trainer.backend.ps.recoveries
+        trainer.backend.ps.tasks_dispatched(),
+        trainer.backend.ps.blocks_rejected(),
+        trainer.backend.ps.recoveries()
     );
     Ok(())
 }

@@ -1,0 +1,469 @@
+//! Unified metrics plane (ISSUE 7): named counters, gauges, and log-scale
+//! histograms behind lock-free atomic cells, snapshotting into the BENCH
+//! house JSON shape.
+//!
+//! Design constraints:
+//!
+//! * **one atomic RMW on the hot path** — handles ([`Counter`], [`Gauge`],
+//!   [`Histogram`]) resolve their name to an `Arc`'d cell once at bind
+//!   time; `inc`/`set`/`observe` never touch the registry lock;
+//! * **aggregation is opt-in, not ambient** — every component binds its
+//!   instruments to a *private* [`MetricsRegistry`] by default, so
+//!   concurrently running tests (and embedders) keep exact counts. Handing
+//!   one shared registry to several components (the
+//!   [`crate::obs::Recorder`] pattern, or the [`MetricsRegistry::global`]
+//!   process convention) merges same-named instruments into the single
+//!   whole-process snapshot the flight recorder wants;
+//! * **zero deps**: serialization goes through [`crate::util::json`].
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use crate::util::json::{obj, Json};
+
+/// A monotone event counter bound to one registry cell. Cloning shares the
+/// cell; two counters bound to the same name in the same registry share it
+/// too (that is how cross-component aggregation composes).
+#[derive(Clone, Debug)]
+pub struct Counter {
+    cell: Arc<AtomicU64>,
+}
+
+impl Counter {
+    #[inline]
+    pub fn inc(&self) {
+        self.cell.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        if n > 0 {
+            self.cell.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    #[inline]
+    pub fn get(&self) -> u64 {
+        self.cell.load(Ordering::Relaxed)
+    }
+
+    /// Zero the cell — note this zeroes every handle sharing the name.
+    pub fn reset(&self) {
+        self.cell.store(0, Ordering::Relaxed);
+    }
+}
+
+/// A last-value-wins f64 gauge (stored as bits in one atomic).
+#[derive(Clone, Debug)]
+pub struct Gauge {
+    cell: Arc<AtomicU64>,
+}
+
+impl Gauge {
+    #[inline]
+    pub fn set(&self, v: f64) {
+        self.cell.store(v.to_bits(), Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.cell.load(Ordering::Relaxed))
+    }
+}
+
+/// Fixed bucket count of every histogram (compile-time, so cells are one
+/// flat atomic array).
+pub const HIST_BUCKETS: usize = 64;
+/// Bucket `i` covers `[2^(i + HIST_MIN_EXP), 2^(i + 1 + HIST_MIN_EXP))`:
+/// with 64 buckets from 2^-30 (~1 ns, sub-ns clamps in) up to 2^34
+/// (~545 min / ~17 GB, larger clamps in), spanning every latency and byte
+/// quantity the stack records.
+pub const HIST_MIN_EXP: i32 = -30;
+
+fn bucket_of(v: f64) -> usize {
+    if v.is_nan() || v <= 0.0 {
+        return 0;
+    }
+    let e = v.log2().floor() as i64 - HIST_MIN_EXP as i64;
+    e.clamp(0, HIST_BUCKETS as i64 - 1) as usize
+}
+
+/// Lower bound of bucket-exponent `e` (the stored key in snapshots).
+fn bucket_lo(e: i32) -> f64 {
+    (e as f64).exp2()
+}
+
+#[derive(Debug)]
+struct HistCells {
+    counts: [AtomicU64; HIST_BUCKETS],
+    total: AtomicU64,
+    /// running sum of observed values, stored as f64 bits and accumulated
+    /// by CAS (lock-free, order-dependent rounding is fine for a metric)
+    sum_bits: AtomicU64,
+}
+
+impl Default for HistCells {
+    fn default() -> Self {
+        HistCells {
+            counts: std::array::from_fn(|_| AtomicU64::new(0)),
+            total: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0),
+        }
+    }
+}
+
+/// A log-scale histogram handle (fixed buckets, lock-free `observe`).
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    cells: Arc<HistCells>,
+}
+
+impl Histogram {
+    #[inline]
+    pub fn observe(&self, v: f64) {
+        self.cells.counts[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.cells.total.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.cells.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.cells.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.cells.total.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.cells.sum_bits.load(Ordering::Relaxed))
+    }
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    gauges: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    histograms: Mutex<BTreeMap<String, Arc<HistCells>>>,
+}
+
+fn bind<T: Default>(map: &Mutex<BTreeMap<String, Arc<T>>>, name: &str) -> Arc<T> {
+    let mut m = map.lock().unwrap_or_else(|e| e.into_inner());
+    m.entry(name.to_string()).or_default().clone()
+}
+
+/// A registry of named instruments. Cloning shares the underlying store
+/// (it is an `Arc` handle), so one registry can be threaded through many
+/// components and snapshotted once.
+#[derive(Clone, Debug, Default)]
+pub struct MetricsRegistry {
+    inner: Arc<Inner>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The process-wide registry — a *convention*, not a default: nothing
+    /// in the crate records here implicitly; embedders that want ambient
+    /// aggregation pass `MetricsRegistry::global()` where a registry is
+    /// accepted.
+    pub fn global() -> MetricsRegistry {
+        static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+        GLOBAL.get_or_init(MetricsRegistry::new).clone()
+    }
+
+    /// Get-or-create the counter `name` (registered from this moment on,
+    /// so it appears in snapshots even at zero).
+    pub fn counter(&self, name: &str) -> Counter {
+        Counter {
+            cell: bind(&self.inner.counters, name),
+        }
+    }
+
+    pub fn gauge(&self, name: &str) -> Gauge {
+        Gauge {
+            cell: bind(&self.inner.gauges, name),
+        }
+    }
+
+    pub fn histogram(&self, name: &str) -> Histogram {
+        Histogram {
+            cells: bind(&self.inner.histograms, name),
+        }
+    }
+
+    /// Point-in-time copy of every registered instrument.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let counters = {
+            let m = self.inner.counters.lock().unwrap_or_else(|e| e.into_inner());
+            m.iter()
+                .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+                .collect()
+        };
+        let gauges = {
+            let m = self.inner.gauges.lock().unwrap_or_else(|e| e.into_inner());
+            m.iter()
+                .map(|(k, v)| (k.clone(), f64::from_bits(v.load(Ordering::Relaxed))))
+                .collect()
+        };
+        let histograms = {
+            let m = self
+                .inner
+                .histograms
+                .lock()
+                .unwrap_or_else(|e| e.into_inner());
+            m.iter()
+                .map(|(k, v)| (k.clone(), HistogramSnapshot::read(v)))
+                .collect()
+        };
+        MetricsSnapshot {
+            counters,
+            gauges,
+            histograms,
+        }
+    }
+}
+
+/// Point-in-time copy of one histogram: total count, value sum, and the
+/// non-empty buckets as `(lower-bound exponent, count)` — bucket `e`
+/// covers `[2^e, 2^{e+1})`.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct HistogramSnapshot {
+    pub count: u64,
+    pub sum: f64,
+    pub buckets: Vec<(i32, u64)>,
+}
+
+impl HistogramSnapshot {
+    fn read(cells: &HistCells) -> HistogramSnapshot {
+        let buckets = cells
+            .counts
+            .iter()
+            .enumerate()
+            .filter_map(|(i, c)| {
+                let n = c.load(Ordering::Relaxed);
+                (n > 0).then_some((i as i32 + HIST_MIN_EXP, n))
+            })
+            .collect();
+        HistogramSnapshot {
+            count: cells.total.load(Ordering::Relaxed),
+            sum: f64::from_bits(cells.sum_bits.load(Ordering::Relaxed)),
+            buckets,
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Quantile estimate from the bucket counts: the geometric midpoint of
+    /// the bucket holding the q-th observation (error bounded by the ±√2
+    /// bucket resolution).
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = (q.clamp(0.0, 1.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for &(e, n) in &self.buckets {
+            seen += n;
+            if seen >= target {
+                return bucket_lo(e) * std::f64::consts::SQRT_2;
+            }
+        }
+        self.buckets
+            .last()
+            .map_or(0.0, |&(e, _)| bucket_lo(e) * std::f64::consts::SQRT_2)
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("count", Json::from(self.count as f64)),
+            ("sum", Json::from(self.sum)),
+            ("mean", Json::from(self.mean())),
+            ("p50", Json::from(self.quantile(0.50))),
+            ("p95", Json::from(self.quantile(0.95))),
+            ("p99", Json::from(self.quantile(0.99))),
+            (
+                "buckets",
+                Json::Arr(
+                    self.buckets
+                        .iter()
+                        .map(|&(e, n)| {
+                            Json::Arr(vec![Json::from(e as f64), Json::from(n as f64)])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Point-in-time copy of a whole registry.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub histograms: BTreeMap<String, HistogramSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// Counter value (0 when never registered).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.gauges.get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&HistogramSnapshot> {
+        self.histograms.get(name)
+    }
+
+    /// BENCH house shape: `{"counters": {..}, "gauges": {..},
+    /// "histograms": {..}}` with deterministic (sorted) key order.
+    pub fn to_json(&self) -> Json {
+        Json::Obj(
+            [
+                (
+                    "counters".to_string(),
+                    Json::Obj(
+                        self.counters
+                            .iter()
+                            .map(|(k, &v)| (k.clone(), Json::from(v as f64)))
+                            .collect(),
+                    ),
+                ),
+                (
+                    "gauges".to_string(),
+                    Json::Obj(
+                        self.gauges
+                            .iter()
+                            .map(|(k, &v)| (k.clone(), Json::from(v)))
+                            .collect(),
+                    ),
+                ),
+                (
+                    "histograms".to_string(),
+                    Json::Obj(
+                        self.histograms
+                            .iter()
+                            .map(|(k, v)| (k.clone(), v.to_json()))
+                            .collect(),
+                    ),
+                ),
+            ]
+            .into_iter()
+            .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_share_cells_by_name() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("x.hits");
+        let b = reg.counter("x.hits");
+        a.inc();
+        b.add(2);
+        assert_eq!(a.get(), 3);
+        assert_eq!(reg.snapshot().counter("x.hits"), 3);
+        // registered-but-untouched instruments appear at zero
+        let _ = reg.counter("x.misses");
+        assert_eq!(reg.snapshot().counter("x.misses"), 0);
+        assert!(reg.snapshot().counters.contains_key("x.misses"));
+    }
+
+    #[test]
+    fn private_registries_are_isolated() {
+        let a = MetricsRegistry::new();
+        let b = MetricsRegistry::new();
+        a.counter("n").add(5);
+        assert_eq!(b.snapshot().counter("n"), 0);
+        // ...while clones of one registry share the store
+        let a2 = a.clone();
+        a2.counter("n").inc();
+        assert_eq!(a.snapshot().counter("n"), 6);
+    }
+
+    #[test]
+    fn gauge_is_last_value_wins() {
+        let reg = MetricsRegistry::new();
+        let g = reg.gauge("fleet.alive");
+        g.set(8.0);
+        g.set(5.0);
+        assert_eq!(reg.snapshot().gauge("fleet.alive"), 5.0);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let reg = MetricsRegistry::new();
+        let h = reg.histogram("lat_s");
+        for _ in 0..90 {
+            h.observe(1e-3); // ~2^-10
+        }
+        for _ in 0..10 {
+            h.observe(1.0); // 2^0
+        }
+        assert_eq!(h.count(), 100);
+        assert!((h.sum() - (90.0 * 1e-3 + 10.0)).abs() < 1e-9);
+        let snap = reg.snapshot();
+        let hs = snap.histogram("lat_s").unwrap();
+        assert_eq!(hs.count, 100);
+        assert_eq!(hs.buckets.len(), 2);
+        // p50 sits in the ms bucket (within the √2 resolution), p99 in the
+        // seconds bucket
+        let p50 = hs.quantile(0.5);
+        assert!(p50 > 0.5e-3 && p50 < 2e-3, "p50 {p50}");
+        let p99 = hs.quantile(0.99);
+        assert!(p99 > 0.5 && p99 < 2.0, "p99 {p99}");
+        // extreme / degenerate inputs clamp into the edge buckets
+        h.observe(0.0);
+        h.observe(f64::NAN);
+        h.observe(1e300);
+        assert_eq!(h.count(), 103);
+    }
+
+    #[test]
+    fn snapshot_serializes_to_parseable_json() {
+        let reg = MetricsRegistry::new();
+        reg.counter("a").add(2);
+        reg.gauge("g").set(1.5);
+        reg.histogram("h").observe(0.25);
+        let text = reg.snapshot().to_json().to_string_compact();
+        let back = Json::parse(&text).unwrap();
+        assert_eq!(back.get("counters").unwrap().get("a").unwrap().as_usize().unwrap(), 2);
+        assert_eq!(back.get("gauges").unwrap().get("g").unwrap().as_f64().unwrap(), 1.5);
+        let h = back.get("histograms").unwrap().get("h").unwrap();
+        assert_eq!(h.get("count").unwrap().as_usize().unwrap(), 1);
+    }
+
+    #[test]
+    fn global_registry_is_one_store() {
+        let a = MetricsRegistry::global();
+        let b = MetricsRegistry::global();
+        let c = a.counter("obs.test.global_probe");
+        let before = c.get();
+        b.counter("obs.test.global_probe").inc();
+        assert_eq!(c.get(), before + 1);
+    }
+}

@@ -1,0 +1,96 @@
+//! The observability plane (ISSUE 7): one flight recorder for the whole
+//! stack instead of per-subsystem private counters.
+//!
+//! Three legs:
+//!
+//! * [`metrics`] — a registry of named counters/gauges/histograms with
+//!   lock-free hot-path handles; every migrated subsystem counter
+//!   (`CacheStats`, PS liveness tallies, trainer fallbacks) is a thin read
+//!   off its component's registry, and sharing one registry across
+//!   components merges them into a single whole-process snapshot;
+//! * [`trace`] — `span!`-scoped monotonic timings with nesting and a
+//!   bounded ring, giving runs a select / solve / waterfill / dispatch /
+//!   detect / recover phase breakdown (globally gated, ~ns when off);
+//! * [`timeline`] — the append-only typed event log with projections that
+//!   regenerate report-grade aggregates from the log alone.
+//!
+//! A [`Recorder`] bundles one registry + one timeline and is the handle
+//! every instrumented entrypoint accepts: `Scenario::observe`,
+//! `sim::session::run_session_observed`,
+//! `coordinator::ps::DistributedGemm::spawn_observed`. Components given no
+//! recorder bind to private registries, so concurrent unobserved runs
+//! (e.g. parallel tests) never share counts.
+
+pub mod metrics;
+pub mod timeline;
+pub mod trace;
+
+use std::sync::{Arc, Mutex};
+
+use metrics::{MetricsRegistry, MetricsSnapshot};
+use timeline::{SessionEvent, Timeline};
+
+/// One run's flight recorder: a shared metrics registry plus a shared
+/// timeline. Cloning shares both, so the same recorder can be attached to
+/// a scenario, its parameter server, and its trainer at once.
+#[derive(Clone, Debug, Default)]
+pub struct Recorder {
+    registry: MetricsRegistry,
+    timeline: Arc<Mutex<Timeline>>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    /// The registry instrumented components bind their counters to.
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.registry
+    }
+
+    /// Append one event to the timeline.
+    pub fn record(&self, ev: SessionEvent) {
+        self.timeline
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .record(ev);
+    }
+
+    /// Copy of the timeline recorded so far.
+    pub fn timeline(&self) -> Timeline {
+        self.timeline
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .clone()
+    }
+
+    /// The timeline as JSONL (one event object per line).
+    pub fn timeline_jsonl(&self) -> String {
+        self.timeline
+            .lock()
+            .unwrap_or_else(|e| e.into_inner())
+            .to_jsonl()
+    }
+
+    /// Point-in-time snapshot of every instrument bound to this recorder.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        self.registry.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recorder_clones_share_state() {
+        let rec = Recorder::new();
+        let rec2 = rec.clone();
+        rec.registry().counter("x").inc();
+        rec2.record(SessionEvent::Rejoin { device: 1 });
+        assert_eq!(rec2.snapshot().counter("x"), 1);
+        assert_eq!(rec.timeline().len(), 1);
+        assert_eq!(rec.timeline_jsonl().lines().count(), 1);
+    }
+}

@@ -1,0 +1,548 @@
+//! Replayable session timelines (ISSUE 7, the first leg of ROADMAP item
+//! 4's event-sourcing goal): an append-only typed event log recorded by
+//! `sim/session.rs` and `coordinator/{ps,run_state}.rs`, serializable to
+//! JSONL, with projection functions that regenerate report-grade
+//! aggregates **from the log alone**.
+//!
+//! Two contracts are pinned by `rust/tests/obs_timeline.rs`:
+//!
+//! * **determinism** — simulator events carry only deterministic values
+//!   (engine event times, batch indices, modeled latencies — never a
+//!   wall clock), so the same seed yields byte-identical JSONL;
+//! * **projection parity** — [`project_session`] recomputes a
+//!   [`SessionReport`] with the *same formulas in the same order* as the
+//!   live session loop, so the projected report matches the live one
+//!   field-for-field, f64s to the bit. Coordinator events carry wall-clock
+//!   latencies, so their projection ([`project_coordinator`]) is pinned to
+//!   the live counters rather than to byte identity.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::sched::fastpath::CacheStats;
+use crate::sim::session::{SelectionDecision, SessionReport};
+use crate::util::json::{obj, Json};
+use crate::util::stats::summarize;
+
+/// One typed timeline event. Simulator events use modeled (deterministic)
+/// seconds; coordinator events use wall-clock seconds.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SessionEvent {
+    /// a session began (recorded once, first)
+    SessionStart {
+        planner: String,
+        n_batches: usize,
+        seed: u64,
+    },
+    /// a membership epoch boundary was reached at `batch`
+    EpochStart { batch: usize },
+    /// a membership decision (mirrors [`SelectionDecision`])
+    Reselection {
+        batch: usize,
+        pool_size: usize,
+        admitted: usize,
+        evicted: usize,
+        stragglers: usize,
+        t_star: f64,
+        objective: f64,
+        probes: usize,
+    },
+    /// a candidate joined the pool at engine time `t_s`
+    Join { batch: usize, t_s: f64 },
+    /// an active device failed mid-batch; `recovery_s` is the charged
+    /// §4.2 (or restart) latency
+    Failure {
+        batch: usize,
+        slot: usize,
+        t_s: f64,
+        recovery_s: f64,
+    },
+    /// a batch finished, `dur_s` of session time after it started
+    BatchEnd { batch: usize, dur_s: f64 },
+    /// the session ended; carries the session-wide solver counters
+    SessionEnd { solver: CacheStats },
+    /// a coordinator run-state transition (same-state = epoch bump)
+    StateTransition {
+        from: String,
+        to: String,
+        epoch: u64,
+        reason: String,
+    },
+    /// the coordinator evicted a device (by fleet index)
+    Eviction { device: usize, reason: String },
+    /// a blacklisted device served probation and rejoined
+    Rejoin { device: usize },
+    /// a live §4.2 recovery began
+    Recovery {
+        cause: String,
+        orphaned: usize,
+        detection_s: f64,
+    },
+}
+
+fn cache_stats_json(s: &CacheStats) -> Json {
+    obj(vec![
+        ("memo_hits", Json::from(s.memo_hits)),
+        ("warm_solves", Json::from(s.warm_solves)),
+        ("cold_solves", Json::from(s.cold_solves)),
+        ("incremental_updates", Json::from(s.incremental_updates)),
+        ("full_rebuilds", Json::from(s.full_rebuilds)),
+        ("selection_warm_starts", Json::from(s.selection_warm_starts)),
+        ("selection_cold_sweeps", Json::from(s.selection_cold_sweeps)),
+        ("skeleton_reuses", Json::from(s.skeleton_reuses)),
+    ])
+}
+
+fn cache_stats_from_json(j: &Json) -> Result<CacheStats> {
+    Ok(CacheStats {
+        memo_hits: j.get("memo_hits")?.as_usize()?,
+        warm_solves: j.get("warm_solves")?.as_usize()?,
+        cold_solves: j.get("cold_solves")?.as_usize()?,
+        incremental_updates: j.get("incremental_updates")?.as_usize()?,
+        full_rebuilds: j.get("full_rebuilds")?.as_usize()?,
+        selection_warm_starts: j.get("selection_warm_starts")?.as_usize()?,
+        selection_cold_sweeps: j.get("selection_cold_sweeps")?.as_usize()?,
+        skeleton_reuses: j.get("skeleton_reuses")?.as_usize()?,
+    })
+}
+
+impl SessionEvent {
+    /// The JSONL line shape: one object with an `"ev"` tag plus the
+    /// variant's fields (BTreeMap-backed, so key order is deterministic).
+    pub fn to_json(&self) -> Json {
+        match self {
+            SessionEvent::SessionStart {
+                planner,
+                n_batches,
+                seed,
+            } => obj(vec![
+                ("ev", Json::from("session_start")),
+                ("planner", Json::from(planner.as_str())),
+                ("n_batches", Json::from(*n_batches)),
+                ("seed", Json::from(*seed as f64)),
+            ]),
+            SessionEvent::EpochStart { batch } => obj(vec![
+                ("ev", Json::from("epoch_start")),
+                ("batch", Json::from(*batch)),
+            ]),
+            SessionEvent::Reselection {
+                batch,
+                pool_size,
+                admitted,
+                evicted,
+                stragglers,
+                t_star,
+                objective,
+                probes,
+            } => obj(vec![
+                ("ev", Json::from("reselection")),
+                ("batch", Json::from(*batch)),
+                ("pool_size", Json::from(*pool_size)),
+                ("admitted", Json::from(*admitted)),
+                ("evicted", Json::from(*evicted)),
+                ("stragglers", Json::from(*stragglers)),
+                ("t_star", Json::from(*t_star)),
+                ("objective", Json::from(*objective)),
+                ("probes", Json::from(*probes)),
+            ]),
+            SessionEvent::Join { batch, t_s } => obj(vec![
+                ("ev", Json::from("join")),
+                ("batch", Json::from(*batch)),
+                ("t_s", Json::from(*t_s)),
+            ]),
+            SessionEvent::Failure {
+                batch,
+                slot,
+                t_s,
+                recovery_s,
+            } => obj(vec![
+                ("ev", Json::from("failure")),
+                ("batch", Json::from(*batch)),
+                ("slot", Json::from(*slot)),
+                ("t_s", Json::from(*t_s)),
+                ("recovery_s", Json::from(*recovery_s)),
+            ]),
+            SessionEvent::BatchEnd { batch, dur_s } => obj(vec![
+                ("ev", Json::from("batch_end")),
+                ("batch", Json::from(*batch)),
+                ("dur_s", Json::from(*dur_s)),
+            ]),
+            SessionEvent::SessionEnd { solver } => obj(vec![
+                ("ev", Json::from("session_end")),
+                ("solver", cache_stats_json(solver)),
+            ]),
+            SessionEvent::StateTransition {
+                from,
+                to,
+                epoch,
+                reason,
+            } => obj(vec![
+                ("ev", Json::from("state_transition")),
+                ("from", Json::from(from.as_str())),
+                ("to", Json::from(to.as_str())),
+                ("epoch", Json::from(*epoch as f64)),
+                ("reason", Json::from(reason.as_str())),
+            ]),
+            SessionEvent::Eviction { device, reason } => obj(vec![
+                ("ev", Json::from("eviction")),
+                ("device", Json::from(*device)),
+                ("reason", Json::from(reason.as_str())),
+            ]),
+            SessionEvent::Rejoin { device } => obj(vec![
+                ("ev", Json::from("rejoin")),
+                ("device", Json::from(*device)),
+            ]),
+            SessionEvent::Recovery {
+                cause,
+                orphaned,
+                detection_s,
+            } => obj(vec![
+                ("ev", Json::from("recovery")),
+                ("cause", Json::from(cause.as_str())),
+                ("orphaned", Json::from(*orphaned)),
+                ("detection_s", Json::from(*detection_s)),
+            ]),
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<SessionEvent> {
+        let tag = j.get("ev")?.as_str()?;
+        Ok(match tag {
+            "session_start" => SessionEvent::SessionStart {
+                planner: j.get("planner")?.as_str()?.to_string(),
+                n_batches: j.get("n_batches")?.as_usize()?,
+                seed: j.get("seed")?.as_f64()? as u64,
+            },
+            "epoch_start" => SessionEvent::EpochStart {
+                batch: j.get("batch")?.as_usize()?,
+            },
+            "reselection" => SessionEvent::Reselection {
+                batch: j.get("batch")?.as_usize()?,
+                pool_size: j.get("pool_size")?.as_usize()?,
+                admitted: j.get("admitted")?.as_usize()?,
+                evicted: j.get("evicted")?.as_usize()?,
+                stragglers: j.get("stragglers")?.as_usize()?,
+                t_star: j.get("t_star")?.as_f64()?,
+                objective: j.get("objective")?.as_f64()?,
+                probes: j.get("probes")?.as_usize()?,
+            },
+            "join" => SessionEvent::Join {
+                batch: j.get("batch")?.as_usize()?,
+                t_s: j.get("t_s")?.as_f64()?,
+            },
+            "failure" => SessionEvent::Failure {
+                batch: j.get("batch")?.as_usize()?,
+                slot: j.get("slot")?.as_usize()?,
+                t_s: j.get("t_s")?.as_f64()?,
+                recovery_s: j.get("recovery_s")?.as_f64()?,
+            },
+            "batch_end" => SessionEvent::BatchEnd {
+                batch: j.get("batch")?.as_usize()?,
+                dur_s: j.get("dur_s")?.as_f64()?,
+            },
+            "session_end" => SessionEvent::SessionEnd {
+                solver: cache_stats_from_json(j.get("solver")?)?,
+            },
+            "state_transition" => SessionEvent::StateTransition {
+                from: j.get("from")?.as_str()?.to_string(),
+                to: j.get("to")?.as_str()?.to_string(),
+                epoch: j.get("epoch")?.as_f64()? as u64,
+                reason: j.get("reason")?.as_str()?.to_string(),
+            },
+            "eviction" => SessionEvent::Eviction {
+                device: j.get("device")?.as_usize()?,
+                reason: j.get("reason")?.as_str()?.to_string(),
+            },
+            "rejoin" => SessionEvent::Rejoin {
+                device: j.get("device")?.as_usize()?,
+            },
+            "recovery" => SessionEvent::Recovery {
+                cause: j.get("cause")?.as_str()?.to_string(),
+                orphaned: j.get("orphaned")?.as_usize()?,
+                detection_s: j.get("detection_s")?.as_f64()?,
+            },
+            other => bail!("unknown timeline event tag '{other}'"),
+        })
+    }
+}
+
+/// The append-only event log of one run.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Timeline {
+    events: Vec<SessionEvent>,
+}
+
+impl Timeline {
+    pub fn new() -> Timeline {
+        Timeline::default()
+    }
+
+    pub fn record(&mut self, ev: SessionEvent) {
+        self.events.push(ev);
+    }
+
+    pub fn events(&self) -> &[SessionEvent] {
+        &self.events
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// One compact JSON object per line, in record order.
+    pub fn to_jsonl(&self) -> String {
+        let mut out = String::new();
+        for ev in &self.events {
+            out.push_str(&ev.to_json().to_string_compact());
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn parse_jsonl(text: &str) -> Result<Timeline> {
+        let mut events = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            if line.trim().is_empty() {
+                continue;
+            }
+            let j = Json::parse(line).with_context(|| format!("timeline line {}", i + 1))?;
+            events.push(
+                SessionEvent::from_json(&j).with_context(|| format!("timeline line {}", i + 1))?,
+            );
+        }
+        Ok(Timeline { events })
+    }
+}
+
+/// Regenerate a [`SessionReport`] from the log alone. Returns `None` when
+/// the log holds no `SessionStart` (not a simulator-session timeline).
+///
+/// This is deliberately the *same arithmetic in the same order* as
+/// `sim/session.rs::run_session_with` — sums in record order, `summarize`
+/// for mean/p95, the identical throughput guard — so the result matches
+/// the live report bitwise ([`SessionReport::same_as`]).
+pub fn project_session(tl: &Timeline) -> Option<SessionReport> {
+    let mut planner: Option<String> = None;
+    let mut batch_times: Vec<f64> = Vec::new();
+    let mut recovery_latencies: Vec<f64> = Vec::new();
+    let mut decisions: Vec<SelectionDecision> = Vec::new();
+    let (mut failures, mut joins) = (0usize, 0usize);
+    let mut solver = CacheStats::default();
+    for ev in tl.events() {
+        match ev {
+            SessionEvent::SessionStart { planner: p, .. } => planner = Some(p.clone()),
+            SessionEvent::Reselection {
+                batch,
+                pool_size,
+                admitted,
+                evicted,
+                stragglers,
+                t_star,
+                objective,
+                probes,
+            } => decisions.push(SelectionDecision {
+                batch_index: *batch,
+                pool_size: *pool_size,
+                admitted: *admitted,
+                evicted: *evicted,
+                stragglers_admitted: *stragglers,
+                t_star_planned: *t_star,
+                objective: *objective,
+                probes: *probes,
+            }),
+            SessionEvent::Failure { recovery_s, .. } => {
+                failures += 1;
+                recovery_latencies.push(*recovery_s);
+            }
+            SessionEvent::Join { .. } => joins += 1,
+            SessionEvent::BatchEnd { dur_s, .. } => batch_times.push(*dur_s),
+            SessionEvent::SessionEnd { solver: s } => solver = *s,
+            _ => {}
+        }
+    }
+    let planner = planner?;
+    let s = summarize(&batch_times);
+    let wall: f64 = batch_times.iter().sum();
+    let lost: f64 = recovery_latencies.iter().sum();
+    Some(SessionReport {
+        planner,
+        mean_batch_s: s.mean,
+        p95_batch_s: s.p95,
+        effective_throughput: if wall > 0.0 { (wall - lost) / wall } else { 1.0 },
+        solver,
+        batch_times,
+        recovery_latencies,
+        decisions,
+        failures,
+        joins,
+    })
+}
+
+/// Coordinator-side aggregates regenerated from the log alone, pinned by
+/// tests to the live PS counters.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct CoordinatorProjection {
+    pub evictions: u64,
+    pub rejoins: u64,
+    pub recoveries: u64,
+    /// real state changes (`from != to`)
+    pub transitions: u64,
+    /// same-state epoch bumps (evict / rejoin)
+    pub membership_events: u64,
+    /// highest membership epoch seen
+    pub last_epoch: u64,
+    pub recoveries_by_cause: BTreeMap<String, u64>,
+}
+
+pub fn project_coordinator(tl: &Timeline) -> CoordinatorProjection {
+    let mut p = CoordinatorProjection::default();
+    for ev in tl.events() {
+        match ev {
+            SessionEvent::Eviction { .. } => p.evictions += 1,
+            SessionEvent::Rejoin { .. } => p.rejoins += 1,
+            SessionEvent::Recovery { cause, .. } => {
+                p.recoveries += 1;
+                *p.recoveries_by_cause.entry(cause.clone()).or_insert(0) += 1;
+            }
+            SessionEvent::StateTransition {
+                from, to, epoch, ..
+            } => {
+                if from == to {
+                    p.membership_events += 1;
+                } else {
+                    p.transitions += 1;
+                }
+                p.last_epoch = p.last_epoch.max(*epoch);
+            }
+            _ => {}
+        }
+    }
+    p
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Timeline {
+        let mut tl = Timeline::new();
+        tl.record(SessionEvent::SessionStart {
+            planner: "CLEAVE-cached".to_string(),
+            n_batches: 2,
+            seed: 7,
+        });
+        tl.record(SessionEvent::Reselection {
+            batch: 0,
+            pool_size: 10,
+            admitted: 8,
+            evicted: 0,
+            stragglers: 1,
+            t_star: 1.25,
+            objective: 3.5,
+            probes: 6,
+        });
+        tl.record(SessionEvent::Failure {
+            batch: 0,
+            slot: 3,
+            t_s: 0.5,
+            recovery_s: 0.125,
+        });
+        tl.record(SessionEvent::Join { batch: 1, t_s: 2.0 });
+        tl.record(SessionEvent::BatchEnd {
+            batch: 0,
+            dur_s: 1.5,
+        });
+        tl.record(SessionEvent::BatchEnd {
+            batch: 1,
+            dur_s: 1.0,
+        });
+        tl.record(SessionEvent::SessionEnd {
+            solver: CacheStats {
+                cold_solves: 1,
+                warm_solves: 2,
+                ..CacheStats::default()
+            },
+        });
+        tl
+    }
+
+    #[test]
+    fn jsonl_roundtrips_exactly() {
+        let tl = sample();
+        let text = tl.to_jsonl();
+        assert_eq!(text.lines().count(), tl.len());
+        let back = Timeline::parse_jsonl(&text).unwrap();
+        assert_eq!(back, tl);
+        // serialization is deterministic: same log, same bytes
+        assert_eq!(back.to_jsonl(), text);
+    }
+
+    #[test]
+    fn coordinator_events_roundtrip() {
+        let mut tl = Timeline::new();
+        tl.record(SessionEvent::StateTransition {
+            from: "Warmup".to_string(),
+            to: "Train".to_string(),
+            epoch: 0,
+            reason: "GEMM round start".to_string(),
+        });
+        tl.record(SessionEvent::Eviction {
+            device: 2,
+            reason: "no response to liveness probe".to_string(),
+        });
+        tl.record(SessionEvent::StateTransition {
+            from: "Train".to_string(),
+            to: "Train".to_string(),
+            epoch: 1,
+            reason: "evicted".to_string(),
+        });
+        tl.record(SessionEvent::Recovery {
+            cause: "no response to liveness probe".to_string(),
+            orphaned: 2,
+            detection_s: 0.45,
+        });
+        tl.record(SessionEvent::Rejoin { device: 2 });
+        let back = Timeline::parse_jsonl(&tl.to_jsonl()).unwrap();
+        assert_eq!(back, tl);
+        let p = project_coordinator(&tl);
+        assert_eq!(p.evictions, 1);
+        assert_eq!(p.rejoins, 1);
+        assert_eq!(p.recoveries, 1);
+        assert_eq!(p.transitions, 1);
+        assert_eq!(p.membership_events, 1);
+        assert_eq!(p.last_epoch, 1);
+        assert_eq!(p.recoveries_by_cause["no response to liveness probe"], 1);
+    }
+
+    #[test]
+    fn projection_reproduces_report_shape() {
+        let tl = sample();
+        let r = project_session(&tl).expect("has SessionStart");
+        assert_eq!(r.planner, "CLEAVE-cached");
+        assert_eq!(r.batch_times, vec![1.5, 1.0]);
+        assert_eq!(r.recovery_latencies, vec![0.125]);
+        assert_eq!((r.failures, r.joins), (1, 1));
+        assert_eq!(r.decisions.len(), 1);
+        assert_eq!(r.decisions[0].admitted, 8);
+        assert_eq!(r.solver.warm_solves, 2);
+        // identical arithmetic to the live loop
+        assert_eq!(r.mean_batch_s, 1.25);
+        assert_eq!(r.effective_throughput, (2.5 - 0.125) / 2.5);
+        // a coordinator-only log projects to no session report
+        assert!(project_session(&Timeline::new()).is_none());
+    }
+
+    #[test]
+    fn bad_lines_are_rejected_with_context() {
+        assert!(Timeline::parse_jsonl("{\"ev\":\"nope\"}\n").is_err());
+        assert!(Timeline::parse_jsonl("not json\n").is_err());
+        // blank lines are tolerated
+        let tl = Timeline::parse_jsonl("\n\n").unwrap();
+        assert!(tl.is_empty());
+    }
+}

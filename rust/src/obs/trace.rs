@@ -1,0 +1,292 @@
+//! Lightweight tracing spans (ISSUE 7): monotonic-clock timed regions with
+//! parent/child nesting, a process-wide per-phase aggregate, and a bounded
+//! ring buffer of recent spans.
+//!
+//! Tracing is off by default and globally gated by one atomic: a disabled
+//! [`span!`](crate::span) costs one relaxed load and a branch (gated at a
+//! few ns/op by `benches/obs_overhead.rs`), so the instrumented hot paths
+//! — select / solve / waterfill / dispatch / detect / recover — carry
+//! their spans unconditionally.
+//!
+//! Nesting is tracked per thread: a span's *self time* is its duration
+//! minus the time spent in child spans opened on the same thread (solver
+//! work fanned out to pool threads aggregates under its own name at depth
+//! 0 — totals stay correct, cross-thread parentage is not reconstructed).
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::table::Table;
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+/// Turn span recording on/off process-wide.
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Release);
+}
+
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Bound on the retained span ring; the per-phase aggregate keeps totals.
+pub const RING_CAP: usize = 1024;
+
+/// One completed span, as retained in the ring buffer.
+#[derive(Clone, Debug)]
+pub struct SpanRecord {
+    pub name: &'static str,
+    /// `key=value` detail captured at open (only when tracing was enabled)
+    pub detail: Option<String>,
+    /// seconds since the process trace epoch (first span ever recorded)
+    pub start_s: f64,
+    pub dur_s: f64,
+    /// duration minus same-thread child span time
+    pub self_s: f64,
+    /// same-thread nesting depth at open
+    pub depth: u16,
+}
+
+/// Aggregate of every completed span sharing one name.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct PhaseStat {
+    pub count: u64,
+    pub total_s: f64,
+    pub self_s: f64,
+}
+
+struct Sink {
+    agg: BTreeMap<&'static str, PhaseStat>,
+    ring: Vec<SpanRecord>,
+    ring_next: usize,
+}
+
+static SINK: Mutex<Sink> = Mutex::new(Sink {
+    agg: BTreeMap::new(),
+    ring: Vec::new(),
+    ring_next: 0,
+});
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+struct OpenFrame {
+    child_s: f64,
+}
+
+thread_local! {
+    static STACK: RefCell<Vec<OpenFrame>> = const { RefCell::new(Vec::new()) };
+}
+
+/// RAII guard of one open span; the measurement lands on drop.
+pub struct SpanGuard {
+    name: &'static str,
+    detail: Option<String>,
+    /// `None` when tracing was disabled at open — drop is then a no-op
+    start: Option<Instant>,
+    depth: u16,
+}
+
+/// Open a span (prefer the [`span!`](crate::span) macro). Inert and
+/// allocation-free when tracing is disabled.
+#[inline]
+pub fn start(name: &'static str) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard {
+            name,
+            detail: None,
+            start: None,
+            depth: 0,
+        };
+    }
+    open(name, None)
+}
+
+/// Open a span carrying a formatted detail string (the [`span!`] macro
+/// only formats when tracing is enabled).
+pub fn start_detailed(name: &'static str, detail: String) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard {
+            name,
+            detail: None,
+            start: None,
+            depth: 0,
+        };
+    }
+    open(name, Some(detail))
+}
+
+fn open(name: &'static str, detail: Option<String>) -> SpanGuard {
+    let depth = STACK.with(|s| {
+        let mut s = s.borrow_mut();
+        s.push(OpenFrame { child_s: 0.0 });
+        (s.len() - 1) as u16
+    });
+    // Touch the epoch before taking the start stamp so start_s >= 0.
+    let _ = epoch();
+    SpanGuard {
+        name,
+        detail,
+        start: Some(Instant::now()),
+        depth,
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(start) = self.start else {
+            return;
+        };
+        let dur_s = start.elapsed().as_secs_f64();
+        let child_s = STACK.with(|s| {
+            let mut s = s.borrow_mut();
+            let frame = s.pop().map_or(0.0, |f| f.child_s);
+            if let Some(parent) = s.last_mut() {
+                parent.child_s += dur_s;
+            }
+            frame
+        });
+        let self_s = (dur_s - child_s).max(0.0);
+        let rec = SpanRecord {
+            name: self.name,
+            detail: self.detail.take(),
+            start_s: start.duration_since(epoch()).as_secs_f64(),
+            dur_s,
+            self_s,
+            depth: self.depth,
+        };
+        let mut sink = SINK.lock().unwrap_or_else(|e| e.into_inner());
+        let a = sink.agg.entry(self.name).or_default();
+        a.count += 1;
+        a.total_s += dur_s;
+        a.self_s += self_s;
+        if sink.ring.len() < RING_CAP {
+            sink.ring.push(rec);
+        } else {
+            let i = sink.ring_next;
+            sink.ring[i] = rec;
+        }
+        sink.ring_next = (sink.ring_next + 1) % RING_CAP;
+    }
+}
+
+/// Per-phase totals, heaviest total first.
+pub fn phase_breakdown() -> Vec<(&'static str, PhaseStat)> {
+    let sink = SINK.lock().unwrap_or_else(|e| e.into_inner());
+    let mut v: Vec<(&'static str, PhaseStat)> =
+        sink.agg.iter().map(|(&k, &s)| (k, s)).collect();
+    v.sort_by(|a, b| b.1.total_s.total_cmp(&a.1.total_s));
+    v
+}
+
+/// The retained span ring (unordered beyond "recent"; totals live in
+/// [`phase_breakdown`]).
+pub fn recent_spans() -> Vec<SpanRecord> {
+    let sink = SINK.lock().unwrap_or_else(|e| e.into_inner());
+    sink.ring.clone()
+}
+
+/// Clear the aggregate and the ring (benches isolate runs with this).
+pub fn reset() {
+    let mut sink = SINK.lock().unwrap_or_else(|e| e.into_inner());
+    sink.agg.clear();
+    sink.ring.clear();
+    sink.ring_next = 0;
+}
+
+/// Render the per-phase breakdown as the house ASCII table.
+pub fn breakdown_table() -> Table {
+    let mut t = Table::new(&["phase", "count", "total", "self"]);
+    for (name, s) in phase_breakdown() {
+        t.row(&[
+            name.to_string(),
+            s.count.to_string(),
+            crate::util::fmt_secs(s.total_s),
+            crate::util::fmt_secs(s.self_s),
+        ]);
+    }
+    t
+}
+
+/// Open a named tracing span: `let _g = span!("solve");` or
+/// `let _g = span!("solve", shape = shape);`. The guard records on drop;
+/// detail arguments are only formatted when tracing is enabled.
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        $crate::obs::trace::start($name)
+    };
+    ($name:expr, $($key:ident = $val:expr),+ $(,)?) => {
+        if $crate::obs::trace::enabled() {
+            $crate::obs::trace::start_detailed(
+                $name,
+                format!(concat!($(stringify!($key), "={:?} "),+), $($val),+),
+            )
+        } else {
+            $crate::obs::trace::start($name)
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// One test drives the whole lifecycle: the sink and the enabled flag
+    /// are process globals, so sibling tests would race each other.
+    #[test]
+    fn spans_nest_aggregate_and_stay_bounded() {
+        reset();
+        // Disabled: guards are inert, nothing is recorded.
+        {
+            let _g = crate::span!("off");
+        }
+        assert!(phase_breakdown().is_empty());
+
+        set_enabled(true);
+        {
+            let _outer = crate::span!("outer", kind = "test");
+            for _ in 0..3 {
+                let _inner = crate::span!("inner");
+                std::hint::black_box(());
+            }
+        }
+        let bd = phase_breakdown();
+        let get = |n: &str| bd.iter().find(|(k, _)| *k == n).map(|&(_, s)| s);
+        let outer = get("outer").expect("outer recorded");
+        let inner = get("inner").expect("inner recorded");
+        assert_eq!(outer.count, 1);
+        assert_eq!(inner.count, 3);
+        // child time is attributed to the parent's total but not its self
+        assert!(outer.self_s <= outer.total_s + 1e-12);
+        assert!(outer.total_s + 1e-9 >= inner.total_s, "{bd:?}");
+        let ring = recent_spans();
+        assert_eq!(ring.len(), 4);
+        assert!(ring
+            .iter()
+            .any(|r| r.name == "outer" && r.detail.as_deref() == Some("kind=\"test\" ")));
+        assert!(ring.iter().any(|r| r.name == "inner" && r.depth == 1));
+
+        // Ring stays bounded while the aggregate keeps full totals.
+        for _ in 0..(RING_CAP + 10) {
+            let _g = crate::span!("flood");
+        }
+        assert!(recent_spans().len() <= RING_CAP);
+        assert_eq!(get("flood").map(|s| s.count), None, "stale snapshot");
+        let flood = phase_breakdown()
+            .iter()
+            .find(|(k, _)| *k == "flood")
+            .map(|&(_, s)| s)
+            .unwrap();
+        assert_eq!(flood.count, (RING_CAP + 10) as u64);
+
+        set_enabled(false);
+        reset();
+    }
+}

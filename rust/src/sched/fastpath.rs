@@ -72,6 +72,7 @@ use std::time::Instant;
 use crate::cluster::device::Device;
 use crate::cluster::fleet::{diff_fleets, DeviceSig, FleetDelta, FleetView};
 use crate::model::dag::GemmDag;
+use crate::obs::metrics::{Counter, Histogram, MetricsRegistry};
 use crate::sched::assignment::{GemmAssignment, Schedule};
 use crate::sched::cost::{opt_tail, CostModel, GemmShape, PsParams};
 use crate::sched::oracle::{DeviceCurve, MinFamily, OracleMode, Piece, QuadChain, SegmentOracle};
@@ -894,10 +895,75 @@ pub struct CacheStats {
     pub skeleton_reuses: usize,
 }
 
+/// Registry-backed cells behind [`CacheStats`] (ISSUE 7): the counters
+/// live in the cache's [`MetricsRegistry`] under `solver.*` names, and
+/// [`SolverCache::stats`] is a thin read off the cells — existing callers
+/// keep the plain-struct API, while a cache bound to a shared registry
+/// ([`SolverCache::with_registry`]) surfaces the same counts in the
+/// whole-process [`crate::obs::metrics::MetricsSnapshot`].
+#[derive(Clone, Debug)]
+struct CacheCounters {
+    memo_hits: Counter,
+    warm_solves: Counter,
+    cold_solves: Counter,
+    incremental_updates: Counter,
+    full_rebuilds: Counter,
+    selection_warm_starts: Counter,
+    selection_cold_sweeps: Counter,
+    skeleton_reuses: Counter,
+    /// solver-wide tally of [`SolverStats::analytic_roots`]
+    analytic_roots: Counter,
+    /// solver-wide tally of [`SolverStats::bisection_iters`]
+    bisection_iters: Counter,
+    /// wall time of each [`solve_dag_fast`] call routed through this cache
+    solve_s: Histogram,
+}
+
+impl CacheCounters {
+    fn bind(reg: &MetricsRegistry) -> CacheCounters {
+        CacheCounters {
+            memo_hits: reg.counter("solver.cache.memo_hits"),
+            warm_solves: reg.counter("solver.cache.warm_solves"),
+            cold_solves: reg.counter("solver.cache.cold_solves"),
+            incremental_updates: reg.counter("solver.cache.incremental_updates"),
+            full_rebuilds: reg.counter("solver.cache.full_rebuilds"),
+            selection_warm_starts: reg.counter("solver.cache.selection_warm_starts"),
+            selection_cold_sweeps: reg.counter("solver.cache.selection_cold_sweeps"),
+            skeleton_reuses: reg.counter("solver.cache.skeleton_reuses"),
+            analytic_roots: reg.counter("solver.analytic_roots"),
+            bisection_iters: reg.counter("solver.bisection_iters"),
+            solve_s: reg.histogram("solver.solve_s"),
+        }
+    }
+
+    fn read(&self) -> CacheStats {
+        CacheStats {
+            memo_hits: self.memo_hits.get() as usize,
+            warm_solves: self.warm_solves.get() as usize,
+            cold_solves: self.cold_solves.get() as usize,
+            incremental_updates: self.incremental_updates.get() as usize,
+            full_rebuilds: self.full_rebuilds.get() as usize,
+            selection_warm_starts: self.selection_warm_starts.get() as usize,
+            selection_cold_sweeps: self.selection_cold_sweeps.get() as usize,
+            skeleton_reuses: self.skeleton_reuses.get() as usize,
+        }
+    }
+
+    fn reset_stats(&self) {
+        self.memo_hits.reset();
+        self.warm_solves.reset();
+        self.cold_solves.reset();
+        self.incremental_updates.reset();
+        self.full_rebuilds.reset();
+        self.selection_warm_starts.reset();
+        self.selection_cold_sweeps.reset();
+        self.skeleton_reuses.reset();
+    }
+}
+
 /// Warm-start, memoization and incremental-oracle state shared across
 /// solves (benches, churn sweeps, selection probes, sessions). See the
 /// module docs.
-#[derive(Default)]
 pub struct SolverCache {
     /// last `T*` per shape (any fleet) — scan-fallback bracket hints
     hints: HashMap<GemmShape, f64>,
@@ -911,7 +977,26 @@ pub struct SolverCache {
     skeleton: Option<(u64, FleetSkeleton)>,
     /// maintenance mode of every oracle this cache builds
     mode: OracleMode,
-    stats: CacheStats,
+    /// where the `solver.*` instruments live — private per cache unless
+    /// built with [`SolverCache::with_registry`]
+    registry: MetricsRegistry,
+    counters: CacheCounters,
+}
+
+impl Default for SolverCache {
+    fn default() -> SolverCache {
+        let registry = MetricsRegistry::new();
+        let counters = CacheCounters::bind(&registry);
+        SolverCache {
+            hints: HashMap::new(),
+            memo: HashMap::new(),
+            oracles: HashMap::new(),
+            skeleton: None,
+            mode: OracleMode::default(),
+            registry,
+            counters,
+        }
+    }
 }
 
 impl SolverCache {
@@ -930,17 +1015,37 @@ impl SolverCache {
         }
     }
 
+    /// A cache whose `solver.*` instruments live in `reg` — the flight-
+    /// recorder path: handing the session's, the selection loop's, and the
+    /// PS's caches one shared registry merges their counts into a single
+    /// snapshot.
+    pub fn with_registry(mode: OracleMode, reg: &MetricsRegistry) -> SolverCache {
+        SolverCache {
+            mode,
+            registry: reg.clone(),
+            counters: CacheCounters::bind(reg),
+            ..SolverCache::default()
+        }
+    }
+
+    /// The registry this cache's `solver.*` instruments are bound to.
+    pub fn registry(&self) -> &MetricsRegistry {
+        &self.registry
+    }
+
     /// The oracle maintenance mode this cache builds with.
     pub fn oracle_mode(&self) -> OracleMode {
         self.mode
     }
 
+    /// Drop all reuse state and zero the [`CacheStats`] cells (for a cache
+    /// sharing a registry this zeroes the shared `solver.cache.*` cells).
     pub fn clear(&mut self) {
         self.hints.clear();
         self.memo.clear();
         self.oracles.clear();
         self.skeleton = None;
-        self.stats = CacheStats::default();
+        self.counters.reset_stats();
     }
 
     /// Number of memoized exact solves (diagnostics).
@@ -948,18 +1053,19 @@ impl SolverCache {
         self.memo.len()
     }
 
-    /// How the solves routed through this cache were served.
+    /// How the solves routed through this cache were served (a thin read
+    /// of the registry cells).
     pub fn stats(&self) -> CacheStats {
-        self.stats
+        self.counters.read()
     }
 
     /// Record how an admission sweep was driven (see
     /// [`crate::sched::select::select_devices_incremental`]).
     pub(crate) fn note_selection(&mut self, warm: bool) {
         if warm {
-            self.stats.selection_warm_starts += 1;
+            self.counters.selection_warm_starts.inc();
         } else {
-            self.stats.selection_cold_sweeps += 1;
+            self.counters.selection_cold_sweeps.inc();
         }
     }
 
@@ -1025,6 +1131,7 @@ pub fn solve_dag_fast(
     mut cache: Option<&mut SolverCache>,
 ) -> (Schedule, SolverStats) {
     let t0 = Instant::now();
+    let _sp = crate::span!("solve", devices = devices.len());
     let view = FleetView::build(devices);
     let ctx = cache_ctx(&view, cm, opts);
     let octx = oracle_ctx(cm);
@@ -1112,21 +1219,21 @@ pub fn solve_dag_fast(
         agg.analytic_roots += s.analytic_roots;
         if let Some(c) = cache.as_deref_mut() {
             if job.memo.is_some() {
-                c.stats.memo_hits += 1;
+                c.counters.memo_hits.inc();
             } else if job.hint.is_some() {
-                c.stats.warm_solves += 1;
+                c.counters.warm_solves.inc();
             } else {
-                c.stats.cold_solves += 1;
+                c.counters.cold_solves.inc();
             }
             match reuse {
-                Some(OracleReuse::Incremental) => c.stats.incremental_updates += 1,
-                Some(OracleReuse::Rebuilt) => c.stats.full_rebuilds += 1,
+                Some(OracleReuse::Incremental) => c.counters.incremental_updates.inc(),
+                Some(OracleReuse::Rebuilt) => c.counters.full_rebuilds.inc(),
                 _ => {}
             }
             if skel.is_some()
                 && matches!(reuse, Some(OracleReuse::ColdBuilt) | Some(OracleReuse::Rebuilt))
             {
-                c.stats.skeleton_reuses += 1;
+                c.counters.skeleton_reuses.inc();
             }
             c.hints.insert(job.shape, s.continuous_makespan);
             if c.memo.len() > 8192 {
@@ -1157,6 +1264,11 @@ pub fn solve_dag_fast(
     agg.solve_time_s = t0.elapsed().as_secs_f64();
     agg.continuous_makespan = schedule.gemm_time;
     agg.integer_makespan = schedule.gemm_time;
+    if let Some(c) = cache.as_deref_mut() {
+        c.counters.analytic_roots.add(agg.analytic_roots as u64);
+        c.counters.bisection_iters.add(agg.bisection_iters as u64);
+        c.counters.solve_s.observe(agg.solve_time_s);
+    }
     (schedule, agg)
 }
 

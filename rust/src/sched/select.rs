@@ -516,6 +516,7 @@ pub fn select_devices(
     cfg: &SelectConfig,
     cache: &mut SolverCache,
 ) -> SelectionOutcome {
+    let _sp = crate::span!("select", candidates = candidates.len());
     let (planning, order) = capability_order(candidates, dag, cm, cfg);
     cache.note_selection(false);
     run_admission(&planning, &order, dag, cm, ps, cfg, cache, SweepSeed::Cold)
@@ -547,6 +548,7 @@ pub fn select_devices_incremental(
     cache: &mut SolverCache,
     state: &mut SelectionState,
 ) -> SelectionOutcome {
+    let _sp = crate::span!("select", candidates = candidates.len());
     let (planning, order) = capability_order(candidates, dag, cm, cfg);
     let sigs: Vec<u64> = order.iter().map(|&i| device_param_sig(&planning[i])).collect();
     let warm = state.is_seeded() && single_edit(&state.order_sigs, &sigs);

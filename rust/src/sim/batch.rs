@@ -105,6 +105,7 @@ pub fn simulate_batch(
     cm: &CostModel,
     cfg: &SimConfig,
 ) -> BatchResult {
+    let _sp = crate::span!("waterfill", devices = devices.len());
     match cfg.accounting {
         Accounting::ColdStart => simulate_batch_cold(devices, dag, schedule, cm, cfg),
         Accounting::SteadyState => simulate_batch_steady(devices, dag, schedule, cm, cfg),

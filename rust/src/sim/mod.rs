@@ -12,4 +12,6 @@ pub mod session;
 
 pub use batch::{simulate_batch, BatchResult, SimConfig};
 pub use failure::{simulate_failure, FailureOutcome};
-pub use session::{run_session, run_session_with, Policy, SessionConfig, SessionReport};
+pub use session::{
+    run_session, run_session_observed, run_session_with, Policy, SessionConfig, SessionReport,
+};

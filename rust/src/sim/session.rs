@@ -51,9 +51,13 @@ use crate::cluster::churn::{events, ChurnConfig, ChurnEvent};
 use crate::cluster::device::Device;
 use crate::cluster::pool::DevicePool;
 use crate::model::dag::GemmDag;
+use crate::obs::metrics::{Counter, Gauge, Histogram};
+use crate::obs::timeline::SessionEvent;
+use crate::obs::Recorder;
 use crate::sched::assignment::Schedule;
 use crate::sched::cost::{CostModel, GemmShape, PsParams};
 use crate::sched::fastpath::{CacheStats, SolverCache};
+use crate::sched::oracle::OracleMode;
 use crate::sched::recovery::recover;
 use crate::sched::select::{select_devices_incremental, SelectConfig, SelectionState};
 use crate::sim::batch::{simulate_batch, SimConfig};
@@ -193,6 +197,40 @@ impl SessionReport {
                 Json::from(self.solver.selection_cold_sweeps),
             ),
         ])
+    }
+
+    /// Bitwise equality (every f64 compared by bits): the replay-parity
+    /// predicate the timeline tests pin
+    /// [`crate::obs::timeline::project_session`] with.
+    pub fn same_as(&self, other: &SessionReport) -> bool {
+        fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+            a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+        }
+        fn dec_eq(a: &SelectionDecision, b: &SelectionDecision) -> bool {
+            a.batch_index == b.batch_index
+                && a.pool_size == b.pool_size
+                && a.admitted == b.admitted
+                && a.evicted == b.evicted
+                && a.stragglers_admitted == b.stragglers_admitted
+                && a.t_star_planned.to_bits() == b.t_star_planned.to_bits()
+                && a.objective.to_bits() == b.objective.to_bits()
+                && a.probes == b.probes
+        }
+        self.planner == other.planner
+            && bits_eq(&self.batch_times, &other.batch_times)
+            && bits_eq(&self.recovery_latencies, &other.recovery_latencies)
+            && self.decisions.len() == other.decisions.len()
+            && self
+                .decisions
+                .iter()
+                .zip(&other.decisions)
+                .all(|(a, b)| dec_eq(a, b))
+            && self.failures == other.failures
+            && self.joins == other.joins
+            && self.mean_batch_s.to_bits() == other.mean_batch_s.to_bits()
+            && self.p95_batch_s.to_bits() == other.p95_batch_s.to_bits()
+            && self.effective_throughput.to_bits() == other.effective_throughput.to_bits()
+            && self.solver == other.solver
     }
 }
 
@@ -349,6 +387,49 @@ pub fn run_session_with(
     cfg: &SessionConfig,
     planner: &mut dyn Planner,
 ) -> SessionReport {
+    run_session_observed(pool, dag, cm, ps, cfg, planner, None)
+}
+
+/// Registry instruments of one observed session (bound once at start so
+/// the loop pays one atomic per record).
+struct SessionInstruments {
+    batches: Counter,
+    failures: Counter,
+    joins: Counter,
+    batch_s: Histogram,
+    active_devices: Gauge,
+}
+
+fn record_decision(rec: &Recorder, d: &SelectionDecision) {
+    rec.record(SessionEvent::Reselection {
+        batch: d.batch_index,
+        pool_size: d.pool_size,
+        admitted: d.admitted,
+        evicted: d.evicted,
+        stragglers: d.stragglers_admitted,
+        t_star: d.t_star_planned,
+        objective: d.objective,
+        probes: d.probes,
+    });
+}
+
+/// [`run_session_with`] plus an optional flight recorder: when `obs` is
+/// given, every membership decision, mid-batch failure, admitted join and
+/// batch boundary is appended to its timeline — carrying only
+/// deterministic modeled values, so the same seed produces byte-identical
+/// JSONL — `session.*` instruments land in its registry, and the
+/// session-local fallback cache binds its `solver.*` counters there too.
+/// With `obs = None` the behaviour (and every report value) is identical
+/// to the unobserved entrypoint.
+pub fn run_session_observed(
+    pool: &mut DevicePool,
+    dag: &GemmDag,
+    cm: &CostModel,
+    ps: &PsParams,
+    cfg: &SessionConfig,
+    planner: &mut dyn Planner,
+    obs: Option<&Recorder>,
+) -> SessionReport {
     assert!(cfg.n_batches > 0, "session needs at least one batch");
     assert!(
         planner.supports_churn(),
@@ -357,7 +438,27 @@ pub fn run_session_with(
     );
     let ctx = Ctx { dag, cm, ps, cfg };
     let mut rng = Rng::new(cfg.seed);
-    let mut fallback = SolverCache::new();
+    let mut fallback = match obs {
+        Some(rec) => SolverCache::with_registry(OracleMode::default(), rec.registry()),
+        None => SolverCache::new(),
+    };
+    let ins = obs.map(|rec| {
+        let reg = rec.registry();
+        SessionInstruments {
+            batches: reg.counter("session.batches"),
+            failures: reg.counter("session.failures"),
+            joins: reg.counter("session.joins"),
+            batch_s: reg.histogram("session.batch_s"),
+            active_devices: reg.gauge("session.active_devices"),
+        }
+    });
+    if let Some(rec) = obs {
+        rec.record(SessionEvent::SessionStart {
+            planner: planner.name().to_string(),
+            n_batches: cfg.n_batches,
+            seed: cfg.seed,
+        });
+    }
     let mut decisions: Vec<SelectionDecision> = Vec::new();
     let mut batch_times: Vec<f64> = Vec::with_capacity(cfg.n_batches);
     let mut recovery_latencies: Vec<f64> = Vec::new();
@@ -370,6 +471,12 @@ pub fn run_session_with(
         let cache = session_cache(planner, &mut fallback);
         choose_active(pool, &ctx, cache, &mut sel_state, 0, &mut decisions)
     };
+    if let Some(rec) = obs {
+        record_decision(rec, decisions.last().expect("initial decision recorded"));
+    }
+    if let Some(i) = &ins {
+        i.active_devices.set(active.len() as f64);
+    }
     let (mut planned, mut true_devices, mut clean_time) =
         plan_active(pool, &active, &ctx, planner);
 
@@ -385,11 +492,20 @@ pub fn run_session_with(
     for bi in 0..cfg.n_batches {
         if bi > 0 && cfg.epoch_batches > 0 && bi % cfg.epoch_batches == 0 {
             // Membership epoch: pick up joins, drop the departed, re-balance.
+            if let Some(rec) = obs {
+                rec.record(SessionEvent::EpochStart { batch: bi });
+            }
             let prev = active.clone();
             active = {
                 let cache = session_cache(planner, &mut fallback);
                 choose_active(pool, &ctx, cache, &mut sel_state, bi, &mut decisions)
             };
+            if let Some(rec) = obs {
+                record_decision(rec, decisions.last().expect("epoch decision recorded"));
+            }
+            if let Some(i) = &ins {
+                i.active_devices.set(active.len() as f64);
+            }
             if active != prev {
                 let replanned = plan_active(pool, &active, &ctx, planner);
                 planned = replanned.0;
@@ -431,6 +547,18 @@ pub fn run_session_with(
                     // Permanent departure: shrink membership, re-plan warm.
                     pool.depart(active[pos]);
                     active.remove(pos);
+                    if let Some(rec) = obs {
+                        rec.record(SessionEvent::Failure {
+                            batch: bi,
+                            slot: pos,
+                            t_s: et,
+                            recovery_s: lat,
+                        });
+                    }
+                    if let Some(i) = &ins {
+                        i.failures.inc();
+                        i.active_devices.set(active.len() as f64);
+                    }
                     let replanned = plan_active(pool, &active, &ctx, planner);
                     planned = replanned.0;
                     true_devices = replanned.1;
@@ -441,11 +569,27 @@ pub fn run_session_with(
                     if rng.uniform() < pool.availability_factor(et) {
                         pool.join();
                         joins += 1;
+                        if let Some(rec) = obs {
+                            rec.record(SessionEvent::Join { batch: bi, t_s: et });
+                        }
+                        if let Some(i) = &ins {
+                            i.joins.inc();
+                        }
                     }
                 }
             }
         }
         batch_times.push(end - t);
+        if let Some(rec) = obs {
+            rec.record(SessionEvent::BatchEnd {
+                batch: bi,
+                dur_s: end - t,
+            });
+        }
+        if let Some(i) = &ins {
+            i.batches.inc();
+            i.batch_s.observe(end - t);
+        }
         t = end;
     }
 
@@ -456,6 +600,9 @@ pub fn run_session_with(
         Some(c) => c.stats(),
         None => fallback.stats(),
     };
+    if let Some(rec) = obs {
+        rec.record(SessionEvent::SessionEnd { solver });
+    }
     SessionReport {
         planner: planner.name().to_string(),
         mean_batch_s: s.mean,

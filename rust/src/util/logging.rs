@@ -18,7 +18,12 @@ pub enum Level {
 static LEVEL: AtomicU8 = AtomicU8::new(2); // Info
 static INIT: std::sync::Once = std::sync::Once::new();
 
+/// Set the level programmatically. Consumes the one-shot env
+/// initialization: an explicit `set_level` made *before* the first
+/// `level()` read must win over `CLEAVE_LOG` (the seed-era version let a
+/// later `init_from_env` silently clobber it).
 pub fn set_level(l: Level) {
+    INIT.call_once(|| {});
     LEVEL.store(l as u8, Ordering::Relaxed);
 }
 
@@ -98,14 +103,43 @@ macro_rules! log_debug {
     };
 }
 
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Error,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_trace {
+    ($($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::Trace,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    /// One test covers ordering *and* the init-order fix: the level and
+    /// the `Once` are process globals, so sibling tests would race.
     #[test]
-    fn level_ordering() {
+    fn level_ordering_and_env_init_order() {
         assert!(Level::Error < Level::Trace);
+        // An explicit set_level must consume the one-shot env read: even
+        // with CLEAVE_LOG present, a later level() cannot clobber it.
+        std::env::set_var("CLEAVE_LOG", "trace");
         set_level(Level::Warn);
+        assert_eq!(level(), Level::Warn, "env must not clobber set_level");
+        std::env::remove_var("CLEAVE_LOG");
         assert!(enabled(Level::Error));
         assert!(enabled(Level::Warn));
         assert!(!enabled(Level::Info));

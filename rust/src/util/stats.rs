@@ -175,6 +175,60 @@ impl Welford {
     }
 }
 
+/// Bounded uniform sample of an unbounded stream (Vitter's Algorithm R):
+/// the first `cap` values are kept verbatim; after that, the i-th value
+/// replaces a random resident with probability `cap / i`. Memory is O(cap)
+/// no matter how long the stream runs, and every value seen has equal
+/// probability of residing in the sample — percentile estimates over
+/// [`Reservoir::samples`] stay unbiased (ISSUE 7 satellite: bounds the
+/// simulator's per-batch accumulator for million-batch sessions).
+#[derive(Clone, Debug)]
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    samples: Vec<f64>,
+    rng: crate::util::rng::Rng,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize, seed: u64) -> Reservoir {
+        assert!(cap > 0, "reservoir needs capacity");
+        Reservoir {
+            cap,
+            seen: 0,
+            samples: Vec::new(),
+            rng: crate::util::rng::Rng::new(seed),
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            let j = self.rng.below(self.seen);
+            if (j as usize) < self.cap {
+                self.samples[j as usize] = x;
+            }
+        }
+    }
+
+    /// Values pushed over the whole stream (not the resident count).
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// The resident sample (every value seen, while `is_exact`).
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    /// True while nothing has been evicted (the sample is the full stream).
+    pub fn is_exact(&self) -> bool {
+        self.seen as usize <= self.cap
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -259,5 +313,34 @@ mod tests {
     fn cv_definition() {
         let xs = [2.0, 2.0, 2.0];
         assert_eq!(coeff_of_variation(&xs), 0.0);
+    }
+
+    #[test]
+    fn reservoir_is_exact_then_bounded_and_unbiased() {
+        let mut r = Reservoir::new(8, 42);
+        for i in 0..8 {
+            r.push(i as f64);
+        }
+        assert!(r.is_exact());
+        assert_eq!(r.samples(), &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0]);
+
+        // Long stream: size stays pinned at cap, seen keeps counting, and
+        // the retained sample's mean tracks the stream mean (uniform
+        // inclusion probability) within sampling error.
+        let mut r = Reservoir::new(256, 7);
+        let n = 100_000u64;
+        for i in 0..n {
+            r.push(i as f64);
+        }
+        assert_eq!(r.samples().len(), 256);
+        assert_eq!(r.seen(), n);
+        assert!(!r.is_exact());
+        let stream_mean = (n - 1) as f64 / 2.0;
+        let sample_mean = mean(r.samples());
+        // std error of a 256-sample mean of U(0, n) ~ n/(sqrt(12)*16) ~ 1800.
+        assert!(
+            (sample_mean - stream_mean).abs() < 9_000.0,
+            "sample mean {sample_mean} vs stream mean {stream_mean}"
+        );
     }
 }

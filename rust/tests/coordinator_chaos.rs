@@ -80,9 +80,9 @@ fn hang_is_evicted_by_deadline_and_product_stays_bit_identical() {
     }
     // both hangs detected by deadline, never by disconnect
     assert!(!ps.is_alive(2) && !ps.is_alive(4));
-    assert!(ps.deadline_evictions >= 2, "evictions were deadline-driven");
-    assert!(ps.recoveries >= 2);
-    assert!(ps.redispatched_tasks >= 1);
+    assert!(ps.deadline_evictions() >= 2, "evictions were deadline-driven");
+    assert!(ps.recoveries() >= 2);
+    assert!(ps.redispatched_tasks() >= 1);
     assert!(ps
         .live_recoveries
         .iter()
@@ -136,7 +136,7 @@ fn slow_ramp_straggler_is_eventually_evicted() {
     }
     // response time doubles per task: it must blow the deadline eventually
     assert!(!ps.is_alive(0), "straggler never evicted");
-    assert!(ps.deadline_evictions >= 1);
+    assert!(ps.deadline_evictions() >= 1);
     assert_parity(&ps);
 }
 
@@ -155,7 +155,7 @@ fn depart_rejoin_serves_probation_then_returns() {
     for round in 0..8 {
         let c = ps.matmul(&a, &b, m, n, q).unwrap();
         assert_bits_eq(&c, &want, &format!("round {round}"));
-        if ps.rejoins >= 1 && ps.is_alive(2) {
+        if ps.rejoins() >= 1 && ps.is_alive(2) {
             rejoined_and_served = true;
             break;
         }
@@ -163,7 +163,7 @@ fn depart_rejoin_serves_probation_then_returns() {
         std::thread::sleep(Duration::from_millis(150));
     }
     assert!(rejoined_and_served, "departed worker never rejoined");
-    assert!(ps.evictions >= 1, "departure recorded as eviction");
+    assert!(ps.evictions() >= 1, "departure recorded as eviction");
     assert!(ps.membership_epoch() >= 2, "evict + rejoin bump the epoch");
     assert_eq!(ps.n_alive(), 5, "full fleet after rejoin");
     assert_parity(&ps);
@@ -276,11 +276,11 @@ fn trainer_losses_survive_chaos_bit_for_bit() {
         );
     }
     let ps = &dist_t.backend.ps;
-    assert!(ps.blocks_rejected >= 1, "corruption went undetected");
-    assert!(ps.evictions >= 2, "corrupt + hung/dead workers evicted");
-    assert!(ps.recoveries >= 1);
+    assert!(ps.blocks_rejected() >= 1, "corruption went undetected");
+    assert!(ps.evictions() >= 2, "corrupt + hung/dead workers evicted");
+    assert!(ps.recoveries() >= 1);
     assert_parity(ps);
-    assert_eq!(dist_t.backend.local_fallbacks, 0, "fleet stayed usable");
+    assert_eq!(dist_t.backend.local_fallbacks(), 0, "fleet stayed usable");
 }
 
 #[test]
@@ -330,6 +330,6 @@ fn trainer_chaos_matches_oracle_when_artifacts_present() {
             "step {step}: chaos loss {loss} vs oracle {w}"
         );
     }
-    assert!(t.backend.ps.evictions >= 1);
+    assert!(t.backend.ps.evictions() >= 1);
     assert_parity(&t.backend.ps);
 }

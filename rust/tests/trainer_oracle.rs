@@ -129,8 +129,8 @@ fn distributed_training_matches_local() {
 
     assert!((l0 - d0).abs() < 1e-3, "step0: local {l0} vs dist {d0}");
     assert!((l1 - d1).abs() < 1e-3, "step1: local {l1} vs dist {d1}");
-    assert!(dist.backend.ps.tasks_dispatched > 50);
-    assert_eq!(dist.backend.ps.blocks_rejected, 0);
+    assert!(dist.backend.ps.tasks_dispatched() > 50);
+    assert_eq!(dist.backend.ps.blocks_rejected(), 0);
 }
 
 #[test]
@@ -161,5 +161,5 @@ fn distributed_training_survives_churn_and_poisoning() {
         (got - want).abs() < 1e-3,
         "loss must survive churn+poisoning: {got} vs {want}"
     );
-    assert!(dist.backend.ps.blocks_rejected >= 1, "poisoning undetected");
+    assert!(dist.backend.ps.blocks_rejected() >= 1, "poisoning undetected");
 }
