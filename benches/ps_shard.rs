@@ -1,0 +1,116 @@
+//! Sharded parameter-server throughput (ISSUE 8): tensor-bytes/s and
+//! steps/s of the push → barrier → pull loop vs shard count ∈ {1, 2, 4, 8}.
+//!
+//! The workload is optimizer-bound on purpose — equal-size tensors so the
+//! hash partition balances, one full gradient push and parameter pull per
+//! step at staleness 0 — because the parallel win of sharding is the
+//! per-partition Adam apply inside the staleness barrier (disjoint shards
+//! drain concurrently). The 1-shard case drains inline, so the baseline
+//! carries no thread overhead.
+//!
+//! Gate (after the artifact is written): steps/s at 4 shards must be
+//! ≥ 1.5× the 1-shard baseline (≥ 1.2× under `--smoke`, where CI runners
+//! have few cores).
+
+use std::time::Instant;
+
+use cleave::coordinator::optimizer::AdamConfig;
+use cleave::coordinator::shard::{ShardConfig, ShardedPs};
+use cleave::util::bench::{bench_setup, write_artifact};
+use cleave::util::json::{obj, Json};
+use cleave::util::rng::Rng;
+use cleave::util::table::Table;
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+
+fn main() {
+    let (args, mut rep) = bench_setup(
+        "ps_shard",
+        "sharded PS push/pull throughput vs shard count",
+    );
+    let (n_tensors, elems, steps) = if args.smoke {
+        (32usize, 16_384usize, 10usize)
+    } else {
+        (64, 65_536, 30)
+    };
+    let mut rng = Rng::new(4242);
+    let params: Vec<Vec<f32>> = (0..n_tensors)
+        .map(|_| (0..elems).map(|_| 0.02 * rng.normal() as f32).collect())
+        .collect();
+    let grads: Vec<Vec<f32>> = params
+        .iter()
+        .map(|p| p.iter().map(|&x| 1e-3 * x + 1e-4).collect())
+        .collect();
+    let total_bytes = 4.0 * (n_tensors * elems) as f64;
+
+    let mut table = Table::new(&["shards", "steps/s", "tensor-GB/s", "speedup vs 1"]);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut baseline: Option<f64> = None;
+    let mut speedup_at_4 = 0.0_f64;
+    for &shards in &SHARD_COUNTS {
+        let mut ps = ShardedPs::new(&params, AdamConfig::default(), ShardConfig::new(shards));
+        let mut pulled = params.clone();
+        // Warmup: first push pays the partition clones' allocator faults.
+        ps.push(&grads);
+        ps.pull(&mut pulled);
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            ps.push(&grads);
+            ps.pull(&mut pulled);
+        }
+        let dt = t0.elapsed().as_secs_f64().max(1e-9);
+        let steps_per_s = steps as f64 / dt;
+        // Each step ingests one gradient set and serves one parameter set.
+        let bytes_per_s = steps as f64 * 2.0 * total_bytes / dt;
+        let speedup = match baseline {
+            None => {
+                baseline = Some(steps_per_s);
+                1.0
+            }
+            Some(b) => steps_per_s / b,
+        };
+        if shards == 4 {
+            speedup_at_4 = speedup;
+        }
+        table.row(&[
+            shards.to_string(),
+            format!("{steps_per_s:.2}"),
+            format!("{:.3}", bytes_per_s / 1e9),
+            format!("{speedup:.2}x"),
+        ]);
+        let fields = |_: ()| {
+            vec![
+                ("shards", Json::from(shards)),
+                ("steps_per_s", Json::from(steps_per_s)),
+                ("tensor_bytes_per_s", Json::from(bytes_per_s)),
+                ("speedup_vs_1", Json::from(speedup)),
+            ]
+        };
+        rep.record(fields(()));
+        rows.push(obj(fields(())));
+    }
+    table.print();
+
+    // Artifact first, gates after — a failed gate still leaves the curve.
+    write_artifact(
+        args.artifact_path("BENCH_ps_shard.json"),
+        &obj(vec![
+            ("bench", Json::from("ps_shard")),
+            ("smoke", Json::from(args.smoke)),
+            ("tensors", Json::from(n_tensors)),
+            ("elems_per_tensor", Json::from(elems)),
+            ("steps", Json::from(steps)),
+            ("rows", Json::from(rows)),
+        ]),
+    );
+
+    let need = if args.smoke { 1.2 } else { 1.5 };
+    assert!(
+        speedup_at_4 >= need,
+        "steps/s at 4 shards must be >= {need}x the 1-shard baseline, got {speedup_at_4:.2}x"
+    );
+    println!(
+        "4-shard speedup {speedup_at_4:.2}x (gate {need}x) over {steps} steps of {n_tensors} x {elems} f32 tensors"
+    );
+    rep.finish();
+}

@@ -30,8 +30,8 @@ pub mod planner;
 pub mod scenario;
 
 pub use planner::{
-    AlpaPlanner, CleavePlanner, CloudPlanner, DtfmPlanner, IdealPlanner, Plan, PlanEstimate,
-    PlanInput, Planner,
+    AlpaPlanner, CleavePlanner, CloudPlanner, CoordinatorPlanner, DtfmPlanner, IdealPlanner, Plan,
+    PlanEstimate, PlanInput, Planner,
 };
 pub use scenario::{
     Axis, RecoveryReport, Report, ReportDetail, Scenario, SweepPoint,

@@ -765,6 +765,22 @@ mod tests {
     }
 
     #[test]
+    fn run_batch_drives_the_live_coordinator() {
+        // ISSUE 8 facade closure: the live sharded-PS coordinator runs
+        // through `Scenario` exactly like every other planner — one
+        // `run_batch`, a measured Estimate back.
+        use crate::api::planner::CoordinatorPlanner;
+        let sc = Scenario::model("OPT-13B").devices(4).median_fleet();
+        let mut p = CoordinatorPlanner::tiny(2);
+        let r = sc.run_batch(&mut p).unwrap();
+        assert_eq!(r.planner, "Coordinator");
+        assert!(r.feasible());
+        assert!(r.per_batch().unwrap() > 0.0, "live steps take real time");
+        assert_eq!(p.last_losses.len(), p.steps, "real train steps ran");
+        assert!(p.last_losses.iter().all(|l| l.is_finite()));
+    }
+
+    #[test]
     fn compare_keeps_planner_order() {
         let sc = Scenario::model("OPT-13B").devices(32);
         let mut cleave = CleavePlanner::new();

@@ -16,12 +16,19 @@
 //! through the [`registry::Registry`] (its single liveness source), and
 //! re-tiles orphaned rects via the §4.2 solver. Deterministic fault
 //! injection lives in [`worker::FaultPlan`].
+//!
+//! Sharding (ISSUE 8): [`shard::ShardedPs`] hash-partitions the model's
+//! tensors across N PS shard actors — each owning its partition's Adam
+//! state and (when spawned over a fleet) its own [`DistributedGemm`]
+//! engine — with async push/pull under a bounded-staleness contract and
+//! partition-local §4.2 recovery.
 
 pub mod optimizer;
 pub mod protocol;
 pub mod ps;
 pub mod registry;
 pub mod run_state;
+pub mod shard;
 pub mod tensor;
 pub mod trainer;
 pub mod verify;
@@ -29,5 +36,6 @@ pub mod worker;
 
 pub use ps::{DistributedGemm, LiveRecovery, PsConfig};
 pub use run_state::{RunState, RunStateMachine};
+pub use shard::{ShardConfig, ShardedBackend, ShardedPs};
 pub use trainer::{GemmBackend, LocalBackend, Trainer, TrainerConfig};
 pub use worker::{Behavior, FaultPlan};

@@ -43,6 +43,20 @@ impl Adam {
         }
     }
 
+    /// Adam state over one PS shard's partition of the model: the tensors
+    /// at global indices `owned`, in that order. Adam is element-wise, so
+    /// a partitioned optimizer whose shards each call [`Adam::step`] once
+    /// per global step is bitwise the unpartitioned optimizer (the shard
+    /// tests pin this).
+    pub fn for_partition(cfg: AdamConfig, params: &[Vec<f32>], owned: &[usize]) -> Adam {
+        Adam {
+            cfg,
+            m: owned.iter().map(|&t| vec![0.0; params[t].len()]).collect(),
+            v: owned.iter().map(|&t| vec![0.0; params[t].len()]).collect(),
+            step: 0,
+        }
+    }
+
     /// One update over all tensors. `grads` must align with `params`.
     pub fn step(&mut self, params: &mut [Vec<f32>], grads: &[Vec<f32>]) {
         assert_eq!(params.len(), grads.len());
@@ -108,6 +122,34 @@ mod tests {
         for &p in &params[0] {
             assert!((p - 2.0).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn partitioned_state_matches_whole_model_state() {
+        // Two half-model Adams, each stepped once per global step, must
+        // reproduce the whole-model Adam bit for bit (element-wise update,
+        // identical step counters => identical bias correction).
+        let params0: Vec<Vec<f32>> = vec![vec![1.0, -2.0], vec![0.5; 3], vec![3.0]];
+        let cfg = AdamConfig::default();
+        let mut whole = params0.clone();
+        let mut adam = Adam::new(cfg, &whole);
+        let mut left = vec![params0[0].clone(), params0[2].clone()];
+        let mut right = vec![params0[1].clone()];
+        let mut adam_l = Adam::for_partition(cfg, &params0, &[0, 2]);
+        let mut adam_r = Adam::for_partition(cfg, &params0, &[1]);
+        for _ in 0..3 {
+            let grads: Vec<Vec<f32>> = whole.clone();
+            adam_l.step(&mut left, &[grads[0].clone(), grads[2].clone()]);
+            adam_r.step(&mut right, &[grads[1].clone()]);
+            adam.step(&mut whole, &grads);
+        }
+        let reassembled = [&left[0], &right[0], &left[1]];
+        for (w, r) in whole.iter().zip(reassembled) {
+            for (a, b) in w.iter().zip(r.iter()) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        assert_eq!((adam_l.step, adam_r.step), (adam.step, adam.step));
     }
 
     #[test]

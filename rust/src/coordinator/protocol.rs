@@ -3,12 +3,70 @@
 //! The paper uses gRPC/MQTT-style streams (§3.2); the live in-process fleet
 //! exchanges the same logical messages over channels, with link delays
 //! modeled explicitly by the worker (DESIGN.md §2 substitution table).
+//!
+//! **Wire format (ISSUE 8).** When messages leave the process — a sharded
+//! deployment routing through real transports — they carry a
+//! [`ShardHeader`] naming the destination shard and the sender's
+//! membership epoch. [`ToPs::to_wire`]/[`ToPs::from_wire`] (and the
+//! `ToWorker` pair) define that envelope once, so the single-PS path
+//! ([`ShardHeader::single`]) and the sharded path share one format.
+//! Decoding is **unknown-variant tolerant**: a message kind this build
+//! does not know yields `Ok((header, None))` rather than an error, so a
+//! newer peer can speak to an older shard without wedging it — the header
+//! still routes, the body is dropped and counted by the caller.
 
 use std::sync::mpsc::Sender;
 
+use anyhow::{ensure, Result};
+
+use crate::util::json::{obj, Json};
+
+/// Routing envelope carried by every wire message: which PS shard the
+/// message is for, and the sender's view of the membership epoch (used to
+/// drop messages from a previous epoch after a re-tile).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardHeader {
+    pub shard: usize,
+    pub epoch: u64,
+}
+
+impl ShardHeader {
+    /// The single-PS path: shard 0, epoch 0 — what every legacy message
+    /// implicitly was.
+    pub fn single() -> ShardHeader {
+        ShardHeader { shard: 0, epoch: 0 }
+    }
+
+    fn to_json(self) -> Vec<(&'static str, Json)> {
+        vec![
+            ("shard", Json::from(self.shard)),
+            ("epoch", Json::from(self.epoch as f64)),
+        ]
+    }
+
+    fn from_json(j: &Json) -> Result<ShardHeader> {
+        Ok(ShardHeader {
+            shard: j.get("shard")?.as_usize()?,
+            epoch: j.get("epoch")?.as_f64()? as u64,
+        })
+    }
+}
+
+fn f32s_to_json(v: &[f32]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::from(x as f64)).collect())
+}
+
+fn f32s_from_json(j: &Json) -> Result<Vec<f32>> {
+    // f32 -> f64 -> f32 is exact, so strips survive the wire bit-for-bit.
+    Ok(j.as_arr()?
+        .iter()
+        .map(|x| x.as_f64().map(|f| f as f32))
+        .collect::<Result<_>>()?)
+}
+
 /// A sub-GEMM task: the device's alpha rows of A and beta columns of B
 /// (column strip stored row-major `n x beta`), plus the rectangle it covers.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct SubGemmTask {
     /// task id (unique within a distributed GEMM round)
     pub task_id: u64,
@@ -33,9 +91,39 @@ impl SubGemmTask {
     pub fn ul_bytes(&self) -> usize {
         4 * self.rows * self.cols
     }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("task_id", Json::from(self.task_id as f64)),
+            ("a_strip", f32s_to_json(&self.a_strip)),
+            ("b_strip", f32s_to_json(&self.b_strip)),
+            ("n", Json::from(self.n)),
+            ("row0", Json::from(self.row0)),
+            ("rows", Json::from(self.rows)),
+            ("col0", Json::from(self.col0)),
+            ("cols", Json::from(self.cols)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<SubGemmTask> {
+        let t = SubGemmTask {
+            task_id: j.get("task_id")?.as_f64()? as u64,
+            a_strip: f32s_from_json(j.get("a_strip")?)?,
+            b_strip: f32s_from_json(j.get("b_strip")?)?,
+            n: j.get("n")?.as_usize()?,
+            row0: j.get("row0")?.as_usize()?,
+            rows: j.get("rows")?.as_usize()?,
+            col0: j.get("col0")?.as_usize()?,
+            cols: j.get("cols")?.as_usize()?,
+        };
+        ensure!(t.a_strip.len() == t.rows * t.n, "a_strip shape mismatch");
+        ensure!(t.b_strip.len() == t.n * t.cols, "b_strip shape mismatch");
+        Ok(t)
+    }
 }
 
 /// Messages the PS sends to a worker.
+#[derive(Debug, PartialEq)]
 pub enum ToWorker {
     Task(SubGemmTask),
     /// liveness probe; worker echoes KeepAlive
@@ -43,7 +131,37 @@ pub enum ToWorker {
     Shutdown,
 }
 
+impl ToWorker {
+    /// Encode with a shard-routing envelope (see module docs).
+    pub fn to_wire(&self, h: ShardHeader) -> Json {
+        let mut fields = h.to_json();
+        match self {
+            ToWorker::Task(t) => {
+                fields.push(("kind", Json::from("task")));
+                fields.push(("task", t.to_json()));
+            }
+            ToWorker::Ping => fields.push(("kind", Json::from("ping"))),
+            ToWorker::Shutdown => fields.push(("kind", Json::from("shutdown"))),
+        }
+        obj(fields)
+    }
+
+    /// Decode an envelope. Unknown `kind`s return `Ok((header, None))` —
+    /// the header still routes, the body is tolerated and dropped.
+    pub fn from_wire(j: &Json) -> Result<(ShardHeader, Option<ToWorker>)> {
+        let h = ShardHeader::from_json(j)?;
+        let msg = match j.get("kind")?.as_str()? {
+            "task" => Some(ToWorker::Task(SubGemmTask::from_json(j.get("task")?)?)),
+            "ping" => Some(ToWorker::Ping),
+            "shutdown" => Some(ToWorker::Shutdown),
+            _ => None,
+        };
+        Ok((h, msg))
+    }
+}
+
 /// Messages a worker sends to the PS.
+#[derive(Debug, PartialEq)]
 pub enum ToPs {
     /// completed task: id + the alpha x beta output block
     Result {
@@ -63,6 +181,61 @@ pub enum ToPs {
     Rejoin {
         worker: usize,
     },
+}
+
+impl ToPs {
+    /// Encode with a shard-routing envelope (see module docs).
+    pub fn to_wire(&self, h: ShardHeader) -> Json {
+        let mut fields = h.to_json();
+        match self {
+            ToPs::Result {
+                worker,
+                task_id,
+                block,
+            } => {
+                fields.push(("kind", Json::from("result")));
+                fields.push(("worker", Json::from(*worker)));
+                fields.push(("task_id", Json::from(*task_id as f64)));
+                fields.push(("block", f32s_to_json(block)));
+            }
+            ToPs::KeepAlive { worker } => {
+                fields.push(("kind", Json::from("keepalive")));
+                fields.push(("worker", Json::from(*worker)));
+            }
+            ToPs::Leaving { worker } => {
+                fields.push(("kind", Json::from("leaving")));
+                fields.push(("worker", Json::from(*worker)));
+            }
+            ToPs::Rejoin { worker } => {
+                fields.push(("kind", Json::from("rejoin")));
+                fields.push(("worker", Json::from(*worker)));
+            }
+        }
+        obj(fields)
+    }
+
+    /// Decode an envelope; unknown `kind`s are tolerated (`None` body).
+    pub fn from_wire(j: &Json) -> Result<(ShardHeader, Option<ToPs>)> {
+        let h = ShardHeader::from_json(j)?;
+        let msg = match j.get("kind")?.as_str()? {
+            "result" => Some(ToPs::Result {
+                worker: j.get("worker")?.as_usize()?,
+                task_id: j.get("task_id")?.as_f64()? as u64,
+                block: f32s_from_json(j.get("block")?)?,
+            }),
+            "keepalive" => Some(ToPs::KeepAlive {
+                worker: j.get("worker")?.as_usize()?,
+            }),
+            "leaving" => Some(ToPs::Leaving {
+                worker: j.get("worker")?.as_usize()?,
+            }),
+            "rejoin" => Some(ToPs::Rejoin {
+                worker: j.get("worker")?.as_usize()?,
+            }),
+            _ => None,
+        };
+        Ok((h, msg))
+    }
 }
 
 /// Handle the PS holds for each registered worker.
@@ -92,5 +265,97 @@ mod tests {
         assert_eq!(t.ul_bytes(), 4 * 32);
         // I/O asymmetry: inputs heavier than outputs for n >> rows,cols
         assert!(t.dl_bytes() > t.ul_bytes());
+    }
+
+    fn sample_task() -> SubGemmTask {
+        SubGemmTask {
+            task_id: 42,
+            a_strip: vec![1.5, -2.25, 0.0, f32::MIN_POSITIVE, 3.0e-7, 8.0],
+            b_strip: vec![0.5, -0.125, 7.0],
+            n: 3,
+            row0: 1,
+            rows: 2,
+            col0: 4,
+            cols: 1,
+        }
+    }
+
+    #[test]
+    fn wire_roundtrip_to_worker() {
+        let h = ShardHeader { shard: 3, epoch: 9 };
+        for msg in [
+            ToWorker::Task(sample_task()),
+            ToWorker::Ping,
+            ToWorker::Shutdown,
+        ] {
+            let (h2, back) = ToWorker::from_wire(&msg.to_wire(h)).unwrap();
+            assert_eq!(h2, h, "header survives the wire");
+            assert_eq!(back, Some(msg), "body survives the wire");
+        }
+        // the single-PS path is the same format at shard 0 / epoch 0
+        let (h0, back) = ToWorker::from_wire(&ToWorker::Ping.to_wire(ShardHeader::single())).unwrap();
+        assert_eq!(h0, ShardHeader::single());
+        assert_eq!(back, Some(ToWorker::Ping));
+    }
+
+    #[test]
+    fn wire_roundtrip_to_ps() {
+        let h = ShardHeader { shard: 1, epoch: 2 };
+        for msg in [
+            ToPs::Result {
+                worker: 5,
+                task_id: 42,
+                block: vec![1.0, -2.5, 0.25],
+            },
+            ToPs::KeepAlive { worker: 5 },
+            ToPs::Leaving { worker: 5 },
+            ToPs::Rejoin { worker: 5 },
+        ] {
+            let (h2, back) = ToPs::from_wire(&msg.to_wire(h)).unwrap();
+            assert_eq!(h2, h);
+            assert_eq!(back, Some(msg));
+        }
+    }
+
+    #[test]
+    fn unknown_kind_is_tolerated() {
+        // A newer peer's message kind: header routes, body drops, no error.
+        let j = obj(vec![
+            ("shard", Json::from(2usize)),
+            ("epoch", Json::from(7.0)),
+            ("kind", Json::from("gradient_push_v2")),
+        ]);
+        let (h, msg) = ToPs::from_wire(&j).unwrap();
+        assert_eq!(h, ShardHeader { shard: 2, epoch: 7 });
+        assert!(msg.is_none(), "unknown kind tolerated, body dropped");
+        let (h, msg) = ToWorker::from_wire(&j).unwrap();
+        assert_eq!(h.shard, 2);
+        assert!(msg.is_none());
+
+        // ...but a malformed envelope (no kind / no header) is an error.
+        assert!(ToPs::from_wire(&obj(vec![("kind", Json::from("result"))])).is_err());
+        assert!(ToPs::from_wire(&obj(vec![
+            ("shard", Json::from(0usize)),
+            ("epoch", Json::from(0.0)),
+        ]))
+        .is_err());
+    }
+
+    #[test]
+    fn strips_survive_the_wire_bitwise() {
+        let t = sample_task();
+        let h = ShardHeader::single();
+        let (_, back) = ToWorker::from_wire(&ToWorker::Task(t.clone()).to_wire(h)).unwrap();
+        match back {
+            Some(ToWorker::Task(t2)) => {
+                for (a, b) in t.a_strip.iter().zip(&t2.a_strip) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+                for (a, b) in t.b_strip.iter().zip(&t2.b_strip) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("expected a Task, got {other:?}"),
+        }
     }
 }

@@ -383,6 +383,16 @@ impl DistributedGemm {
         self.state.epoch()
     }
 
+    /// The lock-striped registry's fleet-wide epoch (every register +
+    /// depart, including the initial spawn registrations) — the monotone
+    /// membership version stamped into
+    /// [`ShardHeader`](crate::coordinator::protocol::ShardHeader)s
+    /// (ISSUE 8), distinct from the run-state machine's evict/rejoin
+    /// epoch above.
+    pub fn registry_epoch(&self) -> u64 {
+        self.registry.epoch()
+    }
+
     pub fn state_machine(&self) -> &RunStateMachine {
         &self.state
     }

@@ -1,11 +1,29 @@
 //! Device registry: registration, capability reports, keep-alive tracking
 //! (§3.2 "CLEAVE requires devices to register upon joining and report their
 //! compute and communication capabilities").
+//!
+//! Sharded for join storms (ISSUE 8): the single map is now **lock-striped**
+//! — entries live in `STRIPES` independent mutex-guarded maps keyed by a
+//! multiplicative hash of the device id — so concurrent registrations,
+//! keepalives, and liveness probes from different devices contend only
+//! within a stripe instead of serializing on one lock. A fleet-wide
+//! **membership epoch** (atomic, bumped on every register/depart) gives
+//! observers a monotone version of the membership set; the stress test
+//! below pins both properties.
+//!
+//! Every method takes `&self`: interior mutability makes the registry
+//! shareable across PS shard actors without wrapping it in another lock.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use crate::cluster::device::Device;
+
+/// Number of lock stripes. Power of two, sized so a million-device join
+/// storm spreads across independent locks while the struct stays small.
+const STRIPES: usize = 16;
 
 /// Liveness status derived from keep-alives.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -24,28 +42,48 @@ pub struct Registration {
     pub departed: bool,
 }
 
-/// The PS-side registry.
+/// The PS-side registry (lock-striped; see module docs).
 pub struct Registry {
-    entries: HashMap<usize, Registration>,
+    stripes: Vec<Mutex<HashMap<usize, Registration>>>,
+    /// bumps on every register / depart; never decreases
+    epoch: AtomicU64,
     /// keep-alive interval after which a device is Suspect / Dead
     pub suspect_after: Duration,
     pub dead_after: Duration,
 }
 
+/// Stripe index for a device id: multiplicative (Fibonacci) hash on the
+/// high bits, so sequential ids — the common fleet layout — still spread
+/// uniformly across stripes.
+fn stripe_of(id: usize) -> usize {
+    let h = (id as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    (h >> 60) as usize % STRIPES
+}
+
 impl Registry {
     pub fn new() -> Registry {
         Registry {
-            entries: HashMap::new(),
+            stripes: (0..STRIPES).map(|_| Mutex::new(HashMap::new())).collect(),
+            epoch: AtomicU64::new(0),
             suspect_after: Duration::from_millis(500),
             dead_after: Duration::from_millis(2000),
         }
     }
 
+    fn stripe(&self, id: usize) -> std::sync::MutexGuard<'_, HashMap<usize, Registration>> {
+        self.stripes[stripe_of(id)]
+            .lock()
+            .expect("registry stripe poisoned")
+    }
+
     /// Register (or re-register) a device with its capability report.
-    pub fn register(&mut self, device: Device) {
+    /// Returns the membership epoch this registration produced (strictly
+    /// increasing across all registers/departs, fleet-wide).
+    pub fn register(&self, device: Device) -> u64 {
         let now = Instant::now();
-        self.entries.insert(
-            device.id,
+        let id = device.id;
+        self.stripe(id).insert(
+            id,
             Registration {
                 device,
                 registered_at: now,
@@ -53,11 +91,12 @@ impl Registry {
                 departed: false,
             },
         );
+        self.epoch.fetch_add(1, Ordering::SeqCst) + 1
     }
 
     /// Record a keep-alive from `id`; returns false for unknown devices.
-    pub fn keepalive(&mut self, id: usize) -> bool {
-        if let Some(e) = self.entries.get_mut(&id) {
+    pub fn keepalive(&self, id: usize) -> bool {
+        if let Some(e) = self.stripe(id).get_mut(&id) {
             e.last_keepalive = Instant::now();
             !e.departed
         } else {
@@ -65,27 +104,39 @@ impl Registry {
         }
     }
 
-    /// Mark a graceful departure.
-    pub fn depart(&mut self, id: usize) {
-        if let Some(e) = self.entries.get_mut(&id) {
-            e.departed = true;
+    /// Mark a graceful departure (a membership event: bumps the epoch).
+    pub fn depart(&self, id: usize) {
+        let known = {
+            let mut stripe = self.stripe(id);
+            match stripe.get_mut(&id) {
+                Some(e) => {
+                    e.departed = true;
+                    true
+                }
+                None => false,
+            }
+        };
+        if known {
+            self.epoch.fetch_add(1, Ordering::SeqCst);
         }
     }
 
-    /// The raw registration record (capability report + liveness fields).
-    pub fn registration(&self, id: usize) -> Option<&Registration> {
-        self.entries.get(&id)
+    /// The raw registration record (capability report + liveness fields),
+    /// cloned out of its stripe so no lock is held across the caller.
+    pub fn registration(&self, id: usize) -> Option<Registration> {
+        self.stripe(id).get(&id).cloned()
     }
 
     /// When `id` last proved liveness (any message counts). The PS deadline
     /// detector compares this against its ping send time, which is robust
     /// to absolute `suspect_after` tuning.
     pub fn last_keepalive(&self, id: usize) -> Option<Instant> {
-        self.entries.get(&id).map(|e| e.last_keepalive)
+        self.stripe(id).get(&id).map(|e| e.last_keepalive)
     }
 
     pub fn liveness(&self, id: usize) -> Option<Liveness> {
-        let e = self.entries.get(&id)?;
+        let stripe = self.stripe(id);
+        let e = stripe.get(&id)?;
         if e.departed {
             return Some(Liveness::Dead);
         }
@@ -99,21 +150,35 @@ impl Registry {
         })
     }
 
-    /// Devices currently usable for scheduling.
+    /// Devices currently usable for scheduling (all stripes, unordered).
     pub fn alive_devices(&self) -> Vec<Device> {
-        self.entries
-            .values()
-            .filter(|e| !e.departed && e.last_keepalive.elapsed() <= self.dead_after)
-            .map(|e| e.device.clone())
-            .collect()
+        let mut out = Vec::new();
+        for stripe in &self.stripes {
+            let stripe = stripe.lock().expect("registry stripe poisoned");
+            out.extend(
+                stripe
+                    .values()
+                    .filter(|e| !e.departed && e.last_keepalive.elapsed() <= self.dead_after)
+                    .map(|e| e.device.clone()),
+            );
+        }
+        out
+    }
+
+    /// The fleet-wide membership epoch: total registers + departs so far.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
     }
 
     pub fn len(&self) -> usize {
-        self.entries.len()
+        self.stripes
+            .iter()
+            .map(|s| s.lock().expect("registry stripe poisoned").len())
+            .sum()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.entries.is_empty()
+        self.len() == 0
     }
 }
 
@@ -130,7 +195,7 @@ mod tests {
 
     #[test]
     fn register_and_keepalive() {
-        let mut r = Registry::new();
+        let r = Registry::new();
         r.register(Device::median_edge(0));
         r.register(Device::median_edge(1));
         assert_eq!(r.len(), 2);
@@ -143,7 +208,7 @@ mod tests {
 
     #[test]
     fn departure_removes_from_alive_set() {
-        let mut r = Registry::new();
+        let r = Registry::new();
         r.register(Device::median_edge(0));
         r.register(Device::median_edge(1));
         r.depart(1);
@@ -159,7 +224,7 @@ mod tests {
     fn rejoin_after_departure() {
         // "newly joined devices enter on the next GEMM round" — re-register
         // resurrects the slot.
-        let mut r = Registry::new();
+        let r = Registry::new();
         r.register(Device::median_edge(0));
         r.depart(0);
         assert_eq!(r.alive_devices().len(), 0);
@@ -184,7 +249,7 @@ mod tests {
     fn keepalive_from_departed_refreshes_but_reports_dead() {
         // The PS uses this to spot rejoin candidates: the message timestamp
         // updates (liveness proof) while scheduling still excludes them.
-        let mut r = Registry::new();
+        let r = Registry::new();
         r.register(Device::median_edge(0));
         r.depart(0);
         let before = r.last_keepalive(0).unwrap();
@@ -196,7 +261,7 @@ mod tests {
 
     #[test]
     fn last_keepalive_is_monotonic_across_messages() {
-        let mut r = Registry::new();
+        let r = Registry::new();
         r.register(Device::median_edge(3));
         let t0 = r.last_keepalive(3).unwrap();
         std::thread::sleep(Duration::from_millis(2));
@@ -208,7 +273,7 @@ mod tests {
 
     #[test]
     fn registration_exposes_capability_report() {
-        let mut r = Registry::new();
+        let r = Registry::new();
         let dev = Device::median_edge(7);
         let flops = dev.flops;
         r.register(dev);
@@ -221,7 +286,7 @@ mod tests {
 
     #[test]
     fn reregister_clears_departed_flag() {
-        let mut r = Registry::new();
+        let r = Registry::new();
         r.register(Device::median_edge(0));
         r.depart(0);
         assert!(r.registration(0).unwrap().departed);
@@ -242,5 +307,65 @@ mod tests {
         std::thread::sleep(Duration::from_millis(30));
         assert_eq!(r.liveness(0), Some(Liveness::Dead));
         assert!(r.alive_devices().is_empty());
+    }
+
+    #[test]
+    fn epoch_bumps_on_membership_events_only() {
+        let r = Registry::new();
+        assert_eq!(r.epoch(), 0);
+        let e1 = r.register(Device::median_edge(0));
+        assert_eq!(e1, 1);
+        r.keepalive(0); // liveness proof, not a membership event
+        assert_eq!(r.epoch(), 1);
+        r.depart(0);
+        assert_eq!(r.epoch(), 2);
+        r.depart(42); // unknown device: no event
+        assert_eq!(r.epoch(), 2);
+    }
+
+    #[test]
+    fn concurrent_registration_stress() {
+        // A join storm from many threads must lose no registration and
+        // every observed epoch must be unique and within range (monotone
+        // per thread by construction of fetch_add).
+        const THREADS: usize = 8;
+        const PER_THREAD: usize = 64;
+        let r = Registry::new();
+        let epochs: Vec<Vec<u64>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..THREADS)
+                .map(|t| {
+                    let r = &r;
+                    s.spawn(move || {
+                        let mut seen = Vec::with_capacity(PER_THREAD);
+                        for k in 0..PER_THREAD {
+                            let id = t * PER_THREAD + k;
+                            seen.push(r.register(Device::median_edge(id)));
+                        }
+                        seen
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let total = THREADS * PER_THREAD;
+        assert_eq!(r.len(), total, "no registration lost");
+        assert_eq!(r.epoch(), total as u64, "every register bumped the epoch");
+        for t in 0..THREADS {
+            for k in 0..PER_THREAD {
+                assert!(
+                    r.registration(t * PER_THREAD + k).is_some(),
+                    "device {} present",
+                    t * PER_THREAD + k
+                );
+            }
+            // per-thread epochs strictly increase (monotone membership view)
+            assert!(epochs[t].windows(2).all(|w| w[0] < w[1]));
+        }
+        // fleet-wide: all observed epochs distinct and in 1..=total
+        let mut all: Vec<u64> = epochs.into_iter().flatten().collect();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), total);
+        assert_eq!((all[0], all[total - 1]), (1, total as u64));
     }
 }

@@ -1,0 +1,710 @@
+//! Sharded parameter server: hash-partitioned tensor shards with async
+//! push/pull under bounded staleness, and partition-local §4.2 recovery.
+//!
+//! The single-PS coordinator ([`DistributedGemm`]) funnels every gradient
+//! and every sub-GEMM through one in-process server. [`ShardedPs`] splits
+//! that role the way the paper's PS-centric framework spreads parameter
+//! traffic across servers: each model tensor is assigned to one of N
+//! shards by a stable hash of its tensor index ([`shard_of`]), and each
+//! shard owns its partition end to end — the parameter slices, their Adam
+//! optimizer state, a bounded queue of not-yet-applied gradient
+//! partitions, and (when spawned over a fleet) its own [`DistributedGemm`]
+//! engine over a disjoint device subset.
+//!
+//! **Staleness contract.** A `push` enqueues the gradient partition on
+//! every shard and then drains any shard whose queue depth exceeds
+//! `max_staleness` down to the bound — the *staleness barrier*. At
+//! `max_staleness = 0` every push drains fully, so each shard applies
+//! Adam in exactly the order a serial single-PS trainer would: per-shard
+//! `Adam.step` counters equal the global step count, bias correction
+//! matches, and (because Adam is element-wise and partitioning moves
+//! whole tensors) the losses are **bit-identical** to the serial
+//! [`LocalBackend`](crate::coordinator::trainer::LocalBackend) path at
+//! any shard count. At `max_staleness = k > 0` a worker may run up to `k`
+//! steps ahead of a stale partition; divergence is bounded because the
+//! barrier forces sync at the bound and [`ShardedPs::sync`] drains
+//! everything.
+//!
+//! **Partition-local recovery.** Each shard's engine reuses the PR-6
+//! run-state machine, deadline detection, and live §4.2 re-tiling. One
+//! dead shard re-tiles only its own partition's work across its own
+//! surviving devices; the other shards never see the failure. Shard
+//! engines are deliberately spawned *unobserved* (private registries) so
+//! per-shard counters stay attributable; [`ShardedPs`] re-publishes
+//! aggregates under `ps.shard.*` in its own (possibly shared) registry.
+
+use std::collections::VecDeque;
+
+use anyhow::{bail, Result};
+
+use crate::cluster::device::Device;
+use crate::coordinator::optimizer::{Adam, AdamConfig};
+use crate::coordinator::ps::{DistributedGemm, LiveRecovery, PsConfig};
+use crate::coordinator::run_state::RunState;
+use crate::coordinator::trainer::{GemmBackend, Trainer};
+use crate::coordinator::worker::FaultPlan;
+use crate::obs::metrics::{Counter, Histogram, MetricsRegistry};
+use crate::obs::timeline::SessionEvent;
+use crate::obs::Recorder;
+use crate::runtime::hostgemm;
+
+/// Stable shard assignment for a tensor index: FNV-1a over the index's
+/// little-endian bytes, mod the shard count. Stable across runs and
+/// processes (no `RandomState`), so a restarted coordinator reconstructs
+/// the identical partition map.
+pub fn shard_of(tensor: usize, n_shards: usize) -> usize {
+    assert!(n_shards > 0, "shard count must be positive");
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in (tensor as u64).to_le_bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    (h % n_shards as u64) as usize
+}
+
+/// Configuration for a sharded PS: shard count, the staleness bound, and
+/// the per-shard engine config (seeded per shard so fleets stay
+/// deterministic).
+#[derive(Clone, Debug)]
+pub struct ShardConfig {
+    /// number of PS shard actors the tensors are hash-partitioned over
+    pub n_shards: usize,
+    /// how many steps a worker may run ahead of a stale partition before
+    /// the staleness barrier forces a sync (0 = fully synchronous)
+    pub max_staleness: u64,
+    /// engine config cloned into every shard (seed is XORed with the
+    /// shard index so per-shard fleets draw independent streams)
+    pub ps: PsConfig,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            n_shards: 1,
+            max_staleness: 0,
+            ps: PsConfig::default(),
+        }
+    }
+}
+
+impl ShardConfig {
+    pub fn new(n_shards: usize) -> Self {
+        ShardConfig {
+            n_shards,
+            ..ShardConfig::default()
+        }
+    }
+
+    pub fn with_staleness(mut self, max_staleness: u64) -> Self {
+        self.max_staleness = max_staleness;
+        self
+    }
+}
+
+/// One PS shard actor: the tensors it owns (global indices), their
+/// parameter values and Adam state, the bounded queue of pending gradient
+/// partitions, and an optional distributed engine over its device subset.
+struct Shard {
+    /// global tensor indices this shard owns, in ascending order
+    owned: Vec<usize>,
+    /// owned tensors' parameter values, parallel to `owned`
+    params: Vec<Vec<f32>>,
+    /// Adam state over exactly this partition — `step` counts *applied*
+    /// pushes, so at staleness 0 it equals the global step count and the
+    /// bias correction is bitwise the serial trainer's
+    adam: Adam,
+    /// gradient partitions pushed but not yet applied (queue depth is
+    /// this shard's staleness)
+    pending: VecDeque<Vec<Vec<f32>>>,
+    /// the shard's own distributed engine (None for optimizer-only use)
+    engine: Option<DistributedGemm>,
+    /// pushes applied so far (mirrors `adam.step`, kept as u64 for tests)
+    applied: u64,
+}
+
+impl Shard {
+    /// Apply queued gradient partitions oldest-first until the queue depth
+    /// is at most `keep`. This is the staleness barrier's workhorse; with
+    /// `keep = 0` it is a full sync.
+    fn drain_to(&mut self, keep: u64) {
+        while self.pending.len() as u64 > keep {
+            let grads = self.pending.pop_front().expect("queue checked non-empty");
+            self.adam.step(&mut self.params, &grads);
+            self.applied += 1;
+        }
+    }
+
+    fn usable(&self) -> bool {
+        match &self.engine {
+            Some(e) => e.run_state() != RunState::Cooldown && e.n_alive() > 0,
+            None => false,
+        }
+    }
+}
+
+/// `ps.shard.*` instruments, bound once against the owning registry.
+struct ShardCounters {
+    dispatches: Counter,
+    pushes: Counter,
+    pulls: Counter,
+    syncs: Counter,
+    recoveries: Counter,
+    staleness: Histogram,
+}
+
+impl ShardCounters {
+    fn bind(reg: &MetricsRegistry) -> ShardCounters {
+        ShardCounters {
+            dispatches: reg.counter("ps.shard.dispatches"),
+            pushes: reg.counter("ps.shard.pushes"),
+            pulls: reg.counter("ps.shard.pulls"),
+            syncs: reg.counter("ps.shard.syncs"),
+            recoveries: reg.counter("ps.shard.recoveries"),
+            staleness: reg.histogram("ps.shard.staleness"),
+        }
+    }
+}
+
+/// Hash-partitioned parameter server: N shard actors behind one
+/// push/pull/matmul façade. See the module docs for the partition map,
+/// the staleness contract, and the recovery story.
+pub struct ShardedPs {
+    cfg: ShardConfig,
+    shards: Vec<Shard>,
+    /// round-robin cursor for GEMM routing
+    next_shard: usize,
+    metrics: MetricsRegistry,
+    counters: ShardCounters,
+    obs: Option<Recorder>,
+    /// engine recoveries already re-published into `ps.shard.recoveries`
+    recoveries_seen: u64,
+}
+
+impl ShardedPs {
+    /// Optimizer-only sharded PS (no engines, no worker threads): the
+    /// shards own parameters and Adam state and serve push/pull, but
+    /// `matmul` always fails over. This is what the throughput bench and
+    /// the partition unit tests use.
+    pub fn new(params: &[Vec<f32>], acfg: AdamConfig, cfg: ShardConfig) -> ShardedPs {
+        Self::build(params, acfg, cfg, None, None)
+    }
+
+    /// [`ShardedPs::new`] publishing into `rec`'s registry and timeline.
+    pub fn observed(
+        params: &[Vec<f32>],
+        acfg: AdamConfig,
+        cfg: ShardConfig,
+        rec: &Recorder,
+    ) -> ShardedPs {
+        Self::build(params, acfg, cfg, None, Some(rec.clone()))
+    }
+
+    /// Full sharded PS over a fleet: devices are round-robined across
+    /// shards and each shard spawns its own [`DistributedGemm`] engine
+    /// (with its partition of the fault plans), so liveness, deadlines,
+    /// and §4.2 recovery are per-partition.
+    pub fn spawn(
+        devices: Vec<Device>,
+        plans: Vec<FaultPlan>,
+        params: &[Vec<f32>],
+        acfg: AdamConfig,
+        cfg: ShardConfig,
+    ) -> ShardedPs {
+        Self::build(params, acfg, cfg, Some((devices, plans)), None)
+    }
+
+    /// [`ShardedPs::spawn`] publishing into `rec`'s registry and timeline.
+    pub fn spawn_observed(
+        devices: Vec<Device>,
+        plans: Vec<FaultPlan>,
+        params: &[Vec<f32>],
+        acfg: AdamConfig,
+        cfg: ShardConfig,
+        rec: &Recorder,
+    ) -> ShardedPs {
+        Self::build(params, acfg, cfg, Some((devices, plans)), Some(rec.clone()))
+    }
+
+    fn build(
+        params: &[Vec<f32>],
+        acfg: AdamConfig,
+        cfg: ShardConfig,
+        fleet: Option<(Vec<Device>, Vec<FaultPlan>)>,
+        obs: Option<Recorder>,
+    ) -> ShardedPs {
+        assert!(cfg.n_shards > 0, "shard count must be positive");
+        let n = cfg.n_shards;
+
+        // Partition map: whole tensors, by stable hash of the index.
+        let mut owned: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for t in 0..params.len() {
+            owned[shard_of(t, n)].push(t);
+        }
+
+        // Round-robin the fleet (and its fault plans) across shards.
+        let mut groups: Vec<(Vec<Device>, Vec<FaultPlan>)> = vec![(Vec::new(), Vec::new()); n];
+        if let Some((devices, plans)) = fleet {
+            assert_eq!(devices.len(), plans.len());
+            for (i, (d, p)) in devices.into_iter().zip(plans).enumerate() {
+                let g = &mut groups[i % n];
+                g.0.push(d);
+                g.1.push(p);
+            }
+        }
+
+        let shards: Vec<Shard> = owned
+            .into_iter()
+            .zip(groups)
+            .enumerate()
+            .map(|(si, (owned, (devs, plans)))| {
+                let adam = Adam::for_partition(acfg, params, &owned);
+                let params: Vec<Vec<f32>> = owned.iter().map(|&t| params[t].clone()).collect();
+                // Engines stay unobserved on purpose: observed engines
+                // would share `ps.*` counter cells through the recorder
+                // registry and per-shard reads would return the aggregate.
+                let engine = if devs.is_empty() {
+                    None
+                } else {
+                    let mut ps_cfg = cfg.ps.clone();
+                    ps_cfg.seed ^= (si as u64).wrapping_mul(0x5DEE_CE66);
+                    Some(DistributedGemm::spawn_with_plans(devs, plans, ps_cfg))
+                };
+                Shard {
+                    owned,
+                    params,
+                    adam,
+                    pending: VecDeque::new(),
+                    engine,
+                    applied: 0,
+                }
+            })
+            .collect();
+
+        let metrics = match &obs {
+            Some(rec) => rec.registry().clone(),
+            None => MetricsRegistry::new(),
+        };
+        let counters = ShardCounters::bind(&metrics);
+        ShardedPs {
+            cfg,
+            shards,
+            next_shard: 0,
+            metrics,
+            counters,
+            obs,
+            recoveries_seen: 0,
+        }
+    }
+
+    /// Async push: enqueue this step's gradient partition on every shard
+    /// (recording each shard's queue depth in the `ps.shard.staleness`
+    /// histogram), then run the staleness barrier — any shard more than
+    /// `max_staleness` steps behind drains to the bound.
+    pub fn push(&mut self, grads: &[Vec<f32>]) {
+        self.counters.pushes.inc();
+        for shard in &mut self.shards {
+            let part: Vec<Vec<f32>> = shard.owned.iter().map(|&t| grads[t].clone()).collect();
+            shard.pending.push_back(part);
+            self.counters.staleness.observe(shard.pending.len() as f64 - 1.0);
+        }
+        self.barrier(self.cfg.max_staleness);
+    }
+
+    /// The staleness barrier: drain every shard whose queue depth exceeds
+    /// `keep` down to `keep`, in parallel across shards (each drain is an
+    /// independent Adam pass over a disjoint partition).
+    fn barrier(&mut self, keep: u64) {
+        let depths: Vec<u64> = self.shards.iter().map(|s| s.pending.len() as u64).collect();
+        let stale: Vec<&mut Shard> = self
+            .shards
+            .iter_mut()
+            .filter(|s| s.pending.len() as u64 > keep)
+            .collect();
+        match stale.len() {
+            0 => return,
+            1 => {
+                for s in stale {
+                    s.drain_to(keep);
+                }
+            }
+            _ => {
+                let _sp = crate::span!("shard_barrier", stale = stale.len());
+                std::thread::scope(|scope| {
+                    for s in stale {
+                        scope.spawn(move || s.drain_to(keep));
+                    }
+                });
+            }
+        }
+        for (si, depth) in depths.into_iter().enumerate() {
+            if depth > keep {
+                self.counters.syncs.inc();
+                if let Some(rec) = &self.obs {
+                    rec.record(SessionEvent::StalenessSync {
+                        shard: si,
+                        staleness: depth,
+                    });
+                }
+            }
+        }
+    }
+
+    /// Pull the freshest server-side parameters back into `params`
+    /// (tensors a shard still holds pending gradients for come back
+    /// stale — by up to `max_staleness` steps, per the contract).
+    pub fn pull(&mut self, params: &mut [Vec<f32>]) {
+        self.counters.pulls.inc();
+        for shard in &self.shards {
+            for (k, &t) in shard.owned.iter().enumerate() {
+                params[t].clone_from(&shard.params[k]);
+            }
+        }
+        self.refresh_recoveries();
+    }
+
+    /// Force every shard fully up to date (staleness 0 everywhere).
+    pub fn sync(&mut self) {
+        self.barrier(0);
+        self.refresh_recoveries();
+    }
+
+    /// Re-publish per-shard engine recoveries into `ps.shard.recoveries`
+    /// (delta aggregation, so repeated calls never double-count).
+    fn refresh_recoveries(&mut self) {
+        let total: u64 = self
+            .shards
+            .iter()
+            .filter_map(|s| s.engine.as_ref())
+            .map(|e| e.recoveries())
+            .sum();
+        if total > self.recoveries_seen {
+            self.counters.recoveries.add(total - self.recoveries_seen);
+            self.recoveries_seen = total;
+        }
+    }
+
+    /// Route one GEMM to a usable shard engine (round-robin), failing over
+    /// to the next shard when one is down or errors. A shard failure thus
+    /// costs only its own partition's recovery; the GEMM itself reroutes.
+    pub fn matmul(
+        &mut self,
+        a: &[f32],
+        b: &[f32],
+        m: usize,
+        n: usize,
+        q: usize,
+    ) -> Result<Vec<f32>> {
+        let n_shards = self.shards.len();
+        for probe in 0..n_shards {
+            let si = (self.next_shard + probe) % n_shards;
+            if !self.shards[si].usable() {
+                continue;
+            }
+            self.next_shard = (si + 1) % n_shards;
+            self.counters.dispatches.inc();
+            if let Some(rec) = &self.obs {
+                rec.record(SessionEvent::ShardDispatch { shard: si, tasks: 1 });
+            }
+            let engine = self.shards[si].engine.as_mut().expect("usable implies engine");
+            match engine.matmul(a, b, m, n, q) {
+                Ok(c) => {
+                    self.refresh_recoveries();
+                    return Ok(c);
+                }
+                Err(e) => {
+                    crate::log_warn!("shard {si} GEMM failed ({e}); rerouting");
+                    self.refresh_recoveries();
+                }
+            }
+        }
+        bail!("no usable PS shard (all {n_shards} down or engine-less)")
+    }
+
+    /// One live training step through the sharded PS: gradients from the
+    /// trainer's own backend, async push, fresh-as-allowed pull.
+    pub fn train_step<B: GemmBackend>(
+        &mut self,
+        trainer: &mut Trainer<B>,
+        tokens: &[i32],
+    ) -> f32 {
+        let (loss, grads) = trainer.grads(tokens);
+        self.push(&grads);
+        self.pull(&mut trainer.params);
+        loss
+    }
+
+    // --- accessors -------------------------------------------------------
+
+    pub fn config(&self) -> &ShardConfig {
+        &self.cfg
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn metrics(&self) -> &MetricsRegistry {
+        &self.metrics
+    }
+
+    pub fn dispatches(&self) -> u64 {
+        self.counters.dispatches.get()
+    }
+
+    pub fn pushes(&self) -> u64 {
+        self.counters.pushes.get()
+    }
+
+    pub fn pulls(&self) -> u64 {
+        self.counters.pulls.get()
+    }
+
+    pub fn syncs(&self) -> u64 {
+        self.counters.syncs.get()
+    }
+
+    /// Aggregate partition recoveries re-published from the shard engines
+    /// (the `ps.shard.recoveries` counter).
+    pub fn recoveries(&self) -> u64 {
+        self.counters.recoveries.get()
+    }
+
+    /// Per-shard engine recovery counts (0 for engine-less shards) — the
+    /// per-partition attribution the kill-one-shard tests assert on.
+    pub fn shard_recoveries(&self) -> Vec<u64> {
+        self.shards
+            .iter()
+            .map(|s| s.engine.as_ref().map_or(0, |e| e.recoveries()))
+            .collect()
+    }
+
+    /// Per-shard run states (None for engine-less shards).
+    pub fn shard_states(&self) -> Vec<Option<RunState>> {
+        self.shards
+            .iter()
+            .map(|s| s.engine.as_ref().map(|e| e.run_state()))
+            .collect()
+    }
+
+    /// Per-shard current staleness (pending queue depths).
+    pub fn staleness(&self) -> Vec<u64> {
+        self.shards.iter().map(|s| s.pending.len() as u64).collect()
+    }
+
+    /// Per-shard applied push counts.
+    pub fn applied_steps(&self) -> Vec<u64> {
+        self.shards.iter().map(|s| s.applied).collect()
+    }
+
+    /// The partition map: for each shard, the global tensor indices it
+    /// owns (ascending).
+    pub fn partition(&self) -> Vec<Vec<usize>> {
+        self.shards.iter().map(|s| s.owned.clone()).collect()
+    }
+
+    /// Every live §4.2 recovery across all shard engines, tagged with the
+    /// owning shard — for `LiveParity` envelope checks.
+    pub fn live_recoveries(&self) -> Vec<(usize, &LiveRecovery)> {
+        self.shards
+            .iter()
+            .enumerate()
+            .filter_map(|(si, s)| s.engine.as_ref().map(|e| (si, e)))
+            .flat_map(|(si, e)| e.live_recoveries.iter().map(move |r| (si, r)))
+            .collect()
+    }
+
+    /// Shut every shard engine down (idempotent; engine-less shards no-op).
+    pub fn shutdown(&mut self) {
+        for shard in &mut self.shards {
+            if let Some(engine) = shard.engine.as_mut() {
+                engine.shutdown();
+            }
+        }
+    }
+}
+
+impl Drop for ShardedPs {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// [`GemmBackend`] over a [`ShardedPs`], mirroring
+/// [`DistributedBackend`](crate::coordinator::trainer::DistributedBackend):
+/// GEMMs route through the shard router; if every shard is down the PS
+/// computes locally (bit-identical result, PS-local speed) and counts a
+/// `trainer.local_fallbacks`.
+pub struct ShardedBackend {
+    pub ps: ShardedPs,
+    calls: u64,
+    local_fallbacks: Counter,
+}
+
+impl ShardedBackend {
+    pub fn new(ps: ShardedPs) -> ShardedBackend {
+        let local_fallbacks = ps.metrics().counter("trainer.local_fallbacks");
+        ShardedBackend {
+            ps,
+            calls: 0,
+            local_fallbacks,
+        }
+    }
+
+    pub fn local_fallbacks(&self) -> u64 {
+        self.local_fallbacks.get()
+    }
+}
+
+impl GemmBackend for ShardedBackend {
+    fn matmul(&mut self, a: &[f32], b: &[f32], m: usize, n: usize, q: usize) -> Vec<f32> {
+        self.calls += 1;
+        match self.ps.matmul(a, b, m, n, q) {
+            Ok(c) => c,
+            Err(e) => {
+                self.local_fallbacks.inc();
+                crate::log_warn!("sharded GEMM failed ({e}); computing PS-locally");
+                let mut c = vec![0.0f32; m * q];
+                hostgemm::matmul(a, b, &mut c, m, n, q);
+                c
+            }
+        }
+    }
+
+    fn gemm_calls(&self) -> u64 {
+        self.calls
+    }
+}
+
+/// One live training step for an engine-backed sharded trainer: the
+/// gradients come *through* the sharded backend (distributed GEMMs), the
+/// optimizer update goes through the shard queues. Split borrows keep the
+/// backend's PS and the trainer's parameters disjoint.
+pub fn train_step(trainer: &mut Trainer<ShardedBackend>, tokens: &[i32]) -> f32 {
+    let (loss, grads) = trainer.grads(tokens);
+    trainer.backend.ps.push(&grads);
+    trainer.backend.ps.pull(&mut trainer.params);
+    loss
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hash_partition_is_total_and_stable() {
+        for n in [1usize, 2, 4, 8] {
+            let mut counts = vec![0usize; n];
+            for t in 0..64 {
+                let s = shard_of(t, n);
+                assert!(s < n, "assignment in range");
+                assert_eq!(s, shard_of(t, n), "assignment stable");
+                counts[s] += 1;
+            }
+            assert_eq!(counts.iter().sum::<usize>(), 64, "partition is total");
+            if n > 1 {
+                assert!(
+                    counts.iter().filter(|&&c| c > 0).count() > 1,
+                    "hash must not collapse 64 tensors onto one shard"
+                );
+            }
+        }
+    }
+
+    fn tiny_params() -> Vec<Vec<f32>> {
+        (0..9)
+            .map(|t| (0..5).map(|k| 0.1 * (t * 5 + k) as f32 - 1.0).collect())
+            .collect()
+    }
+
+    #[test]
+    fn staleness_zero_is_synchronous_and_bitwise() {
+        let params0 = tiny_params();
+        let acfg = AdamConfig::default();
+        // Serial reference: one Adam over the whole tensor list.
+        let mut serial = params0.clone();
+        let mut adam = Adam::new(acfg, &serial);
+        let steps = 4;
+        for _ in 0..steps {
+            let grads: Vec<Vec<f32>> = serial.clone();
+            adam.step(&mut serial, &grads);
+        }
+        for n in [1usize, 2, 4] {
+            let mut ps = ShardedPs::new(&params0, acfg, ShardConfig::new(n));
+            let mut params = params0.clone();
+            for _ in 0..steps {
+                let grads: Vec<Vec<f32>> = params.clone();
+                ps.push(&grads);
+                ps.pull(&mut params);
+            }
+            for (t, (a, b)) in serial.iter().zip(&params).enumerate() {
+                for (k, (x, y)) in a.iter().zip(b).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "tensor {t} elem {k} must be bit-identical at {n} shards"
+                    );
+                }
+            }
+            assert_eq!(ps.staleness(), vec![0; n], "staleness 0 leaves no queue");
+            assert_eq!(ps.pushes(), steps as u64);
+        }
+    }
+
+    #[test]
+    fn bounded_staleness_defers_and_barrier_syncs() {
+        let params0 = tiny_params();
+        let cfg = ShardConfig::new(2).with_staleness(2);
+        let mut ps = ShardedPs::new(&params0, AdamConfig::default(), cfg);
+        let mut params = params0.clone();
+
+        // Two pushes sit under the bound: nothing applied yet.
+        for _ in 0..2 {
+            let grads = params.clone();
+            ps.push(&grads);
+            ps.pull(&mut params);
+        }
+        assert_eq!(ps.staleness(), vec![2, 2], "queues hold up to the bound");
+        assert_eq!(ps.applied_steps(), vec![0, 0], "no eager application");
+        for (a, b) in params0.iter().zip(&params) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "pull sees stale (initial) params");
+            }
+        }
+        assert_eq!(ps.syncs(), 0);
+
+        // Third push crosses the bound: the barrier drains each shard to 2.
+        let grads = params.clone();
+        ps.push(&grads);
+        assert_eq!(ps.staleness(), vec![2, 2], "barrier drained to the bound");
+        assert_eq!(ps.applied_steps(), vec![1, 1], "exactly one step applied");
+        assert_eq!(ps.syncs(), 2, "one forced sync per stale shard");
+
+        // sync() empties everything.
+        ps.sync();
+        assert_eq!(ps.staleness(), vec![0, 0]);
+        assert_eq!(ps.applied_steps(), vec![3, 3]);
+        ps.pull(&mut params);
+        let mut diverged = false;
+        for (a, b) in params0.iter().zip(&params) {
+            for (x, y) in a.iter().zip(b) {
+                assert!(y.is_finite());
+                diverged |= x.to_bits() != y.to_bits();
+            }
+        }
+        assert!(diverged, "after sync the params must have moved");
+    }
+
+    #[test]
+    fn partition_covers_every_tensor_exactly_once() {
+        let params = tiny_params();
+        let ps = ShardedPs::new(&params, AdamConfig::default(), ShardConfig::new(4));
+        let mut seen = vec![0usize; params.len()];
+        for (si, owned) in ps.partition().into_iter().enumerate() {
+            for t in owned {
+                assert_eq!(shard_of(t, 4), si, "ownership follows the hash");
+                seen[t] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "every tensor owned exactly once");
+    }
+}

@@ -209,6 +209,37 @@ impl TrainerConfig {
     }
 }
 
+/// Synthetic model parameters for `cfg` in the exact `Idx` flattening
+/// order the trainer expects — weights `0.02 * N(0,1)`, LayerNorm scales
+/// 1, biases 0. One seeded [`Rng`] makes the tensors reproducible, so
+/// tests, benches, and the `CoordinatorPlanner` can all train the same
+/// tiny model without the AOT `artifacts/` checkout.
+pub fn synthetic_params(cfg: &TrainerConfig, rng: &mut crate::util::rng::Rng) -> Vec<Vec<f32>> {
+    fn w(rng: &mut crate::util::rng::Rng, len: usize) -> Vec<f32> {
+        (0..len).map(|_| 0.02 * rng.normal() as f32).collect()
+    }
+    let mut p = Vec::new();
+    p.push(w(rng, cfg.vocab * cfg.d)); // tok embed
+    p.push(w(rng, cfg.t * cfg.d)); // pos embed
+    for _ in 0..cfg.layers {
+        p.push(vec![1.0; cfg.d]); // ln1 scale
+        p.push(vec![0.0; cfg.d]); // ln1 bias
+        p.push(w(rng, cfg.d * cfg.d)); // wq
+        p.push(w(rng, cfg.d * cfg.d)); // wk
+        p.push(w(rng, cfg.d * cfg.d)); // wv
+        p.push(w(rng, cfg.d * cfg.d)); // wo
+        p.push(vec![1.0; cfg.d]); // ln2 scale
+        p.push(vec![0.0; cfg.d]); // ln2 bias
+        p.push(w(rng, cfg.d * cfg.dff)); // w1
+        p.push(vec![0.0; cfg.dff]); // b1
+        p.push(w(rng, cfg.dff * cfg.d)); // w2
+        p.push(vec![0.0; cfg.d]); // b2
+    }
+    p.push(vec![1.0; cfg.d]); // lnf scale
+    p.push(vec![0.0; cfg.d]); // lnf bias
+    p
+}
+
 /// Parameter indices in the artifact flattening order.
 struct Idx;
 impl Idx {

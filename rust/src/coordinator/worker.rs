@@ -291,6 +291,37 @@ mod tests {
     }
 
     #[test]
+    fn wire_delivered_task_executes_bit_identically() {
+        // A task routed through the shard wire format (ISSUE 8) must
+        // compute the same block, to the bit, as the in-process original —
+        // sharded and single-PS dispatch share one numerics path.
+        use crate::coordinator::protocol::{ShardHeader, ToWorker};
+        let t = SubGemmTask {
+            task_id: 9,
+            a_strip: vec![0.125, -3.5, 2.0e-4, 7.0, 1.0, -1.0, 0.5, 4.25],
+            b_strip: vec![2.5, -0.75, 8.0, 0.0625, -6.0, 3.0, 1.5, -2.0, 0.25, 5.0, -4.5, 0.5],
+            n: 4,
+            row0: 0,
+            rows: 2,
+            col0: 0,
+            cols: 3,
+        };
+        let want = execute(&t);
+        let wire = ToWorker::Task(t).to_wire(ShardHeader { shard: 2, epoch: 5 });
+        let (h, msg) = ToWorker::from_wire(&wire).unwrap();
+        assert_eq!((h.shard, h.epoch), (2, 5));
+        match msg {
+            Some(ToWorker::Task(t2)) => {
+                let got = execute(&t2);
+                for (a, b) in want.iter().zip(&got) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("expected a Task off the wire, got {other:?}"),
+        }
+    }
+
+    #[test]
     fn honest_worker_computes_correctly() {
         let (to_w, rx) = channel();
         let (tx, from_w) = channel();

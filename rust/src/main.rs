@@ -19,8 +19,9 @@ use cleave::api::{AlpaPlanner, CleavePlanner, DtfmPlanner, Scenario};
 use cleave::cluster::fleet::Fleet;
 use cleave::coordinator::optimizer::AdamConfig;
 use cleave::coordinator::ps::{DistributedGemm, PsConfig};
+use cleave::coordinator::shard::{self, ShardConfig, ShardedBackend, ShardedPs};
 use cleave::coordinator::trainer::{DistributedBackend, Trainer, TrainerConfig};
-use cleave::coordinator::worker::Behavior;
+use cleave::coordinator::worker::{Behavior, FaultPlan};
 use cleave::model::flops;
 use cleave::model::memory::{self, ActivationPolicy};
 use cleave::runtime::executor::Artifacts;
@@ -38,6 +39,12 @@ fn main() {
     .opt("batch", Some("128"), "global batch size")
     .opt("seq", Some("1024"), "sequence length")
     .opt("steps", Some("50"), "training steps (train subcommand)")
+    .opt("shards", Some("1"), "PS shards (train subcommand; >1 uses the sharded PS)")
+    .opt(
+        "staleness",
+        Some("0"),
+        "max async staleness in steps (train subcommand; 0 = synchronous)",
+    )
     .opt("stragglers", Some("0.0"), "straggler fraction")
     .opt("seed", Some("7"), "fleet sampling seed")
     .opt("artifacts", Some("artifacts"), "artifacts directory")
@@ -228,28 +235,56 @@ fn obs_cmd(args: &cleave::util::cli::Args) -> Result<()> {
 fn train(args: &cleave::util::cli::Args) -> Result<()> {
     let artifacts = Artifacts::load(args.get_str("artifacts")?)?;
     let steps = args.get_usize("steps")?;
+    let shards = args.get_usize("shards")?;
+    let staleness = args.get_u64("staleness")?;
+    ensure!(shards >= 1, "--shards must be >= 1");
     let n_workers = args.get_usize("devices")?.min(16);
     let cfg = TrainerConfig::from_artifacts(&artifacts);
     let fleet = Fleet::median(n_workers);
+    let acfg = AdamConfig {
+        lr: artifacts.adam_lr as f32,
+        ..Default::default()
+    };
+    println!(
+        "training tiny LM ({} params) on {n_workers} workers...",
+        artifacts.param_count
+    );
+    if shards > 1 || staleness > 0 {
+        // ISSUE 8 path: hash-partitioned PS shards with bounded staleness.
+        let params = artifacts.init_params()?;
+        let ps = ShardedPs::spawn(
+            fleet.devices,
+            vec![FaultPlan::honest(); n_workers],
+            &params,
+            acfg,
+            ShardConfig::new(shards).with_staleness(staleness),
+        );
+        let mut trainer = Trainer::new(cfg, params, acfg, ShardedBackend::new(ps));
+        for step in 0..steps {
+            let tokens = artifacts.token_batch(step)?;
+            let loss = shard::train_step(&mut trainer, &tokens);
+            if step % 5 == 0 || step + 1 == steps {
+                println!("step {step:4}  loss {loss:.4}");
+            }
+        }
+        let ps = &mut trainer.backend.ps;
+        ps.sync();
+        println!(
+            "dispatched {} GEMMs over {shards} shards ({} pushes, {} syncs, {} recoveries)",
+            ps.dispatches(),
+            ps.pushes(),
+            ps.syncs(),
+            ps.recoveries()
+        );
+        return Ok(());
+    }
     let ps = DistributedGemm::spawn(
         fleet.devices,
         vec![Behavior::Honest; n_workers],
         PsConfig::default(),
     );
     let backend = DistributedBackend::new(ps);
-    let mut trainer = Trainer::new(
-        cfg,
-        artifacts.init_params()?,
-        AdamConfig {
-            lr: artifacts.adam_lr as f32,
-            ..Default::default()
-        },
-        backend,
-    );
-    println!(
-        "training tiny LM ({} params) on {n_workers} workers...",
-        artifacts.param_count
-    );
+    let mut trainer = Trainer::new(cfg, artifacts.init_params()?, acfg, backend);
     for step in 0..steps {
         let tokens = artifacts.token_batch(step)?;
         let loss = trainer.train_step(&tokens);

@@ -79,6 +79,11 @@ pub enum SessionEvent {
         orphaned: usize,
         detection_s: f64,
     },
+    /// the shard router dispatched `tasks` GEMM(s) to a PS shard
+    ShardDispatch { shard: usize, tasks: usize },
+    /// the staleness barrier forced a shard at queue depth `staleness`
+    /// (> the bound) to sync down to the bound
+    StalenessSync { shard: usize, staleness: u64 },
 }
 
 fn cache_stats_json(s: &CacheStats) -> Json {
@@ -203,6 +208,16 @@ impl SessionEvent {
                 ("orphaned", Json::from(*orphaned)),
                 ("detection_s", Json::from(*detection_s)),
             ]),
+            SessionEvent::ShardDispatch { shard, tasks } => obj(vec![
+                ("ev", Json::from("shard_dispatch")),
+                ("shard", Json::from(*shard)),
+                ("tasks", Json::from(*tasks)),
+            ]),
+            SessionEvent::StalenessSync { shard, staleness } => obj(vec![
+                ("ev", Json::from("staleness_sync")),
+                ("shard", Json::from(*shard)),
+                ("staleness", Json::from(*staleness as f64)),
+            ]),
         }
     }
 
@@ -261,6 +276,14 @@ impl SessionEvent {
                 cause: j.get("cause")?.as_str()?.to_string(),
                 orphaned: j.get("orphaned")?.as_usize()?,
                 detection_s: j.get("detection_s")?.as_f64()?,
+            },
+            "shard_dispatch" => SessionEvent::ShardDispatch {
+                shard: j.get("shard")?.as_usize()?,
+                tasks: j.get("tasks")?.as_usize()?,
+            },
+            "staleness_sync" => SessionEvent::StalenessSync {
+                shard: j.get("shard")?.as_usize()?,
+                staleness: j.get("staleness")?.as_f64()? as u64,
             },
             other => bail!("unknown timeline event tag '{other}'"),
         })
@@ -397,6 +420,11 @@ pub struct CoordinatorProjection {
     /// highest membership epoch seen
     pub last_epoch: u64,
     pub recoveries_by_cause: BTreeMap<String, u64>,
+    /// total GEMM tasks routed through PS shards (sums `ShardDispatch.tasks`,
+    /// pinned to the live `ps.shard.dispatches` counter)
+    pub shard_dispatches: u64,
+    /// staleness-barrier forced syncs (pinned to `ps.shard.syncs`)
+    pub staleness_syncs: u64,
 }
 
 pub fn project_coordinator(tl: &Timeline) -> CoordinatorProjection {
@@ -419,6 +447,8 @@ pub fn project_coordinator(tl: &Timeline) -> CoordinatorProjection {
                 }
                 p.last_epoch = p.last_epoch.max(*epoch);
             }
+            SessionEvent::ShardDispatch { tasks, .. } => p.shard_dispatches += *tasks as u64,
+            SessionEvent::StalenessSync { .. } => p.staleness_syncs += 1,
             _ => {}
         }
     }
@@ -535,6 +565,24 @@ mod tests {
         assert_eq!(r.effective_throughput, (2.5 - 0.125) / 2.5);
         // a coordinator-only log projects to no session report
         assert!(project_session(&Timeline::new()).is_none());
+    }
+
+    #[test]
+    fn shard_events_roundtrip_and_project() {
+        let mut tl = Timeline::new();
+        tl.record(SessionEvent::ShardDispatch { shard: 0, tasks: 1 });
+        tl.record(SessionEvent::ShardDispatch { shard: 1, tasks: 3 });
+        tl.record(SessionEvent::StalenessSync {
+            shard: 1,
+            staleness: 4,
+        });
+        let back = Timeline::parse_jsonl(&tl.to_jsonl()).unwrap();
+        assert_eq!(back, tl);
+        let p = project_coordinator(&tl);
+        assert_eq!(p.shard_dispatches, 4, "sums dispatched tasks");
+        assert_eq!(p.staleness_syncs, 1);
+        // shard events leave the membership aggregates untouched
+        assert_eq!((p.evictions, p.rejoins, p.recoveries), (0, 0, 0));
     }
 
     #[test]
