@@ -12,14 +12,18 @@
 //! * guided >= 1.5x take-all on mean per-batch time at straggler
 //!   fraction 0.3;
 //! * the admission loop runs warm — cold solves bounded by the number of
-//!   distinct DAG shapes even at pool sizes >= 1k.
+//!   distinct DAG shapes even at pool sizes >= 1k;
+//! * learned reliability (streaming sessions with posterior updates from
+//!   the pool journal) trims at least as large a fraction of the hidden
+//!   stragglers from the final admitted set as static
+//!   advertised-capability planning does.
 //!
 //! `cargo bench --bench fig11_selection -- --smoke` runs a tiny pool (CI).
 
 use cleave::api::{CleavePlanner, Scenario};
 use cleave::cluster::churn::ChurnConfig;
 use cleave::cluster::fleet::FleetConfig;
-use cleave::cluster::pool::PoolConfig;
+use cleave::cluster::pool::{LearnConfig, PoolConfig};
 use cleave::sched::cost::PsEnvelope;
 use cleave::sched::fastpath::distinct_shapes;
 use cleave::sim::session::{Policy, SessionReport};
@@ -126,6 +130,15 @@ fn main() {
     // after BENCH_selection.json is written so the artifact always lands.
     #[allow(clippy::type_complexity)]
     let mut gates: Vec<(usize, f64, usize, usize, usize, usize, usize)> = Vec::new();
+    // (pool, static straggler fraction, learned straggler fraction)
+    let mut learn_gates: Vec<(usize, f64, f64)> = Vec::new();
+    let mut lt = Table::new(&[
+        "pool",
+        "static straggler frac",
+        "learned straggler frac",
+    ]);
+    // enough epochs (every 3 batches) for the service posteriors to move
+    let lr_batches = if args.smoke { 6 } else { 12 };
 
     for &n in sizes {
         let run = |policy: Policy| -> SessionReport {
@@ -149,6 +162,57 @@ fn main() {
                 .selection_frontier()
                 .unwrap();
         let frontier: Vec<Json> = frontier_out.frontier.iter().map(|p| p.to_json()).collect();
+
+        // Learned-vs-static reliability: streaming sessions on identical
+        // quiet pools (no churn, so the posterior effect is isolated) —
+        // one planning on static advertised-capability beliefs, one with
+        // journal-learned service posteriors. Compared on the fraction of
+        // hidden stragglers still inside the FINAL admitted set.
+        let learn_scenario = |lc: Option<LearnConfig>| {
+            let sc = Scenario::model("OPT-13B")
+                .pool_cfg(PoolConfig {
+                    fleet: FleetConfig {
+                        n_devices: n,
+                        straggler_fraction: STRAGGLER_FRACTION,
+                        seed: 11,
+                        ..FleetConfig::default()
+                    },
+                    ..PoolConfig::default()
+                })
+                .devices(n)
+                .batches(lr_batches)
+                .epoch_batches(3)
+                .policy(Policy::CostGuided);
+            match lc {
+                Some(l) => sc.learn_reliability(l),
+                None => sc,
+            }
+        };
+        let stream_run = |lc: Option<LearnConfig>| -> SessionReport {
+            learn_scenario(lc)
+                .run_session_streaming()
+                .unwrap()
+                .session()
+                .expect("streaming session report")
+                .clone()
+        };
+        let stream_static = stream_run(None);
+        let stream_learned = stream_run(Some(LearnConfig {
+            enabled: true,
+            ..LearnConfig::default()
+        }));
+        let straggler_frac = |r: &SessionReport| -> f64 {
+            let d = r.decisions.last().expect("streaming session decisions");
+            d.stragglers_admitted as f64 / d.admitted.max(1) as f64
+        };
+        let static_frac = straggler_frac(&stream_static);
+        let learned_frac = straggler_frac(&stream_learned);
+        lt.row(&[
+            n.to_string(),
+            format!("{static_frac:.3}"),
+            format!("{learned_frac:.3}"),
+        ]);
+        learn_gates.push((n, static_frac, learned_frac));
 
         t.row(&[
             n.to_string(),
@@ -175,6 +239,10 @@ fn main() {
             ("speedup_guided_vs_takeall", Json::from(speedup)),
             ("selection_probes", Json::from(probes)),
             ("frontier", Json::Arr(frontier)),
+            ("streaming_static", stream_static.to_json()),
+            ("streaming_learned", stream_learned.to_json()),
+            ("static_straggler_frac", Json::from(static_frac)),
+            ("learned_straggler_frac", Json::from(learned_frac)),
         ]));
 
         gates.push((
@@ -193,6 +261,12 @@ fn main() {
          evicts hidden stragglers; take-all trusts advertised capability and\n\
          pays ~the straggler factor per level (Fig. 6 baseline behaviour)"
     );
+    println!(
+        "\nlearned reliability (streaming sessions, {lr_batches} batches, \
+         re-selection every 3): fraction of hidden stragglers left in the \
+         final admitted set"
+    );
+    lt.print();
 
     // The fan-out constant the admission objective actually priced with —
     // so `BENCH_selection.json` records the measured envelope's effect on
@@ -248,6 +322,18 @@ fn main() {
             sel_warm + sel_cold,
             decisions,
             "selection routing counters must cover every decision at pool {n}"
+        );
+    }
+    // Gate 4: journal-learned posteriors must trim at least as large a
+    // straggler fraction as static advertised-capability planning — i.e.
+    // the learned session's final admitted set carries no HIGHER a hidden
+    // straggler fraction than the static one.
+    for (n, static_frac, learned_frac) in learn_gates {
+        assert!(
+            learned_frac <= static_frac,
+            "learned reliability must not admit a higher straggler fraction \
+             than static planning at pool {n}: learned {learned_frac:.3} vs \
+             static {static_frac:.3}"
         );
     }
 }

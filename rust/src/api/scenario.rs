@@ -15,6 +15,10 @@
 //!   charge §4.2 recovery (or a synchronous restart for estimate planners);
 //! * [`Scenario::run_session`] — a long-horizon churn session over a
 //!   candidate pool ([`crate::sim::session::run_session_with`]);
+//! * [`Scenario::run_session_streaming`] — the same session on the
+//!   O(churn) streaming membership path
+//!   ([`crate::sim::session::run_session_streaming`]), optionally with
+//!   online reliability learning ([`Scenario::learn_reliability`]);
 //! * [`Scenario::run_sweep`] / [`Scenario::compare`] — one axis × many
 //!   planners, the shape of Figures 3–10;
 //! * [`Scenario::selection_frontier`] — the admission optimizer's probed
@@ -26,7 +30,7 @@
 use crate::api::planner::{Plan, PlanEstimate, PlanInput, Planner};
 use crate::cluster::churn::ChurnConfig;
 use crate::cluster::fleet::{Fleet, FleetConfig};
-use crate::cluster::pool::{DevicePool, PoolConfig};
+use crate::cluster::pool::{DevicePool, LearnConfig, PoolConfig};
 use crate::model::config::{ModelSpec, TrainSetup};
 use crate::model::dag::GemmDag;
 use crate::obs::Recorder;
@@ -37,7 +41,9 @@ use crate::sched::recovery::recover;
 use crate::sched::select::{select_devices, SelectConfig, SelectionOutcome};
 use crate::sched::solver::{SolverOptions, SolverStats};
 use crate::sim::batch::{simulate_batch, BatchResult, SimConfig};
-use crate::sim::session::{run_session_observed, Policy, SessionConfig, SessionReport};
+use crate::sim::session::{
+    run_session_observed, run_session_streaming, Policy, SessionConfig, SessionReport,
+};
 use crate::util::json::{obj, Json};
 use crate::util::threadpool::{default_threads, scoped_map};
 use crate::Result;
@@ -80,6 +86,10 @@ pub struct Scenario {
     sim: SimConfig,
     session: SessionConfig,
     pool: Option<PoolConfig>,
+    /// online reliability-learning override for session pools
+    /// ([`Scenario::learn_reliability`]); applied over whatever pool
+    /// configuration [`Scenario::pool_config`] resolves
+    learn: Option<LearnConfig>,
     /// oracle maintenance mode for caches this scenario itself creates
     /// (e.g. [`Scenario::selection_frontier`]); planner-owned caches keep
     /// their own mode
@@ -117,6 +127,7 @@ impl Scenario {
             sim: SimConfig::default(),
             session: SessionConfig::default(),
             pool: None,
+            learn: None,
             oracle: OracleMode::Exact,
             obs: None,
         }
@@ -291,6 +302,18 @@ impl Scenario {
         self
     }
 
+    /// Learn per-device reliability online during sessions: every
+    /// executed batch of the streaming path feeds service observations
+    /// into the pool's Bayesian posteriors
+    /// ([`crate::cluster::pool::DevicePool::observe_service`]), so
+    /// admission converges onto delivered rather than advertised
+    /// capability — the learned column of the Fig. 11 selection bench.
+    /// Applies on top of any [`Scenario::pool_cfg`] override.
+    pub fn learn_reliability(mut self, lc: LearnConfig) -> Scenario {
+        self.learn = Some(lc);
+        self
+    }
+
     // -- accessors -------------------------------------------------------
 
     /// Resolved model spec.
@@ -359,7 +382,7 @@ impl Scenario {
 
     /// The candidate-pool configuration sessions sample from.
     pub fn pool_config(&self) -> PoolConfig {
-        match (&self.pool, &self.fleet) {
+        let mut cfg = match (&self.pool, &self.fleet) {
             (Some(cfg), _) => cfg.clone(),
             (None, FleetSpec::Sampled(fc)) => PoolConfig {
                 fleet: fc.clone(),
@@ -369,7 +392,11 @@ impl Scenario {
                 fleet: FleetConfig::default().with_devices(*n),
                 ..PoolConfig::default()
             },
+        };
+        if let Some(lc) = &self.learn {
+            cfg.learn = lc.clone();
         }
+        cfg
     }
 
     // -- entrypoints -----------------------------------------------------
@@ -570,6 +597,35 @@ impl Scenario {
             self.obs.as_ref(),
         );
         let mut report = self.report(planner.name(), ReportDetail::Session(r));
+        report.devices = pool_devices;
+        Ok(report)
+    }
+
+    /// Run the long-horizon session on the streaming membership path:
+    /// journal-driven selection, one persistent planning view patched in
+    /// place, delta-native re-solves, and oracle-cached §4.2 recovery —
+    /// O(churn · log D) planning per epoch instead of O(D)
+    /// ([`crate::sim::session::run_session_streaming`]). Always
+    /// CLEAVE-planned at [`Policy::CostGuided`] (the streaming path's
+    /// contract — any configured policy is overridden); combine with
+    /// [`Scenario::learn_reliability`] for the learned column of the
+    /// Fig. 11 selection bench.
+    pub fn run_session_streaming(&self) -> Result<Report> {
+        let mut pool = DevicePool::sample(&self.pool_config());
+        self.run_session_streaming_on(&mut pool)
+    }
+
+    /// [`Scenario::run_session_streaming`] over a caller-owned pool
+    /// (inspect the learned posteriors or the journal after the run).
+    pub fn run_session_streaming_on(&self, pool: &mut DevicePool) -> Result<Report> {
+        let spec = self.spec()?;
+        let dag = GemmDag::build(&spec, &self.setup);
+        let cm = self.cost_model();
+        let pool_devices = pool.len();
+        let mut cfg = self.effective_session();
+        cfg.policy = Policy::CostGuided;
+        let r = run_session_streaming(pool, &dag, &cm, &self.ps, &cfg);
+        let mut report = self.report("CLEAVE-streaming", ReportDetail::Session(r));
         report.devices = pool_devices;
         Ok(report)
     }
@@ -847,6 +903,36 @@ mod tests {
         assert_eq!(j.get("devices").unwrap().as_usize().unwrap(), 16);
         assert!(j.get("per_batch_s").unwrap().as_f64().unwrap() > 0.0);
         assert!(j.get("gemm_s").unwrap().as_f64().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn streaming_session_runs_through_the_facade() {
+        let sc = Scenario::model("OPT-13B")
+            .devices(32)
+            .batches(4)
+            .epoch_batches(2);
+        let r = sc.run_session_streaming().unwrap();
+        assert_eq!(r.planner, "CLEAVE-streaming");
+        let s = r.session().expect("session report");
+        assert_eq!(s.batch_times.len(), 4);
+        assert!(r.per_batch().unwrap() > 0.0);
+    }
+
+    #[test]
+    fn learn_reliability_configures_the_session_pool() {
+        let sc = Scenario::model("OPT-13B")
+            .devices(24)
+            .batches(4)
+            .epoch_batches(2)
+            .learn_reliability(LearnConfig {
+                enabled: true,
+                ..LearnConfig::default()
+            });
+        assert!(sc.pool_config().learn.enabled);
+        let mut pool = DevicePool::sample(&sc.pool_config());
+        let r = sc.run_session_streaming_on(&mut pool).unwrap();
+        assert!(r.session().is_some());
+        assert!(pool.revision() > 0, "observations must journal");
     }
 
     #[test]

@@ -173,6 +173,61 @@ impl FleetView {
     pub fn device_sigs(&self) -> Vec<DeviceSig> {
         (0..self.len()).map(|k| self.device_sig(k)).collect()
     }
+
+    // -- streaming patch ops (ISSUE 9) ------------------------------------
+    //
+    // A persistent view maintained by a streaming consumer (the pool's
+    // planning view, a session's active view) is patched in place by
+    // join/depart/reliability events instead of being rebuilt per epoch.
+    // These ops deliberately do NOT refingerprint — an O(D) pass — so the
+    // maintainer must stamp a fresh `set_version` after each batch of
+    // patches (any monotone content-change counter works: version only
+    // keys memoization, so a non-content version costs at most a memo
+    // miss, never a wrong hit).
+
+    /// Append one device at the tail (no version update; see above).
+    pub fn push_device(&mut self, d: &Device) {
+        self.push(d);
+    }
+
+    /// Remove the device at position `k`, preserving the order of the
+    /// survivors (order preservation is what keeps the change expressible
+    /// as a [`FleetDelta::Churn`] with a single retired position — a
+    /// `swap_remove` would decompose as retire-nearly-everything under the
+    /// greedy diff). O(D) memmove per column, zero allocation.
+    pub fn remove_at(&mut self, k: usize) {
+        self.flops.remove(k);
+        self.eff_flops.remove(k);
+        self.ul_bw.remove(k);
+        self.dl_bw.remove(k);
+        self.ul_lat.remove(k);
+        self.dl_lat.remove(k);
+        self.mem.remove(k);
+    }
+
+    /// Overwrite position `k` with `d`'s parameters (a reliability
+    /// re-estimate patches exactly one device). O(1), no allocation.
+    pub fn patch_device(&mut self, k: usize, d: &Device) {
+        self.flops[k] = d.flops;
+        self.eff_flops[k] = d.effective_flops();
+        self.ul_bw[k] = d.ul_bw;
+        self.dl_bw[k] = d.dl_bw;
+        self.ul_lat[k] = d.ul_lat;
+        self.dl_lat[k] = d.dl_lat;
+        self.mem[k] = d.mem;
+    }
+
+    /// Stamp the version after a batch of patch ops (see above: streaming
+    /// maintainers use a monotone revision counter, not a content hash).
+    pub fn set_version(&mut self, version: u64) {
+        self.version = version;
+    }
+
+    /// Re-fingerprint the content (O(D)) — the non-streaming way to stamp
+    /// a patched view, used by tests to pin patch-op/rebuild equivalence.
+    pub fn refingerprint(&mut self) {
+        self.version = self.fingerprint();
+    }
 }
 
 /// Per-device content signature (see [`FleetView::device_sig`]).
@@ -207,8 +262,11 @@ pub enum FleetDelta {
 /// The diff itself is O(D) signature compares — cheap next to an exact-
 /// mode Θ(E) oracle resweep, but the dominant per-event cost once the
 /// consumer runs `OracleMode::Indexed` sublinear splices at 100k+
-/// devices (a delta-aware entry that skips the diff when the caller
-/// already knows the join/leave positions is an open ROADMAP item).
+/// devices. Callers that already know the join/leave positions (the
+/// streaming session loop, pool-journal consumers) skip this diff
+/// entirely via the delta-native entry
+/// [`crate::sched::fastpath::solve_dag_view_delta`], which splices the
+/// cached oracles from the known [`FleetDelta`] directly.
 pub fn diff_fleets(old: &[DeviceSig], new: &[DeviceSig]) -> FleetDelta {
     if old == new {
         return FleetDelta::Identical;
@@ -525,6 +583,35 @@ mod tests {
                 appended_from: 5
             }
         );
+    }
+
+    #[test]
+    fn streaming_patch_ops_match_rebuild() {
+        let f = Fleet::sample(&FleetConfig::default().with_devices(16));
+        let joiner = Fleet::sample(&FleetConfig::default().with_devices(2).with_seed(42));
+
+        // push + remove + patch, then refingerprint == rebuild of the same
+        // device slice
+        let mut v = f.view();
+        v.push_device(&joiner.devices[0]);
+        v.remove_at(3);
+        v.patch_device(5, &joiner.devices[1]);
+        v.refingerprint();
+
+        let mut devices = f.devices.clone();
+        devices.push(joiner.devices[0].clone());
+        devices.remove(3);
+        devices[5] = joiner.devices[1].clone();
+        let rebuilt = FleetView::build(&devices);
+
+        assert_eq!(v.version, rebuilt.version);
+        assert_eq!(v.device_sigs(), rebuilt.device_sigs());
+
+        // set_version stamps without touching content
+        let sigs = v.device_sigs();
+        v.set_version(12345);
+        assert_eq!(v.version, 12345);
+        assert_eq!(v.device_sigs(), sigs);
     }
 
     #[test]

@@ -12,13 +12,30 @@
 //!   (Figure 6's population) advertise clean parameters but deliver
 //!   `straggler_factor`x less compute and bandwidth.
 //!
-//! The pool also carries a noisy *reliability estimate* per device — the
-//! coordinator's belief about `delivered / advertised`, as a real system
-//! would accumulate from per-shard service-time observations. The
-//! [`DevicePool::planning_devices`] view (advertised scaled by estimated
-//! reliability) is what the cost-model-guided selector
-//! ([`crate::sched::select`]) plans against; take-all admission plans on
-//! the raw advertised reports; an oracle plans on `delivered` directly.
+//! The pool also carries a *reliability belief* per device — the
+//! coordinator's estimate of `delivered / advertised`. By default that is
+//! the static noisy estimate a registration handshake would produce; with
+//! [`LearnConfig::enabled`] it becomes a per-device Bayesian posterior
+//! updated from observed per-shard service ratios
+//! ([`DevicePool::observe_service`]), so hidden stragglers are trimmed as
+//! they reveal themselves. The [`DevicePool::planning_devices`] view
+//! (advertised scaled by the belief) is what the cost-model-guided
+//! selector ([`crate::sched::select`]) plans against; take-all admission
+//! plans on the raw advertised reports; an oracle plans on `delivered`
+//! directly.
+//!
+//! ## Streaming membership (ISSUE 9)
+//!
+//! Million-device pools cannot afford per-epoch O(D) snapshots, so every
+//! mutation — `join`, `depart`, and posterior moves — is appended to an
+//! event journal ([`PoolEvent`]). Consumers that keep persistent planning
+//! state (the streaming selector in [`crate::sched::select`], the
+//! streaming session loop in [`crate::sim::session`]) record the pool
+//! [`DevicePool::revision`] they last synced at and catch up with
+//! [`DevicePool::events_since`] — O(churn + observations) per epoch, never
+//! O(D). The active set is likewise maintained as a sorted index list, so
+//! [`DevicePool::set_active`] touches only the membership *changes* and
+//! [`DevicePool::active`] is a clone of the maintained list.
 //!
 //! Joins follow a diurnal availability profile
 //! ([`DevicePool::availability_factor`]): edge devices are idle — and thus
@@ -41,14 +58,64 @@ pub enum Availability {
     Departed,
 }
 
+/// One pool mutation, as recorded in the streaming journal. Indices are
+/// stable pool indices (departed slots are never reused), so a consumer
+/// replaying `events_since(rev)` reconstructs exactly the membership and
+/// belief changes since its last sync.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PoolEvent {
+    /// a fresh candidate joined at pool index `idx`
+    Join { idx: usize },
+    /// the device at `idx` churned out
+    Depart { idx: usize },
+    /// the reliability belief for `idx` moved (learned-posterior update
+    /// beyond [`LearnConfig::epsilon`])
+    Reliability { idx: usize },
+}
+
+/// Learned-reliability configuration: a per-device Bayesian posterior over
+/// `delivered/advertised`, replacing the static registration-time noisy
+/// estimate. New devices start at an *optimistic* prior (they are believed
+/// as advertised until service observations say otherwise), so hidden
+/// stragglers get admitted once, reveal themselves, and are trimmed by the
+/// CVaR admission objective as the posterior converges.
+#[derive(Clone, Debug)]
+pub struct LearnConfig {
+    /// off by default: the pool keeps the static noisy estimate and emits
+    /// no `Reliability` events (bitwise-legacy behavior)
+    pub enabled: bool,
+    /// pseudo-observation weight of the optimistic prior (higher = slower
+    /// to believe a straggling observation)
+    pub prior_weight: f64,
+    /// prior mean of the posterior; 1.0 = fully trusted advertisement
+    pub prior_mean: f64,
+    /// relative noise (std) on each observed service ratio
+    pub obs_noise: f64,
+    /// posterior moves smaller than this are absorbed without a journal
+    /// event, so converged devices go quiet
+    pub epsilon: f64,
+}
+
+impl Default for LearnConfig {
+    fn default() -> Self {
+        LearnConfig {
+            enabled: false,
+            prior_weight: 4.0,
+            prior_mean: 1.0,
+            obs_noise: 0.05,
+            epsilon: 1e-3,
+        }
+    }
+}
+
 /// Pool sampling configuration.
 #[derive(Clone, Debug)]
 pub struct PoolConfig {
     /// candidate-pool priors; `straggler_fraction` here is the *hidden*
     /// straggler rate (stragglers advertise clean parameters)
     pub fleet: FleetConfig,
-    /// relative noise (std) of the reliability estimate around the true
-    /// delivered/advertised ratio
+    /// relative noise (std) of the static reliability estimate around the
+    /// true delivered/advertised ratio (unused when `learn.enabled`)
     pub reliability_noise: f64,
     /// diurnal availability swing in [0, 1]: 0 = flat, 1 = full swing
     pub diurnal_amplitude: f64,
@@ -57,6 +124,8 @@ pub struct PoolConfig {
     /// seed for reliability noise and join sampling (independent of the
     /// fleet seed so the same pool can replay different join streams)
     pub seed: u64,
+    /// learned-reliability posterior configuration (off by default)
+    pub learn: LearnConfig,
 }
 
 impl Default for PoolConfig {
@@ -67,6 +136,7 @@ impl Default for PoolConfig {
             diurnal_amplitude: 0.5,
             peak_hour: 20.0,
             seed: 7,
+            learn: LearnConfig::default(),
         }
     }
 }
@@ -79,9 +149,14 @@ pub struct PoolDevice {
     pub advertised: Device,
     /// capability it actually sustains (what simulation executes at)
     pub delivered: Device,
-    /// noisy estimate of delivered/advertised in (0, 1]
+    /// the coordinator's belief about delivered/advertised in (0, 1]:
+    /// static noisy estimate, or the learned posterior mean
     pub reliability: f64,
     pub state: Availability,
+    /// accumulated observation weight of the learned posterior
+    pub obs_weight: f64,
+    /// accumulated sum of observed service ratios
+    pub obs_sum: f64,
 }
 
 /// A candidate pool with membership state, layered over [`Fleet`] sampling.
@@ -90,7 +165,15 @@ pub struct DevicePool {
     pub devices: Vec<PoolDevice>,
     cfg: PoolConfig,
     rng: Rng,
+    /// observation-noise stream, independent of `rng` so service
+    /// observations never perturb the join stream
+    obs_rng: Rng,
     next_id: DeviceId,
+    /// append-only mutation journal; `revision()` is its length
+    journal: Vec<PoolEvent>,
+    /// sorted indices of the current active set (maintained, not scanned)
+    active_list: Vec<usize>,
+    n_departed: usize,
 }
 
 impl DevicePool {
@@ -111,21 +194,27 @@ impl DevicePool {
             .into_iter()
             .zip(delivered.devices)
             .map(|(adv, del)| {
-                let reliability = estimate_reliability(&adv, &del, cfg.reliability_noise, &mut rng);
+                let reliability = initial_reliability(cfg, &adv, &del, &mut rng);
                 PoolDevice {
                     advertised: adv,
                     delivered: del,
                     reliability,
                     state: Availability::Candidate,
+                    obs_weight: 0.0,
+                    obs_sum: 0.0,
                 }
             })
             .collect::<Vec<_>>();
         let next_id = devices.len() as DeviceId;
         DevicePool {
             devices,
-            cfg: cfg.clone(),
             rng,
+            obs_rng: Rng::new(cfg.seed ^ 0xA076_1D64_78BD_642F),
+            cfg: cfg.clone(),
             next_id,
+            journal: Vec::new(),
+            active_list: Vec::new(),
+            n_departed: 0,
         }
     }
 
@@ -137,40 +226,104 @@ impl DevicePool {
         self.devices.is_empty()
     }
 
-    /// Indices eligible for admission (candidate or currently active).
-    pub fn selectable(&self) -> Vec<usize> {
-        (0..self.devices.len())
-            .filter(|&i| self.devices[i].state != Availability::Departed)
-            .collect()
+    // -- streaming journal ------------------------------------------------
+
+    /// Monotone journal revision: one tick per recorded mutation. Streaming
+    /// consumers snapshot this and later drain [`DevicePool::events_since`].
+    pub fn revision(&self) -> u64 {
+        self.journal.len() as u64
     }
 
-    /// Indices currently in the active training set.
+    /// The mutation events appended since revision `rev` (O(1) slice — the
+    /// journal is append-only and indices are stable).
+    pub fn events_since(&self, rev: u64) -> &[PoolEvent] {
+        &self.journal[rev as usize..]
+    }
+
+    // -- membership -------------------------------------------------------
+
+    /// Indices eligible for admission (candidate or currently active).
+    /// Allocates; hot paths use [`DevicePool::selectable_iter`].
+    pub fn selectable(&self) -> Vec<usize> {
+        self.selectable_iter().collect()
+    }
+
+    /// Iterator over selectable indices — no allocation.
+    pub fn selectable_iter(&self) -> impl Iterator<Item = usize> + '_ {
+        self.devices
+            .iter()
+            .enumerate()
+            .filter(|(_, d)| d.state != Availability::Departed)
+            .map(|(i, _)| i)
+    }
+
+    /// Number of selectable devices, O(1) (maintained counter).
+    pub fn selectable_len(&self) -> usize {
+        self.devices.len() - self.n_departed
+    }
+
+    /// Indices currently in the active training set (ascending). Allocates;
+    /// hot paths use [`DevicePool::active_slice`].
     pub fn active(&self) -> Vec<usize> {
-        (0..self.devices.len())
-            .filter(|&i| self.devices[i].state == Availability::Active)
-            .collect()
+        self.active_list.clone()
+    }
+
+    /// The maintained active-set index list (sorted ascending), O(1).
+    pub fn active_slice(&self) -> &[usize] {
+        &self.active_list
     }
 
     /// Replace the active set: everything in `idx` becomes `Active`, every
-    /// other non-departed device drops back to `Candidate`.
+    /// other non-departed device drops back to `Candidate`. Cost is
+    /// O(|old| + |new| + |new|·log|new|) — a two-pointer diff against the
+    /// maintained sorted active list touches only the *changed* indices,
+    /// never the whole pool.
     pub fn set_active(&mut self, idx: &[usize]) {
-        for d in &mut self.devices {
-            if d.state == Availability::Active {
-                d.state = Availability::Candidate;
+        let mut new: Vec<usize> = idx.to_vec();
+        new.sort_unstable();
+        new.dedup();
+        let old = std::mem::take(&mut self.active_list);
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < old.len() || j < new.len() {
+            let demote = match (old.get(i), new.get(j)) {
+                (Some(&o), Some(&n)) if o == n => {
+                    i += 1;
+                    j += 1;
+                    continue;
+                }
+                (Some(&o), Some(&n)) => o < n,
+                (Some(_), None) => true,
+                (None, _) => false,
+            };
+            if demote {
+                self.devices[old[i]].state = Availability::Candidate;
+                i += 1;
+            } else {
+                let n = new[j];
+                assert!(
+                    self.devices[n].state == Availability::Candidate,
+                    "cannot activate departed device {n}"
+                );
+                self.devices[n].state = Availability::Active;
+                j += 1;
             }
         }
-        for &i in idx {
-            assert!(
-                self.devices[i].state == Availability::Candidate,
-                "cannot activate departed device {i}"
-            );
-            self.devices[i].state = Availability::Active;
-        }
+        self.active_list = new;
     }
 
-    /// Mark a device as churned out.
+    /// Mark a device as churned out (journaled; idempotent).
     pub fn depart(&mut self, idx: usize) {
+        if self.devices[idx].state == Availability::Departed {
+            return;
+        }
+        if self.devices[idx].state == Availability::Active {
+            if let Ok(p) = self.active_list.binary_search(&idx) {
+                self.active_list.remove(p);
+            }
+        }
         self.devices[idx].state = Availability::Departed;
+        self.n_departed += 1;
+        self.journal.push(PoolEvent::Depart { idx });
     }
 
     /// A new device joins the pool as a candidate (hidden-straggler chance
@@ -185,15 +338,50 @@ impl DevicePool {
             del.dl_bw /= self.cfg.fleet.straggler_factor;
             del.ul_bw /= self.cfg.fleet.straggler_factor;
         }
-        let reliability =
-            estimate_reliability(&adv, &del, self.cfg.reliability_noise, &mut self.rng);
+        let reliability = initial_reliability(&self.cfg, &adv, &del, &mut self.rng);
         self.devices.push(PoolDevice {
             advertised: adv,
             delivered: del,
             reliability,
             state: Availability::Candidate,
+            obs_weight: 0.0,
+            obs_sum: 0.0,
         });
-        self.devices.len() - 1
+        let idx = self.devices.len() - 1;
+        self.journal.push(PoolEvent::Join { idx });
+        idx
+    }
+
+    // -- learned reliability ----------------------------------------------
+
+    /// Record one observed per-shard service ratio for device `idx`
+    /// (typically each active participant, once per executed batch): the
+    /// posterior over delivered/advertised moves toward the observation.
+    /// Returns the updated belief. A [`PoolEvent::Reliability`] is
+    /// journaled only when the posterior moved beyond `learn.epsilon`, so
+    /// converged devices stop emitting events. No-op (returns the current
+    /// belief) when learning is disabled.
+    pub fn observe_service(&mut self, idx: usize) -> f64 {
+        let lc = &self.cfg.learn;
+        if !lc.enabled {
+            return self.devices[idx].reliability;
+        }
+        let noise = 1.0 + lc.obs_noise * self.obs_rng.normal();
+        let d = &mut self.devices[idx];
+        let true_ratio = d.delivered.flops / d.advertised.flops;
+        let obs = (true_ratio * noise).clamp(0.0, 1.5);
+        d.obs_sum += obs;
+        d.obs_weight += 1.0;
+        let post = ((lc.prior_weight * lc.prior_mean + d.obs_sum)
+            / (lc.prior_weight + d.obs_weight))
+            .clamp(0.02, 1.0);
+        if (post - d.reliability).abs() > lc.epsilon {
+            d.reliability = post;
+            self.journal.push(PoolEvent::Reliability { idx });
+        } else {
+            d.reliability = post;
+        }
+        post
     }
 
     /// Diurnal availability multiplier in `[1 - amplitude, 1]`, peaking at
@@ -204,6 +392,8 @@ impl DevicePool {
         let phase = (hour - self.cfg.peak_hour) / 24.0 * std::f64::consts::TAU;
         1.0 - a * 0.5 * (1.0 - phase.cos())
     }
+
+    // -- capability views -------------------------------------------------
 
     /// Advertised capability records of `idx` (what take-all admission
     /// schedules against).
@@ -217,26 +407,40 @@ impl DevicePool {
         idx.iter().map(|&i| self.devices[i].delivered.clone()).collect()
     }
 
+    /// One device's reliability-discounted planning record: advertised
+    /// compute and bandwidth scaled by the current belief. The streaming
+    /// selector patches exactly this, one device per journal event.
+    pub fn planning_device(&self, i: usize) -> Device {
+        let p = &self.devices[i];
+        let mut d = p.advertised.clone();
+        d.flops *= p.reliability;
+        d.dl_bw *= p.reliability;
+        d.ul_bw *= p.reliability;
+        d
+    }
+
     /// Reliability-discounted planning view of `idx`: advertised compute and
     /// bandwidth scaled by the estimated reliability. This is the
     /// cost-model-guided selector's belief about deliverable capability.
     pub fn planning_devices(&self, idx: &[usize]) -> Vec<Device> {
-        idx.iter()
-            .map(|&i| {
-                let p = &self.devices[i];
-                let mut d = p.advertised.clone();
-                d.flops *= p.reliability;
-                d.dl_bw *= p.reliability;
-                d.ul_bw *= p.reliability;
-                d
-            })
-            .collect()
+        idx.iter().map(|&i| self.planning_device(i)).collect()
     }
 
     /// How many of `idx` are hidden stragglers (ground truth; used by
     /// benches/tests to audit selection decisions).
     pub fn n_stragglers(&self, idx: &[usize]) -> usize {
         idx.iter().filter(|&&i| self.devices[i].delivered.straggler).count()
+    }
+}
+
+/// Registration-time belief: the static noisy estimate, or — with learning
+/// enabled — the optimistic prior mean (stragglers reveal themselves only
+/// through service observations).
+fn initial_reliability(cfg: &PoolConfig, adv: &Device, del: &Device, rng: &mut Rng) -> f64 {
+    if cfg.learn.enabled {
+        cfg.learn.prior_mean.clamp(0.02, 1.0)
+    } else {
+        estimate_reliability(adv, del, cfg.reliability_noise, rng)
     }
 }
 
@@ -315,15 +519,42 @@ mod tests {
     fn membership_transitions() {
         let mut pool = DevicePool::sample(&pool_cfg(8, 0.0));
         assert_eq!(pool.selectable().len(), 8);
+        assert_eq!(pool.selectable_len(), 8);
         assert!(pool.active().is_empty());
         pool.set_active(&[1, 3, 5]);
         assert_eq!(pool.active(), vec![1, 3, 5]);
+        assert_eq!(pool.active_slice(), &[1, 3, 5]);
         pool.depart(3);
         assert_eq!(pool.selectable().len(), 7);
+        assert_eq!(pool.selectable_len(), 7);
+        // the maintained active list drops the departed member immediately
+        assert_eq!(pool.active_slice(), &[1, 5]);
         pool.set_active(&[1, 2]);
         assert_eq!(pool.active(), vec![1, 2]);
         // departed devices never come back under the same index
         assert!(!pool.selectable().contains(&3));
+        // the untouched member kept its state across the partial swap
+        assert_eq!(pool.devices[1].state, Availability::Active);
+        assert_eq!(pool.devices[5].state, Availability::Candidate);
+    }
+
+    #[test]
+    fn journal_records_membership_mutations() {
+        let mut pool = DevicePool::sample(&pool_cfg(6, 0.0));
+        assert_eq!(pool.revision(), 0);
+        let rev0 = pool.revision();
+        let j = pool.join();
+        pool.depart(2);
+        pool.depart(2); // idempotent: no duplicate event
+        assert_eq!(
+            pool.events_since(rev0),
+            &[PoolEvent::Join { idx: j }, PoolEvent::Depart { idx: 2 }]
+        );
+        let rev1 = pool.revision();
+        assert_eq!(rev1, 2);
+        assert!(pool.events_since(rev1).is_empty());
+        pool.join();
+        assert_eq!(pool.events_since(rev1).len(), 1);
     }
 
     #[test]
@@ -355,5 +586,49 @@ mod tests {
             let f = pool.availability_factor(h as f64 * 3600.0);
             assert!((0.5..=1.0).contains(&f));
         }
+    }
+
+    #[test]
+    fn learned_posterior_starts_optimistic_and_converges() {
+        let mut cfg = pool_cfg(40, 0.3);
+        cfg.learn = LearnConfig {
+            enabled: true,
+            ..LearnConfig::default()
+        };
+        let mut pool = DevicePool::sample(&cfg);
+        // optimistic prior: every device — straggler or not — starts at 1.0
+        for d in &pool.devices {
+            assert_eq!(d.reliability, 1.0);
+        }
+        let straggler = (0..40)
+            .find(|&i| pool.devices[i].delivered.straggler)
+            .unwrap();
+        let healthy = (0..40)
+            .find(|&i| !pool.devices[i].delivered.straggler)
+            .unwrap();
+        for _ in 0..12 {
+            pool.observe_service(straggler);
+            pool.observe_service(healthy);
+        }
+        // true straggler ratio is 0.1: posterior (4·1 + 12·~0.1)/(4+12) ≈ 0.32
+        let s = pool.devices[straggler].reliability;
+        let h = pool.devices[healthy].reliability;
+        assert!(s < 0.4, "straggler posterior {s}");
+        assert!(h > 0.9, "healthy posterior {h}");
+        // moves were journaled as Reliability events
+        assert!(pool
+            .events_since(0)
+            .iter()
+            .any(|e| matches!(e, PoolEvent::Reliability { idx } if *idx == straggler)));
+    }
+
+    #[test]
+    fn disabled_learning_keeps_static_estimates_quiet() {
+        let mut pool = DevicePool::sample(&pool_cfg(8, 0.5));
+        let before = pool.devices[0].reliability;
+        let out = pool.observe_service(0);
+        assert_eq!(out, before);
+        assert_eq!(pool.devices[0].reliability, before);
+        assert_eq!(pool.revision(), 0);
     }
 }

@@ -525,6 +525,95 @@ impl ShapeOracle {
         }
     }
 
+    /// Delta-native update (ISSUE 9): apply a caller-known membership
+    /// delta directly, skipping the O(D) signature diff of
+    /// [`ShapeOracle::update`]. `view` is the POST-delta fleet; the
+    /// delta's `retired` positions index the PRE-delta fleet (ascending)
+    /// and the admitted devices are `view[appended_from..]`. The splice
+    /// operations are literally the ones the diff path would perform, so
+    /// the result is bitwise identical to it in both oracle modes. A delta
+    /// inconsistent with the stored fleet (wrong lengths, out-of-range
+    /// positions) reports `NeedsRebuild` instead of desyncing — the caller
+    /// pays one rebuild, never a wrong answer.
+    pub fn update_with_delta(
+        &mut self,
+        view: &FleetView,
+        cm: &CostModel,
+        shape: &GemmShape,
+        delta: &FleetDelta,
+    ) -> OracleUpdate {
+        match delta {
+            FleetDelta::Identical => {
+                if self.sigs.len() == view.len() {
+                    OracleUpdate::Unchanged
+                } else {
+                    OracleUpdate::NeedsRebuild
+                }
+            }
+            FleetDelta::Disjoint => OracleUpdate::NeedsRebuild,
+            FleetDelta::Churn {
+                retired,
+                appended_from,
+            } => {
+                let appended_from = *appended_from;
+                if appended_from > view.len() {
+                    return OracleUpdate::NeedsRebuild;
+                }
+                let count = view.len() - appended_from;
+                let consistent = retired.windows(2).all(|w| w[0] < w[1])
+                    && retired.last().map_or(true, |&p| p < self.sigs.len())
+                    && self.sigs.len() - retired.len() + count == view.len();
+                if !consistent {
+                    return OracleUpdate::NeedsRebuild;
+                }
+                let b = cm.elem_bytes;
+                let spliced = self.seg.splice(retired, count, |i| {
+                    let k = appended_from + i;
+                    gemm_family(
+                        cm.flops_of_view(view, k),
+                        view.ul_bw[k],
+                        view.ul_lat[k],
+                        view.dl_bw[k],
+                        view.dl_lat[k],
+                        view.mem[k],
+                        shape,
+                        b,
+                    )
+                });
+                match spliced {
+                    Some(()) => {
+                        // Patch the stored signatures to match: drop the
+                        // retired positions (order-preserving), append the
+                        // admitted tail — O(churn + D memmove), no diff.
+                        if !retired.is_empty() {
+                            let mut keep =
+                                Vec::with_capacity(self.sigs.len() - retired.len());
+                            let mut rit = retired.iter().peekable();
+                            for (p, s) in self.sigs.iter().enumerate() {
+                                if rit.peek() == Some(&&p) {
+                                    rit.next();
+                                } else {
+                                    keep.push(*s);
+                                }
+                            }
+                            self.sigs = keep;
+                        }
+                        for k in appended_from..view.len() {
+                            self.sigs.push(view.device_sig(k));
+                        }
+                        debug_assert_eq!(
+                            self.sigs,
+                            view.device_sigs(),
+                            "delta inconsistent with the post-delta view"
+                        );
+                        OracleUpdate::Incremental
+                    }
+                    None => OracleUpdate::NeedsRebuild,
+                }
+            }
+        }
+    }
+
     /// `sum_k max_area_in(k, t)` in O(log D).
     pub fn total_area(&self, t: f64) -> f64 {
         self.seg.total(t)
@@ -781,7 +870,6 @@ fn solve_gemm_core(
     skel: Option<&FleetSkeleton>,
 ) -> (GemmAssignment, SolverStats, Option<ShapeOracle>, OracleReuse) {
     let t0c = Instant::now();
-    let area = shape.out_area();
     assert!(!view.is_empty(), "no devices");
 
     let own_sigs = || sigs.map(|s| s.to_vec()).unwrap_or_default();
@@ -805,7 +893,24 @@ fn solve_gemm_core(
             None => (None, OracleReuse::Scan),
         },
     };
+    finish_solve(view, shape, cm, opts, hint, oracle, reuse, t0c)
+}
 
+/// The oracle-to-assignment tail shared by the diff-based and delta-native
+/// solve paths: analytic root (or scan fallback), target areas at `T*`,
+/// guillotine integerization, stats. Splitting this off is what keeps the
+/// two paths incapable of disagreeing past oracle acquisition.
+fn finish_solve(
+    view: &FleetView,
+    shape: GemmShape,
+    cm: &CostModel,
+    opts: &SolverOptions,
+    hint: Option<f64>,
+    oracle: Option<ShapeOracle>,
+    reuse: OracleReuse,
+    t0c: Instant,
+) -> (GemmAssignment, SolverStats, Option<ShapeOracle>, OracleReuse) {
+    let area = shape.out_area();
     let (t_star, iters, roots) = match &oracle {
         Some(o) => {
             let t = o
@@ -1272,6 +1377,169 @@ pub fn solve_dag_fast(
     (schedule, agg)
 }
 
+/// Delta-native DAG solve (ISSUE 9): [`solve_dag_fast`] for callers that
+/// maintain a persistent [`FleetView`] and already *know* the membership
+/// delta since their previous solve through `cache` — the streaming
+/// session loop and pool-journal consumers. Skips both per-call O(D)
+/// passes of the diff path: no `FleetView::build` (the caller's view is
+/// patched in place) and no `device_sigs` + `diff_fleets` (the known
+/// [`FleetDelta`] splices the cached oracles directly). Per-shape cost on
+/// a quiet epoch (`FleetDelta::Identical`, unchanged view version) is one
+/// memo probe; under churn it is the oracle splice — sublinear in indexed
+/// mode — plus the k-sized integerization.
+///
+/// Contract: `view` is the post-delta fleet and `delta` describes exactly
+/// the change since the last solve routed through this cache (the caller
+/// stamps `view.set_version` with a monotone revision so the memo never
+/// false-hits). The splice operations are the ones the diff path would
+/// derive, so results are bitwise identical to [`solve_dag_fast`] over the
+/// same fleet in exact mode, and within the indexed tolerance contract
+/// otherwise; an inconsistent delta triggers a rebuild, never a wrong
+/// answer.
+pub fn solve_dag_view_delta(
+    view: &FleetView,
+    delta: &FleetDelta,
+    dag: &GemmDag,
+    cm: &CostModel,
+    ps: &PsParams,
+    opts: &SolverOptions,
+    cache: &mut SolverCache,
+) -> (Schedule, SolverStats) {
+    let t0 = Instant::now();
+    let _sp = crate::span!("solve", devices = view.len());
+    let ctx = cache_ctx(view, cm, opts);
+    let octx = oracle_ctx(cm);
+    let mode = cache.oracle_mode();
+    let shapes = distinct_shapes(dag);
+
+    struct Job {
+        shape: GemmShape,
+        hint: Option<f64>,
+        memo: Option<(GemmAssignment, SolverStats)>,
+        oracle: Mutex<Option<ShapeOracle>>,
+    }
+    let jobs: Vec<Job> = shapes
+        .iter()
+        .map(|shape| Job {
+            shape: *shape,
+            hint: cache.hints.get(shape).copied(),
+            memo: cache.memo.get(&(ctx, *shape)).cloned(),
+            oracle: Mutex::new(cache.oracles.remove(&(octx, *shape))),
+        })
+        .collect();
+    // Same cross-shape skeleton rule as the diff path: only shapes with
+    // neither memo nor a prior oracle pay a build, and those share one
+    // skeleton derivation.
+    let needs_build = jobs
+        .iter()
+        .any(|j| j.memo.is_none() && j.oracle.lock().unwrap().is_none());
+    let skel: Option<FleetSkeleton> = needs_build.then(|| {
+        let mut sk = cache
+            .take_skeleton(octx, view.version)
+            .unwrap_or_else(|| FleetSkeleton::build(view, cm));
+        for shape in &shapes {
+            sk.ensure_n(shape.n, view, cm);
+        }
+        sk
+    });
+    let threads = default_threads().min(jobs.len()).max(1);
+    type Solved = (GemmAssignment, SolverStats, Option<ShapeOracle>, Option<OracleReuse>);
+    let solved: Vec<Solved> = scoped_map(&jobs, threads, |job| {
+        if let Some((a, s)) = &job.memo {
+            let mut s = *s;
+            s.solve_time_s = 0.0; // reused, not re-solved
+            return (a.clone(), s, None, None);
+        }
+        let t0c = Instant::now();
+        assert!(!view.is_empty(), "no devices");
+        let prior = job.oracle.lock().unwrap().take();
+        let (oracle, reuse) = match prior {
+            Some(mut o) => match o.update_with_delta(view, cm, &job.shape, delta) {
+                OracleUpdate::Unchanged => (Some(o), OracleReuse::Cached),
+                OracleUpdate::Incremental => (Some(o), OracleReuse::Incremental),
+                OracleUpdate::NeedsRebuild => match ShapeOracle::build_with_sigs(
+                    view,
+                    cm,
+                    &job.shape,
+                    view.device_sigs(),
+                    mode,
+                    skel.as_ref(),
+                ) {
+                    Some(o) => (Some(o), OracleReuse::Rebuilt),
+                    None => (None, OracleReuse::Scan),
+                },
+            },
+            None => match ShapeOracle::build_with_sigs(
+                view,
+                cm,
+                &job.shape,
+                view.device_sigs(),
+                mode,
+                skel.as_ref(),
+            ) {
+                Some(o) => (Some(o), OracleReuse::ColdBuilt),
+                None => (None, OracleReuse::Scan),
+            },
+        };
+        let (a, s, oracle, reuse) =
+            finish_solve(view, job.shape, cm, opts, job.hint, oracle, reuse, t0c);
+        (a, s, oracle, Some(reuse))
+    });
+
+    let mut by_shape: HashMap<GemmShape, GemmAssignment> = HashMap::new();
+    let mut agg = SolverStats {
+        devices_considered: view.len(),
+        ..SolverStats::default()
+    };
+    for (job, (a, s, oracle, reuse)) in jobs.iter().zip(solved.into_iter()) {
+        agg.decision_vars += s.decision_vars;
+        agg.bisection_iters += s.bisection_iters;
+        agg.analytic_roots += s.analytic_roots;
+        if job.memo.is_some() {
+            cache.counters.memo_hits.inc();
+        } else if job.hint.is_some() {
+            cache.counters.warm_solves.inc();
+        } else {
+            cache.counters.cold_solves.inc();
+        }
+        match reuse {
+            Some(OracleReuse::Incremental) => cache.counters.incremental_updates.inc(),
+            Some(OracleReuse::Rebuilt) => cache.counters.full_rebuilds.inc(),
+            _ => {}
+        }
+        if skel.is_some()
+            && matches!(reuse, Some(OracleReuse::ColdBuilt) | Some(OracleReuse::Rebuilt))
+        {
+            cache.counters.skeleton_reuses.inc();
+        }
+        cache.hints.insert(job.shape, s.continuous_makespan);
+        if cache.memo.len() > 8192 {
+            cache.memo.clear();
+        }
+        cache.memo.insert((ctx, job.shape), (a.clone(), s));
+        let back = oracle.or_else(|| job.oracle.lock().unwrap().take());
+        if let Some(o) = back {
+            if cache.oracles.len() > 64 {
+                cache.oracles.clear();
+            }
+            cache.oracles.insert((octx, job.shape), o);
+        }
+        by_shape.insert(job.shape, a);
+    }
+    if let Some(sk) = skel {
+        cache.skeleton = Some((octx, sk));
+    }
+
+    let schedule = assemble_schedule(dag, cm, ps, by_shape);
+    agg.solve_time_s = t0.elapsed().as_secs_f64();
+    agg.continuous_makespan = schedule.gemm_time;
+    agg.integer_makespan = schedule.gemm_time;
+    cache.counters.analytic_roots.add(agg.analytic_roots as u64);
+    cache.counters.bisection_iters.add(agg.bisection_iters as u64);
+    cache.counters.solve_s.observe(agg.solve_time_s);
+    (schedule, agg)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1565,5 +1833,88 @@ mod tests {
             Some(&mut cache),
         );
         assert!(s3.gemm_time >= s1.gemm_time * 0.99);
+    }
+
+    #[test]
+    fn delta_native_solve_matches_diff_path_bitwise() {
+        // A caller that patches its persistent view and hands the known
+        // FleetDelta to solve_dag_view_delta must get the same schedule,
+        // bit for bit, as the diff path re-deriving that delta from
+        // signatures — and the same counter trajectory (splice, never
+        // rebuild).
+        let spec = ModelSpec::preset("OPT-13B").unwrap();
+        let dag = GemmDag::build(&spec, &TrainSetup::default());
+        let fleet = Fleet::sample(&FleetConfig::default().with_devices(48));
+        let opts = SolverOptions::default();
+        let ps = PsParams::default();
+
+        let mut diff_cache = SolverCache::new();
+        let mut delta_cache = SolverCache::new();
+        let mut view = FleetView::build(&fleet.devices);
+
+        // Cold start: the delta is irrelevant (no prior oracles) but the
+        // entry point must behave like the diff path's cold solve.
+        let (d0, _) = solve_dag_fast(&fleet.devices, &dag, &cm(), &ps, &opts, Some(&mut diff_cache));
+        let (v0, _) =
+            solve_dag_view_delta(&view, &FleetDelta::Identical, &dag, &cm(), &ps, &opts, &mut delta_cache);
+        assert_eq!(d0.gemm_time.to_bits(), v0.gemm_time.to_bits());
+
+        // Quiet epoch: same view, same version, Identical delta — pure
+        // memo hits, zero oracle work.
+        let memo_before = delta_cache.stats().memo_hits;
+        let (vq, sq) =
+            solve_dag_view_delta(&view, &FleetDelta::Identical, &dag, &cm(), &ps, &opts, &mut delta_cache);
+        assert_eq!(vq.gemm_time.to_bits(), v0.gemm_time.to_bits());
+        assert!(delta_cache.stats().memo_hits > memo_before);
+        assert_eq!(sq.bisection_iters, 0);
+
+        // Churn: retire position 3, admit one fresh device at the tail.
+        let mut churned = fleet.clone();
+        churned.remove(3);
+        let joiner = fleet.devices[7].clone();
+        churned.devices.push(joiner.clone());
+        view.remove_at(3);
+        view.push_device(&joiner);
+        view.refingerprint();
+        let delta = FleetDelta::Churn {
+            retired: vec![3],
+            appended_from: view.len() - 1,
+        };
+        let (d1, _) = solve_dag_fast(&churned.devices, &dag, &cm(), &ps, &opts, Some(&mut diff_cache));
+        let (v1, _) = solve_dag_view_delta(&view, &delta, &dag, &cm(), &ps, &opts, &mut delta_cache);
+        assert_eq!(d1.gemm_time.to_bits(), v1.gemm_time.to_bits());
+        assert_eq!(d1.opt_tail.to_bits(), v1.opt_tail.to_bits());
+        for (shape, a) in &v1.by_shape {
+            assert_eq!(a.rects, d1.by_shape[shape].rects, "shape {shape:?}");
+        }
+        let st = delta_cache.stats();
+        assert!(st.incremental_updates > 0, "{st:?}");
+        assert_eq!(st.full_rebuilds, 0, "{st:?}");
+    }
+
+    #[test]
+    fn delta_native_solve_rebuilds_on_inconsistent_delta() {
+        // A delta that does not match the view must degrade to a rebuild
+        // (correct answer, full_rebuilds counted) — never a wrong splice.
+        let spec = ModelSpec::preset("OPT-13B").unwrap();
+        let dag = GemmDag::build(&spec, &TrainSetup::default());
+        let fleet = Fleet::sample(&FleetConfig::default().with_devices(32));
+        let opts = SolverOptions::default();
+        let ps = PsParams::default();
+        let mut cache = SolverCache::new();
+        let mut view = FleetView::build(&fleet.devices);
+        let _ = solve_dag_view_delta(&view, &FleetDelta::Identical, &dag, &cm(), &ps, &opts, &mut cache);
+        // Patch the view (retire 0) but lie about it: claim Identical.
+        view.remove_at(0);
+        view.refingerprint();
+        let (got, _) =
+            solve_dag_view_delta(&view, &FleetDelta::Identical, &dag, &cm(), &ps, &opts, &mut cache);
+        let (fresh, _) = {
+            let mut churned = fleet.clone();
+            churned.remove(0);
+            solve_dag_fast(&churned.devices, &dag, &cm(), &ps, &opts, None)
+        };
+        assert_eq!(got.gemm_time.to_bits(), fresh.gemm_time.to_bits());
+        assert!(cache.stats().full_rebuilds > 0);
     }
 }

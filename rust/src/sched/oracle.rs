@@ -34,10 +34,10 @@
 //!
 //! | consumer | curve | target |
 //! |---|---|---|
-//! | [`crate::sched::fastpath`] steady-state GEMM solve | Eq. 2–4 + Eq. 7 max-area pieces | output area `M·q` |
-//! | [`crate::sched::solver::solve_region_with_cache_view`] (§4.2 recovery) | cache-discounted max-area pieces | lost-region area |
+//! | [`crate::sched::fastpath`] steady-state GEMM solve (diff-derived *and* delta-native [`crate::sched::fastpath::solve_dag_view_delta`]) | Eq. 2–4 + Eq. 7 max-area pieces | output area `M·q` |
+//! | [`crate::sched::solver::solve_region_with_cache_view`] / [`crate::sched::solver::solve_region_cached_view`] behind a [`crate::sched::solver::RegionOracleCache`] (§4.2 recovery) | cache-discounted max-area pieces | lost-region area |
 //! | [`crate::sim::batch`] stage water-filling | fractional-capacity ramps clamped at 1 | 1.0 (one stage) |
-//! | [`crate::sched::select`] / [`crate::sim::session`] churn re-solves | via `fastpath`'s cached oracles | retire/admit deltas |
+//! | [`crate::sched::select`] / [`crate::sim::session`] churn re-solves (the streaming session feeds [`crate::cluster::fleet::FleetDelta`]s straight from the pool journal) | via `fastpath`'s cached oracles | retire/admit deltas |
 //!
 //! ## Two incrementality contracts: `OracleMode::{Exact, Indexed}`
 //!

@@ -26,7 +26,10 @@ use crate::cluster::device::Device;
 use crate::cluster::fleet::FleetView;
 use crate::sched::assignment::{GemmAssignment, Rect};
 use crate::sched::cost::CostModel;
-use crate::sched::solver::{solve_region_with_cache_view, SolverOptions, SolverStats};
+use crate::sched::solver::{
+    solve_region_cached_view, solve_region_with_cache_view, RegionOracleCache, SolverOptions,
+    SolverStats,
+};
 
 /// Result of a churn re-solve.
 #[derive(Clone, Debug)]
@@ -64,6 +67,36 @@ pub fn recover(
     cm: &CostModel,
     opts: &SolverOptions,
 ) -> RecoveryPlan {
+    recover_impl(devices, assignment, failed, cm, opts, None)
+}
+
+/// [`recover`] served by a persistent [`RegionOracleCache`] (ISSUE 9):
+/// each lost rectangle's region solve splices the cached zero-discount
+/// survivor oracle for its `(rows, cols, n)` shape instead of building a
+/// fresh [`crate::sched::oracle::SegmentOracle`] per rectangle, and
+/// across failure events the cache retires departed survivors by delta
+/// splice ([`RegionOracleCache::sync`]) rather than rebuilding. Results
+/// track [`recover`] within the 1e-6 schedule-level parity band (the
+/// splice permutes device summation order; see the cache docs).
+pub fn recover_with_cache(
+    devices: &[Device],
+    assignment: &GemmAssignment,
+    failed: &[usize],
+    cm: &CostModel,
+    opts: &SolverOptions,
+    cache: &mut RegionOracleCache,
+) -> RecoveryPlan {
+    recover_impl(devices, assignment, failed, cm, opts, Some(cache))
+}
+
+fn recover_impl(
+    devices: &[Device],
+    assignment: &GemmAssignment,
+    failed: &[usize],
+    cm: &CostModel,
+    opts: &SolverOptions,
+    mut cache: Option<&mut RegionOracleCache>,
+) -> RecoveryPlan {
     let is_failed = |d: usize| failed.contains(&d);
     let lost: Vec<&Rect> = assignment
         .rects
@@ -76,6 +109,10 @@ pub fn recover(
     // SoA view of the survivors, built once for every region re-solve (the
     // old path cloned the survivor `Device` structs per recover call).
     let view = FleetView::build_subset(devices, &survivors);
+    if let Some(c) = cache.as_deref_mut() {
+        // Departed-survivor delta splice (or reset on anything else).
+        c.sync(&survivors, view.version);
+    }
 
     let mut new_rects = Vec::new();
     let mut recompute_time: f64 = 0.0;
@@ -107,16 +144,29 @@ pub fn recover(
             })
             .collect();
 
-        let (rects, stats) = solve_region_with_cache_view(
-            &view,
-            lr.rows,
-            lr.cols,
-            assignment.shape.n,
-            &discounts,
-            cm,
-            opts,
-            hint,
-        );
+        let (rects, stats) = match cache.as_deref_mut() {
+            Some(c) => solve_region_cached_view(
+                &view,
+                lr.rows,
+                lr.cols,
+                assignment.shape.n,
+                &discounts,
+                cm,
+                opts,
+                hint,
+                c,
+            ),
+            None => solve_region_with_cache_view(
+                &view,
+                lr.rows,
+                lr.cols,
+                assignment.shape.n,
+                &discounts,
+                cm,
+                opts,
+                hint,
+            ),
+        };
         hint = Some(stats.continuous_makespan);
         // Map rect coordinates back into the global grid and survivor ids
         // back into original device indices.
@@ -311,6 +361,104 @@ mod tests {
             plan_cached.recompute_time,
             plan_cold.recompute_time
         );
+    }
+
+    #[test]
+    fn cached_recovery_tracks_uncached() {
+        // A persistent RegionOracleCache must reproduce the uncached
+        // recovery within the 1e-6 parity band across a sequence of
+        // failures (the cache syncs by retiring departed survivors), and
+        // every region solve after the first build of a shape must be
+        // served by splice.
+        use crate::sched::oracle::OracleMode;
+        let (fleet, a0) = setup(64);
+        for mode in [OracleMode::Exact, OracleMode::indexed()] {
+            let mut cache = RegionOracleCache::new(mode);
+            let mut a = a0.clone();
+            let mut failed: Vec<usize> = Vec::new();
+            for _ in 0..3 {
+                let victim = *a
+                    .active_devices()
+                    .iter()
+                    .find(|&&d| !failed.contains(&d))
+                    .expect("survivor with work");
+                failed.push(victim);
+                let plan_cold = recover(
+                    &fleet.devices,
+                    &a,
+                    &failed,
+                    &CostModel::default(),
+                    &SolverOptions::default(),
+                );
+                let plan_cached = recover_with_cache(
+                    &fleet.devices,
+                    &a,
+                    &failed,
+                    &CostModel::default(),
+                    &SolverOptions::default(),
+                    &mut cache,
+                );
+                let rel = (plan_cached.recompute_time - plan_cold.recompute_time).abs()
+                    / plan_cold.recompute_time.max(1e-12);
+                assert!(
+                    rel <= 1e-6,
+                    "{mode:?}: cached {} vs uncached {}",
+                    plan_cached.recompute_time,
+                    plan_cold.recompute_time
+                );
+                assert_eq!(plan_cached.lost_area, plan_cold.lost_area);
+                assert_eq!(plan_cached.stats.bisection_iters, 0, "{mode:?}");
+                let patched = apply(&a, &failed, &plan_cached);
+                patched
+                    .validate(&fleet.devices, &CostModel::default())
+                    .unwrap();
+                a = patched;
+            }
+            assert!(cache.splice_solves() > 0, "{mode:?}: no splice-served solves");
+            assert!(
+                cache.splice_solves() >= cache.builds(),
+                "{mode:?}: builds {} outnumber splice solves {}",
+                cache.builds(),
+                cache.splice_solves()
+            );
+        }
+    }
+
+    #[test]
+    fn region_cache_reuses_entries_across_same_shape_regions() {
+        // Two lost rects with identical (rows, cols, n) must share one
+        // base oracle: the second solve splices, it does not build.
+        use crate::sched::oracle::OracleMode;
+        let (fleet, a) = setup(64);
+        // Fabricate two equal-shaped lost rects by failing one device and
+        // re-solving twice through the same cache.
+        let victim = a.active_devices()[0];
+        let mut cache = RegionOracleCache::new(OracleMode::indexed());
+        let p1 = recover_with_cache(
+            &fleet.devices,
+            &a,
+            &[victim],
+            &CostModel::default(),
+            &SolverOptions::default(),
+            &mut cache,
+        );
+        let builds_after_first = cache.builds();
+        let p2 = recover_with_cache(
+            &fleet.devices,
+            &a,
+            &[victim],
+            &CostModel::default(),
+            &SolverOptions::default(),
+            &mut cache,
+        );
+        assert_eq!(
+            cache.builds(),
+            builds_after_first,
+            "identical re-solve must not build new base oracles"
+        );
+        assert_eq!(p1.lost_area, p2.lost_area);
+        let rel = (p1.recompute_time - p2.recompute_time).abs() / p1.recompute_time.max(1e-12);
+        assert!(rel <= 1e-6, "{} vs {}", p1.recompute_time, p2.recompute_time);
     }
 
     #[test]

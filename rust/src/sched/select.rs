@@ -39,10 +39,12 @@
 //! the mean. Expected churn loss comes from the §2.3 Poisson model
 //! ([`expected_failures`]).
 
+use std::cmp::Ordering;
 use std::collections::BTreeMap;
 
 use crate::cluster::churn::{expected_failures, ChurnConfig};
 use crate::cluster::device::Device;
+use crate::cluster::pool::{DevicePool, PoolEvent};
 use crate::model::dag::GemmDag;
 use crate::sched::assignment::Schedule;
 use crate::sched::cost::{CostModel, GemmShape, PsParams};
@@ -566,6 +568,213 @@ pub fn select_devices_incremental(
     out
 }
 
+/// Streaming admission selector (ISSUE 9): the per-epoch O(D) work of
+/// [`select_devices_incremental`] — pool snapshot clones
+/// (`planning_devices`), CVaR re-adjustment, capability re-scoring, the
+/// O(D log D) re-sort, and the `device_param_sig` delta scan — replaced
+/// by a persistent planning view patched one device per
+/// [`DevicePool`] journal event. Joins/departs/reliability updates each
+/// cost one binary-searched edit of the maintained capability order
+/// (O(log D) compare cost plus the `Vec` memmove), so a quiet epoch's
+/// selection touches only the O(k) probed prefixes and nothing that
+/// scales with the pool.
+///
+/// The maintained order replicates [`select_devices`]'s stable sort
+/// exactly: (score desc, FLOPS desc, pool index asc). Membership edits
+/// (join/depart) count toward the warm-start rule — up to
+/// [`STREAM_WARM_EDITS`] since the previous selection keep the seeded
+/// local search. The journal gives this selector an *exact* edit count,
+/// so it warm-starts through churn bursts that the sig-diff classifier
+/// behind [`select_devices_incremental`] (which can only certify a
+/// single edit) must treat as cold. Learned reliability patches re-rank
+/// the device but never demote the search to a cold sweep (they perturb
+/// scores, not membership).
+///
+/// [`SelectionOutcome::admitted`] from [`StreamSelector::select`] holds
+/// **pool indices** (the identity the journal speaks), not positions in
+/// a snapshot slice.
+pub struct StreamSelector {
+    cfg: SelectConfig,
+    /// risk-adjusted planning device per pool index; stale at departed
+    /// holes, which `order` never references
+    planning: Vec<Device>,
+    live: Vec<bool>,
+    score: Vec<f64>,
+    /// pool indices sorted by (score desc, flops desc, index asc)
+    order: Vec<usize>,
+    ref_shape: GemmShape,
+    synced_rev: u64,
+    membership_edits: usize,
+    best_n: usize,
+    seeded: bool,
+}
+
+/// Maximum journal membership edits (joins + departs) the streaming
+/// selector absorbs while still routing the next admission warm. Each
+/// edit shifts the capability order by one position, so a burst of `b`
+/// edits moves the admission optimum at most `b` prefix slots — well
+/// inside the expanding-then-contracting local search's reach. Beyond
+/// the bound the landscape may have genuinely moved, so the selector
+/// falls back to the cold geometric sweep.
+pub const STREAM_WARM_EDITS: usize = 32;
+
+fn ref_shape_of(dag: &GemmDag) -> GemmShape {
+    let g0 = dag.levels[0].gemms[0];
+    GemmShape::new(g0.m, g0.n, g0.q, g0.count)
+}
+
+impl StreamSelector {
+    /// Build the selector's planning view from the pool's current
+    /// selectable set — the one O(D log D) pass; every later change
+    /// arrives through the journal.
+    pub fn new(pool: &DevicePool, dag: &GemmDag, cm: &CostModel, cfg: SelectConfig) -> StreamSelector {
+        let ref_shape = ref_shape_of(dag);
+        let mut s = StreamSelector {
+            cfg,
+            planning: Vec::with_capacity(pool.len()),
+            live: vec![false; pool.len()],
+            score: vec![0.0; pool.len()],
+            order: Vec::new(),
+            ref_shape,
+            synced_rev: pool.revision(),
+            membership_edits: 0,
+            best_n: 0,
+            seeded: false,
+        };
+        for i in 0..pool.len() {
+            s.planning.push(s.planning_of(pool, i, cm));
+        }
+        let mut order: Vec<usize> = pool.selectable_iter().collect();
+        for &i in &order {
+            s.live[i] = true;
+            s.score[i] = cm.max_area_in(&s.planning[i], SCORE_HORIZON_S, &s.ref_shape);
+        }
+        order.sort_by(|&a, &b| s.rank(a, b));
+        s.order = order;
+        s
+    }
+
+    fn planning_of(&self, pool: &DevicePool, i: usize, _cm: &CostModel) -> Device {
+        let d = pool.planning_device(i);
+        match self.cfg.cvar {
+            Some((alpha, beta)) => risk_adjusted(std::slice::from_ref(&d), alpha, beta)
+                .pop()
+                .expect("one device in, one out"),
+            None => d,
+        }
+    }
+
+    /// The total order behind the maintained capability ranking —
+    /// byte-for-byte the comparator of [`capability_order`]'s stable
+    /// sort, with the stability tie broken explicitly by pool index.
+    fn rank(&self, a: usize, b: usize) -> Ordering {
+        self.score[b]
+            .total_cmp(&self.score[a])
+            .then(self.planning[b].flops.total_cmp(&self.planning[a].flops))
+            .then(a.cmp(&b))
+    }
+
+    fn order_insert(&mut self, idx: usize) {
+        let pos = self.order.partition_point(|&o| self.rank(o, idx) == Ordering::Less);
+        self.order.insert(pos, idx);
+    }
+
+    fn order_remove(&mut self, idx: usize) {
+        let pos = self.order.partition_point(|&o| self.rank(o, idx) == Ordering::Less);
+        debug_assert_eq!(self.order.get(pos), Some(&idx), "order out of sync");
+        self.order.remove(pos);
+    }
+
+    /// Drain the pool journal since the last sync, patching one device
+    /// per event. Join/depart events count as membership edits (the
+    /// warm-start rule); reliability events only re-rank.
+    pub fn sync(&mut self, pool: &DevicePool, cm: &CostModel) {
+        let events: Vec<PoolEvent> = pool.events_since(self.synced_rev).to_vec();
+        for ev in events {
+            match ev {
+                PoolEvent::Join { idx } => {
+                    let d = self.planning_of(pool, idx, cm);
+                    let sc = cm.max_area_in(&d, SCORE_HORIZON_S, &self.ref_shape);
+                    if idx == self.planning.len() {
+                        self.planning.push(d);
+                        self.live.push(true);
+                        self.score.push(sc);
+                    } else {
+                        // replayed or out-of-band join: patch in place
+                        if self.live[idx] {
+                            self.order_remove(idx);
+                        }
+                        self.planning[idx] = d;
+                        self.live[idx] = true;
+                        self.score[idx] = sc;
+                    }
+                    self.order_insert(idx);
+                    self.membership_edits += 1;
+                }
+                PoolEvent::Depart { idx } => {
+                    if self.live[idx] {
+                        self.order_remove(idx);
+                        self.live[idx] = false;
+                        self.membership_edits += 1;
+                    }
+                }
+                PoolEvent::Reliability { idx } => {
+                    if self.live[idx] {
+                        self.order_remove(idx);
+                        self.planning[idx] = self.planning_of(pool, idx, cm);
+                        self.score[idx] =
+                            cm.max_area_in(&self.planning[idx], SCORE_HORIZON_S, &self.ref_shape);
+                        self.order_insert(idx);
+                    }
+                }
+            }
+        }
+        self.synced_rev = pool.revision();
+    }
+
+    /// Number of selectable devices in the maintained view.
+    pub fn len(&self) -> usize {
+        self.order.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+
+    /// Run the admission optimization over the maintained view. Routes
+    /// warm (seeded local search) when at most [`STREAM_WARM_EDITS`]
+    /// membership edits arrived since the previous selection, cold
+    /// otherwise — a wider warm window than
+    /// [`select_devices_incremental`]'s single-edit contract, justified
+    /// by the journal's exact edit count; observable through the same
+    /// [`crate::sched::fastpath::CacheStats`] counters.
+    pub fn select(
+        &mut self,
+        pool: &DevicePool,
+        dag: &GemmDag,
+        cm: &CostModel,
+        ps: &PsParams,
+        cache: &mut SolverCache,
+    ) -> SelectionOutcome {
+        let _sp = crate::span!("select", candidates = self.order.len());
+        debug_assert_eq!(ref_shape_of(dag), self.ref_shape, "selector built for another DAG");
+        self.sync(pool, cm);
+        assert!(!self.order.is_empty(), "empty candidate pool");
+        let warm = self.seeded && self.membership_edits <= STREAM_WARM_EDITS;
+        cache.note_selection(warm);
+        let seed = if warm {
+            SweepSeed::Warm { seed_n: self.best_n }
+        } else {
+            SweepSeed::Cold
+        };
+        let out = run_admission(&self.planning, &self.order, dag, cm, ps, &self.cfg, cache, seed);
+        self.best_n = out.best_prefix;
+        self.seeded = true;
+        self.membership_edits = 0;
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -788,6 +997,145 @@ mod tests {
             &shrunk, &dag, &cm, &ps, &cfg, &mut cache, &mut state,
         );
         assert_eq!(cache.stats().selection_warm_starts, 1);
+    }
+
+    #[test]
+    fn stream_selector_matches_snapshot_selection() {
+        // The streaming planning view must reproduce the snapshot path
+        // exactly: same admitted pool indices, bitwise-equal objective,
+        // across cold start, a depart, a join, and a quiet epoch.
+        use crate::cluster::pool::{DevicePool, PoolConfig};
+        let spec = ModelSpec::preset("OPT-13B").unwrap();
+        let dag = GemmDag::build(&spec, &TrainSetup::default());
+        let cm = CostModel::default();
+        let ps = PsParams::default();
+        let cfg = SelectConfig::default();
+        let pool_cfg = PoolConfig {
+            fleet: FleetConfig::default().with_devices(64),
+            ..PoolConfig::default()
+        };
+        let mut pool = DevicePool::sample(&pool_cfg);
+
+        let mut stream = StreamSelector::new(&pool, &dag, &cm, cfg.clone());
+        let mut stream_cache = SolverCache::new();
+        let mut snap_cache = SolverCache::new();
+        let mut snap_state = SelectionState::new();
+
+        for step in 0..4 {
+            let selectable = pool.selectable();
+            let candidates = pool.planning_devices(&selectable);
+            let snap = select_devices_incremental(
+                &candidates, &dag, &cm, &ps, &cfg, &mut snap_cache, &mut snap_state,
+            );
+            let snap_admitted: Vec<usize> =
+                snap.admitted.iter().map(|&j| selectable[j]).collect();
+            let out = stream.select(&pool, &dag, &cm, &ps, &mut stream_cache);
+            assert_eq!(out.admitted, snap_admitted, "step {step}");
+            assert_eq!(
+                out.objective.to_bits(),
+                snap.objective.to_bits(),
+                "step {step}"
+            );
+            assert_eq!(out.best_prefix, snap.best_prefix, "step {step}");
+            match step {
+                0 => pool.depart(5),
+                1 => {
+                    let _ = pool.join();
+                }
+                _ => {} // quiet epoch: both paths must warm-start
+            }
+        }
+        // both routes took the same warm/cold trajectory
+        assert_eq!(
+            stream_cache.stats().selection_warm_starts,
+            snap_cache.stats().selection_warm_starts
+        );
+        assert_eq!(
+            stream_cache.stats().selection_cold_sweeps,
+            snap_cache.stats().selection_cold_sweeps
+        );
+    }
+
+    #[test]
+    fn stream_selector_warm_starts_through_churn_bursts() {
+        // The journal gives the streaming selector an exact edit count,
+        // so a small churn burst (> 1 edit — cold for the sig-diff
+        // classifier) still routes warm; a burst past STREAM_WARM_EDITS
+        // falls back to the cold geometric sweep.
+        use crate::cluster::pool::{DevicePool, PoolConfig};
+        let spec = ModelSpec::preset("OPT-13B").unwrap();
+        let dag = GemmDag::build(&spec, &TrainSetup::default());
+        let cm = CostModel::default();
+        let ps = PsParams::default();
+        let pool_cfg = PoolConfig {
+            fleet: FleetConfig::default().with_devices(64),
+            ..PoolConfig::default()
+        };
+        let mut pool = DevicePool::sample(&pool_cfg);
+        let mut stream = StreamSelector::new(&pool, &dag, &cm, SelectConfig::default());
+        let mut cache = SolverCache::new();
+        let _ = stream.select(&pool, &dag, &cm, &ps, &mut cache);
+        assert_eq!(cache.stats().selection_cold_sweeps, 1);
+
+        // burst of 3 edits: two departs + one join
+        pool.depart(3);
+        pool.depart(7);
+        let _ = pool.join();
+        let out = stream.select(&pool, &dag, &cm, &ps, &mut cache);
+        assert!(!out.admitted.is_empty());
+        assert_eq!(cache.stats().selection_cold_sweeps, 1, "{:?}", cache.stats());
+        assert_eq!(cache.stats().selection_warm_starts, 1, "{:?}", cache.stats());
+
+        // burst past the bound: STREAM_WARM_EDITS + 1 edits demote to cold
+        for i in 0..=STREAM_WARM_EDITS {
+            if i % 2 == 0 {
+                let _ = pool.join();
+            } else {
+                let victim = pool.selectable()[0];
+                pool.depart(victim);
+            }
+        }
+        let out = stream.select(&pool, &dag, &cm, &ps, &mut cache);
+        assert!(!out.admitted.is_empty());
+        assert_eq!(cache.stats().selection_cold_sweeps, 2, "{:?}", cache.stats());
+        assert_eq!(cache.stats().selection_warm_starts, 1, "{:?}", cache.stats());
+    }
+
+    #[test]
+    fn stream_selector_reliability_patch_reranks_without_cold_sweep() {
+        // A learned-reliability journal event re-ranks one device in the
+        // maintained order but never demotes the next selection to a cold
+        // sweep — reliability is belief, not membership.
+        use crate::cluster::pool::{DevicePool, LearnConfig, PoolConfig};
+        let spec = ModelSpec::preset("OPT-13B").unwrap();
+        let dag = GemmDag::build(&spec, &TrainSetup::default());
+        let cm = CostModel::default();
+        let ps = PsParams::default();
+        let pool_cfg = PoolConfig {
+            fleet: FleetConfig::default().with_devices(48),
+            learn: LearnConfig {
+                enabled: true,
+                ..LearnConfig::default()
+            },
+            ..PoolConfig::default()
+        };
+        let mut pool = DevicePool::sample(&pool_cfg);
+        let mut stream = StreamSelector::new(&pool, &dag, &cm, SelectConfig::default());
+        let mut cache = SolverCache::new();
+        let first = stream.select(&pool, &dag, &cm, &ps, &mut cache);
+        assert!(!first.admitted.is_empty());
+        // hammer one admitted device with service observations
+        let victim = first.admitted[0];
+        for _ in 0..8 {
+            let _ = pool.observe_service(victim);
+        }
+        let rev = pool.revision();
+        assert!(rev > 0, "posterior moves must be journaled");
+        let second = stream.select(&pool, &dag, &cm, &ps, &mut cache);
+        assert!(!second.admitted.is_empty());
+        let stats = cache.stats();
+        assert_eq!(stats.selection_cold_sweeps, 1, "{stats:?}");
+        assert_eq!(stats.selection_warm_starts, 1, "{stats:?}");
     }
 
     #[test]

@@ -45,11 +45,23 @@
 //! the in-flight batch (the synchronous-training loss model) and the
 //! estimate is re-evaluated on the survivors' delivered capabilities.
 //! [`run_session`] is the CLEAVE-with-warm-cache special case.
+//!
+//! [`run_session_streaming`] is the O(churn) variant of that special
+//! case: membership is maintained by a journal-driven
+//! [`StreamSelector`], the active planning view is one persistent
+//! [`crate::cluster::fleet::FleetView`] patched in place, re-solves ride
+//! the delta-native fast path ([`solve_dag_cached_delta`]), recovery
+//! re-uses breakpoint oracles across failures ([`RegionOracleCache`]),
+//! and — when the pool's learning is enabled — each executed batch feeds
+//! service observations back into the reliability posteriors.
+
+use std::collections::HashSet;
 
 use crate::api::planner::{CleavePlanner, Plan, PlanInput, Planner};
 use crate::cluster::churn::{events, ChurnConfig, ChurnEvent};
 use crate::cluster::device::Device;
-use crate::cluster::pool::DevicePool;
+use crate::cluster::fleet::{FleetDelta, FleetView};
+use crate::cluster::pool::{DevicePool, PoolEvent};
 use crate::model::dag::GemmDag;
 use crate::obs::metrics::{Counter, Gauge, Histogram};
 use crate::obs::timeline::SessionEvent;
@@ -58,8 +70,11 @@ use crate::sched::assignment::Schedule;
 use crate::sched::cost::{CostModel, GemmShape, PsParams};
 use crate::sched::fastpath::{CacheStats, SolverCache};
 use crate::sched::oracle::OracleMode;
-use crate::sched::recovery::recover;
-use crate::sched::select::{select_devices_incremental, SelectConfig, SelectionState};
+use crate::sched::recovery::{recover, recover_with_cache};
+use crate::sched::select::{
+    select_devices_incremental, SelectConfig, SelectionState, StreamSelector,
+};
+use crate::sched::solver::{solve_dag_cached_delta, RegionOracleCache};
 use crate::sim::batch::{simulate_batch, SimConfig};
 use crate::sim::engine::Engine;
 use crate::util::json::{obj, Json};
@@ -617,6 +632,289 @@ pub fn run_session_observed(
     }
 }
 
+/// One streaming membership epoch: collect the reliability re-estimates
+/// journaled since the previous epoch, run the admission optimization
+/// over the maintained selector ranking, and patch the persistent
+/// planning [`FleetView`] in place — returning the [`FleetDelta`] that
+/// tells the delta-native solver exactly what changed.
+///
+/// Cost is O(churn · log D): everything is driven by the journal slice
+/// since the previous epoch plus the size of the membership diff. A
+/// quiet epoch returns [`FleetDelta::Identical`] without touching the
+/// view or its version, so the downstream solve is a memo hit and the
+/// whole epoch does no O(D) work. A reliability re-estimate of a
+/// continuing active device is encoded as retire + re-append at the
+/// tail — the splice-friendly form of an in-place parameter change (the
+/// pool's epsilon gate keeps converged devices out of the journal, so
+/// these patches die out as posteriors settle).
+#[allow(clippy::too_many_arguments)]
+fn stream_epoch(
+    pool: &mut DevicePool,
+    selector: &mut StreamSelector,
+    view: &mut FleetView,
+    active: &mut Vec<usize>,
+    ver: &mut u64,
+    last_rev: &mut u64,
+    ctx: &Ctx,
+    cache: &mut SolverCache,
+    batch_index: usize,
+    decisions: &mut Vec<SelectionDecision>,
+) -> FleetDelta {
+    let changed: HashSet<usize> = pool
+        .events_since(*last_rev)
+        .iter()
+        .filter_map(|e| match e {
+            PoolEvent::Reliability { idx } => Some(*idx),
+            _ => None,
+        })
+        .collect();
+    let out = selector.select(pool, ctx.dag, ctx.cm, ctx.ps, cache);
+    *last_rev = pool.revision();
+    let prev_active = pool.active();
+    let chosen = out.admitted; // pool indices, ascending
+    let new_set: HashSet<usize> = chosen.iter().copied().collect();
+    // Old view positions to retire: dropped by the decision, or patched
+    // by a reliability re-estimate. Everything else is retained in place.
+    let mut retired: Vec<usize> = Vec::new();
+    let mut kept: HashSet<usize> = HashSet::new();
+    for (p, &idx) in active.iter().enumerate() {
+        if !new_set.contains(&idx) || changed.contains(&idx) {
+            retired.push(p);
+        } else {
+            kept.insert(idx);
+        }
+    }
+    let appends: Vec<usize> = chosen.iter().copied().filter(|i| !kept.contains(i)).collect();
+    pool.set_active(&chosen);
+    let evicted = prev_active.iter().filter(|&&i| !new_set.contains(&i)).count();
+    decisions.push(SelectionDecision {
+        batch_index,
+        pool_size: selector.len(),
+        admitted: chosen.len(),
+        evicted,
+        stragglers_admitted: pool.n_stragglers(&chosen),
+        t_star_planned: out.t_star,
+        objective: out.objective,
+        probes: out.probes,
+    });
+    if retired.is_empty() && appends.is_empty() {
+        return FleetDelta::Identical;
+    }
+    for &p in retired.iter().rev() {
+        view.remove_at(p);
+        active.remove(p);
+    }
+    let appended_from = view.len();
+    for &idx in &appends {
+        view.push_device(&pool.planning_device(idx));
+        active.push(idx);
+    }
+    *ver += 1;
+    view.set_version(*ver);
+    FleetDelta::Churn {
+        retired,
+        appended_from,
+    }
+}
+
+/// Run one multi-batch session end-to-end on the streaming membership
+/// path: a [`StreamSelector`] maintains the capability ranking against
+/// the pool's event journal, the active planning view is one persistent
+/// [`FleetView`] patched in place (`active[p]` is the pool index behind
+/// view position `p`), every re-solve routes through
+/// [`solve_dag_cached_delta`] with an explicit [`FleetDelta`], and §4.2
+/// recovery re-uses breakpoint oracles across failures through a
+/// session-wide [`RegionOracleCache`]. Per-epoch planning cost is
+/// O(churn · log D); a quiet epoch does no O(D) work at all.
+///
+/// When the pool's [`crate::cluster::pool::LearnConfig`] is enabled,
+/// every executed batch feeds one service observation per active device
+/// into the pool's reliability posteriors
+/// ([`DevicePool::observe_service`]); the journaled belief moves re-rank
+/// the selector and patch the planning view at the next epoch, so
+/// admission converges onto delivered rather than advertised capability
+/// — the learned column of the Fig. 11 selection bench. With learning
+/// off the calls are no-ops and the journal stays quiet.
+///
+/// Semantically this is [`run_session`] at [`Policy::CostGuided`]: the
+/// same churn stream, admission objective, and recovery accounting. On a
+/// churn-free pool with learning off it reproduces the legacy batch
+/// times bitwise (the planning view holds the same devices in the same
+/// order, so the solves are identical — pinned in the tests); under
+/// churn the two paths agree only up to the solver's documented
+/// incremental-parity band, because splices permute device order.
+pub fn run_session_streaming(
+    pool: &mut DevicePool,
+    dag: &GemmDag,
+    cm: &CostModel,
+    ps: &PsParams,
+    cfg: &SessionConfig,
+) -> SessionReport {
+    assert!(cfg.n_batches > 0, "session needs at least one batch");
+    assert_eq!(
+        cfg.policy,
+        Policy::CostGuided,
+        "the streaming path plans on the reliability-discounted view"
+    );
+    let ctx = Ctx { dag, cm, ps, cfg };
+    let mut rng = Rng::new(cfg.seed);
+    let mut cache = SolverCache::new();
+    let mut regions = RegionOracleCache::new(OracleMode::default());
+    let mut selector = StreamSelector::new(pool, dag, cm, cfg.select.clone());
+    let mut decisions: Vec<SelectionDecision> = Vec::new();
+    let mut batch_times: Vec<f64> = Vec::with_capacity(cfg.n_batches);
+    let mut recovery_latencies: Vec<f64> = Vec::new();
+    let (mut failures, mut joins) = (0usize, 0usize);
+
+    // The persistent planning view. Stamped with a monotone patch
+    // revision on every content change — never re-fingerprinted (that
+    // would be the per-epoch O(D) scan this path deletes).
+    let mut view = FleetView::build(&[]);
+    let mut active: Vec<usize> = Vec::new();
+    let mut ver: u64 = 0;
+    let mut last_rev: u64 = pool.revision();
+
+    let delta = stream_epoch(
+        pool,
+        &mut selector,
+        &mut view,
+        &mut active,
+        &mut ver,
+        &mut last_rev,
+        &ctx,
+        &mut cache,
+        0,
+        &mut decisions,
+    );
+    let (mut schedule, _) =
+        solve_dag_cached_delta(&view, &delta, dag, cm, ps, &cfg.select.opts, &mut cache);
+    let mut delivered = pool.delivered_devices(&active);
+    let mut clean_time = simulate_batch(&delivered, dag, &schedule, cm, &cfg.sim).batch_time;
+
+    let mut eng: Engine<ChurnEvent> = Engine::new();
+    let horizon = (clean_time * cfg.n_batches as f64 * 30.0).max(7200.0);
+    for e in events(&cfg.churn, active.len(), horizon, &mut rng) {
+        eng.at(e.time(), e);
+    }
+
+    let mut t = 0.0f64;
+    for bi in 0..cfg.n_batches {
+        if bi > 0 && cfg.epoch_batches > 0 && bi % cfg.epoch_batches == 0 {
+            let delta = stream_epoch(
+                pool,
+                &mut selector,
+                &mut view,
+                &mut active,
+                &mut ver,
+                &mut last_rev,
+                &ctx,
+                &mut cache,
+                bi,
+                &mut decisions,
+            );
+            if !matches!(delta, FleetDelta::Identical) {
+                let (s, _) = solve_dag_cached_delta(
+                    &view,
+                    &delta,
+                    dag,
+                    cm,
+                    ps,
+                    &cfg.select.opts,
+                    &mut cache,
+                );
+                schedule = s;
+                delivered = pool.delivered_devices(&active);
+                clean_time = simulate_batch(&delivered, dag, &schedule, cm, &cfg.sim).batch_time;
+            }
+        }
+        let fanout = active.len() as f64 * cfg.select.ps_conn_s;
+        let mut end = t + clean_time + fanout;
+        while let Some((et, ev)) = eng.next() {
+            if et >= end {
+                eng.at(et, ev); // beyond this batch: requeue
+                break;
+            }
+            match ev {
+                ChurnEvent::Fail { device_index, .. } => {
+                    if active.len() <= 1 {
+                        continue; // keep the last device alive
+                    }
+                    let pos = device_index % active.len();
+                    failures += 1;
+                    let g = dag.levels[0].gemms[0];
+                    let shape = GemmShape::new(g.m, g.n, g.q, g.count);
+                    let assignment = &schedule.by_shape[&shape];
+                    let lat = recover_with_cache(
+                        &delivered,
+                        assignment,
+                        &[pos],
+                        cm,
+                        &cfg.select.opts,
+                        &mut regions,
+                    )
+                    .total_latency();
+                    recovery_latencies.push(lat);
+                    end += lat;
+                    // Permanent departure: one O(churn) view patch, one
+                    // incremental re-solve over the survivors.
+                    pool.depart(active[pos]);
+                    view.remove_at(pos);
+                    active.remove(pos);
+                    ver += 1;
+                    view.set_version(ver);
+                    let delta = FleetDelta::Churn {
+                        retired: vec![pos],
+                        appended_from: view.len(),
+                    };
+                    let (s, _) = solve_dag_cached_delta(
+                        &view,
+                        &delta,
+                        dag,
+                        cm,
+                        ps,
+                        &cfg.select.opts,
+                        &mut cache,
+                    );
+                    schedule = s;
+                    delivered = pool.delivered_devices(&active);
+                    clean_time =
+                        simulate_batch(&delivered, dag, &schedule, cm, &cfg.sim).batch_time;
+                }
+                ChurnEvent::Join { .. } => {
+                    // Diurnal thinning of the inhomogeneous join process.
+                    if rng.uniform() < pool.availability_factor(et) {
+                        pool.join();
+                        joins += 1;
+                    }
+                }
+            }
+        }
+        // Learned reliability: one service observation per active device
+        // per executed batch (a no-op unless the pool's learning is on).
+        for p in 0..active.len() {
+            pool.observe_service(active[p]);
+        }
+        batch_times.push(end - t);
+        t = end;
+    }
+
+    let s = summarize(&batch_times);
+    let wall: f64 = batch_times.iter().sum();
+    let lost: f64 = recovery_latencies.iter().sum();
+    SessionReport {
+        planner: "CLEAVE-streaming".to_string(),
+        mean_batch_s: s.mean,
+        p95_batch_s: s.p95,
+        effective_throughput: if wall > 0.0 { (wall - lost) / wall } else { 1.0 },
+        solver: cache.stats(),
+        batch_times,
+        recovery_latencies,
+        decisions,
+        failures,
+        joins,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -911,6 +1209,122 @@ mod tests {
             &PsParams::default(),
             &SessionConfig::default(),
             &mut CloudPlanner::new(),
+        );
+    }
+
+    #[test]
+    fn streaming_session_matches_legacy_on_a_quiet_pool() {
+        // On a churn-free pool with learning off, the streaming path sees
+        // exactly the planning devices the legacy path materializes per
+        // epoch, in the same order — so batch times and decisions must be
+        // bitwise identical, while quiet epochs do no O(D) work.
+        let dag = dag();
+        let cm = CostModel::default();
+        let ps = PsParams::default();
+        let cfg = SessionConfig {
+            n_batches: 6,
+            epoch_batches: 2,
+            churn: no_churn(),
+            policy: Policy::CostGuided,
+            ..SessionConfig::default()
+        };
+        let legacy = {
+            let mut pool = DevicePool::sample(&pool_cfg(48, 0.3));
+            run_session(&mut pool, &dag, &cm, &ps, &cfg)
+        };
+        let streaming = {
+            let mut pool = DevicePool::sample(&pool_cfg(48, 0.3));
+            run_session_streaming(&mut pool, &dag, &cm, &ps, &cfg)
+        };
+        assert_eq!(legacy.batch_times.len(), streaming.batch_times.len());
+        for (a, b) in legacy.batch_times.iter().zip(&streaming.batch_times) {
+            assert_eq!(a.to_bits(), b.to_bits(), "{a} vs {b}");
+        }
+        assert_eq!(legacy.decisions.len(), streaming.decisions.len());
+        for (a, b) in legacy.decisions.iter().zip(&streaming.decisions) {
+            assert_eq!(a.admitted, b.admitted);
+            assert_eq!(a.t_star_planned.to_bits(), b.t_star_planned.to_bits());
+            assert_eq!(a.objective.to_bits(), b.objective.to_bits());
+        }
+        // one cold sweep at batch 0, every later epoch warm
+        assert_eq!(streaming.solver.selection_cold_sweeps, 1);
+        assert_eq!(streaming.solver.selection_warm_starts, 2);
+    }
+
+    #[test]
+    fn streaming_session_under_churn_stays_incremental() {
+        let mut pool = DevicePool::sample(&pool_cfg(32, 0.0));
+        let dag = dag();
+        let cfg = SessionConfig {
+            n_batches: 5,
+            epoch_batches: 2,
+            churn: ChurnConfig {
+                fail_rate_per_hour: 20.0,
+                join_rate_per_hour: 0.0,
+            },
+            policy: Policy::CostGuided,
+            ..SessionConfig::default()
+        };
+        let r = run_session_streaming(
+            &mut pool,
+            &dag,
+            &CostModel::default(),
+            &PsParams::default(),
+            &cfg,
+        );
+        assert_eq!(r.batch_times.len(), 5);
+        assert!(r.failures > 0, "aggressive churn must produce failures");
+        assert_eq!(r.recovery_latencies.len(), r.failures);
+        assert!(r.recovery_latencies.iter().all(|&x| x >= 0.0));
+        assert!(r.recovery_latencies.iter().sum::<f64>() > 0.0);
+        assert!(r.effective_throughput < 1.0);
+        // every failure re-solve and every churn-epoch delta must splice
+        // the cached oracles, never rebuild them
+        assert!(
+            r.solver.incremental_updates > 0,
+            "churn re-solves must be incremental: {:?}",
+            r.solver
+        );
+        assert_eq!(r.solver.full_rebuilds, 0, "{:?}", r.solver);
+    }
+
+    #[test]
+    fn streaming_session_learns_reliability_posteriors() {
+        use crate::cluster::pool::LearnConfig;
+        let dag = dag();
+        let cfg = SessionConfig {
+            n_batches: 9,
+            epoch_batches: 3,
+            churn: no_churn(),
+            policy: Policy::CostGuided,
+            ..SessionConfig::default()
+        };
+        let mut pc = pool_cfg(48, 0.3);
+        pc.learn = LearnConfig {
+            enabled: true,
+            ..LearnConfig::default()
+        };
+        let mut pool = DevicePool::sample(&pc);
+        let r = run_session_streaming(
+            &mut pool,
+            &dag,
+            &CostModel::default(),
+            &PsParams::default(),
+            &cfg,
+        );
+        assert_eq!(r.batch_times.len(), 9);
+        // per-batch service observations must journal belief moves...
+        assert!(
+            pool.revision() > 0,
+            "learning must journal reliability moves"
+        );
+        // ...and admission must not get worse at spotting stragglers as
+        // the posteriors converge onto delivered capability
+        let first = r.decisions.first().unwrap();
+        let last = r.decisions.last().unwrap();
+        assert!(
+            last.stragglers_admitted <= first.stragglers_admitted,
+            "converged beliefs must not admit more stragglers: {first:?} -> {last:?}"
         );
     }
 

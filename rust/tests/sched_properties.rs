@@ -277,6 +277,122 @@ fn prop_churn_incremental_solve_is_bitwise_rebuild() {
 }
 
 #[test]
+fn prop_delta_native_solve_matches_diff_path() {
+    // The FleetDelta-native entry (solve_dag_cached_delta) must track the
+    // diff-derived path (solve_dag_cached) bit for bit in exact mode
+    // across random join/leave bursts: the caller-provided delta and the
+    // O(D) signature diff describe the same churn, so the spliced oracles
+    // — and every downstream rectangle — are identical, while the delta
+    // path never materializes signatures or runs the scan. Both caches
+    // must stay incremental (no full rebuilds) throughout.
+    use cleave::cluster::fleet::{FleetDelta, FleetView};
+    use cleave::sched::solver::{solve_dag_cached, solve_dag_cached_delta};
+    let spec = ModelSpec::preset("OPT-13B").unwrap();
+    let dag = GemmDag::build(&spec, &TrainSetup::default());
+    check(
+        Config {
+            cases: 6,
+            seed: 0xDE17_A001,
+            max_size: 40,
+        },
+        |rng, size| {
+            let d = 18 + (size % 31);
+            let cfg = FleetConfig {
+                n_devices: d,
+                phone_fraction: rng.uniform(),
+                straggler_fraction: 0.0,
+                straggler_factor: 10.0,
+                utilization: 1.0,
+                seed: rng.next_u64(),
+            };
+            (Fleet::sample(&cfg), rng.next_u64())
+        },
+        |(fleet, churn_seed)| {
+            let cm = CostModel::default();
+            let ps = PsParams::default();
+            let opts = SolverOptions::default();
+            let mut devices = fleet.devices.clone();
+            // delta-native side: one persistent view, stamped with a
+            // monotone patch revision (the streaming-session convention)
+            let mut view = FleetView::build(&devices);
+            let mut ver: u64 = 1;
+            view.set_version(ver);
+            let mut delta_cache = SolverCache::new();
+            let (d0, _) = solve_dag_cached_delta(
+                &view,
+                &FleetDelta::Identical,
+                &dag,
+                &cm,
+                &ps,
+                &opts,
+                &mut delta_cache,
+            );
+            // diff-derived side: rebuilt views + signature diffs
+            let mut diff_cache = SolverCache::new();
+            let (s0, _) = solve_dag_cached(&devices, &dag, &cm, &ps, &opts, &mut diff_cache);
+            if d0.gemm_time.to_bits() != s0.gemm_time.to_bits() {
+                return false;
+            }
+            let mut rng = Rng::new(*churn_seed);
+            let join_cfg = FleetConfig {
+                utilization: 1.0,
+                ..FleetConfig::default()
+            };
+            for step in 0..5u64 {
+                // one churn burst: 0-2 leaves at random positions plus
+                // 1-2 tail joins, applied identically to both sides
+                let leaves = if devices.len() > 14 {
+                    rng.below(3) as usize
+                } else {
+                    0
+                };
+                let mut retired = rng.choose_k(devices.len(), leaves);
+                retired.sort_unstable();
+                for &p in retired.iter().rev() {
+                    devices.remove(p);
+                    view.remove_at(p);
+                }
+                let joins = 1 + rng.below(2) as usize;
+                let appended_from = view.len();
+                for j in 0..joins as u64 {
+                    let d = cleave::cluster::fleet::sample_device(
+                        &mut rng,
+                        &join_cfg,
+                        (70_000 + step * 10 + j) as usize,
+                    );
+                    view.push_device(&d);
+                    devices.push(d);
+                }
+                ver += 1;
+                view.set_version(ver);
+                let delta = FleetDelta::Churn {
+                    retired,
+                    appended_from,
+                };
+                let (inc, is) =
+                    solve_dag_cached_delta(&view, &delta, &dag, &cm, &ps, &opts, &mut delta_cache);
+                let (dif, ds) = solve_dag_cached(&devices, &dag, &cm, &ps, &opts, &mut diff_cache);
+                if inc.gemm_time.to_bits() != dif.gemm_time.to_bits()
+                    || inc.opt_tail.to_bits() != dif.opt_tail.to_bits()
+                {
+                    return false;
+                }
+                for (shape, a) in &inc.by_shape {
+                    if a.rects != dif.by_shape[shape].rects {
+                        return false;
+                    }
+                }
+                if is.bisection_iters != 0 || ds.bisection_iters != 0 {
+                    return false;
+                }
+            }
+            let st = delta_cache.stats();
+            st.incremental_updates > 0 && st.full_rebuilds == 0
+        },
+    );
+}
+
+#[test]
 fn prop_indexed_within_tol() {
     // The OracleMode::Indexed tolerance contract: the Fenwick-indexed
     // oracle's totals and analytic roots agree with exact mode within
