@@ -1,0 +1,181 @@
+//! Shard-death rebalance cost (ISSUE 10): migration latency and steps/s
+//! before / during / after killing a whole PS shard, at shard counts
+//! {2, 4, 8}.
+//!
+//! The workload mirrors `ps_shard`: optimizer-bound, equal-size tensors,
+//! staleness 0, engine-less shards (the bench prices checkpoint + replay +
+//! re-home, not GEMM traffic). One shard — the one owning the most
+//! tensors — is killed by an injected `ShardFault::KillShard` after the
+//! "before" window; the single push that absorbs the kill is the "during"
+//! measurement; the remaining pushes are "after", running one shard down
+//! with the dead shard's tensors adopted by survivors.
+//!
+//! Gates (after the artifact is written): exactly one migration per shard
+//! count, its measured latency inside the `MigrationRecord::parity`
+//! envelope, and post-kill throughput ≥ 0.25× pre-kill (survivors carry
+//! the full model; the price is parallelism, not correctness).
+
+use std::time::Instant;
+
+use cleave::coordinator::optimizer::AdamConfig;
+use cleave::coordinator::shard::{ShardConfig, ShardFault, ShardedPs};
+use cleave::util::bench::{bench_setup, write_artifact};
+use cleave::util::json::{obj, Json};
+use cleave::util::rng::Rng;
+use cleave::util::table::Table;
+
+const SHARD_COUNTS: [usize; 3] = [2, 4, 8];
+/// Checkpoint cadence: sparse enough that the kill lands between
+/// snapshots and the migration must replay from the gradient log.
+const CHECKPOINT_EVERY: u64 = 4;
+
+fn main() {
+    let (args, mut rep) = bench_setup(
+        "shard_rebalance",
+        "migration latency + steps/s before/during/after a shard kill",
+    );
+    let (n_tensors, elems, window) = if args.smoke {
+        (16usize, 8_192usize, 6u64)
+    } else {
+        (32, 32_768, 18)
+    };
+    let mut rng = Rng::new(4242);
+    let params: Vec<Vec<f32>> = (0..n_tensors)
+        .map(|_| (0..elems).map(|_| 0.02 * rng.normal() as f32).collect())
+        .collect();
+    let grads: Vec<Vec<f32>> = params
+        .iter()
+        .map(|p| p.iter().map(|&x| 1e-3 * x + 1e-4).collect())
+        .collect();
+
+    let mut table = Table::new(&[
+        "shards",
+        "pre steps/s",
+        "kill push (ms)",
+        "post steps/s",
+        "migrate (ms)",
+        "tensors",
+        "replayed",
+    ]);
+    let mut rows: Vec<Json> = Vec::new();
+    let mut gates: Vec<(usize, f64, f64)> = Vec::new(); // (shards, pre, post)
+    let mut last_counters: Vec<(String, u64)> = Vec::new();
+    for &shards in &SHARD_COUNTS {
+        // Kill the shard carrying the most tensors — the worst case for
+        // both restore bytes and re-home fan-out.
+        let probe = ShardedPs::new(&params, AdamConfig::default(), ShardConfig::new(shards));
+        let victim = probe
+            .partition()
+            .iter()
+            .enumerate()
+            .max_by_key(|(si, owned)| (owned.len(), usize::MAX - si))
+            .map(|(si, _)| si)
+            .expect("at least one shard");
+        drop(probe);
+
+        let cfg = ShardConfig::new(shards)
+            .with_checkpoint_interval(CHECKPOINT_EVERY)
+            .with_fault(victim, ShardFault::KillShard { at_step: window });
+        let mut ps = ShardedPs::new(&params, AdamConfig::default(), cfg);
+        let mut pulled = params.clone();
+
+        // Before: `window` pushes, fault not yet due.
+        let t0 = Instant::now();
+        for _ in 0..window {
+            ps.push(&grads);
+            ps.pull(&mut pulled);
+        }
+        let pre_s = t0.elapsed().as_secs_f64().max(1e-9);
+        let pre_steps_per_s = window as f64 / pre_s;
+
+        // During: the one push that absorbs the kill + migration.
+        let t1 = Instant::now();
+        ps.push(&grads);
+        ps.pull(&mut pulled);
+        let during_s = t1.elapsed().as_secs_f64();
+
+        // After: same window, one shard down.
+        let t2 = Instant::now();
+        for _ in 0..window {
+            ps.push(&grads);
+            ps.pull(&mut pulled);
+        }
+        let post_s = t2.elapsed().as_secs_f64().max(1e-9);
+        let post_steps_per_s = window as f64 / post_s;
+
+        assert_eq!(ps.migration_count(), 1, "exactly one kill per run");
+        let rec = ps.migrations()[0].clone();
+        table.row(&[
+            shards.to_string(),
+            format!("{pre_steps_per_s:.2}"),
+            format!("{:.2}", during_s * 1e3),
+            format!("{post_steps_per_s:.2}"),
+            format!("{:.3}", rec.latency_s * 1e3),
+            rec.tensors.to_string(),
+            rec.replayed.to_string(),
+        ]);
+        let fields = |_: ()| {
+            vec![
+                ("shards", Json::from(shards)),
+                ("victim", Json::from(rec.from_shard)),
+                ("pre_steps_per_s", Json::from(pre_steps_per_s)),
+                ("during_push_s", Json::from(during_s)),
+                ("post_steps_per_s", Json::from(post_steps_per_s)),
+                ("migration_latency_s", Json::from(rec.latency_s)),
+                ("migration_envelope_s", Json::from(rec.parity().envelope_s())),
+                ("migrated_tensors", Json::from(rec.tensors)),
+                ("replayed_gradients", Json::from(rec.replayed as f64)),
+                ("requeued_gradients", Json::from(rec.requeued as f64)),
+                ("moved_bytes", Json::from(rec.bytes)),
+            ]
+        };
+        rep.record(fields(()));
+        rows.push(obj(fields(())));
+        gates.push((shards, pre_steps_per_s, post_steps_per_s));
+        last_counters = ps.metrics().snapshot().counters_with_prefix("ps.shard.");
+
+        // Gate below (artifact first) — but latency sanity is per-row.
+        assert!(
+            rec.parity().within_envelope(rec.latency_s),
+            "{shards} shards: migration {:.4}s outside envelope {:.4}s",
+            rec.latency_s,
+            rec.parity().envelope_s()
+        );
+    }
+    table.print();
+
+    // Artifact first, gates after — a failed gate still leaves the curve.
+    write_artifact(
+        args.artifact_path("BENCH_shard_rebalance.json"),
+        &obj(vec![
+            ("bench", Json::from("shard_rebalance")),
+            ("smoke", Json::from(args.smoke)),
+            ("tensors", Json::from(n_tensors)),
+            ("elems_per_tensor", Json::from(elems)),
+            ("window_steps", Json::from(window as f64)),
+            ("checkpoint_interval", Json::from(CHECKPOINT_EVERY as f64)),
+            ("rows", Json::from(rows)),
+            (
+                "ps_shard_counters",
+                Json::Obj(
+                    last_counters
+                        .into_iter()
+                        .map(|(k, v)| (k, Json::from(v as f64)))
+                        .collect(),
+                ),
+            ),
+        ]),
+    );
+
+    for (shards, pre, post) in gates {
+        assert!(
+            post >= 0.25 * pre,
+            "{shards} shards: post-kill {post:.2} steps/s fell below 0.25x pre-kill {pre:.2}"
+        );
+    }
+    println!(
+        "shard kill absorbed at {} shard counts over {window}-step windows of {n_tensors} x {elems} f32 tensors",
+        SHARD_COUNTS.len()
+    );
+    rep.finish();
+}

@@ -26,7 +26,7 @@ use crate::baselines::cloud::{self, GpuParams};
 use crate::baselines::{alpa, dtfm, ideal};
 use crate::cluster::device::Device;
 use crate::coordinator::optimizer::{Adam, AdamConfig};
-use crate::coordinator::shard::{self, ShardConfig, ShardedBackend, ShardedPs};
+use crate::coordinator::shard::{self, ShardConfig, ShardFault, ShardedBackend, ShardedPs};
 use crate::coordinator::trainer::{synthetic_params, Trainer, TrainerConfig};
 use crate::coordinator::worker::FaultPlan;
 use crate::model::dag::GemmDag;
@@ -345,6 +345,10 @@ pub struct CoordinatorPlanner {
     /// seed for synthetic params + token batch (and, XORed per shard,
     /// the engines' fleets)
     pub seed: u64,
+    /// injected shard-level chaos, as (shard index, fault) — empty by
+    /// default; `plan` folds these into the [`ShardConfig`] so facade
+    /// callers can exercise whole-shard death end to end
+    pub shard_faults: Vec<(usize, ShardFault)>,
     /// losses from the most recent `plan` call, in step order
     pub last_losses: Vec<f32>,
     obs: Option<Recorder>,
@@ -370,6 +374,7 @@ impl CoordinatorPlanner {
             steps: 2,
             workers: 2 * shards,
             seed: 555,
+            shard_faults: Vec::new(),
             last_losses: Vec::new(),
             obs: None,
         }
@@ -386,6 +391,14 @@ impl CoordinatorPlanner {
 
     pub fn with_staleness(mut self, max_staleness: u64) -> CoordinatorPlanner {
         self.max_staleness = max_staleness;
+        self
+    }
+
+    /// Inject a shard-level fault ([`ShardFault::KillShard`] /
+    /// [`ShardFault::WedgeShard`]) into every subsequent `plan` call.
+    pub fn with_shard_fault(mut self, shard: usize, fault: ShardFault) -> CoordinatorPlanner {
+        assert!(shard < self.shards, "fault targets a shard that does not exist");
+        self.shard_faults.push((shard, fault));
         self
     }
 
@@ -437,7 +450,10 @@ impl Planner for CoordinatorPlanner {
             .collect();
         let total_elems: usize = params.iter().map(|p| p.len()).sum();
 
-        let scfg = ShardConfig::new(self.shards).with_staleness(self.max_staleness);
+        let mut scfg = ShardConfig::new(self.shards).with_staleness(self.max_staleness);
+        for &(shard, fault) in &self.shard_faults {
+            scfg = scfg.with_fault(shard, fault);
+        }
         let ps = match &self.obs {
             Some(rec) => ShardedPs::spawn_observed(
                 devices,

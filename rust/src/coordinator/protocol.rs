@@ -37,6 +37,16 @@ impl ShardHeader {
         ShardHeader { shard: 0, epoch: 0 }
     }
 
+    /// Was this header stamped under a partition map older than `current`?
+    /// A predating message was routed before a migration re-homed tensors;
+    /// applying its body could hit the wrong shard, so receivers drop it
+    /// (counted in `ps.shard.stale_epoch_drops`) rather than apply it.
+    /// Future epochs are *not* stale: a sender may legitimately learn of a
+    /// migration before a slow receiver does.
+    pub fn predates(self, current: u64) -> bool {
+        self.epoch < current
+    }
+
     fn to_json(self) -> Vec<(&'static str, Json)> {
         vec![
             ("shard", Json::from(self.shard)),
@@ -315,6 +325,15 @@ mod tests {
             assert_eq!(h2, h);
             assert_eq!(back, Some(msg));
         }
+    }
+
+    #[test]
+    fn epoch_predates_is_strictly_older_only() {
+        let h = ShardHeader { shard: 1, epoch: 2 };
+        assert!(h.predates(3), "older than the current map: stale");
+        assert!(!h.predates(2), "current epoch: fresh");
+        assert!(!h.predates(1), "a future epoch is never stale");
+        assert!(!ShardHeader::single().predates(0), "legacy path never drops");
     }
 
     #[test]

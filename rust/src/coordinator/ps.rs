@@ -378,6 +378,15 @@ impl DistributedGemm {
         self.state.state()
     }
 
+    /// Terminal failure: the run state collapsed into `Cooldown`, or the
+    /// fleet has no schedulable worker left. A sharded PS uses this to
+    /// decide a shard actor is dead and its partition must migrate —
+    /// losing *some* workers re-tiles locally, losing the coordinator or
+    /// *all* workers does not.
+    pub fn is_terminal_failure(&self) -> bool {
+        self.state.is_terminal() || self.n_alive() == 0
+    }
+
     /// Current membership epoch (bumps on every evict / rejoin).
     pub fn membership_epoch(&self) -> u64 {
         self.state.epoch()
@@ -1035,6 +1044,19 @@ impl DistributedGemm {
     /// Shut the fleet down (Cooldown), joining all threads.
     pub fn shutdown(&mut self) {
         let _ = self.state.advance(RunState::Cooldown, "shutdown");
+        self.drain_workers();
+    }
+
+    /// Crash the coordinator: an unrefusable [`RunStateMachine::fail`]
+    /// transition into `Cooldown` (the `has_failed` flag stays set), then
+    /// the same worker drain a negotiated shutdown performs — the fleet's
+    /// threads must not leak even when the actor dies. Idempotent.
+    pub fn fail(&mut self, reason: &'static str) {
+        self.state.fail(reason);
+        self.drain_workers();
+    }
+
+    fn drain_workers(&mut self) {
         for h in &self.handles {
             let _ = h.tx.send(ToWorker::Shutdown);
         }

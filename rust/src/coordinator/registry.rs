@@ -105,7 +105,10 @@ impl Registry {
     }
 
     /// Mark a graceful departure (a membership event: bumps the epoch).
-    pub fn depart(&self, id: usize) {
+    /// Returns the epoch this departure produced — strictly increasing
+    /// across all registers/departs, fleet-wide — or `None` for unknown
+    /// devices (no membership event).
+    pub fn depart(&self, id: usize) -> Option<u64> {
         let known = {
             let mut stripe = self.stripe(id);
             match stripe.get_mut(&id) {
@@ -117,7 +120,9 @@ impl Registry {
             }
         };
         if known {
-            self.epoch.fetch_add(1, Ordering::SeqCst);
+            Some(self.epoch.fetch_add(1, Ordering::SeqCst) + 1)
+        } else {
+            None
         }
     }
 
@@ -317,9 +322,9 @@ mod tests {
         assert_eq!(e1, 1);
         r.keepalive(0); // liveness proof, not a membership event
         assert_eq!(r.epoch(), 1);
-        r.depart(0);
+        assert_eq!(r.depart(0), Some(2), "depart returns the epoch it produced");
         assert_eq!(r.epoch(), 2);
-        r.depart(42); // unknown device: no event
+        assert_eq!(r.depart(42), None, "unknown device: no event");
         assert_eq!(r.epoch(), 2);
     }
 

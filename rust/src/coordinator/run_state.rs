@@ -86,6 +86,9 @@ pub struct RunStateMachine {
     total_transitions: u64,
     membership_events: u64,
     rejected_transitions: u64,
+    /// the terminal state was reached by a crash ([`RunStateMachine::fail`]),
+    /// not a negotiated shutdown
+    failed: bool,
     recent: Vec<Transition>,
     /// flight recorder, when the owning coordinator is observed (ISSUE 7)
     obs: Option<Recorder>,
@@ -100,6 +103,7 @@ impl RunStateMachine {
             total_transitions: 0,
             membership_events: 0,
             rejected_transitions: 0,
+            failed: false,
             recent: Vec::new(),
             obs: None,
         }
@@ -122,6 +126,14 @@ impl RunStateMachine {
 
     pub fn is_terminal(&self) -> bool {
         self.state == RunState::Cooldown
+    }
+
+    /// Did this machine reach its terminal state via [`fail`]
+    /// (a crash) rather than a negotiated shutdown?
+    ///
+    /// [`fail`]: RunStateMachine::fail
+    pub fn has_failed(&self) -> bool {
+        self.failed
     }
 
     /// How many times `s` has been entered.
@@ -187,6 +199,31 @@ impl RunStateMachine {
         Ok(())
     }
 
+    /// Crash transition: drop straight into `Cooldown` from wherever the
+    /// machine is and mark the run as failed. A crash does not negotiate —
+    /// unlike [`advance`], this never refuses (every state may legally
+    /// reach `Cooldown`, and from `Cooldown` it only sets the flag). The
+    /// transition is logged and counted like any other.
+    ///
+    /// [`advance`]: RunStateMachine::advance
+    pub fn fail(&mut self, reason: &'static str) {
+        self.failed = true;
+        if self.state == RunState::Cooldown {
+            return;
+        }
+        let from = self.state;
+        self.state = RunState::Cooldown;
+        self.entries[RunState::Cooldown.index()] += 1;
+        self.total_transitions += 1;
+        crate::log_warn!("run-state {from:?} -> Cooldown (epoch {}): FAILED: {reason}", self.epoch);
+        self.record(Transition {
+            from,
+            to: RunState::Cooldown,
+            epoch: self.epoch,
+            reason,
+        });
+    }
+
     /// Membership change (evict / rejoin): bump the epoch in place and
     /// return the new epoch.
     pub fn bump_epoch(&mut self, reason: &'static str) -> u64 {
@@ -244,6 +281,28 @@ mod tests {
         // ...but a same-state advance stays a no-op.
         sm.advance(RunState::Cooldown, "idempotent").unwrap();
         assert_eq!(sm.entries(RunState::Cooldown), 1);
+    }
+
+    #[test]
+    fn fail_is_a_direct_unrefusable_crash_transition() {
+        // A crash from any state lands in Cooldown — even from Warmup,
+        // where a negotiated Recover would be refused.
+        let mut sm = RunStateMachine::new();
+        assert!(!sm.has_failed());
+        sm.fail("shard actor killed");
+        assert!(sm.is_terminal());
+        assert!(sm.has_failed());
+        assert_eq!(sm.entries(RunState::Cooldown), 1);
+        assert_eq!(sm.total_transitions(), 1);
+        assert_eq!(sm.transitions().last().unwrap().reason, "shard actor killed");
+        // Failing an already-terminal machine only keeps the flag set.
+        sm.fail("again");
+        assert_eq!(sm.entries(RunState::Cooldown), 1);
+        assert_eq!(sm.rejected_transitions(), 0, "a crash is never refused");
+        // A clean shutdown, by contrast, never sets the flag.
+        let mut clean = RunStateMachine::new();
+        clean.advance(RunState::Cooldown, "shutdown").unwrap();
+        assert!(clean.is_terminal() && !clean.has_failed());
     }
 
     #[test]

@@ -1,5 +1,6 @@
 //! Sharded parameter server: hash-partitioned tensor shards with async
-//! push/pull under bounded staleness, and partition-local §4.2 recovery.
+//! push/pull under bounded staleness, partition-local §4.2 recovery, and
+//! whole-shard death survival.
 //!
 //! The single-PS coordinator ([`DistributedGemm`]) funnels every gradient
 //! and every sub-GEMM through one in-process server. [`ShardedPs`] splits
@@ -25,6 +26,12 @@
 //! barrier forces sync at the bound and [`ShardedPs::sync`] drains
 //! everything.
 //!
+//! A useful invariant falls out of the barrier: every *live* shard leaves
+//! it with queue depth `min(depth + 1, max_staleness)`, so live shards'
+//! applied-push counters move in lockstep. That is what makes shard-death
+//! recovery (below) a strictly *forward* replay — a dead shard's last
+//! checkpoint is never ahead of any survivor.
+//!
 //! **Partition-local recovery.** Each shard's engine reuses the PR-6
 //! run-state machine, deadline detection, and live §4.2 re-tiling. One
 //! dead shard re-tiles only its own partition's work across its own
@@ -32,13 +39,46 @@
 //! engines are deliberately spawned *unobserved* (private registries) so
 //! per-shard counters stay attributable; [`ShardedPs`] re-publishes
 //! aggregates under `ps.shard.*` in its own (possibly shared) registry.
+//!
+//! **Shard-death survival (ISSUE 10).** Losing one worker re-tiles inside
+//! a shard; losing a *whole shard actor* must not lose its partition.
+//! Three mechanisms cooperate:
+//!
+//! 1. *Crash-consistent checkpoints.* At every staleness-barrier boundary
+//!    a shard that applied work cuts a [`ShardCheckpoint`] — params, Adam
+//!    moments, applied-step counter, and pending depth — into a store
+//!    owned by [`ShardedPs`] itself (modeling durable storage that
+//!    survives the actor), every `ShardConfig::checkpoint_interval`
+//!    applied pushes. Snapshots are only ever cut at barrier boundaries
+//!    (or immediately after a migration), so `step` is well defined.
+//! 2. *Partition migration.* When a shard reaches terminal failure — its
+//!    engine has every worker evicted, or an injected [`ShardFault`]
+//!    kills the actor — its tensors are re-homed to survivors by
+//!    deterministic rendezvous hashing ([`rendezvous_shard`]; byte-greedy
+//!    under `balance_bytes`), restored from the latest checkpoint, and
+//!    rolled forward by replaying the upstream gradient log up to the
+//!    adopter's applied count (bitwise what an always-alive shard would
+//!    hold). Gradients still queued are reconstructed into the adopter's
+//!    pending queue, so no surviving shard ever exceeds `max_staleness`
+//!    and no gradient application is lost. Each migration bumps the
+//!    partition-map epoch ([`ShardedPs::partition_epoch`]), which
+//!    [`ShardedPs::owner_of`] lookups and [`ShardHeader`] routing respect
+//!    — [`ShardedPs::recv_wire`] drops messages from a predating epoch.
+//! 3. *Shard-level chaos.* [`ShardFault::KillShard`] and
+//!    [`ShardFault::WedgeShard`] lift PR 6's worker `FaultPlan` idea to
+//!    whole shards; migrations are recorded as [`MigrationRecord`]s with
+//!    measured latencies gated against a `LiveParity`-style envelope, as
+//!    `ShardMigration` timeline events, and as `ps.shard.migrations` /
+//!    `ps.shard.checkpoint_*` metrics.
 
 use std::collections::VecDeque;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
 
 use crate::cluster::device::Device;
 use crate::coordinator::optimizer::{Adam, AdamConfig};
+use crate::coordinator::protocol::{ShardHeader, ToPs};
 use crate::coordinator::ps::{DistributedGemm, LiveRecovery, PsConfig};
 use crate::coordinator::run_state::RunState;
 use crate::coordinator::trainer::{GemmBackend, Trainer};
@@ -47,11 +87,14 @@ use crate::obs::metrics::{Counter, Histogram, MetricsRegistry};
 use crate::obs::timeline::SessionEvent;
 use crate::obs::Recorder;
 use crate::runtime::hostgemm;
+use crate::sim::failure::LiveParity;
+use crate::util::json::Json;
 
 /// Stable shard assignment for a tensor index: FNV-1a over the index's
 /// little-endian bytes, mod the shard count. Stable across runs and
 /// processes (no `RandomState`), so a restarted coordinator reconstructs
-/// the identical partition map.
+/// the identical partition map. This is the *initial* map only — after a
+/// migration, [`ShardedPs::owner_of`] is the authoritative lookup.
 pub fn shard_of(tensor: usize, n_shards: usize) -> usize {
     assert!(n_shards > 0, "shard count must be positive");
     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
@@ -62,16 +105,98 @@ pub fn shard_of(tensor: usize, n_shards: usize) -> usize {
     (h % n_shards as u64) as usize
 }
 
-/// Configuration for a sharded PS: shard count, the staleness bound, and
+/// Rendezvous (highest-random-weight) assignment of a tensor among an
+/// arbitrary candidate shard set: the candidate whose FNV-1a hash of
+/// (tensor, shard) is largest wins. Deterministic, and minimally
+/// disruptive — removing one candidate only re-homes the tensors that
+/// candidate owned, which is exactly what partition migration wants.
+pub fn rendezvous_shard(tensor: usize, candidates: &[usize]) -> usize {
+    assert!(!candidates.is_empty(), "rendezvous over an empty shard set");
+    let weight = |s: usize| {
+        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+        for b in (tensor as u64)
+            .to_le_bytes()
+            .into_iter()
+            .chain((s as u64).to_le_bytes())
+        {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        h
+    };
+    *candidates
+        .iter()
+        .max_by_key(|&&s| weight(s))
+        .expect("candidates checked non-empty")
+}
+
+/// Byte-weighted greedy (LPT) partition: tensors in descending byte order
+/// each go to the currently lightest shard. Within the classic 4/3 bound
+/// of the optimal makespan, which beats count-balanced hashing when one
+/// tensor (the embedding) dominates. Returns `assign[t] = shard`.
+pub fn greedy_byte_partition(sizes: &[usize], n_shards: usize) -> Vec<usize> {
+    assert!(n_shards > 0, "shard count must be positive");
+    let mut order: Vec<usize> = (0..sizes.len()).collect();
+    order.sort_by_key(|&t| (std::cmp::Reverse(sizes[t]), t));
+    let mut load = vec![0usize; n_shards];
+    let mut assign = vec![0usize; sizes.len()];
+    for t in order {
+        let s = (0..n_shards)
+            .min_by_key(|&s| (load[s], s))
+            .expect("shard count checked positive");
+        assign[t] = s;
+        load[s] += sizes[t];
+    }
+    assign
+}
+
+/// Shard-level chaos injection: PR 6's worker [`FaultPlan`] lifted one
+/// level up, from individual workers to whole shard actors. `at_step`
+/// counts *completed* pushes — the fault fires at the start of the next
+/// push once that many have finished.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ShardFault {
+    /// Crash the shard actor outright: its volatile partition state
+    /// (params, Adam moments, pending queue, engine) is lost, and
+    /// recovery must come from the checkpoint store plus the upstream
+    /// gradient log.
+    KillShard { at_step: u64 },
+    /// The shard actor stops applying gradients for `wedge_s` seconds.
+    /// The staleness barrier *waits the wedge out* rather than skipping
+    /// the shard — the bounded-staleness contract survives, at a latency
+    /// cost counted in `ps.shard.wedge_stalls`.
+    WedgeShard { at_step: u64, wedge_s: f64 },
+}
+
+impl ShardFault {
+    fn at_step(&self) -> u64 {
+        match *self {
+            ShardFault::KillShard { at_step } => at_step,
+            ShardFault::WedgeShard { at_step, .. } => at_step,
+        }
+    }
+}
+
+/// Configuration for a sharded PS: shard count, the staleness bound,
+/// checkpoint cadence, partitioning policy, injected shard faults, and
 /// the per-shard engine config (seeded per shard so fleets stay
 /// deterministic).
 #[derive(Clone, Debug)]
 pub struct ShardConfig {
-    /// number of PS shard actors the tensors are hash-partitioned over
+    /// number of PS shard actors the tensors are partitioned over
     pub n_shards: usize,
     /// how many steps a worker may run ahead of a stale partition before
     /// the staleness barrier forces a sync (0 = fully synchronous)
     pub max_staleness: u64,
+    /// cut a fresh [`ShardCheckpoint`] every this many *applied* pushes
+    /// (>= 1; 1 = snapshot at every barrier that applied work)
+    pub checkpoint_interval: u64,
+    /// partition by byte-weighted greedy assignment instead of the count
+    /// balanced hash — both initially and when migrating a dead shard's
+    /// tensors (the embedding tensor dominates its shard under hashing)
+    pub balance_bytes: bool,
+    /// injected shard-level faults, as (shard index, fault)
+    pub faults: Vec<(usize, ShardFault)>,
     /// engine config cloned into every shard (seed is XORed with the
     /// shard index so per-shard fleets draw independent streams)
     pub ps: PsConfig,
@@ -82,6 +207,9 @@ impl Default for ShardConfig {
         ShardConfig {
             n_shards: 1,
             max_staleness: 0,
+            checkpoint_interval: 1,
+            balance_bytes: false,
+            faults: Vec::new(),
             ps: PsConfig::default(),
         }
     }
@@ -98,6 +226,93 @@ impl ShardConfig {
     pub fn with_staleness(mut self, max_staleness: u64) -> Self {
         self.max_staleness = max_staleness;
         self
+    }
+
+    pub fn with_checkpoint_interval(mut self, every: u64) -> Self {
+        self.checkpoint_interval = every;
+        self
+    }
+
+    pub fn with_balance_bytes(mut self, on: bool) -> Self {
+        self.balance_bytes = on;
+        self
+    }
+
+    pub fn with_fault(mut self, shard: usize, fault: ShardFault) -> Self {
+        self.faults.push((shard, fault));
+        self
+    }
+}
+
+/// A crash-consistent snapshot of one shard's partition, cut at a
+/// staleness-barrier boundary (or immediately after adopting migrated
+/// tensors), so `step` is always a well-defined applied-push count. The
+/// store lives on [`ShardedPs`], never on the shard actor — it models
+/// durable storage that survives the actor's death.
+#[derive(Clone, Debug)]
+pub struct ShardCheckpoint {
+    /// shard the snapshot belongs to
+    pub shard: usize,
+    /// applied pushes at snapshot time (== the shard's `Adam.step`)
+    pub step: u64,
+    /// pending-gradient queue depth at snapshot time
+    pub pending_depth: u64,
+    /// partition-map epoch the snapshot was cut under
+    pub epoch: u64,
+    /// owned global tensor indices, ascending
+    pub owned: Vec<usize>,
+    /// parameter values, parallel to `owned`
+    pub params: Vec<Vec<f32>>,
+    /// Adam first moments, parallel to `owned`
+    pub m: Vec<Vec<f32>>,
+    /// Adam second moments, parallel to `owned`
+    pub v: Vec<Vec<f32>>,
+}
+
+impl ShardCheckpoint {
+    /// Snapshot payload size: params plus both Adam moments, f32.
+    pub fn bytes(&self) -> usize {
+        3 * 4 * self.params.iter().map(|p| p.len()).sum::<usize>()
+    }
+}
+
+/// One completed partition migration: what moved, how much was replayed,
+/// and the measured wall-clock latency, gated against a `LiveParity`-style
+/// envelope via [`MigrationRecord::parity`].
+#[derive(Clone, Debug)]
+pub struct MigrationRecord {
+    /// why the shard died ("injected KillShard", "all shard workers evicted")
+    pub cause: &'static str,
+    /// the dead shard whose partition was donated
+    pub from_shard: usize,
+    /// tensors re-homed to survivors
+    pub tensors: usize,
+    /// f32 payload bytes restored from the checkpoint (params + moments)
+    pub bytes: usize,
+    /// gradient applications replayed from the upstream log
+    pub replayed: u64,
+    /// pending gradient partitions reconstructed into survivor queues
+    pub requeued: u64,
+    /// partition-map epoch after this migration
+    pub epoch: u64,
+    /// measured migration wall-clock
+    pub latency_s: f64,
+}
+
+impl MigrationRecord {
+    /// Copy-bandwidth desk model for restore + replay: the checkpoint is
+    /// copied once and re-touched once per replayed application, at an
+    /// assumed 1 GB/s. Deliberately conservative — at test scale the
+    /// `LiveParity` fixed slack dominates, so the envelope catches hangs
+    /// and pathological latencies, not micro-variance.
+    pub const MODEL_BYTES_PER_S: f64 = 1e9;
+
+    /// The predicted-latency envelope this migration is gated against
+    /// (same factor-plus-slack shape as live §4.2 recovery parity).
+    pub fn parity(&self) -> LiveParity {
+        let modeled =
+            (self.bytes as f64 * (1.0 + self.replayed as f64)) / Self::MODEL_BYTES_PER_S;
+        LiveParity::new(0.0, 0.0, modeled)
     }
 }
 
@@ -118,8 +333,14 @@ struct Shard {
     pending: VecDeque<Vec<Vec<f32>>>,
     /// the shard's own distributed engine (None for optimizer-only use)
     engine: Option<DistributedGemm>,
-    /// pushes applied so far (mirrors `adam.step`, kept as u64 for tests)
+    /// pushes applied so far (mirrors `adam.step`, kept as u64 for tests;
+    /// frozen at its death value once the shard fails)
     applied: u64,
+    /// terminal: the actor crashed (or its fleet died) and its partition
+    /// has been migrated away
+    failed: bool,
+    /// an injected wedge in force until this instant
+    wedged_until: Option<Instant>,
 }
 
 impl Shard {
@@ -134,12 +355,71 @@ impl Shard {
         }
     }
 
-    fn usable(&self) -> bool {
-        match &self.engine {
-            Some(e) => e.run_state() != RunState::Cooldown && e.n_alive() > 0,
-            None => false,
+    /// Serve (sleep out) an injected wedge, returning the stall seconds.
+    fn serve_wedge(&mut self) -> f64 {
+        if let Some(until) = self.wedged_until.take() {
+            let now = Instant::now();
+            if until > now {
+                let wait = until - now;
+                std::thread::sleep(wait);
+                return wait.as_secs_f64();
+            }
+        }
+        0.0
+    }
+
+    /// Cut a crash-consistent snapshot at the current applied step.
+    /// Callers only invoke this at barrier boundaries or right after a
+    /// migration, so the step is well defined.
+    fn snapshot(&self, si: usize, epoch: u64) -> ShardCheckpoint {
+        ShardCheckpoint {
+            shard: si,
+            step: self.applied,
+            pending_depth: self.pending.len() as u64,
+            epoch,
+            owned: self.owned.clone(),
+            params: self.params.clone(),
+            m: self.adam.m.clone(),
+            v: self.adam.v.clone(),
         }
     }
+
+    fn usable(&self) -> bool {
+        !self.failed
+            && self
+                .engine
+                .as_ref()
+                .is_some_and(|e| !e.is_terminal_failure())
+    }
+}
+
+/// Drain one stale shard at the barrier: serve any wedge first, drain to
+/// the bound, then cut a fresh checkpoint if the cadence is due. Returns
+/// (wedge stall seconds, bytes of the checkpoint written, if one was).
+/// Runs on the shard's own scoped thread in the parallel path, so the
+/// snapshot clone parallelizes exactly like the drain itself.
+fn drain_one(
+    si: usize,
+    s: &mut Shard,
+    ck: &mut Option<ShardCheckpoint>,
+    keep: u64,
+    interval: u64,
+    epoch: u64,
+) -> (f64, Option<usize>) {
+    let stall = s.serve_wedge();
+    s.drain_to(keep);
+    let due = ck
+        .as_ref()
+        .is_none_or(|c| s.applied.saturating_sub(c.step) >= interval);
+    let wrote = if due {
+        let snap = s.snapshot(si, epoch);
+        let bytes = snap.bytes();
+        *ck = Some(snap);
+        Some(bytes)
+    } else {
+        None
+    };
+    (stall, wrote)
 }
 
 /// `ps.shard.*` instruments, bound once against the owning registry.
@@ -150,6 +430,16 @@ struct ShardCounters {
     syncs: Counter,
     recoveries: Counter,
     staleness: Histogram,
+    checkpoint_writes: Counter,
+    checkpoint_bytes: Counter,
+    checkpoint_restores: Counter,
+    migrations: Counter,
+    migrated_tensors: Counter,
+    replayed_gradients: Counter,
+    stale_epoch_drops: Counter,
+    wedge_stalls: Counter,
+    migration_s: Histogram,
+    wedge_stall_s: Histogram,
 }
 
 impl ShardCounters {
@@ -161,18 +451,48 @@ impl ShardCounters {
             syncs: reg.counter("ps.shard.syncs"),
             recoveries: reg.counter("ps.shard.recoveries"),
             staleness: reg.histogram("ps.shard.staleness"),
+            checkpoint_writes: reg.counter("ps.shard.checkpoint_writes"),
+            checkpoint_bytes: reg.counter("ps.shard.checkpoint_bytes"),
+            checkpoint_restores: reg.counter("ps.shard.checkpoint_restores"),
+            migrations: reg.counter("ps.shard.migrations"),
+            migrated_tensors: reg.counter("ps.shard.migrated_tensors"),
+            replayed_gradients: reg.counter("ps.shard.replayed_gradients"),
+            stale_epoch_drops: reg.counter("ps.shard.stale_epoch_drops"),
+            wedge_stalls: reg.counter("ps.shard.wedge_stalls"),
+            migration_s: reg.histogram("ps.shard.migration_s"),
+            wedge_stall_s: reg.histogram("ps.shard.wedge_stall_s"),
         }
     }
 }
 
 /// Hash-partitioned parameter server: N shard actors behind one
 /// push/pull/matmul façade. See the module docs for the partition map,
-/// the staleness contract, and the recovery story.
+/// the staleness contract, the recovery story, and shard-death survival.
 pub struct ShardedPs {
     cfg: ShardConfig,
+    acfg: AdamConfig,
     shards: Vec<Shard>,
     /// round-robin cursor for GEMM routing
     next_shard: usize,
+    /// durable checkpoint store, one slot per shard — owned here, not by
+    /// the actor, so it survives the actor's death (a dead shard's slot
+    /// is consumed by migration and left empty)
+    checkpoints: Vec<Option<ShardCheckpoint>>,
+    /// upstream gradient log: full pushed gradient sets for pushes
+    /// `(grad_log_base, push_seq]`, retained back to the oldest live
+    /// checkpoint so a migration can always roll forward
+    grad_log: VecDeque<Vec<Vec<f32>>>,
+    /// pushes already trimmed from the front of `grad_log`
+    grad_log_base: u64,
+    /// completed pushes (the fault clock for `ShardFault::at_step`)
+    push_seq: u64,
+    /// partition-map epoch, bumped by every migration; `recv_wire` drops
+    /// wire messages whose header predates it
+    partition_epoch: u64,
+    /// injected shard faults, with a fired flag each
+    faults: Vec<(usize, ShardFault, bool)>,
+    /// completed migrations, in order
+    migrations: Vec<MigrationRecord>,
     metrics: MetricsRegistry,
     counters: ShardCounters,
     obs: Option<Recorder>,
@@ -233,12 +553,24 @@ impl ShardedPs {
         obs: Option<Recorder>,
     ) -> ShardedPs {
         assert!(cfg.n_shards > 0, "shard count must be positive");
+        assert!(cfg.checkpoint_interval >= 1, "checkpoint interval must be >= 1");
         let n = cfg.n_shards;
+        for &(s, _) in &cfg.faults {
+            assert!(s < n, "fault targets shard {s} but there are only {n} shards");
+        }
 
-        // Partition map: whole tensors, by stable hash of the index.
+        // Partition map: whole tensors, by stable hash of the index — or
+        // by byte-weighted greedy assignment under `balance_bytes`.
         let mut owned: Vec<Vec<usize>> = vec![Vec::new(); n];
-        for t in 0..params.len() {
-            owned[shard_of(t, n)].push(t);
+        if cfg.balance_bytes {
+            let sizes: Vec<usize> = params.iter().map(|p| 4 * p.len()).collect();
+            for (t, s) in greedy_byte_partition(&sizes, n).into_iter().enumerate() {
+                owned[s].push(t);
+            }
+        } else {
+            for t in 0..params.len() {
+                owned[shard_of(t, n)].push(t);
+            }
         }
 
         // Round-robin the fleet (and its fault plans) across shards.
@@ -276,6 +608,8 @@ impl ShardedPs {
                     pending: VecDeque::new(),
                     engine,
                     applied: 0,
+                    failed: false,
+                    wedged_until: None,
                 }
             })
             .collect();
@@ -285,10 +619,33 @@ impl ShardedPs {
             None => MetricsRegistry::new(),
         };
         let counters = ShardCounters::bind(&metrics);
+
+        // Every shard checkpoints at build (step 0), so there is never a
+        // shard without a restore point.
+        let checkpoints: Vec<Option<ShardCheckpoint>> = shards
+            .iter()
+            .enumerate()
+            .map(|(si, s)| {
+                let snap = s.snapshot(si, 0);
+                counters.checkpoint_writes.inc();
+                counters.checkpoint_bytes.add(snap.bytes() as u64);
+                Some(snap)
+            })
+            .collect();
+
+        let faults = cfg.faults.iter().map(|&(s, f)| (s, f, false)).collect();
         ShardedPs {
             cfg,
+            acfg,
             shards,
             next_shard: 0,
+            checkpoints,
+            grad_log: VecDeque::new(),
+            grad_log_base: 0,
+            push_seq: 0,
+            partition_epoch: 0,
+            faults,
+            migrations: Vec::new(),
             metrics,
             counters,
             obs,
@@ -296,44 +653,75 @@ impl ShardedPs {
         }
     }
 
-    /// Async push: enqueue this step's gradient partition on every shard
+    /// Async push: fire any due shard faults and reap terminal shards,
+    /// then enqueue this step's gradient partition on every live shard
     /// (recording each shard's queue depth in the `ps.shard.staleness`
     /// histogram), then run the staleness barrier — any shard more than
     /// `max_staleness` steps behind drains to the bound.
     pub fn push(&mut self, grads: &[Vec<f32>]) {
+        self.inject_faults();
+        self.reap_terminal_shards();
         self.counters.pushes.inc();
+        self.grad_log.push_back(grads.to_vec());
         for shard in &mut self.shards {
+            if shard.failed {
+                continue;
+            }
             let part: Vec<Vec<f32>> = shard.owned.iter().map(|&t| grads[t].clone()).collect();
             shard.pending.push_back(part);
             self.counters.staleness.observe(shard.pending.len() as f64 - 1.0);
         }
+        self.push_seq += 1;
         self.barrier(self.cfg.max_staleness);
     }
 
     /// The staleness barrier: drain every shard whose queue depth exceeds
     /// `keep` down to `keep`, in parallel across shards (each drain is an
-    /// independent Adam pass over a disjoint partition).
+    /// independent Adam pass over a disjoint partition). Shards that
+    /// applied work cut a fresh checkpoint on their own drain thread, and
+    /// the gradient log is trimmed back to the oldest live checkpoint.
     fn barrier(&mut self, keep: u64) {
+        let interval = self.cfg.checkpoint_interval;
+        let epoch = self.partition_epoch;
         let depths: Vec<u64> = self.shards.iter().map(|s| s.pending.len() as u64).collect();
-        let stale: Vec<&mut Shard> = self
+        let mut stale: Vec<(usize, &mut Shard, &mut Option<ShardCheckpoint>)> = self
             .shards
             .iter_mut()
-            .filter(|s| s.pending.len() as u64 > keep)
+            .zip(self.checkpoints.iter_mut())
+            .enumerate()
+            .filter(|(_, (s, _))| !s.failed && s.pending.len() as u64 > keep)
+            .map(|(si, (s, c))| (si, s, c))
             .collect();
-        match stale.len() {
-            0 => return,
+        let results: Vec<(f64, Option<usize>)> = match stale.len() {
+            0 => Vec::new(),
             1 => {
-                for s in stale {
-                    s.drain_to(keep);
-                }
+                let (si, s, c) = stale.pop().expect("length checked");
+                vec![drain_one(si, s, c, keep, interval, epoch)]
             }
             _ => {
                 let _sp = crate::span!("shard_barrier", stale = stale.len());
                 std::thread::scope(|scope| {
-                    for s in stale {
-                        scope.spawn(move || s.drain_to(keep));
-                    }
-                });
+                    let handles: Vec<_> = stale
+                        .into_iter()
+                        .map(|(si, s, c)| {
+                            scope.spawn(move || drain_one(si, s, c, keep, interval, epoch))
+                        })
+                        .collect();
+                    handles
+                        .into_iter()
+                        .map(|h| h.join().expect("shard drain panicked"))
+                        .collect()
+                })
+            }
+        };
+        for (stall, wrote) in results {
+            if stall > 0.0 {
+                self.counters.wedge_stalls.inc();
+                self.counters.wedge_stall_s.observe(stall);
+            }
+            if let Some(bytes) = wrote {
+                self.counters.checkpoint_writes.inc();
+                self.counters.checkpoint_bytes.add(bytes as u64);
             }
         }
         for (si, depth) in depths.into_iter().enumerate() {
@@ -347,6 +735,251 @@ impl ShardedPs {
                 }
             }
         }
+        self.trim_grad_log();
+    }
+
+    /// Drop gradient-log entries no live migration could ever need: the
+    /// log only has to reach back to the oldest checkpoint of any live
+    /// shard (a dead shard's replay source is consumed at migration).
+    fn trim_grad_log(&mut self) {
+        let oldest = self
+            .shards
+            .iter()
+            .zip(&self.checkpoints)
+            .filter(|(s, _)| !s.failed)
+            .filter_map(|(_, c)| c.as_ref().map(|c| c.step))
+            .min();
+        if let Some(oldest) = oldest {
+            while self.grad_log_base < oldest && !self.grad_log.is_empty() {
+                self.grad_log.pop_front();
+                self.grad_log_base += 1;
+            }
+        }
+    }
+
+    /// Fire injected shard faults whose step has arrived.
+    fn inject_faults(&mut self) {
+        for k in 0..self.faults.len() {
+            let (shard, fault, fired) = self.faults[k];
+            if fired || self.push_seq < fault.at_step() {
+                continue;
+            }
+            self.faults[k].2 = true;
+            match fault {
+                ShardFault::KillShard { .. } => self.kill_shard(shard, "injected KillShard"),
+                ShardFault::WedgeShard { wedge_s, .. } => {
+                    let s = &mut self.shards[shard];
+                    if !s.failed {
+                        s.wedged_until = Some(Instant::now() + Duration::from_secs_f64(wedge_s));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Detect engine-terminal shards (every worker evicted, or the run
+    /// state collapsed) and migrate their partitions away. Called at each
+    /// push and after any engine error in the GEMM router.
+    fn reap_terminal_shards(&mut self) {
+        for si in 0..self.shards.len() {
+            self.reap_if_terminal(si);
+        }
+    }
+
+    fn reap_if_terminal(&mut self, si: usize) {
+        let terminal = {
+            let s = &self.shards[si];
+            !s.failed && s.engine.as_ref().is_some_and(|e| e.is_terminal_failure())
+        };
+        if terminal {
+            self.kill_shard(si, "all shard workers evicted");
+        }
+    }
+
+    /// Crash shard `dead`: its volatile state (params, Adam moments,
+    /// pending queue, engine) is lost exactly as a real actor crash would
+    /// lose it, and the partition is immediately migrated to survivors
+    /// from the checkpoint store plus the upstream gradient log.
+    fn kill_shard(&mut self, dead: usize, cause: &'static str) {
+        if self.shards[dead].failed {
+            return;
+        }
+        let t0 = Instant::now();
+        {
+            let s = &mut self.shards[dead];
+            s.failed = true;
+            if let Some(mut engine) = s.engine.take() {
+                engine.fail(cause);
+            }
+            s.owned.clear();
+            s.params.clear();
+            s.adam = Adam {
+                cfg: self.acfg,
+                m: Vec::new(),
+                v: Vec::new(),
+                step: 0,
+            };
+            s.pending.clear();
+            s.wedged_until = None;
+        }
+        self.migrate_partition(dead, cause, t0);
+    }
+
+    /// Re-home the dead shard's partition onto survivors: restore each
+    /// tensor from the latest checkpoint, replay the gradient log forward
+    /// to the adopter's applied count (bitwise what an always-alive shard
+    /// would hold — live shards apply in lockstep, so the checkpoint is
+    /// never ahead), reconstruct still-queued gradients into the
+    /// adopter's pending queue, bump the partition epoch, and force-cut
+    /// fresh checkpoints on every adopter so a cascading kill finds their
+    /// new tensors covered.
+    fn migrate_partition(&mut self, dead: usize, cause: &'static str, t0: Instant) {
+        let ckpt = self.checkpoints[dead]
+            .take()
+            .expect("every shard checkpoints at build");
+        let survivors: Vec<usize> = self
+            .shards
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| !s.failed)
+            .map(|(si, _)| si)
+            .collect();
+        assert!(
+            !survivors.is_empty(),
+            "no surviving shard to adopt shard {dead}'s partition"
+        );
+
+        // Reassignment order: rendezvous hash by default (minimal
+        // disruption), byte-weighted greedy under `balance_bytes`.
+        let mut targets = vec![0usize; ckpt.owned.len()];
+        if self.cfg.balance_bytes {
+            let mut load: Vec<(usize, usize)> = survivors
+                .iter()
+                .map(|&s| {
+                    let bytes: usize = self.shards[s].params.iter().map(|p| 4 * p.len()).sum();
+                    (s, bytes)
+                })
+                .collect();
+            let mut order: Vec<usize> = (0..ckpt.owned.len()).collect();
+            order.sort_by_key(|&k| (std::cmp::Reverse(ckpt.params[k].len()), ckpt.owned[k]));
+            for k in order {
+                let j = (0..load.len())
+                    .min_by_key(|&j| (load[j].1, load[j].0))
+                    .expect("survivors checked non-empty");
+                targets[k] = load[j].0;
+                load[j].1 += 4 * ckpt.params[k].len();
+            }
+        } else {
+            for (k, &t) in ckpt.owned.iter().enumerate() {
+                targets[k] = rendezvous_shard(t, &survivors);
+            }
+        }
+
+        let mut replayed = 0u64;
+        let mut requeued = 0u64;
+        let mut moved_bytes = 0usize;
+        for (k, &t) in ckpt.owned.iter().enumerate() {
+            let to = targets[k];
+            let target_step = self.shards[to].applied;
+            assert!(
+                ckpt.step <= target_step,
+                "live shards apply in lockstep; a checkpoint is never ahead of a survivor"
+            );
+            moved_bytes += 3 * 4 * ckpt.params[k].len();
+
+            // Roll the tensor forward from the checkpoint through the
+            // real element-wise Adam with the exact step counters, so the
+            // result is bitwise what it would be had the tensor lived on
+            // the adopter all along.
+            let mut pv = vec![ckpt.params[k].clone()];
+            let mut adam = Adam {
+                cfg: self.acfg,
+                m: vec![ckpt.m[k].clone()],
+                v: vec![ckpt.v[k].clone()],
+                step: ckpt.step as i32,
+            };
+            for push in (ckpt.step + 1)..=target_step {
+                let g = &self.grad_log[(push - self.grad_log_base - 1) as usize][t];
+                adam.step(&mut pv, std::slice::from_ref(g));
+                replayed += 1;
+            }
+            let p = pv.pop().expect("single-tensor replay");
+            let m = adam.m.pop().expect("single-tensor replay");
+            let v = adam.v.pop().expect("single-tensor replay");
+
+            // Gradients the adopter has queued but not applied cover
+            // pushes (target_step, push_seq]; reconstruct this tensor's
+            // partition slice for each from the log.
+            let depth = self.shards[to].pending.len();
+            let mut queued: Vec<Vec<f32>> = Vec::with_capacity(depth);
+            for i in 0..depth {
+                let push = target_step + 1 + i as u64;
+                queued.push(self.grad_log[(push - self.grad_log_base - 1) as usize][t].clone());
+                requeued += 1;
+            }
+
+            // Sorted insertion keeps `owned` ascending and every parallel
+            // array (params, moments, each pending entry) aligned.
+            let s = &mut self.shards[to];
+            let pos = s
+                .owned
+                .binary_search(&t)
+                .expect_err("tensor cannot already live on the adopter");
+            s.owned.insert(pos, t);
+            s.params.insert(pos, p);
+            s.adam.m.insert(pos, m);
+            s.adam.v.insert(pos, v);
+            for (entry, g) in s.pending.iter_mut().zip(queued) {
+                entry.insert(pos, g);
+            }
+        }
+
+        self.partition_epoch += 1;
+        self.counters.checkpoint_restores.inc();
+
+        // Forced refresh: every adopter's snapshot must cover its new
+        // tensors before a cascading kill can strike it.
+        let mut touched = targets;
+        touched.sort_unstable();
+        touched.dedup();
+        for &si in &touched {
+            let snap = self.shards[si].snapshot(si, self.partition_epoch);
+            self.counters.checkpoint_writes.inc();
+            self.counters.checkpoint_bytes.add(snap.bytes() as u64);
+            self.checkpoints[si] = Some(snap);
+        }
+
+        let rec = MigrationRecord {
+            cause,
+            from_shard: dead,
+            tensors: ckpt.owned.len(),
+            bytes: moved_bytes,
+            replayed,
+            requeued,
+            epoch: self.partition_epoch,
+            latency_s: t0.elapsed().as_secs_f64(),
+        };
+        self.counters.migrations.inc();
+        self.counters.migrated_tensors.add(rec.tensors as u64);
+        self.counters.replayed_gradients.add(replayed);
+        self.counters.migration_s.observe(rec.latency_s);
+        if let Some(obs) = &self.obs {
+            obs.record(SessionEvent::ShardMigration {
+                shard: dead,
+                tensors: rec.tensors,
+                replayed,
+                epoch: self.partition_epoch,
+                cause: cause.to_string(),
+            });
+        }
+        crate::log_warn!(
+            "shard {dead} died ({cause}); migrated {} tensors to {} survivors \
+             (replayed {replayed}, requeued {requeued}, epoch {})",
+            rec.tensors,
+            survivors.len(),
+            self.partition_epoch
+        );
+        self.migrations.push(rec);
     }
 
     /// Pull the freshest server-side parameters back into `params`
@@ -368,6 +1001,37 @@ impl ShardedPs {
         self.refresh_recoveries();
     }
 
+    /// The wire envelope a sender should stamp on a message for `shard`
+    /// under the current partition map.
+    pub fn wire_header(&self, shard: usize) -> ShardHeader {
+        assert!(shard < self.shards.len(), "shard index out of range");
+        ShardHeader {
+            shard,
+            epoch: self.partition_epoch,
+        }
+    }
+
+    /// Accept one wire-format PS message, validating its epoch: a header
+    /// that predates the current partition map means the sender routed
+    /// under a pre-migration map, and applying its body could hit the
+    /// wrong shard — so the message is dropped (counted in
+    /// `ps.shard.stale_epoch_drops`) rather than applied. Unknown message
+    /// kinds are tolerated as `None`, matching [`ToPs::from_wire`].
+    pub fn recv_wire(&mut self, j: &Json) -> Result<Option<(ShardHeader, ToPs)>> {
+        let (h, body) = ToPs::from_wire(j)?;
+        if h.predates(self.partition_epoch) {
+            self.counters.stale_epoch_drops.inc();
+            crate::log_warn!(
+                "dropped wire message for shard {} at stale epoch {} (current {})",
+                h.shard,
+                h.epoch,
+                self.partition_epoch
+            );
+            return Ok(None);
+        }
+        Ok(body.map(|b| (h, b)))
+    }
+
     /// Re-publish per-shard engine recoveries into `ps.shard.recoveries`
     /// (delta aggregation, so repeated calls never double-count).
     fn refresh_recoveries(&mut self) {
@@ -384,8 +1048,10 @@ impl ShardedPs {
     }
 
     /// Route one GEMM to a usable shard engine (round-robin), failing over
-    /// to the next shard when one is down or errors. A shard failure thus
-    /// costs only its own partition's recovery; the GEMM itself reroutes.
+    /// to the next shard when one is down or errors. A worker failure
+    /// costs only its own partition's recovery; a shard whose engine went
+    /// terminal is reaped — its partition migrates to survivors — and the
+    /// GEMM itself reroutes.
     pub fn matmul(
         &mut self,
         a: &[f32],
@@ -414,6 +1080,7 @@ impl ShardedPs {
                 Err(e) => {
                     crate::log_warn!("shard {si} GEMM failed ({e}); rerouting");
                     self.refresh_recoveries();
+                    self.reap_if_terminal(si);
                 }
             }
         }
@@ -443,6 +1110,11 @@ impl ShardedPs {
         self.shards.len()
     }
 
+    /// Shards whose actor is still alive.
+    pub fn live_shards(&self) -> usize {
+        self.shards.iter().filter(|s| !s.failed).count()
+    }
+
     pub fn metrics(&self) -> &MetricsRegistry {
         &self.metrics
     }
@@ -469,6 +1141,56 @@ impl ShardedPs {
         self.counters.recoveries.get()
     }
 
+    /// Completed partition migrations, in order.
+    pub fn migrations(&self) -> &[MigrationRecord] {
+        &self.migrations
+    }
+
+    /// The `ps.shard.migrations` counter (== `migrations().len()`).
+    pub fn migration_count(&self) -> u64 {
+        self.counters.migrations.get()
+    }
+
+    /// The current partition-map epoch (bumped by every migration).
+    pub fn partition_epoch(&self) -> u64 {
+        self.partition_epoch
+    }
+
+    /// The latest crash-consistent checkpoint for shard `si` (None once
+    /// the shard died and its snapshot was consumed by migration).
+    pub fn checkpoint(&self, si: usize) -> Option<&ShardCheckpoint> {
+        self.checkpoints[si].as_ref()
+    }
+
+    /// The `ps.shard.checkpoint_writes` counter.
+    pub fn checkpoint_writes(&self) -> u64 {
+        self.counters.checkpoint_writes.get()
+    }
+
+    /// The `ps.shard.stale_epoch_drops` counter.
+    pub fn stale_epoch_drops(&self) -> u64 {
+        self.counters.stale_epoch_drops.get()
+    }
+
+    /// The `ps.shard.wedge_stalls` counter.
+    pub fn wedge_stalls(&self) -> u64 {
+        self.counters.wedge_stalls.get()
+    }
+
+    /// The `ps.shard.replayed_gradients` counter.
+    pub fn replayed_gradients(&self) -> u64 {
+        self.counters.replayed_gradients.get()
+    }
+
+    /// The live owner of `tensor` under the current partition map.
+    /// Migrations re-home tensors, so this — not [`shard_of`] — is the
+    /// authoritative lookup; `None` only for indices outside the model.
+    pub fn owner_of(&self, tensor: usize) -> Option<usize> {
+        self.shards
+            .iter()
+            .position(|s| s.owned.binary_search(&tensor).is_ok())
+    }
+
     /// Per-shard engine recovery counts (0 for engine-less shards) — the
     /// per-partition attribution the kill-one-shard tests assert on.
     pub fn shard_recoveries(&self) -> Vec<u64> {
@@ -478,7 +1200,7 @@ impl ShardedPs {
             .collect()
     }
 
-    /// Per-shard run states (None for engine-less shards).
+    /// Per-shard run states (None for engine-less or dead shards).
     pub fn shard_states(&self) -> Vec<Option<RunState>> {
         self.shards
             .iter()
@@ -486,18 +1208,19 @@ impl ShardedPs {
             .collect()
     }
 
-    /// Per-shard current staleness (pending queue depths).
+    /// Per-shard current staleness (pending queue depths; 0 for dead
+    /// shards, whose queues were lost with the actor).
     pub fn staleness(&self) -> Vec<u64> {
         self.shards.iter().map(|s| s.pending.len() as u64).collect()
     }
 
-    /// Per-shard applied push counts.
+    /// Per-shard applied push counts (frozen at death for dead shards).
     pub fn applied_steps(&self) -> Vec<u64> {
         self.shards.iter().map(|s| s.applied).collect()
     }
 
     /// The partition map: for each shard, the global tensor indices it
-    /// owns (ascending).
+    /// owns (ascending; empty for dead shards).
     pub fn partition(&self) -> Vec<Vec<usize>> {
         self.shards.iter().map(|s| s.owned.clone()).collect()
     }
@@ -610,6 +1333,44 @@ mod tests {
         }
     }
 
+    #[test]
+    fn greedy_byte_partition_isolates_the_dominant_tensor() {
+        // One embedding-sized tensor plus small ones: LPT must give the
+        // giant its own shard, which is the optimal makespan here.
+        let sizes = [4096usize, 64, 64, 64, 64, 64, 64, 64];
+        let assign = greedy_byte_partition(&sizes, 2);
+        assert!(assign.iter().all(|&s| s < 2), "assignments in range");
+        assert_eq!(assign, greedy_byte_partition(&sizes, 2), "deterministic");
+        let mut load = [0usize; 2];
+        for (t, &s) in assign.iter().enumerate() {
+            load[s] += sizes[t];
+        }
+        let giant = assign[0];
+        assert_eq!(load[giant], 4096, "the dominant tensor sits alone");
+        assert_eq!(load[1 - giant], 7 * 64, "small tensors share the other shard");
+    }
+
+    #[test]
+    fn rendezvous_reassignment_is_minimally_disruptive() {
+        let all = [0usize, 1, 2, 3];
+        let full: Vec<usize> = (0..32).map(|t| rendezvous_shard(t, &all)).collect();
+        assert!(full.iter().all(|s| all.contains(s)), "choice within candidates");
+        assert!(
+            full.iter().collect::<std::collections::HashSet<_>>().len() > 1,
+            "32 tensors must not collapse onto one candidate"
+        );
+        // Removing one candidate only re-homes that candidate's tensors.
+        let without: Vec<usize> = all.iter().copied().filter(|&s| s != 2).collect();
+        for (t, &owner) in full.iter().enumerate() {
+            let s = rendezvous_shard(t, &without);
+            if owner != 2 {
+                assert_eq!(s, owner, "survivor assignments undisturbed");
+            } else {
+                assert!(without.contains(&s), "orphans re-home among survivors");
+            }
+        }
+    }
+
     fn tiny_params() -> Vec<Vec<f32>> {
         (0..9)
             .map(|t| (0..5).map(|k| 0.1 * (t * 5 + k) as f32 - 1.0).collect())
@@ -706,5 +1467,170 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&c| c == 1), "every tensor owned exactly once");
+    }
+
+    #[test]
+    fn checkpoints_follow_the_barrier_cadence() {
+        let params0 = tiny_params();
+        let cfg = ShardConfig::new(2).with_checkpoint_interval(2);
+        let mut ps = ShardedPs::new(&params0, AdamConfig::default(), cfg);
+        // Build cuts the step-0 snapshot for both shards.
+        assert_eq!(ps.checkpoint_writes(), 2);
+        for si in 0..2 {
+            assert_eq!(ps.checkpoint(si).unwrap().step, 0);
+        }
+        ps.push(&params0);
+        // applied 1, last snapshot at 0: under the interval, no new write.
+        assert_eq!(ps.checkpoint_writes(), 2);
+        ps.push(&params0);
+        // applied 2: both shards snapshot at the barrier boundary.
+        assert_eq!(ps.checkpoint_writes(), 4);
+        for si in 0..2 {
+            let c = ps.checkpoint(si).unwrap();
+            assert_eq!(c.step, 2, "snapshot cut at a well-defined step");
+            assert_eq!(c.pending_depth, 0, "staleness 0 leaves no queue");
+            assert_eq!(c.epoch, 0, "no migration yet");
+            assert!(c.bytes() > 0);
+        }
+    }
+
+    #[test]
+    fn killing_a_shard_migrates_its_partition_bitwise() {
+        let params0 = tiny_params();
+        let acfg = AdamConfig::default();
+        let steps = 5usize;
+        // Deterministic gradient stream, independent of the params, so the
+        // serial reference and the sharded run see identical inputs.
+        let g = |s: usize| -> Vec<Vec<f32>> {
+            params0
+                .iter()
+                .map(|p| p.iter().map(|&x| 0.01 * x * (s as f32 + 1.0)).collect())
+                .collect()
+        };
+        let mut serial = params0.clone();
+        let mut adam = Adam::new(acfg, &serial);
+        for s in 0..steps {
+            adam.step(&mut serial, &g(s));
+        }
+
+        // Kill a shard that owns tensors, after 3 completed pushes, with
+        // a 2-step checkpoint cadence so the migration must replay.
+        let probe = ShardedPs::new(&params0, acfg, ShardConfig::new(3));
+        let victim = probe
+            .partition()
+            .iter()
+            .position(|o| !o.is_empty())
+            .expect("some shard owns tensors");
+        drop(probe);
+        let cfg = ShardConfig::new(3)
+            .with_checkpoint_interval(2)
+            .with_fault(victim, ShardFault::KillShard { at_step: 3 });
+        let mut ps = ShardedPs::new(&params0, acfg, cfg);
+        for s in 0..steps {
+            ps.push(&g(s));
+        }
+
+        assert_eq!(ps.migration_count(), 1);
+        assert_eq!(ps.partition_epoch(), 1);
+        assert_eq!(ps.live_shards(), 2);
+        let rec = &ps.migrations()[0];
+        assert_eq!(rec.from_shard, victim);
+        assert_eq!(rec.cause, "injected KillShard");
+        assert!(rec.tensors > 0);
+        // Killed at applied 3, last checkpoint at 2: one replay per tensor.
+        assert_eq!(rec.replayed, rec.tensors as u64);
+        assert!(
+            rec.parity().within_envelope(rec.latency_s),
+            "migration latency {} outside envelope {}",
+            rec.latency_s,
+            rec.parity().envelope_s()
+        );
+
+        // The dead shard owns nothing; survivors cover every tensor once.
+        let part = ps.partition();
+        assert!(part[victim].is_empty());
+        let mut seen = vec![0usize; params0.len()];
+        for owned in &part {
+            for &t in owned {
+                seen[t] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&c| c == 1), "every tensor owned exactly once");
+        for t in 0..params0.len() {
+            let owner = ps.owner_of(t).expect("every tensor has a live owner");
+            assert_ne!(owner, victim);
+        }
+
+        // And the parameters are bitwise the no-failure serial run's.
+        let mut out = params0.clone();
+        ps.pull(&mut out);
+        for (t, (a, b)) in serial.iter().zip(&out).enumerate() {
+            for (k, (x, y)) in a.iter().zip(b).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "tensor {t} elem {k} must survive migration bit-identically"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn stale_epoch_wire_messages_are_dropped_after_migration() {
+        let params0 = tiny_params();
+        let cfg = ShardConfig::new(2).with_fault(0, ShardFault::KillShard { at_step: 1 });
+        let mut ps = ShardedPs::new(&params0, AdamConfig::default(), cfg);
+
+        let old = ToPs::KeepAlive { worker: 7 }.to_wire(ps.wire_header(0));
+        assert!(
+            ps.recv_wire(&old).unwrap().is_some(),
+            "current-epoch message accepted"
+        );
+        assert_eq!(ps.stale_epoch_drops(), 0);
+
+        ps.push(&params0); // completes push 1
+        ps.push(&params0); // fault fires at the start of push 2
+        assert_eq!(ps.partition_epoch(), 1, "migration bumped the epoch");
+
+        assert!(
+            ps.recv_wire(&old).unwrap().is_none(),
+            "pre-migration message dropped, not applied"
+        );
+        assert_eq!(ps.stale_epoch_drops(), 1);
+        let fresh = ToPs::KeepAlive { worker: 7 }.to_wire(ps.wire_header(1));
+        assert!(ps.recv_wire(&fresh).unwrap().is_some(), "fresh epoch accepted");
+        assert_eq!(ps.stale_epoch_drops(), 1);
+    }
+
+    #[test]
+    fn wedged_shard_stalls_the_barrier_but_stays_exact() {
+        let params0 = tiny_params();
+        let acfg = AdamConfig::default();
+        let wedge_s = 0.05;
+        let cfg = ShardConfig::new(2).with_fault(
+            0,
+            ShardFault::WedgeShard { at_step: 1, wedge_s },
+        );
+        let mut ps = ShardedPs::new(&params0, acfg, cfg);
+        let mut clean = ShardedPs::new(&params0, acfg, ShardConfig::new(2));
+
+        ps.push(&params0);
+        clean.push(&params0);
+        let t0 = Instant::now();
+        ps.push(&params0); // the wedge lands here; the barrier waits it out
+        assert!(
+            t0.elapsed().as_secs_f64() >= wedge_s * 0.9,
+            "the barrier must wait out the wedge"
+        );
+        clean.push(&params0);
+        assert_eq!(ps.wedge_stalls(), 1);
+        assert_eq!(ps.staleness(), vec![0, 0], "the contract survives the wedge");
+
+        let (mut a, mut b) = (params0.clone(), params0.clone());
+        ps.pull(&mut a);
+        clean.pull(&mut b);
+        for (x, y) in a.iter().flatten().zip(b.iter().flatten()) {
+            assert_eq!(x.to_bits(), y.to_bits(), "a wedge delays, never diverges");
+        }
     }
 }

@@ -335,6 +335,17 @@ impl MetricsSnapshot {
         self.histograms.get(name)
     }
 
+    /// All counters under a dotted-name prefix (e.g. `"ps.shard."`), in
+    /// sorted name order — the shape bench artifacts embed a subsystem's
+    /// counters in without naming each one.
+    pub fn counters_with_prefix(&self, prefix: &str) -> Vec<(String, u64)> {
+        self.counters
+            .iter()
+            .filter(|(k, _)| k.starts_with(prefix))
+            .map(|(k, &v)| (k.clone(), v))
+            .collect()
+    }
+
     /// BENCH house shape: `{"counters": {..}, "gauges": {..},
     /// "histograms": {..}}` with deterministic (sorted) key order.
     pub fn to_json(&self) -> Json {
@@ -441,6 +452,26 @@ mod tests {
         h.observe(f64::NAN);
         h.observe(1e300);
         assert_eq!(h.count(), 103);
+    }
+
+    #[test]
+    fn counters_with_prefix_filters_and_sorts() {
+        let reg = MetricsRegistry::new();
+        reg.counter("ps.shard.pushes").add(3);
+        reg.counter("ps.shard.migrations").add(1);
+        reg.counter("ps.dispatched").add(9);
+        reg.counter("trainer.steps").add(2);
+        let snap = reg.snapshot();
+        let got = snap.counters_with_prefix("ps.shard.");
+        assert_eq!(
+            got,
+            vec![
+                ("ps.shard.migrations".to_string(), 1),
+                ("ps.shard.pushes".to_string(), 3),
+            ],
+            "prefix-filtered, sorted by name"
+        );
+        assert!(snap.counters_with_prefix("nope.").is_empty());
     }
 
     #[test]

@@ -84,6 +84,16 @@ pub enum SessionEvent {
     /// the staleness barrier forced a shard at queue depth `staleness`
     /// (> the bound) to sync down to the bound
     StalenessSync { shard: usize, staleness: u64 },
+    /// a dead shard's partition was migrated to survivors: `tensors`
+    /// re-homed, `replayed` gradient applications rolled forward from the
+    /// checkpoint, partition map now at `epoch`
+    ShardMigration {
+        shard: usize,
+        tensors: usize,
+        replayed: u64,
+        epoch: u64,
+        cause: String,
+    },
 }
 
 fn cache_stats_json(s: &CacheStats) -> Json {
@@ -218,6 +228,20 @@ impl SessionEvent {
                 ("shard", Json::from(*shard)),
                 ("staleness", Json::from(*staleness as f64)),
             ]),
+            SessionEvent::ShardMigration {
+                shard,
+                tensors,
+                replayed,
+                epoch,
+                cause,
+            } => obj(vec![
+                ("ev", Json::from("shard_migration")),
+                ("shard", Json::from(*shard)),
+                ("tensors", Json::from(*tensors)),
+                ("replayed", Json::from(*replayed as f64)),
+                ("epoch", Json::from(*epoch as f64)),
+                ("cause", Json::from(cause.as_str())),
+            ]),
         }
     }
 
@@ -284,6 +308,13 @@ impl SessionEvent {
             "staleness_sync" => SessionEvent::StalenessSync {
                 shard: j.get("shard")?.as_usize()?,
                 staleness: j.get("staleness")?.as_f64()? as u64,
+            },
+            "shard_migration" => SessionEvent::ShardMigration {
+                shard: j.get("shard")?.as_usize()?,
+                tensors: j.get("tensors")?.as_usize()?,
+                replayed: j.get("replayed")?.as_f64()? as u64,
+                epoch: j.get("epoch")?.as_f64()? as u64,
+                cause: j.get("cause")?.as_str()?.to_string(),
             },
             other => bail!("unknown timeline event tag '{other}'"),
         })
@@ -425,6 +456,11 @@ pub struct CoordinatorProjection {
     pub shard_dispatches: u64,
     /// staleness-barrier forced syncs (pinned to `ps.shard.syncs`)
     pub staleness_syncs: u64,
+    /// whole-shard partition migrations (pinned to `ps.shard.migrations`)
+    pub shard_migrations: u64,
+    /// tensors re-homed across all migrations (pinned to
+    /// `ps.shard.migrated_tensors`)
+    pub migrated_tensors: u64,
 }
 
 pub fn project_coordinator(tl: &Timeline) -> CoordinatorProjection {
@@ -449,6 +485,10 @@ pub fn project_coordinator(tl: &Timeline) -> CoordinatorProjection {
             }
             SessionEvent::ShardDispatch { tasks, .. } => p.shard_dispatches += *tasks as u64,
             SessionEvent::StalenessSync { .. } => p.staleness_syncs += 1,
+            SessionEvent::ShardMigration { tensors, .. } => {
+                p.shard_migrations += 1;
+                p.migrated_tensors += *tensors as u64;
+            }
             _ => {}
         }
     }
@@ -576,11 +616,27 @@ mod tests {
             shard: 1,
             staleness: 4,
         });
+        tl.record(SessionEvent::ShardMigration {
+            shard: 1,
+            tensors: 3,
+            replayed: 6,
+            epoch: 1,
+            cause: "injected KillShard".to_string(),
+        });
+        tl.record(SessionEvent::ShardMigration {
+            shard: 0,
+            tensors: 2,
+            replayed: 0,
+            epoch: 2,
+            cause: "all shard workers evicted".to_string(),
+        });
         let back = Timeline::parse_jsonl(&tl.to_jsonl()).unwrap();
         assert_eq!(back, tl);
         let p = project_coordinator(&tl);
         assert_eq!(p.shard_dispatches, 4, "sums dispatched tasks");
         assert_eq!(p.staleness_syncs, 1);
+        assert_eq!(p.shard_migrations, 2);
+        assert_eq!(p.migrated_tensors, 5, "sums re-homed tensors");
         // shard events leave the membership aggregates untouched
         assert_eq!((p.evictions, p.rejoins, p.recoveries), (0, 0, 0));
     }

@@ -14,8 +14,10 @@
 use cleave::api::planner::{CoordinatorPlanner, Plan, Planner};
 use cleave::api::scenario::Scenario;
 use cleave::cluster::fleet::Fleet;
-use cleave::coordinator::optimizer::AdamConfig;
-use cleave::coordinator::shard::{self, ShardConfig, ShardedBackend, ShardedPs};
+use cleave::coordinator::optimizer::{Adam, AdamConfig};
+use cleave::coordinator::shard::{
+    self, greedy_byte_partition, shard_of, ShardConfig, ShardedBackend, ShardedPs,
+};
 use cleave::coordinator::trainer::{synthetic_params, LocalBackend, Trainer, TrainerConfig};
 use cleave::coordinator::worker::{Behavior, FaultPlan};
 use cleave::obs::timeline::project_coordinator;
@@ -246,6 +248,73 @@ fn planner_parity_with_its_serial_counterpart() {
     }) {
         Plan::Infeasible { .. } => {}
         _ => panic!("empty fleet must be infeasible"),
+    }
+}
+
+#[test]
+fn byte_balanced_partition_beats_hash_on_skew() {
+    // Skew worst case for count-balanced hashing: one embedding-sized
+    // tensor dominates whatever shard it hashes to, while byte-weighted
+    // greedy (LPT) isolates it.
+    let mut sizes = vec![256usize; 16];
+    sizes[0] = 16 * 4096;
+    let n = 4;
+    let total: usize = sizes.iter().sum();
+    let mut hash_load = vec![0usize; n];
+    for (t, &sz) in sizes.iter().enumerate() {
+        hash_load[shard_of(t, n)] += sz;
+    }
+    let assign = greedy_byte_partition(&sizes, n);
+    let mut greedy_load = vec![0usize; n];
+    for (t, &s) in assign.iter().enumerate() {
+        greedy_load[s] += sizes[t];
+    }
+    let spread = |l: &[usize]| l.iter().max().unwrap() - l.iter().min().unwrap();
+    assert!(
+        spread(&greedy_load) <= spread(&hash_load),
+        "greedy byte skew {:?} must not exceed hash skew {:?}",
+        greedy_load,
+        hash_load
+    );
+    assert!(greedy_load.iter().max().unwrap() <= hash_load.iter().max().unwrap());
+    // LPT's classic guarantee, against the makespan lower bound.
+    let opt_lb = (*sizes.iter().max().unwrap()).max(total.div_ceil(n));
+    assert!(
+        greedy_load.iter().max().unwrap() * 3 <= opt_lb * 4,
+        "LPT must stay within 4/3 of the optimal byte makespan"
+    );
+
+    // End to end: `balance_bytes` changes only placement, never numerics —
+    // pushes stay bitwise the serial Adam's, and coverage stays exact.
+    let (_, params0, _) = model_and_tokens();
+    let acfg = AdamConfig::default();
+    let g = |s: usize| -> Vec<Vec<f32>> {
+        params0
+            .iter()
+            .map(|p| p.iter().map(|&x| 0.01 * x * (s as f32 + 1.0)).collect())
+            .collect()
+    };
+    let mut serial = params0.clone();
+    let mut adam = Adam::new(acfg, &serial);
+    for s in 0..3 {
+        adam.step(&mut serial, &g(s));
+    }
+    let scfg = ShardConfig::new(n).with_balance_bytes(true);
+    let mut ps = ShardedPs::new(&params0, acfg, scfg);
+    for s in 0..3 {
+        ps.push(&g(s));
+    }
+    let mut seen = vec![0usize; params0.len()];
+    for owned in ps.partition() {
+        for t in owned {
+            seen[t] += 1;
+        }
+    }
+    assert!(seen.iter().all(|&c| c == 1), "byte partition covers exactly once");
+    let mut out = params0.clone();
+    ps.pull(&mut out);
+    for (a, b) in serial.iter().flatten().zip(out.iter().flatten()) {
+        assert_eq!(a.to_bits(), b.to_bits(), "balance_bytes must stay bit-exact");
     }
 }
 

@@ -1,0 +1,374 @@
+//! Shard-death chaos suite (ISSUE 10): whole-shard failures in the live
+//! training plane.
+//!
+//! Pins the acceptance criteria of shard-death survival:
+//!
+//! 1. **bit-exact migration** — killing a whole shard mid-session migrates
+//!    its partition to survivors; at staleness 0 the post-migration losses
+//!    are bit-identical to the serial `LocalBackend` reference;
+//! 2. **cascading kills** — two shards dying back-to-back still converge
+//!    with zero lost gradient applications (final params bitwise equal the
+//!    never-failed serial Adam);
+//! 3. **bounded staleness preserved** — no surviving shard ever exceeds
+//!    `max_staleness` through a migration;
+//! 4. **engine-terminal detection** — a shard whose whole worker fleet
+//!    dies (not an injected fault) is reaped and migrated the same way;
+//! 5. **observability** — `ShardMigration` timeline projections reproduce
+//!    the live `ps.shard.migrations` counters through the facade;
+//! 6. **registry under churn** — shard death + worker rejoin racing
+//!    `Registry::register` loses no registration and keeps membership
+//!    epochs strictly monotone (satellite of ISSUE 10).
+
+use cleave::api::planner::CoordinatorPlanner;
+use cleave::api::scenario::Scenario;
+use cleave::cluster::device::Device;
+use cleave::cluster::fleet::Fleet;
+use cleave::coordinator::optimizer::{Adam, AdamConfig};
+use cleave::coordinator::registry::Registry;
+use cleave::coordinator::shard::{
+    self, ShardConfig, ShardFault, ShardedBackend, ShardedPs,
+};
+use cleave::coordinator::trainer::{synthetic_params, LocalBackend, Trainer, TrainerConfig};
+use cleave::coordinator::worker::{Behavior, FaultPlan};
+use cleave::obs::timeline::project_coordinator;
+use cleave::obs::Recorder;
+use cleave::util::rng::Rng;
+
+fn tiny_cfg() -> TrainerConfig {
+    TrainerConfig {
+        vocab: 64,
+        d: 32,
+        heads: 2,
+        layers: 1,
+        dff: 64,
+        t: 8,
+        b: 2,
+    }
+}
+
+/// Synthetic model + deterministic token batch off one pinned seed.
+fn model_and_tokens() -> (TrainerConfig, Vec<Vec<f32>>, Vec<i32>) {
+    let cfg = tiny_cfg();
+    let mut rng = Rng::new(555);
+    let params = synthetic_params(&cfg, &mut rng);
+    let tokens: Vec<i32> = (0..cfg.b * cfg.t)
+        .map(|_| rng.below(cfg.vocab as u64) as i32)
+        .collect();
+    (cfg, params, tokens)
+}
+
+fn serial_losses(steps: usize) -> Vec<f32> {
+    let (cfg, params, tokens) = model_and_tokens();
+    let mut t = Trainer::new(cfg, params, AdamConfig::default(), LocalBackend::new(1));
+    (0..steps).map(|_| t.train_step(&tokens)).collect()
+}
+
+/// Shards that own at least one tensor under the initial hash partition,
+/// largest partition first — kill targets that actually carry state.
+fn shards_by_partition_size(params: &[Vec<f32>], n_shards: usize) -> Vec<usize> {
+    let probe = ShardedPs::new(params, AdamConfig::default(), ShardConfig::new(n_shards));
+    let mut sized: Vec<(usize, usize)> = probe
+        .partition()
+        .into_iter()
+        .enumerate()
+        .filter(|(_, owned)| !owned.is_empty())
+        .map(|(si, owned)| (si, owned.len()))
+        .collect();
+    sized.sort_by_key(|&(si, len)| (std::cmp::Reverse(len), si));
+    sized.into_iter().map(|(si, _)| si).collect()
+}
+
+fn assert_partition_covers_once(ps: &ShardedPs, n_tensors: usize) {
+    let mut seen = vec![0usize; n_tensors];
+    for owned in ps.partition() {
+        for t in owned {
+            seen[t] += 1;
+        }
+    }
+    assert!(
+        seen.iter().all(|&c| c == 1),
+        "every tensor must be owned exactly once after migration"
+    );
+}
+
+#[test]
+fn killing_a_shard_keeps_losses_bitwise_at_staleness_zero() {
+    // Acceptance gate, trainer form: the sharded PS loses a whole shard
+    // mid-session (engine-less shards; GEMMs fall back PS-locally, which
+    // is bit-identical) and every loss still matches the serial run.
+    let steps = 5;
+    let want = serial_losses(steps);
+    let (cfg, params, tokens) = model_and_tokens();
+    let victim = shards_by_partition_size(&params, 3)[0];
+    let scfg = ShardConfig::new(3)
+        .with_checkpoint_interval(2)
+        .with_fault(victim, ShardFault::KillShard { at_step: 2 });
+    let ps = ShardedPs::new(&params, AdamConfig::default(), scfg);
+    let n_tensors = params.len();
+    let mut t = Trainer::new(cfg, params, AdamConfig::default(), ShardedBackend::new(ps));
+    for (step, w) in want.iter().enumerate() {
+        let l = shard::train_step(&mut t, &tokens);
+        assert_eq!(
+            l.to_bits(),
+            w.to_bits(),
+            "step {step}: shard death must not perturb the numerics"
+        );
+    }
+    let ps = &t.backend.ps;
+    assert_eq!(ps.migration_count(), 1, "exactly one migration");
+    assert_eq!(ps.partition_epoch(), 1);
+    assert_eq!(ps.live_shards(), 2);
+    assert_partition_covers_once(ps, n_tensors);
+    let rec = &ps.migrations()[0];
+    assert_eq!(rec.from_shard, victim);
+    assert!(
+        rec.parity().within_envelope(rec.latency_s),
+        "migration latency {:.4}s outside envelope {:.4}s",
+        rec.latency_s,
+        rec.parity().envelope_s()
+    );
+}
+
+#[test]
+fn double_kill_converges_with_zero_lost_applications() {
+    // Cascading failure: the two largest shards die back-to-back. The
+    // second kill adopts tensors the first migration just re-homed, so it
+    // exercises the forced post-migration checkpoint refresh. Bitwise
+    // losses == the serial run == zero lost gradient applications.
+    let steps = 6;
+    let want = serial_losses(steps);
+    let (cfg, params, tokens) = model_and_tokens();
+    let by_size = shards_by_partition_size(&params, 4);
+    assert!(by_size.len() >= 3, "need at least three non-empty shards");
+    let (first, second) = (by_size[0], by_size[1]);
+    let scfg = ShardConfig::new(4)
+        .with_checkpoint_interval(2)
+        .with_fault(first, ShardFault::KillShard { at_step: 2 })
+        .with_fault(second, ShardFault::KillShard { at_step: 3 });
+    let ps = ShardedPs::new(&params, AdamConfig::default(), scfg);
+    let n_tensors = params.len();
+    let mut t = Trainer::new(cfg, params, AdamConfig::default(), ShardedBackend::new(ps));
+    for (step, w) in want.iter().enumerate() {
+        let l = shard::train_step(&mut t, &tokens);
+        assert_eq!(
+            l.to_bits(),
+            w.to_bits(),
+            "step {step}: double kill must lose no gradient application"
+        );
+    }
+    let ps = &t.backend.ps;
+    assert_eq!(ps.migration_count(), 2, "two migrations, in order");
+    assert_eq!(ps.partition_epoch(), 2, "each migration bumped the epoch");
+    assert_eq!(ps.live_shards(), 2);
+    assert_partition_covers_once(ps, n_tensors);
+    assert_eq!(ps.migrations()[0].from_shard, first);
+    assert_eq!(ps.migrations()[1].from_shard, second);
+    for (i, rec) in ps.migrations().iter().enumerate() {
+        assert!(
+            rec.parity().within_envelope(rec.latency_s),
+            "migration {i} latency {:.4}s outside envelope {:.4}s",
+            rec.latency_s,
+            rec.parity().envelope_s()
+        );
+    }
+    // Dead shards expose no owned tensors; survivors own everything.
+    for t_idx in 0..n_tensors {
+        let owner = ps.owner_of(t_idx).expect("live owner");
+        assert!(owner != first && owner != second);
+    }
+}
+
+#[test]
+fn bounded_staleness_contract_survives_a_kill() {
+    // Direct push/pull with a deterministic gradient stream decoupled
+    // from the params: under staleness 2 with a mid-run kill, no live
+    // queue ever exceeds the bound, and after a final sync the params are
+    // bitwise what a serial Adam makes of the same stream — proof that
+    // migration dropped no application and replayed none twice.
+    let (_, params0, _) = model_and_tokens();
+    let acfg = AdamConfig::default();
+    let steps = 8usize;
+    let g = |s: usize| -> Vec<Vec<f32>> {
+        params0
+            .iter()
+            .map(|p| p.iter().map(|&x| 0.02 * x * (s as f32 + 1.0)).collect())
+            .collect()
+    };
+    let mut serial = params0.clone();
+    let mut adam = Adam::new(acfg, &serial);
+    for s in 0..steps {
+        adam.step(&mut serial, &g(s));
+    }
+
+    let victim = shards_by_partition_size(&params0, 3)[0];
+    let scfg = ShardConfig::new(3)
+        .with_staleness(2)
+        .with_checkpoint_interval(2)
+        .with_fault(victim, ShardFault::KillShard { at_step: 4 });
+    let mut ps = ShardedPs::new(&params0, acfg, scfg);
+    for s in 0..steps {
+        ps.push(&g(s));
+        assert!(
+            ps.staleness().iter().all(|&d| d <= 2),
+            "step {s}: a queue exceeded the staleness bound: {:?}",
+            ps.staleness()
+        );
+    }
+    assert_eq!(ps.migration_count(), 1);
+    ps.sync();
+    assert!(ps.staleness().iter().all(|&d| d == 0));
+
+    let mut out = params0.clone();
+    ps.pull(&mut out);
+    for (t, (a, b)) in serial.iter().zip(&out).enumerate() {
+        for (k, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "tensor {t} elem {k}: migration under staleness must stay exact"
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_terminal_shard_is_reaped_and_migrated() {
+    // Not an injected fault: shard 1's entire worker fleet dies (8
+    // devices round-robined over 4 shards put devices 1 and 5 on shard
+    // 1; both die after one task). The engine goes terminal, the reaper
+    // migrates the partition, GEMMs reroute — and the losses never
+    // flinch.
+    let steps = 3;
+    let want = serial_losses(steps);
+    let (cfg, params, tokens) = model_and_tokens();
+    let fleet = Fleet::median(8);
+    let mut plans = vec![FaultPlan::honest(); 8];
+    plans[1] = FaultPlan::after(1, Behavior::DieAfter(1));
+    plans[5] = FaultPlan::after(1, Behavior::DieAfter(1));
+    let ps = ShardedPs::spawn(
+        fleet.devices,
+        plans,
+        &params,
+        AdamConfig::default(),
+        ShardConfig::new(4),
+    );
+    let n_tensors = params.len();
+    let mut t = Trainer::new(cfg, params, AdamConfig::default(), ShardedBackend::new(ps));
+    for (step, w) in want.iter().enumerate() {
+        let l = shard::train_step(&mut t, &tokens);
+        assert_eq!(
+            l.to_bits(),
+            w.to_bits(),
+            "step {step}: fleet-death migration must not perturb numerics"
+        );
+    }
+    let ps = &t.backend.ps;
+    assert_eq!(
+        ps.migration_count(),
+        1,
+        "losing every worker of one shard is one migration"
+    );
+    assert_eq!(ps.migrations()[0].from_shard, 1);
+    assert_eq!(ps.migrations()[0].cause, "all shard workers evicted");
+    assert_eq!(ps.live_shards(), 3);
+    assert!(
+        ps.shard_states()[1].is_none(),
+        "the dead shard's engine was torn down"
+    );
+    assert_partition_covers_once(ps, n_tensors);
+}
+
+#[test]
+fn observed_kill_projects_migration_events_through_the_facade() {
+    // End-to-end through the Scenario facade with the flight recorder on:
+    // ShardMigration projections must reproduce the live counters.
+    let rec = Recorder::new();
+    let mut p = CoordinatorPlanner::tiny_observed(3, &rec)
+        .with_shard_fault(0, ShardFault::KillShard { at_step: 1 });
+    let sc = Scenario::model("OPT-13B").devices(6).median_fleet();
+    let r = sc.run_batch(&mut p).unwrap();
+    assert!(r.feasible());
+    assert_eq!(p.last_losses.len(), p.steps);
+    assert!(p.last_losses.iter().all(|l| l.is_finite()));
+
+    let snap = rec.snapshot();
+    let proj = project_coordinator(&rec.timeline());
+    assert_eq!(snap.counter("ps.shard.migrations"), 1, "the kill fired");
+    assert_eq!(
+        proj.shard_migrations,
+        snap.counter("ps.shard.migrations"),
+        "ShardMigration projection == ps.shard.migrations"
+    );
+    assert_eq!(
+        proj.migrated_tensors,
+        snap.counter("ps.shard.migrated_tensors"),
+        "projected tensor count == ps.shard.migrated_tensors"
+    );
+    assert!(
+        snap.counter("ps.shard.checkpoint_writes") > 0,
+        "checkpoints were cut"
+    );
+    // The facade's full ps.shard.* surface is queryable by prefix.
+    let shard_counters = snap.counters_with_prefix("ps.shard.");
+    assert!(shard_counters.iter().any(|(k, _)| k == "ps.shard.migrations"));
+}
+
+#[test]
+fn registry_survives_churn_racing_a_migration() {
+    // Satellite: shard death (mass departs) + rejoins racing fresh
+    // registrations. No registration may be lost, every membership epoch
+    // must be unique, and each thread's view must be strictly monotone.
+    const BASE: usize = 32;
+    const FRESH: usize = 64;
+    let r = Registry::new();
+    for id in 0..BASE {
+        r.register(Device::median_edge(id));
+    }
+    assert_eq!(r.epoch(), BASE as u64);
+
+    let (join_epochs, churn_epochs) = std::thread::scope(|s| {
+        let joiner = {
+            let r = &r;
+            s.spawn(move || {
+                // a join storm: brand-new devices registering
+                let mut seen = Vec::with_capacity(FRESH);
+                for k in 0..FRESH {
+                    seen.push(r.register(Device::median_edge(1000 + k)));
+                }
+                seen
+            })
+        };
+        let churner = {
+            let r = &r;
+            s.spawn(move || {
+                // a dying shard's fleet departing, then rejoining through
+                // probation — exactly the migration-window traffic
+                let mut seen = Vec::with_capacity(2 * BASE);
+                for id in 0..BASE {
+                    seen.push(r.depart(id).expect("known device departs"));
+                    seen.push(r.register(Device::median_edge(id)));
+                }
+                seen
+            })
+        };
+        (joiner.join().unwrap(), churner.join().unwrap())
+    });
+
+    let total_events = (BASE + FRESH + 2 * BASE) as u64;
+    assert_eq!(r.epoch(), total_events, "every membership event counted once");
+    assert_eq!(r.len(), BASE + FRESH, "no registration lost");
+    for id in (0..BASE).chain(1000..1000 + FRESH) {
+        let reg = r.registration(id).expect("device present");
+        assert!(!reg.departed, "device {id} ended registered");
+    }
+    // Per-thread epoch sequences strictly increase (monotone membership).
+    assert!(join_epochs.windows(2).all(|w| w[0] < w[1]));
+    assert!(churn_epochs.windows(2).all(|w| w[0] < w[1]));
+    // Fleet-wide: all observed epochs distinct and within range.
+    let mut all: Vec<u64> = join_epochs.into_iter().chain(churn_epochs).collect();
+    all.sort_unstable();
+    let n = all.len();
+    all.dedup();
+    assert_eq!(all.len(), n, "no epoch observed twice");
+    assert!(all[0] > BASE as u64 && all[n - 1] <= total_events);
+}
